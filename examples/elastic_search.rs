@@ -1,0 +1,77 @@
+//! End-to-end validation driver (DESIGN.md §6): the paper's headline
+//! workload — linear search over a corpus ~1.3x bigger than one node's
+//! RAM — run under Nswap and under ElasticOS on the same 2-node
+//! cluster, digests verified against single-node ground truth, plus
+//! one pass over the real TCP fabric.  Reports the headline metric:
+//! speedup and network-traffic reduction (paper: up to 10x / 2-5x).
+//!
+//!     cargo run --release --example elastic_search
+
+use elastic_os::eval::report::fmt_x;
+use elastic_os::net::peer;
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::util::stats::{fmt_bytes, fmt_ns};
+use elastic_os::workloads::{by_name, DirectMem, Scale};
+
+fn main() {
+    elastic_os::util::logging::init();
+    let frames = 2048u32; // 8 MiB per node
+    let footprint = frames as u64 * 4096 * 13 / 10; // 1.3x one node
+
+    // Ground truth on flat memory.
+    let truth = {
+        let mut w = by_name("linear", Scale::Bytes(footprint)).unwrap();
+        let mut mem = DirectMem::new();
+        w.setup(&mut mem);
+        w.run(&mut mem)
+    };
+    println!("corpus: {} (ground-truth digest {truth:#018x})", fmt_bytes(footprint as f64));
+
+    let run = |mode: Mode, threshold: u64| {
+        let mut w = by_name("linear", Scale::Bytes(footprint)).unwrap();
+        let cfg = SystemConfig {
+            node_frames: vec![frames, frames],
+            mode,
+            ..SystemConfig::default()
+        };
+        let mut sys = ElasticSystem::new(cfg, threshold);
+        let r = sys.run_workload(w.as_mut());
+        assert_eq!(r.digest, truth, "digest mismatch under {mode:?}");
+        println!(
+            "  {:<6} sim={:>10} pulls={:<7} jumps={:<5} net={:>10}",
+            r.mode,
+            fmt_ns(r.sim_ns as f64),
+            r.metrics.remote_faults,
+            r.metrics.jumps,
+            fmt_bytes(r.metrics.total_bytes() as f64),
+        );
+        r
+    };
+
+    println!("running on 2 simulated nodes ({} RAM each):", fmt_bytes((frames as u64 * 4096) as f64));
+    let nswap = run(Mode::Nswap, 32);
+    let eos = run(Mode::Elastic, 32);
+
+    let speedup = nswap.sim_ns as f64 / eos.sim_ns.max(1) as f64;
+    let reduction = nswap.metrics.total_bytes() as f64 / eos.metrics.total_bytes().max(1) as f64;
+    println!(
+        "HEADLINE: ElasticOS speedup {} | network reduction {}  (paper: up to 10x / 2-5x)",
+        fmt_x(speedup),
+        fmt_x(reduction)
+    );
+    assert!(speedup > 2.0, "expected a substantial speedup, got {speedup}");
+
+    // And once over real TCP between two threads (real sockets, real
+    // checkpoints): a scan that jumps to the worker's half.
+    println!("TCP fabric pass (real sockets):");
+    let pages = 2048u32;
+    let (leader, worker) = peer::run_local_pair(pages, 32).expect("tcp pair");
+    let expect = peer::expected_digest(pages);
+    assert_eq!(leader.digest, expect);
+    assert_eq!(worker.digest, expect);
+    println!(
+        "  scanned {} pages; leader pulled {} then jumped {}x; digests verified",
+        pages, leader.stats.pulls, leader.stats.jumps_sent
+    );
+    println!("elastic_search OK");
+}

@@ -1,0 +1,62 @@
+//! Graph analytics on an elastic process: DFS branch-depth behaviour
+//! (paper §5.4.2, Figs 13/14) and Dijkstra's no-speedup-but-less-
+//! traffic behaviour (§5.4.3) on one cluster.
+//!
+//!     cargo run --release --example graph_analytics
+
+use elastic_os::eval::report::Table;
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::util::stats::{fmt_bytes, fmt_ns};
+use elastic_os::workloads::dfs::Dfs;
+use elastic_os::workloads::{by_name, Scale};
+
+fn cfg(mode: Mode) -> SystemConfig {
+    SystemConfig { node_frames: vec![1024, 1024], mode, ..SystemConfig::default() }
+}
+
+fn main() {
+    elastic_os::util::logging::init();
+    let footprint = 1024 * 4096 * 13 / 10; // 1.3x one node
+
+    // --- DFS: how branch depth drives jumping -------------------------
+    let mut t = Table::new(
+        "DFS: branch depth vs jumping (threshold 512; paper Figs 13/14 shape)",
+        &["branch pages", "sim time", "jumps", "pulls"],
+    );
+    let total_pages = footprint / 4096;
+    for frac in [8u64, 4, 2, 1] {
+        let depth = (total_pages / frac).max(8);
+        let mut w = Dfs::new(Scale::Bytes(footprint)).with_depth(depth);
+        let mut sys = ElasticSystem::new(cfg(Mode::Elastic), 512);
+        let r = sys.run_workload(&mut w);
+        t.row(vec![
+            depth.to_string(),
+            fmt_ns(r.sim_ns as f64),
+            r.metrics.jumps.to_string(),
+            r.metrics.remote_faults.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- Dijkstra: time parity, traffic win ---------------------------
+    let mut t = Table::new(
+        "Dijkstra: EOS vs Nswap (paper: ~1x time, large traffic cut)",
+        &["mode", "sim time", "jumps", "net"],
+    );
+    let mut digests = Vec::new();
+    for mode in [Mode::Nswap, Mode::Elastic] {
+        let mut w = by_name("dijkstra", Scale::Bytes(footprint)).unwrap();
+        let mut sys = ElasticSystem::new(cfg(mode), 512);
+        let r = sys.run_workload(w.as_mut());
+        digests.push(r.digest);
+        t.row(vec![
+            r.mode.clone(),
+            fmt_ns(r.sim_ns as f64),
+            r.metrics.jumps.to_string(),
+            fmt_bytes(r.metrics.total_bytes() as f64),
+        ]);
+    }
+    assert_eq!(digests[0], digests[1], "shortest paths must agree across modes");
+    println!("{}", t.render());
+    println!("graph_analytics OK (digests agree across modes)");
+}

@@ -1,0 +1,33 @@
+//! Real-TCP two-peer cluster demo: stretch, pull, and jump messages
+//! crossing actual localhost sockets; the computation genuinely
+//! resumes on the worker after a jump (its register state rides in the
+//! checkpoint).  Compare threshold=huge (pure network swap over TCP)
+//! with a small threshold (jump to the data).
+//!
+//!     cargo run --release --example tcp_cluster
+
+use elastic_os::net::peer::{expected_digest, run_local_pair};
+
+fn main() {
+    elastic_os::util::logging::init();
+    let pages = 4096u32; // 16 MiB scanned
+    let expect = expected_digest(pages);
+
+    println!("scan of {pages} pages, half owned by each peer, over real TCP:\n");
+    for (label, threshold) in [("nswap-style (threshold = ∞)", u32::MAX), ("elastic (threshold = 32)", 32)] {
+        let t0 = std::time::Instant::now();
+        let (leader, worker) = run_local_pair(pages, threshold).expect("pair");
+        let wall = t0.elapsed();
+        assert_eq!(leader.digest, expect, "leader digest");
+        assert_eq!(worker.digest, expect, "worker digest");
+        let wire = leader.stats.bytes_sent + worker.stats.bytes_sent;
+        println!("{label}:");
+        println!(
+            "  wall={wall:?}  pulls={}  jumps={}  wire bytes={}",
+            leader.stats.pulls + worker.stats.pulls,
+            leader.stats.jumps_sent + worker.stats.jumps_sent,
+            wire
+        );
+    }
+    println!("\ndigests verified ({expect:#x}); jumping moved execution to the data instead of {}+ page pulls", pages / 2);
+}

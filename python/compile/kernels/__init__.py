@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for ElasticOS decision paths.
+
+- locality: decayed remote-fault locality scoring (jump policy hot-spot)
+- lru_age:  vectorized second-chance aging (kswapd scanner hot-spot)
+- ref:      pure-jnp oracles for both plus the composed policy
+"""
+
+from . import locality, lru_age, ref  # noqa: F401

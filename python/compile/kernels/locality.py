@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: decayed remote-fault locality scoring.
+
+This is the compute hot-spot of the ElasticOS *jumping policy* (paper
+sec. 3.4 "Jumping Policy Algorithm" + sec. 6 future work on adaptive
+policies): given a sliding window of remote-page-fault counts, bucketed
+by time and attributed to the node whose RAM holds the faulting page,
+compute an exponentially-decayed "locality mass" per node.  The EOS
+manager jumps the process towards the node with the largest mass when the
+margin over the currently-running node exceeds a hysteresis.
+
+Shapes are deliberately tiny and fixed at AOT time: the window is
+``(W, N)`` with ``W`` time buckets and ``N`` cluster-node slots (unused
+slots are zero).  On a real TPU this is a single-VMEM-block kernel
+(W*N*4 bytes = 4 KiB for the default 64x16 window, far below VMEM);
+``interpret=True`` is mandatory for CPU-PJRT execution (real lowering
+emits a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT shapes; the rust runtime compiles against exactly these.
+DEFAULT_W = 64  # time buckets in the fault window
+DEFAULT_N = 16  # maximum cluster nodes
+
+
+def _locality_kernel(window_ref, decay_ref, out_ref, *, w: int, n: int):
+    """Pallas kernel body: out[n] = sum_t decay^(W-1-t) * window[t, n].
+
+    Bucket ``W-1`` is the newest (weight 1.0); bucket 0 the oldest
+    (weight decay^(W-1)).  Weights are built with broadcasted_iota so the
+    whole body is vector ops on the VPU — no MXU needed.
+    """
+    window = window_ref[...]  # (W, N) f32
+    decay = decay_ref[0]  # scalar f32 in (0, 1]
+    # exponent for bucket t is (W-1-t)
+    t = jax.lax.broadcasted_iota(jnp.float32, (w, n), 0)
+    exponent = jnp.float32(w - 1) - t
+    # decay^e computed as exp(e * log(decay)); clamp to avoid log(0).
+    log_d = jnp.log(jnp.maximum(decay, jnp.float32(1e-30)))
+    weights = jnp.exp(exponent * log_d)
+    out_ref[...] = jnp.sum(window * weights, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "n"))
+def locality_scores(window, decay, *, w: int = DEFAULT_W, n: int = DEFAULT_N):
+    """Decayed per-node locality mass.
+
+    Args:
+      window: f32[w, n] remote-fault counts (row W-1 newest).
+      decay:  f32[1] per-bucket decay factor in (0, 1].
+
+    Returns:
+      f32[n] decayed mass per node.
+    """
+    return pl.pallas_call(
+        functools.partial(_locality_kernel, w=w, n=n),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls
+    )(window, decay)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: vectorized second-chance LRU aging / eviction scoring.
+
+ElasticOS's *push* primitive piggybacks on the kernel swap daemon's LRU
+page scanner (paper sec. 3.2): pages mapped by elasticized processes are
+scanned, aged, and the coldest are pushed to the remote replica.  This
+kernel is the scanner's inner loop, batched over a block of page
+metadata: it applies the classic second-chance update (referenced pages
+get their age reset and their reference bit cleared; unreferenced pages
+age by one) and emits an eviction priority per page (higher = evict
+sooner).  Dirty pages are slightly deprioritized (they cost a writeback)
+and pinned pages are excluded with a -inf-like penalty.
+
+Block shape is fixed at AOT time (default 2048 pages = 3 * 8 KiB of VMEM
+per operand block — trivially VMEM-resident on TPU).  interpret=True for
+CPU-PJRT (see locality.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_B = 2048  # pages per scan block
+
+# Priority penalties (must match rust/src/runtime/evict_model.rs and
+# kernels/ref.py).
+DIRTY_PENALTY = 0.25
+PIN_PENALTY = 1.0e9
+
+
+def _lru_age_kernel(age_ref, refd_ref, dirty_ref, pinned_ref, new_age_ref, prio_ref):
+    """Second-chance update + eviction priority for one block of pages."""
+    age = age_ref[...]
+    refd = refd_ref[...]
+    dirty = dirty_ref[...]
+    pinned = pinned_ref[...]
+    # Referenced pages get a second chance: age resets to zero.
+    new_age = jnp.where(refd > 0.5, jnp.zeros_like(age), age + 1.0)
+    prio = new_age - DIRTY_PENALTY * dirty - PIN_PENALTY * pinned
+    new_age_ref[...] = new_age
+    prio_ref[...] = prio
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def lru_age(age, refd, dirty, pinned, *, b: int = DEFAULT_B):
+    """Batched second-chance aging.
+
+    Args:
+      age:    f32[b] current age (scans since last reference).
+      refd:   f32[b] reference bit (0/1), analog of PG_ACCESSED.
+      dirty:  f32[b] dirty bit (0/1).
+      pinned: f32[b] pin bit (0/1) — never evict.
+
+    Returns:
+      (new_age f32[b], priority f32[b]); priority is higher for colder
+      pages, hugely negative for pinned pages.
+    """
+    return pl.pallas_call(
+        _lru_age_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ),
+        interpret=True,
+    )(age, refd, dirty, pinned)

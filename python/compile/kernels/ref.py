@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the Pallas kernels
+(and the composed L2 model) against.  Keep them boring and obviously
+correct — numpy-style, no pallas, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .lru_age import DIRTY_PENALTY, PIN_PENALTY
+
+
+def locality_scores_ref(window, decay):
+    """out[n] = sum_t decay^(W-1-t) * window[t, n], row W-1 newest."""
+    w = window.shape[0]
+    exponent = jnp.arange(w - 1, -1, -1, dtype=jnp.float32)  # W-1 .. 0
+    weights = jnp.power(jnp.maximum(decay, 1e-30), exponent)  # (W,)
+    return jnp.sum(window * weights[:, None], axis=0)
+
+
+def lru_age_ref(age, refd, dirty, pinned):
+    """Second-chance aging + eviction priority (see lru_age.py)."""
+    new_age = jnp.where(refd > 0.5, jnp.zeros_like(age), age + 1.0)
+    prio = new_age - DIRTY_PENALTY * dirty - PIN_PENALTY * pinned
+    return new_age, prio
+
+
+def policy_step_ref(window, current_onehot, params):
+    """Oracle for the composed L2 policy_step (see model.py).
+
+    params = [decay, hysteresis, min_mass, reserved].
+    Returns (scores f32[N], preferred f32, decision f32).
+    """
+    decay = params[0]
+    hysteresis = params[1]
+    min_mass = params[2]
+    scores = locality_scores_ref(window, decay)
+    preferred = jnp.argmax(scores)
+    current_score = jnp.sum(scores * current_onehot)
+    margin = scores[preferred] - current_score
+    total = jnp.sum(scores)
+    on_current = current_onehot[preferred] > 0.5
+    decision = jnp.where(
+        (~on_current) & (margin > hysteresis) & (total >= min_mass), 1.0, 0.0
+    )
+    return scores, preferred.astype(jnp.float32), decision

@@ -1,0 +1,94 @@
+"""L2: the ElasticOS decision models as JAX compute graphs.
+
+Two build-time-compiled functions, both calling the L1 Pallas kernels,
+both lowered once by aot.py to HLO text and executed from the rust
+coordinator's decision path via PJRT:
+
+- ``policy_step``: the adaptive jumping policy (paper sec. 3.4 + sec. 6
+  future work).  Consumes the remote-fault window maintained by the rust
+  pager, produces per-node locality scores, the preferred node, and a
+  jump/stay decision with hysteresis.
+
+- ``evict_rank``: batched second-chance aging for the kswapd-equivalent
+  page scanner that drives the *push* primitive (paper sec. 3.2).
+
+Python runs ONLY at `make artifacts` time; shapes are fixed here and the
+rust runtime (rust/src/runtime/) compiles against exactly these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.locality import DEFAULT_N, DEFAULT_W, locality_scores
+from .kernels.lru_age import DEFAULT_B, lru_age
+
+# AOT shape contract with rust/src/runtime/{policy_model,evict_model}.rs.
+POLICY_W = DEFAULT_W  # 64 time buckets
+POLICY_N = DEFAULT_N  # 16 node slots
+EVICT_B = DEFAULT_B  # 2048 pages per scan block
+
+
+def policy_step(window, current_onehot, params):
+    """One jumping-policy evaluation.
+
+    Args:
+      window:         f32[POLICY_W, POLICY_N] remote-fault counts per
+                      (time bucket, owner node); row W-1 is the newest
+                      bucket.  Maintained by the rust pager.
+      current_onehot: f32[POLICY_N] one-hot of the node currently
+                      executing the process.
+      params:         f32[4] = [decay, hysteresis, min_mass, reserved].
+
+    Returns a 3-tuple (all f32, so the rust side decodes one dtype):
+      scores:    f32[POLICY_N] decayed locality mass per node.
+      preferred: f32[] index of the highest-mass node.
+      decision:  f32[] 1.0 = jump to `preferred`, 0.0 = stay.  Jump only
+                 if the preferred node is not the current one, the margin
+                 over the current node's mass exceeds `hysteresis`, and
+                 total mass is at least `min_mass` (avoids jumping on
+                 noise — the paper's counter threshold plays this role).
+    """
+    decay = params[0:1]
+    hysteresis = params[1]
+    min_mass = params[2]
+    scores = locality_scores(window, decay, w=POLICY_W, n=POLICY_N)
+    preferred = jnp.argmax(scores)
+    current_score = jnp.sum(scores * current_onehot)
+    margin = scores[preferred] - current_score
+    total = jnp.sum(scores)
+    on_current = current_onehot[preferred] > 0.5
+    decision = jnp.where(
+        (~on_current) & (margin > hysteresis) & (total >= min_mass),
+        jnp.float32(1.0),
+        jnp.float32(0.0),
+    )
+    return scores, preferred.astype(jnp.float32), decision
+
+
+def evict_rank(age, refd, dirty, pinned):
+    """One kswapd scan block: second-chance aging + eviction priorities.
+
+    Args/returns are f32[EVICT_B]; see kernels/lru_age.py.  Victim
+    selection (top-k by priority) happens on the rust side, which only
+    needs the scores.
+    """
+    new_age, prio = lru_age(age, refd, dirty, pinned, b=EVICT_B)
+    return new_age, prio
+
+
+def policy_example_args():
+    """ShapeDtypeStructs for lowering policy_step."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((POLICY_W, POLICY_N), f32),
+        jax.ShapeDtypeStruct((POLICY_N,), f32),
+        jax.ShapeDtypeStruct((4,), f32),
+    )
+
+
+def evict_example_args():
+    """ShapeDtypeStructs for lowering evict_rank."""
+    f32 = jnp.float32
+    return tuple(jax.ShapeDtypeStruct((EVICT_B,), f32) for _ in range(4))

@@ -1,0 +1,30 @@
+"""AOT lowering produces loadable HLO text with the expected signatures."""
+
+import re
+
+from compile import aot, model
+
+
+def test_policy_hlo_text_shape_contract():
+    text = aot.lower_policy()
+    assert "HloModule" in text
+    # entry takes the window, the one-hot, and params
+    assert f"f32[{model.POLICY_W},{model.POLICY_N}]" in text
+    assert f"f32[{model.POLICY_N}]" in text
+    assert "f32[4]" in text
+    # return_tuple=True -> root is a tuple of three results
+    assert re.search(r"ROOT .*tuple", text)
+
+
+def test_evict_hlo_text_shape_contract():
+    text = aot.lower_evict()
+    assert "HloModule" in text
+    assert f"f32[{model.EVICT_B}]" in text
+    assert re.search(r"ROOT .*tuple", text)
+
+
+def test_hlo_has_no_custom_calls():
+    """interpret=True must lower pallas to plain HLO ops the CPU PJRT
+    client can execute — a Mosaic custom-call here would break rust."""
+    for text in (aot.lower_policy(), aot.lower_evict()):
+        assert "custom-call" not in text, "unexpected custom-call in HLO"

@@ -1,0 +1,90 @@
+"""Pallas locality kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.locality import locality_scores
+from compile.kernels.ref import locality_scores_ref
+
+
+def _run_both(window_np, decay):
+    window = jnp.asarray(window_np, dtype=jnp.float32)
+    d = jnp.asarray([decay], dtype=jnp.float32)
+    got = locality_scores(window, d, w=window.shape[0], n=window.shape[1])
+    want = locality_scores_ref(window, jnp.float32(decay))
+    return np.asarray(got), np.asarray(want)
+
+
+def test_zero_window_gives_zero_scores():
+    got, want = _run_both(np.zeros((64, 16), np.float32), 0.9)
+    np.testing.assert_allclose(got, want)
+    assert np.all(got == 0.0)
+
+
+def test_newest_bucket_has_weight_one():
+    window = np.zeros((8, 4), np.float32)
+    window[7, 2] = 5.0  # newest bucket
+    got, _ = _run_both(window, 0.5)
+    np.testing.assert_allclose(got[2], 5.0, rtol=1e-6)
+    assert got[0] == got[1] == got[3] == 0.0
+
+
+def test_oldest_bucket_weight_is_decay_pow_w_minus_1():
+    w = 8
+    window = np.zeros((w, 4), np.float32)
+    window[0, 1] = 1.0  # oldest bucket
+    got, _ = _run_both(window, 0.5)
+    np.testing.assert_allclose(got[1], 0.5 ** (w - 1), rtol=1e-5)
+
+
+def test_decay_one_is_plain_sum():
+    rng = np.random.default_rng(0)
+    window = rng.uniform(0, 10, size=(64, 16)).astype(np.float32)
+    got, want = _run_both(window, 1.0)
+    np.testing.assert_allclose(got, window.sum(axis=0), rtol=1e-5)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_matches_ref_default_shape():
+    rng = np.random.default_rng(42)
+    window = rng.uniform(0, 100, size=(64, 16)).astype(np.float32)
+    got, want = _run_both(window, 0.9)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_monotone_in_counts():
+    """Adding faults for a node can only increase its score."""
+    rng = np.random.default_rng(1)
+    window = rng.uniform(0, 10, size=(16, 8)).astype(np.float32)
+    base, _ = _run_both(window, 0.8)
+    window2 = window.copy()
+    window2[3, 5] += 7.0
+    more, _ = _run_both(window2, 0.8)
+    assert more[5] > base[5]
+    np.testing.assert_allclose(np.delete(more, 5), np.delete(base, 5), rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    w=st.integers(min_value=1, max_value=128),
+    n=st.integers(min_value=1, max_value=32),
+    decay=st.floats(min_value=0.01, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes_and_values(w, n, decay, seed):
+    """Property sweep: arbitrary window shapes/decays match the oracle."""
+    rng = np.random.default_rng(seed)
+    window = rng.uniform(0, 50, size=(w, n)).astype(np.float32)
+    got, want = _run_both(window, decay)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_dtype_contract(dtype):
+    window = np.ones((4, 4), dtype)
+    got, want = _run_both(window, 0.9)
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,79 @@
+"""Pallas lru_age kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.lru_age import DIRTY_PENALTY, PIN_PENALTY, lru_age
+from compile.kernels.ref import lru_age_ref
+
+
+def _run_both(age, refd, dirty, pinned):
+    args = [jnp.asarray(a, dtype=jnp.float32) for a in (age, refd, dirty, pinned)]
+    got = lru_age(*args, b=len(age))
+    want = lru_age_ref(*args)
+    return [np.asarray(x) for x in got], [np.asarray(x) for x in want]
+
+
+def test_referenced_page_age_resets():
+    (new_age, prio), _ = _run_both([5.0], [1.0], [0.0], [0.0])
+    assert new_age[0] == 0.0
+    assert prio[0] == 0.0
+
+
+def test_unreferenced_page_ages():
+    (new_age, prio), _ = _run_both([5.0], [0.0], [0.0], [0.0])
+    assert new_age[0] == 6.0
+    assert prio[0] == 6.0
+
+
+def test_dirty_page_deprioritized():
+    (_, clean), _ = _run_both([3.0], [0.0], [0.0], [0.0])
+    (_, dirty), _ = _run_both([3.0], [0.0], [1.0], [0.0])
+    np.testing.assert_allclose(clean[0] - dirty[0], DIRTY_PENALTY, rtol=1e-6)
+
+
+def test_pinned_page_never_wins():
+    (_, prio), _ = _run_both([1e6, 0.0], [0.0, 0.0], [0.0, 0.0], [1.0, 0.0])
+    # pinned very-old page must rank below a fresh unpinned page
+    assert prio[0] < prio[1]
+    assert prio[0] <= 1e6 - PIN_PENALTY + 1.0
+
+
+def test_matches_ref_default_block():
+    rng = np.random.default_rng(7)
+    b = 2048
+    age = rng.uniform(0, 100, b)
+    refd = (rng.uniform(size=b) < 0.3).astype(np.float32)
+    dirty = (rng.uniform(size=b) < 0.5).astype(np.float32)
+    pinned = (rng.uniform(size=b) < 0.05).astype(np.float32)
+    got, want = _run_both(age, refd, dirty, pinned)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-6)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=4096),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_blocks(b, seed):
+    """Property sweep: arbitrary block sizes match the oracle."""
+    rng = np.random.default_rng(seed)
+    age = rng.uniform(0, 1000, b).astype(np.float32)
+    refd = (rng.uniform(size=b) < 0.4).astype(np.float32)
+    dirty = (rng.uniform(size=b) < 0.4).astype(np.float32)
+    pinned = (rng.uniform(size=b) < 0.1).astype(np.float32)
+    got, want = _run_both(age, refd, dirty, pinned)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-6)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-6)
+
+
+def test_idempotent_on_referenced():
+    """A page that keeps being referenced stays at age 0 forever."""
+    age = np.array([0.0], np.float32)
+    for _ in range(5):
+        (new_age, _), _ = _run_both(age, [1.0], [0.0], [0.0])
+        age = new_age
+    assert age[0] == 0.0

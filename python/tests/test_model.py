@@ -1,0 +1,103 @@
+"""L2 composed models vs oracle + decision-semantics tests."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.ref import policy_step_ref
+
+W, N = model.POLICY_W, model.POLICY_N
+
+
+def _params(decay=0.9, hysteresis=1.0, min_mass=4.0):
+    return jnp.asarray([decay, hysteresis, min_mass, 0.0], dtype=jnp.float32)
+
+
+def _onehot(i):
+    v = np.zeros(N, np.float32)
+    v[i] = 1.0
+    return jnp.asarray(v)
+
+
+def _window(counts_by_node, bucket=W - 1):
+    w = np.zeros((W, N), np.float32)
+    for node, c in counts_by_node.items():
+        w[bucket, node] = c
+    return jnp.asarray(w)
+
+
+def test_stay_when_current_node_preferred():
+    window = _window({0: 100.0, 1: 5.0})
+    scores, preferred, decision = model.policy_step(window, _onehot(0), _params())
+    assert int(preferred) == 0
+    assert float(decision) == 0.0
+
+
+def test_jump_when_remote_mass_dominates():
+    window = _window({0: 2.0, 1: 100.0})
+    scores, preferred, decision = model.policy_step(window, _onehot(0), _params())
+    assert int(preferred) == 1
+    assert float(decision) == 1.0
+
+
+def test_hysteresis_blocks_marginal_jump():
+    window = _window({0: 10.0, 1: 10.5})
+    _, _, decision = model.policy_step(window, _onehot(0), _params(hysteresis=2.0))
+    assert float(decision) == 0.0
+
+
+def test_min_mass_blocks_noise_jump():
+    window = _window({1: 1.0})  # tiny total mass
+    _, _, decision = model.policy_step(window, _onehot(0), _params(min_mass=10.0))
+    assert float(decision) == 0.0
+
+
+def test_old_faults_decay_away():
+    # Huge mass for node 1 but in the oldest bucket, small fresh mass node 0.
+    w = np.zeros((W, N), np.float32)
+    w[0, 1] = 100.0  # oldest
+    w[W - 1, 0] = 5.0  # newest
+    _, preferred, _ = model.policy_step(
+        jnp.asarray(w), _onehot(0), _params(decay=0.5)
+    )
+    assert int(preferred) == 0
+
+
+def test_matches_oracle_random():
+    rng = np.random.default_rng(3)
+    window = jnp.asarray(rng.uniform(0, 20, (W, N)).astype(np.float32))
+    cur = _onehot(2)
+    params = _params()
+    got = model.policy_step(window, cur, params)
+    want = policy_step_ref(window, cur, params)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    cur=st.integers(min_value=0, max_value=N - 1),
+    decay=st.floats(min_value=0.1, max_value=1.0),
+    hysteresis=st.floats(min_value=0.0, max_value=10.0),
+)
+def test_hypothesis_matches_oracle(seed, cur, decay, hysteresis):
+    rng = np.random.default_rng(seed)
+    window = jnp.asarray(rng.uniform(0, 20, (W, N)).astype(np.float32))
+    params = _params(decay=decay, hysteresis=hysteresis, min_mass=1.0)
+    got = model.policy_step(window, _onehot(cur), params)
+    want = policy_step_ref(window, _onehot(cur), params)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=3e-4, atol=1e-5)
+
+
+def test_evict_rank_matches_kernel_contract():
+    rng = np.random.default_rng(11)
+    b = model.EVICT_B
+    age = jnp.asarray(rng.uniform(0, 50, b).astype(np.float32))
+    zeros = jnp.zeros(b, jnp.float32)
+    new_age, prio = model.evict_rank(age, zeros, zeros, zeros)
+    np.testing.assert_allclose(np.asarray(new_age), np.asarray(age) + 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(prio), np.asarray(age) + 1.0, rtol=1e-6)

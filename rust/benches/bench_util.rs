@@ -1,0 +1,41 @@
+//! Shared micro-bench harness (criterion is unavailable offline; see
+//! DESIGN.md §3): warmup + timed repetitions + percentile summary.
+
+use elastic_os::util::Summary;
+use std::time::Instant;
+
+/// Measure `f` `reps` times after `warmup` unmeasured calls; print a
+/// summary line and return it.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, reps: u32, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps as usize);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "{name:<42} mean={:>12} p50={:>12} p99={:>12} (n={})",
+        elastic_os::util::stats::fmt_ns(s.mean),
+        elastic_os::util::stats::fmt_ns(s.p50),
+        elastic_os::util::stats::fmt_ns(s.p99),
+        s.n
+    );
+    s
+}
+
+/// Measure throughput: run `f` once, which reports how many items it
+/// processed; print items/sec.
+#[allow(dead_code)]
+pub fn bench_throughput<F: FnMut() -> u64>(name: &str, mut f: F) -> f64 {
+    let t = Instant::now();
+    let items = f();
+    let secs = t.elapsed().as_secs_f64();
+    let rate = items as f64 / secs;
+    println!("{name:<42} {items} items in {secs:.3}s = {:.2} M items/s", rate / 1e6);
+    rate
+}

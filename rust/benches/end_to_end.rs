@@ -1,0 +1,31 @@
+//! End-to-end workload benches: wall time of complete emulated runs at
+//! bench scale (the simulated-time results are the eval harness's job;
+//! this tracks the emulator's own speed so perf regressions show up).
+//! `cargo bench --bench end_to_end`.
+
+mod bench_util;
+
+use bench_util::bench;
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::workloads::{by_name, Scale, ALL};
+
+fn main() {
+    println!("== end_to_end (emulator wall time per full run, 2x512-frame nodes) ==");
+    let footprint = 512 * 4096 * 13 / 10;
+    for wl in ALL {
+        for (mode, threshold) in [(Mode::Nswap, 512u64), (Mode::Elastic, 512)] {
+            let label = format!("{wl} [{}]", mode.as_str());
+            bench(&label, 1, 5, || {
+                let mut w = by_name(wl, Scale::Bytes(footprint)).unwrap();
+                let cfg = SystemConfig {
+                    node_frames: vec![512, 512],
+                    mode,
+                    ..SystemConfig::default()
+                };
+                let mut sys = ElasticSystem::new(cfg, threshold);
+                let r = sys.run_workload(w.as_mut());
+                std::hint::black_box(r.digest);
+            });
+        }
+    }
+}

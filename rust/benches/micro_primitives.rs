@@ -1,0 +1,101 @@
+//! Table 2 micro-benchmarks: the *mechanism* cost of each primitive
+//! (real wall time of our implementation) alongside the simulated
+//! Table-2 charges.  `cargo bench --bench micro_primitives`.
+
+mod bench_util;
+
+use bench_util::bench;
+use elastic_os::mem::addr::AreaKind;
+use elastic_os::mem::NodeId;
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::proc::checkpoint::{JumpCheckpoint, RegisterFile, StretchCheckpoint};
+use elastic_os::proc::meta::ProcessMeta;
+use elastic_os::workloads::ElasticMem;
+
+fn fresh_system() -> ElasticSystem {
+    let cfg = SystemConfig {
+        node_frames: vec![256, 256],
+        mode: Mode::Elastic,
+        ..SystemConfig::default()
+    };
+    let mut sys = ElasticSystem::new(cfg, u64::MAX);
+    let a = sys.mmap(128 * 4096, AreaKind::Heap, "bench");
+    sys.mmap(2 * 4096, AreaKind::Stack, "stack");
+    for p in 0..128u64 {
+        sys.write_u64(a + p * 4096, p);
+    }
+    sys
+}
+
+fn main() {
+    println!("== micro_primitives (mechanism wall time; paper Table 2 values are simulated charges) ==");
+
+    // stretch checkpoint build+encode+decode
+    bench("stretch: checkpoint encode+decode", 100, 2000, || {
+        let ckpt = StretchCheckpoint {
+            meta: ProcessMeta::minimal(1, "bench"),
+            data_segment: vec![0; 8 * 1024],
+        };
+        let enc = ckpt.encode();
+        let back = StretchCheckpoint::decode(&enc).unwrap();
+        std::hint::black_box(back);
+    });
+
+    // jump checkpoint with two stack pages
+    bench("jump: checkpoint encode+decode (9 KB)", 100, 2000, || {
+        let mut ckpt = JumpCheckpoint::new(RegisterFile::default());
+        ckpt.stack_pages.push((elastic_os::mem::addr::Vpn(1), vec![1; 4096]));
+        ckpt.stack_pages.push((elastic_os::mem::addr::Vpn(2), vec![2; 4096]));
+        let enc = ckpt.encode();
+        std::hint::black_box(JumpCheckpoint::decode(&enc).unwrap());
+    });
+
+    // full stretch primitive on live systems (pre-built outside the
+    // timed region; a stretch is once-per-node so each rep needs a
+    // fresh system)
+    {
+        let mut pool: Vec<_> = (0..205).map(|_| fresh_system()).collect();
+        bench("stretch: primitive (table update + charge)", 5, 200, || {
+            let mut sys = pool.pop().unwrap();
+            sys.stretch_to(NodeId(1));
+            std::hint::black_box(sys.metrics.stretches);
+        });
+    }
+
+    // push: one page eviction end to end
+    {
+        let mut sys = fresh_system();
+        sys.stretch_to(NodeId(1));
+        bench("push: one-page evict (move+tables)", 100, 5000, || {
+            if !sys.push_one(NodeId(0)) {
+                // everything pushed; rebuild
+                sys = fresh_system();
+                sys.stretch_to(NodeId(1));
+            }
+        });
+    }
+
+    // pull: remote fault round trip (push a page away, touch it)
+    {
+        let mut sys = fresh_system();
+        sys.stretch_to(NodeId(1));
+        bench("pull: remote fault (fault+move+policy)", 100, 5000, || {
+            if let Some(addr) = sys.first_remote_page() {
+                std::hint::black_box(sys.read_u64(addr));
+            } else {
+                sys.push_one(NodeId(0));
+            }
+        });
+    }
+
+    // jump: execution transfer
+    {
+        let mut sys = fresh_system();
+        sys.stretch_to(NodeId(1));
+        let mut target = NodeId(1);
+        bench("jump: execution transfer (ckpt+flip+tlb)", 100, 5000, || {
+            sys.jump_to(target);
+            target = if target == NodeId(1) { NodeId(0) } else { NodeId(1) };
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! L3 hot path: paged memory access throughput (the TLB fast path is
+//! THE inner loop of every workload — see EXPERIMENTS.md §Perf).
+//! `cargo bench --bench pager_hotpath`.
+
+mod bench_util;
+
+use bench_util::bench_throughput;
+use elastic_os::mem::addr::AreaKind;
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::workloads::{DirectMem, ElasticMem};
+
+const N: u64 = 4_000_000;
+
+fn system_fitting() -> (ElasticSystem, u64) {
+    // everything fits on one node: pure fast-path measurement
+    let cfg = SystemConfig {
+        node_frames: vec![4096, 4096],
+        mode: Mode::Elastic,
+        ..SystemConfig::default()
+    };
+    let mut sys = ElasticSystem::new(cfg, u64::MAX);
+    let a = sys.mmap(8 << 20, AreaKind::Heap, "hot");
+    (sys, a)
+}
+
+fn main() {
+    println!("== pager_hotpath ==");
+
+    // baseline: DirectMem (no paging at all)
+    {
+        let mut m = DirectMem::new();
+        let a = m.mmap(8 << 20, AreaKind::Heap, "d");
+        bench_throughput("direct: sequential u64 writes", || {
+            for i in 0..N {
+                m.write_u64(a + (i % (1 << 20)) * 8, i);
+            }
+            N
+        });
+        bench_throughput("direct: sequential u64 reads", || {
+            let mut acc = 0u64;
+            for i in 0..N {
+                acc = acc.wrapping_add(m.read_u64(a + (i % (1 << 20)) * 8));
+            }
+            std::hint::black_box(acc);
+            N
+        });
+    }
+
+    // paged fast path: sequential
+    {
+        let (mut sys, a) = system_fitting();
+        bench_throughput("paged: sequential u64 writes (TLB hits)", || {
+            for i in 0..N {
+                sys.write_u64(a + (i % (1 << 20)) * 8, i);
+            }
+            N
+        });
+        bench_throughput("paged: sequential u64 reads (TLB hits)", || {
+            let mut acc = 0u64;
+            for i in 0..N {
+                acc = acc.wrapping_add(sys.read_u64(a + (i % (1 << 20)) * 8));
+            }
+            std::hint::black_box(acc);
+            N
+        });
+        // strided: one access per page = TLB-install heavy
+        bench_throughput("paged: page-strided reads (slow path)", || {
+            let mut acc = 0u64;
+            let reps = 400_000u64;
+            for i in 0..reps {
+                acc = acc.wrapping_add(sys.read_u64(a + (i % 2048) * 4096));
+            }
+            std::hint::black_box(acc);
+            reps
+        });
+    }
+
+    // fault path: overcommitted sequential scan (pull/push churn)
+    {
+        let cfg = SystemConfig {
+            node_frames: vec![512, 512],
+            mode: Mode::Nswap,
+            ..SystemConfig::default()
+        };
+        let mut sys = ElasticSystem::new(cfg, u64::MAX);
+        let pages = 680u64;
+        let a = sys.mmap(pages * 4096, AreaKind::Heap, "churn");
+        for p in 0..pages {
+            sys.write_u64(a + p * 4096, p);
+        }
+        bench_throughput("paged: overcommit scan (remote faults)", || {
+            let mut acc = 0u64;
+            for round in 0..40u64 {
+                for p in 0..pages {
+                    acc = acc.wrapping_add(sys.read_u64(a + p * 4096));
+                }
+                std::hint::black_box(round);
+            }
+            std::hint::black_box(acc);
+            40 * pages
+        });
+        println!(
+            "   (remote faults serviced: {}, pushes: {})",
+            sys.metrics.remote_faults, sys.metrics.pushes
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! PJRT decision-path benches: the policy_step and evict_rank models
+//! (L1 Pallas kernels under the hood), measured from the rust side.
+//! This measures the `policy_eval_ns` constant charged by the cost
+//! model — see EXPERIMENTS.md §Perf. `cargo bench --bench policy_model`.
+
+mod bench_util;
+
+use bench_util::bench;
+use elastic_os::mem::NodeId;
+use elastic_os::os::policy::JumpPolicy;
+use elastic_os::runtime::evict_model::{rank_reference, PageMeta};
+use elastic_os::runtime::policy_model::ModelPolicyParams;
+use elastic_os::runtime::{artifacts_dir, Engine, ModelEvictor, ModelJumpPolicy};
+
+fn main() {
+    let policy_path = artifacts_dir().join("policy.hlo.txt");
+    let evict_path = artifacts_dir().join("evict.hlo.txt");
+    if !policy_path.exists() || !evict_path.exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU client");
+
+    // raw model invocation latency
+    {
+        let model = engine.load(&policy_path).unwrap();
+        let window = vec![0.5f32; 64 * 16];
+        let mut onehot = vec![0f32; 16];
+        onehot[0] = 1.0;
+        let params = vec![0.9f32, 24.0, 48.0, 0.0];
+        bench("policy_step: one PJRT execution", 50, 2000, || {
+            let out = model
+                .run_f32(&[(&window, &[64, 16]), (&onehot, &[16]), (&params, &[4])])
+                .unwrap();
+            std::hint::black_box(out);
+        });
+    }
+
+    // end-to-end policy object (ring maintenance + consult cadence)
+    {
+        let model = engine.load(&policy_path).unwrap();
+        let mut policy = ModelJumpPolicy::new(
+            model,
+            ModelPolicyParams { consult_every: 16, ..Default::default() },
+        );
+        let mut i = 0u64;
+        bench("ModelJumpPolicy: on_remote_fault (1/16 consults)", 1000, 100_000, || {
+            i += 1;
+            std::hint::black_box(policy.on_remote_fault(NodeId(0), NodeId(1 + (i % 2) as u8), i * 500));
+        });
+    }
+
+    // evict model vs pure-rust reference ranking
+    {
+        let mut evictor = ModelEvictor::new(engine.load(&evict_path).unwrap());
+        let mut rng = elastic_os::util::Rng::new(3);
+        let pages: Vec<PageMeta> = (0..2048)
+            .map(|i| PageMeta {
+                idx: i,
+                age: (rng.next_u64() % 100) as f32,
+                referenced: rng.chance(0.3),
+                dirty: rng.chance(0.4),
+                pinned: rng.chance(0.02),
+            })
+            .collect();
+        bench("evict_rank: 2048-page block via PJRT", 20, 500, || {
+            std::hint::black_box(evictor.rank(&pages));
+        });
+        bench("evict_rank: 2048-page block pure-rust ref", 20, 500, || {
+            std::hint::black_box(rank_reference(&pages));
+        });
+    }
+}

@@ -1,0 +1,71 @@
+//! Minimal argument parser (clap is unavailable offline; DESIGN.md §3).
+//!
+//! Grammar: positional words, `--flag value`, and bare `--flag`
+//! (boolean). `--flag=value` also accepted.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = iter.peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), String::new());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<String> {
+        self.flags.get(name).cloned()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.flags.get(name).and_then(|v| v.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--workload", "dfs", "--fast", "--threshold=64"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.flag("workload").as_deref(), Some("dfs"));
+        assert!(a.has("fast"));
+        assert_eq!(a.flag_parse::<u64>("threshold"), Some(64));
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        let a = parse(&["eval", "fig8", "--fast"]);
+        assert_eq!(a.positional, vec!["eval", "fig8"]);
+        assert!(a.has("fast"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Plain-text table rendering for the evaluation harness (the rows the
+//! paper's tables/figures report, printed to stdout and optionally
+//! saved under results/).
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line: usize = width.iter().sum::<usize>() + 3 * (ncol - 1);
+        let emit = |cells: &[String], out: &mut String| {
+            let parts: Vec<String> =
+                cells.iter().enumerate().map(|(i, c)| format!("{:>w$}", c, w = width[i])).collect();
+            let _ = writeln!(out, "{}", parts.join(" | "));
+        };
+        emit(&self.headers, &mut out);
+        let _ = writeln!(out, "{}", "-".repeat(line));
+        for row in &self.rows {
+            emit(row, &mut out);
+        }
+        out
+    }
+
+    /// Print to stdout and append to results/<file>.
+    pub fn emit(&self, file: &str) {
+        let text = self.render();
+        println!("{text}");
+        let _ = std::fs::create_dir_all("results");
+        let _ = std::fs::write(format!("results/{file}"), &text);
+    }
+}
+
+/// Format a speedup factor.
+pub fn fmt_x(f: f64) -> String {
+    format!("{f:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("name | value") || r.contains("  name | value"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

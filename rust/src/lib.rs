@@ -1,0 +1,35 @@
+//! # ElasticOS — joint disaggregation of memory and computation
+//!
+//! A reproduction of *"Elasticizing Linux via Joint Disaggregation of
+//! Memory and Computation"* (Ababneh et al., 2018) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the elastic-OS runtime: the four scaling
+//!   primitives (*stretch*, *push*, *pull*, *jump*), the elastic page
+//!   table, second-chance LRU + watermark-driven reclaim, the jumping
+//!   policies, the network protocol (simulated-cost and real-TCP
+//!   fabrics), the six evaluation workloads, and the harness that
+//!   regenerates every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — the adaptive jumping-policy and
+//!   eviction-scoring compute graphs in JAX, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the decayed
+//!   locality scoring and the vectorized second-chance aging, executed
+//!   from the Rust decision path via PJRT (`runtime` module).
+//!
+//! Start with [`os::system::ElasticSystem`] (the engine) or the
+//! `examples/` directory; DESIGN.md maps the paper onto the modules.
+
+pub mod eval;
+pub mod mem;
+pub mod net;
+pub mod os;
+pub mod proc;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+pub mod workloads;
+
+pub use mem::{NodeId, PAGE_SIZE};
+pub use os::system::{ElasticSystem, Mode, SystemConfig};
+pub use sim::CostModel;

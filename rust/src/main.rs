@@ -1,0 +1,187 @@
+//! `elasticos` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   run       run one workload under eos/nswap and print the report
+//!   eval      regenerate a paper table/figure (or `all`)
+//!   cluster   real-TCP two-process demo (leader/worker)
+//!   info      environment + artifact status
+//!
+//! (clap is unavailable in the offline build; `cli` is a hand-rolled
+//! parser — see DESIGN.md §3.)
+
+mod cli;
+
+use cli::Args;
+use elastic_os::eval::{experiments, EvalConfig};
+use elastic_os::mem::NodeId;
+use elastic_os::os::system::{ElasticSystem, Mode};
+use elastic_os::os::EwmaPolicy;
+use elastic_os::workloads::{by_name, Scale};
+
+fn main() {
+    elastic_os::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("{}", USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+elasticos — ElasticOS: joint disaggregation of memory and computation
+
+USAGE:
+  elasticos run --workload <name> [--mode eos|nswap] [--threshold N]
+                [--frames F] [--footprint BYTES] [--policy threshold|ewma|burst|model]
+  elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
+                  ablation-policy|ablation-balance|multinode|all> [--fast]
+  elasticos cluster [--pages N] [--threshold N]
+  elasticos info
+
+Workloads: dfs linear dijkstra block_sort heap_sort count_sort table_scan";
+
+fn cmd_run(args: &Args) -> i32 {
+    let workload = args.flag("workload").unwrap_or_else(|| "linear".into());
+    let mode = match args.flag("mode").as_deref() {
+        Some("nswap") => Mode::Nswap,
+        _ => Mode::Elastic,
+    };
+    let threshold: u64 = args.flag_parse("threshold").unwrap_or(512);
+    let frames: u32 = args.flag_parse("frames").unwrap_or(2048);
+    let footprint: u64 =
+        args.flag_parse("footprint").unwrap_or(frames as u64 * 4096 * 13 / 10);
+
+    let Some(mut w) = by_name(&workload, Scale::Bytes(footprint)) else {
+        eprintln!("unknown workload '{workload}'");
+        return 2;
+    };
+    let mut sc = elastic_os::os::system::SystemConfig {
+        node_frames: vec![frames, frames],
+        mode,
+        ..Default::default()
+    };
+    if let Some(n) = args.flag_parse::<usize>("nodes") {
+        sc.node_frames = vec![frames; n];
+    }
+    let mut sys = match args.flag("policy").as_deref() {
+        Some("ewma") => ElasticSystem::with_policy(sc, Box::new(EwmaPolicy::default_tuned())),
+        Some("burst") => ElasticSystem::with_policy(
+            sc,
+            Box::new(elastic_os::os::BurstPolicy::default_tuned()),
+        ),
+        Some("model") => {
+            let engine = match elastic_os::runtime::Engine::cpu() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("PJRT unavailable: {e}");
+                    return 1;
+                }
+            };
+            let path = elastic_os::runtime::artifacts_dir().join("policy.hlo.txt");
+            let model = match engine.load(&path) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("cannot load {} (run `make artifacts`): {e}", path.display());
+                    return 1;
+                }
+            };
+            let policy = elastic_os::runtime::ModelJumpPolicy::new(
+                model,
+                elastic_os::runtime::policy_model::ModelPolicyParams::default(),
+            );
+            ElasticSystem::with_policy(sc, Box::new(policy))
+        }
+        _ => ElasticSystem::new(sc, threshold),
+    };
+    let report = sys.run_workload(w.as_mut());
+    println!("{}", report.summary_line());
+    println!(
+        "  minor={} stretches={} syncs={} wall={}",
+        report.metrics.minor_faults,
+        report.metrics.stretches,
+        report.metrics.sync_events,
+        elastic_os::util::stats::fmt_ns(report.wall_ns as f64),
+    );
+    0
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let name = args.positional.get(1).cloned().unwrap_or_else(|| "all".into());
+    let mut cfg = if args.has("fast") { EvalConfig::fast() } else { EvalConfig::default() };
+    if let Some(f) = args.flag_parse::<u32>("frames") {
+        cfg.node_frames = f;
+        cfg.footprint = f as u64 * 4096 * 13 / 10;
+    }
+    if let Some(r) = args.flag_parse::<u32>("repeats") {
+        cfg.repeats = r;
+    }
+    if experiments::run_named(&cfg, &name) {
+        0
+    } else {
+        eprintln!("unknown experiment '{name}'");
+        2
+    }
+}
+
+fn cmd_cluster(args: &Args) -> i32 {
+    let pages: u32 = args.flag_parse("pages").unwrap_or(2048);
+    let threshold: u32 = args.flag_parse("threshold").unwrap_or(32);
+    match elastic_os::net::peer::run_local_pair(pages, threshold) {
+        Ok((leader, worker)) => {
+            let expect = elastic_os::net::peer::expected_digest(pages);
+            println!("leader: node={} digest={:#x}", leader.node, leader.digest);
+            println!(
+                "  pulls={} served={} jumps_sent={} bytes={}",
+                leader.stats.pulls,
+                leader.stats.pulls_served,
+                leader.stats.jumps_sent,
+                leader.stats.bytes_sent
+            );
+            println!("worker: node={} digest={:#x}", worker.node, worker.digest);
+            println!(
+                "  pulls={} served={} jumps_recv={} bytes={}",
+                worker.stats.pulls,
+                worker.stats.pulls_served,
+                worker.stats.jumps_received,
+                worker.stats.bytes_sent
+            );
+            if leader.digest == expect && worker.digest == expect {
+                println!("digest OK ({expect:#x})");
+                0
+            } else {
+                eprintln!("DIGEST MISMATCH: expected {expect:#x}");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("cluster failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("elastic_os {}", env!("CARGO_PKG_VERSION"));
+    let dir = elastic_os::runtime::artifacts_dir();
+    for f in ["policy.hlo.txt", "evict.hlo.txt"] {
+        let p = dir.join(f);
+        println!(
+            "artifact {}: {}",
+            p.display(),
+            if p.exists() { "present" } else { "MISSING (make artifacts)" }
+        );
+    }
+    match elastic_os::runtime::Engine::cpu() {
+        Ok(_) => println!("PJRT CPU client: ok"),
+        Err(e) => println!("PJRT CPU client: FAILED ({e})"),
+    }
+    let _ = NodeId(0);
+    0
+}

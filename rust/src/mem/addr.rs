@@ -1,0 +1,264 @@
+//! Virtual addressing: pages, nodes, and vm areas.
+//!
+//! An elasticized process owns a single flat virtual address space.  The
+//! workload engine maps regions (heap arrays, an explicit stack for
+//! recursive algorithms, file mappings) through [`AddressSpace::mmap`],
+//! mirroring the `vm_area_struct` bookkeeping the paper's stretch
+//! checkpoint carries (§4 "Stretching Implementation").
+
+use crate::util::{Dec, DecodeError, Enc};
+use std::fmt;
+
+/// Page size — 4 KiB, as in the paper's x86-64 target.
+pub const PAGE_SHIFT: u64 = 12;
+pub const PAGE_SIZE: usize = 1 << PAGE_SHIFT;
+
+/// Maximum cluster nodes; must match `POLICY_N` in python/compile/model.py.
+pub const MAX_NODES: usize = 16;
+
+/// Identifier of a participating machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u8);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node{}", self.0)
+    }
+}
+
+/// Virtual page number (vaddr >> PAGE_SHIFT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Vpn(pub u64);
+
+impl Vpn {
+    #[inline]
+    pub fn of_addr(addr: u64) -> Vpn {
+        Vpn(addr >> PAGE_SHIFT)
+    }
+
+    #[inline]
+    pub fn base_addr(self) -> u64 {
+        self.0 << PAGE_SHIFT
+    }
+}
+
+/// Frame index within one node's physical frame pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FrameId(pub u32);
+
+/// What a mapped region is for — carried in the stretch checkpoint and
+/// in mmap state-sync messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AreaKind {
+    /// Anonymous heap memory (workload arrays).
+    Heap,
+    /// The process stack; jump checkpoints ship its top pages
+    /// (VM_GROWSDOWN in the paper).
+    Stack,
+    /// Program data segment (included in the stretch checkpoint).
+    Data,
+    /// Named file mapping — not copied on stretch, re-mapped by name on
+    /// the remote node (the paper assumes a shared filesystem).
+    File(String),
+}
+
+impl AreaKind {
+    fn tag(&self) -> u8 {
+        match self {
+            AreaKind::Heap => 0,
+            AreaKind::Stack => 1,
+            AreaKind::Data => 2,
+            AreaKind::File(_) => 3,
+        }
+    }
+}
+
+/// One mapped virtual region (analog of `vm_area_struct`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VmArea {
+    pub start: u64,
+    pub len: u64,
+    pub kind: AreaKind,
+    /// Label for diagnostics ("graph.adj", "stack", …).
+    pub name: String,
+}
+
+impl VmArea {
+    pub fn end(&self) -> u64 {
+        self.start + self.len
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.start && addr < self.end()
+    }
+
+    pub fn pages(&self) -> impl Iterator<Item = Vpn> {
+        let first = self.start >> PAGE_SHIFT;
+        let last = (self.end() + PAGE_SIZE as u64 - 1) >> PAGE_SHIFT;
+        (first..last).map(Vpn)
+    }
+
+    pub fn encode(&self, e: &mut Enc) {
+        e.u64(self.start);
+        e.u64(self.len);
+        e.u8(self.kind.tag());
+        if let AreaKind::File(f) = &self.kind {
+            e.str(f);
+        }
+        e.str(&self.name);
+    }
+
+    pub fn decode(d: &mut Dec) -> Result<Self, DecodeError> {
+        let start = d.u64()?;
+        let len = d.u64()?;
+        let kind = match d.u8()? {
+            0 => AreaKind::Heap,
+            1 => AreaKind::Stack,
+            2 => AreaKind::Data,
+            3 => AreaKind::File(d.str(4096)?),
+            tag => return Err(DecodeError::BadTag { tag, what: "AreaKind" }),
+        };
+        let name = d.str(4096)?;
+        Ok(VmArea { start, len, kind, name })
+    }
+}
+
+/// The elastic process's address-space layout.
+///
+/// Allocation is a simple bump allocator over a contiguous arena so the
+/// elastic page table can be a dense vector (hot-path friendly); real
+/// Linux sparseness is not needed by any of the paper's workloads.
+#[derive(Debug, Clone)]
+pub struct AddressSpace {
+    /// Base of the mappable arena.
+    pub base: u64,
+    /// One page of guard gap between areas (catches overruns in tests).
+    pub guard_pages: u64,
+    areas: Vec<VmArea>,
+    next: u64,
+}
+
+impl AddressSpace {
+    pub const DEFAULT_BASE: u64 = 0x1000_0000;
+
+    pub fn new() -> Self {
+        AddressSpace { base: Self::DEFAULT_BASE, guard_pages: 1, areas: Vec::new(), next: Self::DEFAULT_BASE }
+    }
+
+    /// Map a new region of `len` bytes; returns its start address.
+    /// Length is rounded up to whole pages.
+    pub fn mmap(&mut self, len: u64, kind: AreaKind, name: &str) -> &VmArea {
+        let len = (len + PAGE_SIZE as u64 - 1) & !(PAGE_SIZE as u64 - 1);
+        let start = self.next;
+        self.next = start + len + self.guard_pages * PAGE_SIZE as u64;
+        self.areas.push(VmArea { start, len, kind, name: to_owned_name(name) });
+        self.areas.last().unwrap()
+    }
+
+    /// Total mapped bytes (the paper's `task_size` analogue).
+    pub fn task_size(&self) -> u64 {
+        self.areas.iter().map(|a| a.len).sum()
+    }
+
+    /// Total mapped pages.
+    pub fn total_pages(&self) -> u64 {
+        self.task_size() >> PAGE_SHIFT
+    }
+
+    pub fn areas(&self) -> &[VmArea] {
+        &self.areas
+    }
+
+    /// Find the area containing `addr`.
+    pub fn area_of(&self, addr: u64) -> Option<&VmArea> {
+        self.areas.iter().find(|a| a.contains(addr))
+    }
+
+    /// The stack area, if one was mapped.
+    pub fn stack(&self) -> Option<&VmArea> {
+        self.areas.iter().find(|a| a.kind == AreaKind::Stack)
+    }
+
+    /// Highest mapped page number + 1 (for sizing the dense page table).
+    pub fn vpn_limit(&self) -> u64 {
+        (self.next + PAGE_SIZE as u64 - 1) >> PAGE_SHIFT
+    }
+
+    /// Lowest mappable page number.
+    pub fn vpn_base(&self) -> u64 {
+        self.base >> PAGE_SHIFT
+    }
+}
+
+impl Default for AddressSpace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn to_owned_name(name: &str) -> String {
+    name.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mmap_rounds_to_pages() {
+        let mut asp = AddressSpace::new();
+        let a = asp.mmap(100, AreaKind::Heap, "tiny").clone();
+        assert_eq!(a.len, PAGE_SIZE as u64);
+        assert_eq!(a.start % PAGE_SIZE as u64, 0);
+    }
+
+    #[test]
+    fn areas_do_not_overlap() {
+        let mut asp = AddressSpace::new();
+        let a = asp.mmap(10 * PAGE_SIZE as u64, AreaKind::Heap, "a").clone();
+        let b = asp.mmap(10 * PAGE_SIZE as u64, AreaKind::Heap, "b").clone();
+        assert!(a.end() <= b.start);
+        // guard gap present
+        assert!(b.start - a.end() >= PAGE_SIZE as u64);
+    }
+
+    #[test]
+    fn task_size_counts_all_areas() {
+        let mut asp = AddressSpace::new();
+        asp.mmap(PAGE_SIZE as u64 * 4, AreaKind::Heap, "a");
+        asp.mmap(PAGE_SIZE as u64 * 2, AreaKind::Stack, "stack");
+        assert_eq!(asp.task_size(), PAGE_SIZE as u64 * 6);
+        assert_eq!(asp.total_pages(), 6);
+    }
+
+    #[test]
+    fn area_of_finds_region() {
+        let mut asp = AddressSpace::new();
+        let a = asp.mmap(PAGE_SIZE as u64 * 4, AreaKind::Heap, "a").clone();
+        assert_eq!(asp.area_of(a.start + 5).unwrap().name, "a");
+        assert!(asp.area_of(a.end()).is_none()); // guard page
+    }
+
+    #[test]
+    fn vma_page_iteration() {
+        let a = VmArea { start: 0x1000, len: 0x3000, kind: AreaKind::Heap, name: "x".into() };
+        let pages: Vec<u64> = a.pages().map(|p| p.0).collect();
+        assert_eq!(pages, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn vma_codec_round_trip() {
+        let a = VmArea { start: 0x2000, len: 0x1000, kind: AreaKind::File("lib.so".into()), name: "map".into() };
+        let mut e = Enc::new();
+        a.encode(&mut e);
+        let v = e.into_vec();
+        let mut d = Dec::new(&v);
+        assert_eq!(VmArea::decode(&mut d).unwrap(), a);
+    }
+
+    #[test]
+    fn vpn_math() {
+        assert_eq!(Vpn::of_addr(0x1000).0, 1);
+        assert_eq!(Vpn(3).base_addr(), 0x3000);
+    }
+}

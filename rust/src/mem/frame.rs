@@ -1,0 +1,201 @@
+//! Physical page frames and watermark accounting for one node.
+//!
+//! Each participating node contributes a fixed pool of 4 KiB frames
+//! (its "RAM").  Free-memory watermarks mirror Linux's `min/low/high`
+//! levels (paper §4 "System Startup"): when free frames drop below
+//! `low`, the kswapd analogue starts pushing cold pages to a remote
+//! node until free frames recover to `high`.
+
+use super::addr::{FrameId, PAGE_SIZE};
+
+/// Free-memory watermarks in frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Watermarks {
+    /// Absolute emergency floor — allocation below this fails.
+    pub min: u32,
+    /// kswapd wake-up level.
+    pub low: u32,
+    /// kswapd sleep level (reclaim target).
+    pub high: u32,
+}
+
+impl Watermarks {
+    /// Linux-flavored defaults: min = cap/64 (clamped ≥ 2), low = 1.25x
+    /// min, high = 1.5x min — scaled like `watermark_scale_factor`.
+    pub fn for_capacity(capacity: u32) -> Watermarks {
+        let min = (capacity / 64).max(2);
+        Watermarks { min, low: min + min / 4 + 1, high: min + min / 2 + 2 }
+    }
+}
+
+/// A node's frame pool: flat backing storage plus a free list.
+///
+/// Frame contents are real bytes — the workloads compute real results
+/// through the pager, so correctness tests can compare digests against
+/// single-node ground truth.
+#[derive(Debug)]
+pub struct FramePool {
+    data: Vec<u8>,
+    free: Vec<FrameId>,
+    capacity: u32,
+    pub watermarks: Watermarks,
+}
+
+impl FramePool {
+    pub fn new(capacity: u32) -> FramePool {
+        assert!(capacity >= 8, "a node needs at least 8 frames");
+        FramePool {
+            data: vec![0u8; capacity as usize * PAGE_SIZE],
+            free: (0..capacity).rev().map(FrameId).collect(),
+            capacity,
+            watermarks: Watermarks::for_capacity(capacity),
+        }
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    pub fn free_frames(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_frames(&self) -> u32 {
+        self.capacity - self.free_frames()
+    }
+
+    /// Allocate a frame (zeroed). Returns `None` when only the `min`
+    /// reserve is left — the caller must reclaim first.
+    pub fn alloc(&mut self) -> Option<FrameId> {
+        if self.free.len() as u32 <= self.watermarks.min {
+            return None;
+        }
+        self.alloc_reserve()
+    }
+
+    /// Allocate even from the emergency reserve (used by the reclaim
+    /// path itself, mirroring PF_MEMALLOC).
+    pub fn alloc_reserve(&mut self) -> Option<FrameId> {
+        let f = self.free.pop()?;
+        self.frame_mut(f).fill(0);
+        Some(f)
+    }
+
+    /// Return a frame to the free list.
+    pub fn dealloc(&mut self, f: FrameId) {
+        debug_assert!((f.0) < self.capacity);
+        debug_assert!(!self.free.contains(&f), "double free of frame {f:?}");
+        self.free.push(f);
+    }
+
+    /// Below the kswapd wake-up level?
+    pub fn below_low(&self) -> bool {
+        self.free_frames() <= self.watermarks.low
+    }
+
+    /// At or above the reclaim target?
+    pub fn at_high(&self) -> bool {
+        self.free_frames() >= self.watermarks.high
+    }
+
+    #[inline]
+    pub fn frame(&self, f: FrameId) -> &[u8] {
+        let off = f.0 as usize * PAGE_SIZE;
+        &self.data[off..off + PAGE_SIZE]
+    }
+
+    #[inline]
+    pub fn frame_mut(&mut self, f: FrameId) -> &mut [u8] {
+        let off = f.0 as usize * PAGE_SIZE;
+        &mut self.data[off..off + PAGE_SIZE]
+    }
+
+    /// Raw pointer to a frame's first byte — used by the pager's TLB
+    /// fast path (borrow-checker-free access; safety argued in
+    /// os/pager.rs).
+    #[inline]
+    pub fn frame_ptr(&mut self, f: FrameId) -> *mut u8 {
+        let off = f.0 as usize * PAGE_SIZE;
+        unsafe { self.data.as_mut_ptr().add(off) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watermark_ordering() {
+        for cap in [8u32, 64, 1024, 8192, 1 << 20] {
+            let w = Watermarks::for_capacity(cap);
+            assert!(w.min < w.low, "cap={cap}");
+            assert!(w.low < w.high, "cap={cap}");
+            assert!(w.high < cap, "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn alloc_zeroes_frames() {
+        let mut p = FramePool::new(16);
+        let f = p.alloc().unwrap();
+        p.frame_mut(f).fill(0xAB);
+        p.dealloc(f);
+        let f2 = p.alloc().unwrap();
+        assert!(p.frame(f2).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn alloc_respects_min_reserve() {
+        let mut p = FramePool::new(16);
+        let min = p.watermarks.min;
+        let mut got = 0;
+        while p.alloc().is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 16 - min);
+        // reserve path still works
+        assert!(p.alloc_reserve().is_some());
+    }
+
+    #[test]
+    fn free_used_accounting() {
+        let mut p = FramePool::new(16);
+        assert_eq!(p.free_frames(), 16);
+        let f = p.alloc().unwrap();
+        assert_eq!(p.used_frames(), 1);
+        p.dealloc(f);
+        assert_eq!(p.used_frames(), 0);
+    }
+
+    #[test]
+    fn below_low_tracks_pressure() {
+        let mut p = FramePool::new(64);
+        assert!(!p.below_low());
+        let mut held = Vec::new();
+        while !p.below_low() {
+            held.push(p.alloc().unwrap());
+        }
+        assert!(p.free_frames() <= p.watermarks.low);
+    }
+
+    #[test]
+    fn frame_data_isolated() {
+        let mut p = FramePool::new(8);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.frame_mut(a).fill(1);
+        p.frame_mut(b).fill(2);
+        assert!(p.frame(a).iter().all(|&x| x == 1));
+        assert!(p.frame(b).iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)] // the check is a debug_assert
+    fn double_free_caught_in_debug() {
+        let mut p = FramePool::new(8);
+        let f = p.alloc().unwrap();
+        p.dealloc(f);
+        p.dealloc(f);
+    }
+}

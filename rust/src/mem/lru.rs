@@ -1,0 +1,311 @@
+//! Per-node LRU lists (second-chance / clock flavour).
+//!
+//! Linux keeps pages on per-zone LRU lists and evicts with a
+//! second-chance scan; ElasticOS's page balancer piggybacks on exactly
+//! that scanner (paper §3.2, §4 "Pushing and Pulling Implementation").
+//! Here every node owns one list of the pages resident in its pool,
+//! ordered cold → hot.  The lists are intrusive (dense `prev`/`next`
+//! arrays indexed by [`PageIdx`]) so insert/remove/rotate are O(1) — a
+//! page leaving a node (pulled elsewhere) is unlinked without scanning.
+//!
+//! The actual eviction decision (check referenced bit, give second
+//! chance) lives in the reclaim driver (`os::system`), or in the
+//! model-driven evictor (`runtime::evict_model`) which scores candidate
+//! batches with the Pallas `lru_age` kernel.
+
+use super::addr::{NodeId, MAX_NODES};
+use super::page_table::PageIdx;
+
+const NIL: u32 = u32::MAX;
+
+/// Intrusive per-node LRU lists over the dense page-index space.
+#[derive(Debug)]
+pub struct LruLists {
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    /// Which list each page is on (NIL = none); doubles as an rmap-lite:
+    /// "which node's RAM is this page on" from the scanner's viewpoint.
+    on: Vec<u32>,
+    head: [u32; MAX_NODES],
+    tail: [u32; MAX_NODES],
+    len: [u32; MAX_NODES],
+}
+
+impl LruLists {
+    pub fn new(n_pages: usize) -> LruLists {
+        LruLists {
+            prev: vec![NIL; n_pages],
+            next: vec![NIL; n_pages],
+            on: vec![NIL; n_pages],
+            head: [NIL; MAX_NODES],
+            tail: [NIL; MAX_NODES],
+            len: [0; MAX_NODES],
+        }
+    }
+
+    /// Grow the index space to cover `n_pages` pages (new pages on no
+    /// list). Must track the page table's `grow_to`.
+    pub fn grow_to(&mut self, n_pages: usize) {
+        if n_pages > self.prev.len() {
+            self.prev.resize(n_pages, NIL);
+            self.next.resize(n_pages, NIL);
+            self.on.resize(n_pages, NIL);
+        }
+    }
+
+    #[inline]
+    pub fn len(&self, node: NodeId) -> u32 {
+        self.len[node.0 as usize]
+    }
+
+    pub fn is_empty(&self, node: NodeId) -> bool {
+        self.len(node) == 0
+    }
+
+    /// Which node's list holds this page, if any.
+    #[inline]
+    pub fn list_of(&self, idx: PageIdx) -> Option<NodeId> {
+        let n = self.on[idx as usize];
+        if n == NIL {
+            None
+        } else {
+            Some(NodeId(n as u8))
+        }
+    }
+
+    /// Insert at the hot (MRU) end.
+    pub fn push_hot(&mut self, node: NodeId, idx: PageIdx) {
+        let n = node.0 as usize;
+        debug_assert_eq!(self.on[idx as usize], NIL, "page {idx} already on a list");
+        let old_tail = self.tail[n];
+        self.prev[idx as usize] = old_tail;
+        self.next[idx as usize] = NIL;
+        if old_tail == NIL {
+            self.head[n] = idx;
+        } else {
+            self.next[old_tail as usize] = idx;
+        }
+        self.tail[n] = idx;
+        self.on[idx as usize] = node.0 as u32;
+        self.len[n] += 1;
+    }
+
+    /// Coldest page (LRU end), if any.
+    #[inline]
+    pub fn coldest(&self, node: NodeId) -> Option<PageIdx> {
+        let h = self.head[node.0 as usize];
+        if h == NIL {
+            None
+        } else {
+            Some(h)
+        }
+    }
+
+    /// Remove a specific page from whatever list it is on.
+    pub fn remove(&mut self, idx: PageIdx) {
+        let n = self.on[idx as usize];
+        debug_assert_ne!(n, NIL, "removing page {idx} that is on no list");
+        let n = n as usize;
+        let p = self.prev[idx as usize];
+        let x = self.next[idx as usize];
+        if p == NIL {
+            self.head[n] = x;
+        } else {
+            self.next[p as usize] = x;
+        }
+        if x == NIL {
+            self.tail[n] = p;
+        } else {
+            self.prev[x as usize] = p;
+        }
+        self.prev[idx as usize] = NIL;
+        self.next[idx as usize] = NIL;
+        self.on[idx as usize] = NIL;
+        self.len[n] -= 1;
+    }
+
+    /// Second-chance rotation: move the coldest page to the hot end.
+    pub fn rotate(&mut self, node: NodeId) {
+        if let Some(idx) = self.coldest(node) {
+            self.remove(idx);
+            self.push_hot(node, idx);
+        }
+    }
+
+    /// Touch: move an arbitrary page to the hot end of its list.
+    pub fn touch(&mut self, idx: PageIdx) {
+        if let Some(node) = self.list_of(idx) {
+            self.remove(idx);
+            self.push_hot(node, idx);
+        }
+    }
+
+    /// Iterate cold → hot over one node's list.
+    pub fn iter(&self, node: NodeId) -> LruIter<'_> {
+        LruIter { lists: self, cur: self.head[node.0 as usize] }
+    }
+
+    /// Check internal consistency for one node's list (tests).
+    pub fn verify(&self, node: NodeId) -> Result<(), String> {
+        let n = node.0 as usize;
+        let mut count = 0u32;
+        let mut cur = self.head[n];
+        let mut prev = NIL;
+        while cur != NIL {
+            if self.on[cur as usize] != n as u32 {
+                return Err(format!("page {cur} linked into list {n} but tagged {}", self.on[cur as usize]));
+            }
+            if self.prev[cur as usize] != prev {
+                return Err(format!("back-pointer broken at {cur}"));
+            }
+            prev = cur;
+            cur = self.next[cur as usize];
+            count += 1;
+            if count > self.prev.len() as u32 {
+                return Err("cycle detected".into());
+            }
+        }
+        if self.tail[n] != prev {
+            return Err("tail pointer broken".into());
+        }
+        if count != self.len[n] {
+            return Err(format!("len cache {} != actual {}", self.len[n], count));
+        }
+        Ok(())
+    }
+}
+
+/// Cold-to-hot iterator.
+pub struct LruIter<'a> {
+    lists: &'a LruLists,
+    cur: u32,
+}
+
+impl Iterator for LruIter<'_> {
+    type Item = PageIdx;
+
+    fn next(&mut self) -> Option<PageIdx> {
+        if self.cur == NIL {
+            return None;
+        }
+        let c = self.cur;
+        self.cur = self.lists.next[c as usize];
+        Some(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(i: u8) -> NodeId {
+        NodeId(i)
+    }
+
+    #[test]
+    fn push_order_is_cold_to_hot() {
+        let mut l = LruLists::new(16);
+        l.push_hot(n(0), 1);
+        l.push_hot(n(0), 2);
+        l.push_hot(n(0), 3);
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(l.coldest(n(0)), Some(1));
+        l.verify(n(0)).unwrap();
+    }
+
+    #[test]
+    fn remove_middle() {
+        let mut l = LruLists::new(16);
+        for i in 1..=3 {
+            l.push_hot(n(0), i);
+        }
+        l.remove(2);
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(l.len(n(0)), 2);
+        assert_eq!(l.list_of(2), None);
+        l.verify(n(0)).unwrap();
+    }
+
+    #[test]
+    fn rotate_gives_second_chance() {
+        let mut l = LruLists::new(16);
+        for i in 1..=3 {
+            l.push_hot(n(0), i);
+        }
+        l.rotate(n(0));
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![2, 3, 1]);
+        l.verify(n(0)).unwrap();
+    }
+
+    #[test]
+    fn touch_moves_to_hot_end() {
+        let mut l = LruLists::new(16);
+        for i in 1..=3 {
+            l.push_hot(n(0), i);
+        }
+        l.touch(1);
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn independent_node_lists() {
+        let mut l = LruLists::new(16);
+        l.push_hot(n(0), 1);
+        l.push_hot(n(1), 2);
+        assert_eq!(l.len(n(0)), 1);
+        assert_eq!(l.len(n(1)), 1);
+        assert_eq!(l.list_of(1), Some(n(0)));
+        assert_eq!(l.list_of(2), Some(n(1)));
+        l.verify(n(0)).unwrap();
+        l.verify(n(1)).unwrap();
+    }
+
+    #[test]
+    fn page_moves_between_lists() {
+        let mut l = LruLists::new(16);
+        l.push_hot(n(0), 5);
+        l.remove(5);
+        l.push_hot(n(1), 5);
+        assert!(l.is_empty(n(0)));
+        assert_eq!(l.coldest(n(1)), Some(5));
+    }
+
+    #[test]
+    fn empty_list_behaviour() {
+        let mut l = LruLists::new(4);
+        assert_eq!(l.coldest(n(0)), None);
+        l.rotate(n(0)); // no-op, no panic
+        assert!(l.iter(n(0)).next().is_none());
+    }
+
+    #[test]
+    fn stress_random_ops_stay_consistent() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xE0E0);
+        let mut l = LruLists::new(64);
+        let mut member: Vec<Option<u8>> = vec![None; 64];
+        for _ in 0..5000 {
+            let idx = rng.below_usize(64) as PageIdx;
+            match member[idx as usize] {
+                None => {
+                    let node = rng.below(4) as u8;
+                    l.push_hot(n(node), idx);
+                    member[idx as usize] = Some(node);
+                }
+                Some(_) => {
+                    if rng.chance(0.5) {
+                        l.remove(idx);
+                        member[idx as usize] = None;
+                    } else {
+                        l.touch(idx);
+                    }
+                }
+            }
+        }
+        for node in 0..4 {
+            l.verify(n(node)).unwrap();
+            let expect = member.iter().filter(|m| **m == Some(node)).count() as u32;
+            assert_eq!(l.len(n(node)), expect);
+        }
+    }
+}

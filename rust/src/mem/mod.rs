@@ -1,0 +1,16 @@
+//! Memory substrate: the Linux-VM-equivalent machinery ElasticOS
+//! piggybacks on (paper §3.2–3.3, §4) — virtual areas, per-node frame
+//! pools with watermarks, the elastic page table, second-chance LRU
+//! lists, and the software TLB that keeps the paged fast path fast.
+
+pub mod addr;
+pub mod frame;
+pub mod lru;
+pub mod page_table;
+pub mod tlb;
+
+pub use addr::{AddressSpace, AreaKind, FrameId, NodeId, VmArea, Vpn, MAX_NODES, PAGE_SIZE};
+pub use frame::{FramePool, Watermarks};
+pub use lru::LruLists;
+pub use page_table::{ElasticPageTable, PageIdx, Pte};
+pub use tlb::Tlb;

@@ -1,0 +1,341 @@
+//! The elastic page table.
+//!
+//! The paper's core bookkeeping structure (§3.2–3.3): for every virtual
+//! page of an elasticized process it records *which node's RAM* holds
+//! the page and in which frame, plus the referenced/dirty/pinned flags
+//! the second-chance scanner and the pushers need.  "Maintaining
+//! accurate information in the elastic page tables … is very crucial to
+//! correct execution" — the invariants here are enforced with debug
+//! assertions and checked wholesale by `verify()` (exercised heavily by
+//! the property tests).
+//!
+//! Layout: the address space is a contiguous arena (see
+//! [`super::addr::AddressSpace`]), so the table is a dense `Vec<Pte>`
+//! indexed by `vpn - base_vpn` — one array load on the fault path, no
+//! hashing.  A PTE packs state + flags + owner node + frame id in a
+//! single u64.
+
+use super::addr::{FrameId, NodeId, Vpn, MAX_NODES};
+
+/// Packed page-table entry.
+///
+/// ```text
+/// bits 0..2   state     (0 = unmapped, 1 = resident)
+/// bit  2      referenced (PG_ACCESSED analogue)
+/// bit  3      dirty
+/// bit  4      pinned     (never evicted/pushed)
+/// bits 8..12  owner node (0..MAX_NODES)
+/// bits 32..64 frame id within the owner's pool
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pte(u64);
+
+const ST_MASK: u64 = 0b11;
+const ST_UNMAPPED: u64 = 0;
+const ST_RESIDENT: u64 = 1;
+const FL_REF: u64 = 1 << 2;
+const FL_DIRTY: u64 = 1 << 3;
+const FL_PIN: u64 = 1 << 4;
+const NODE_SHIFT: u64 = 8;
+const NODE_MASK: u64 = 0xF << NODE_SHIFT;
+const FRAME_SHIFT: u64 = 32;
+
+impl Pte {
+    pub const UNMAPPED: Pte = Pte(ST_UNMAPPED);
+
+    #[inline]
+    pub fn resident(node: NodeId, frame: FrameId) -> Pte {
+        Pte(ST_RESIDENT | ((node.0 as u64) << NODE_SHIFT) | ((frame.0 as u64) << FRAME_SHIFT))
+    }
+
+    #[inline]
+    pub fn is_unmapped(self) -> bool {
+        self.0 & ST_MASK == ST_UNMAPPED
+    }
+
+    #[inline]
+    pub fn is_resident(self) -> bool {
+        self.0 & ST_MASK == ST_RESIDENT
+    }
+
+    #[inline]
+    pub fn node(self) -> NodeId {
+        NodeId(((self.0 & NODE_MASK) >> NODE_SHIFT) as u8)
+    }
+
+    #[inline]
+    pub fn frame(self) -> FrameId {
+        FrameId((self.0 >> FRAME_SHIFT) as u32)
+    }
+
+    #[inline]
+    pub fn referenced(self) -> bool {
+        self.0 & FL_REF != 0
+    }
+
+    #[inline]
+    pub fn dirty(self) -> bool {
+        self.0 & FL_DIRTY != 0
+    }
+
+    #[inline]
+    pub fn pinned(self) -> bool {
+        self.0 & FL_PIN != 0
+    }
+
+    #[inline]
+    pub fn set_referenced(&mut self, v: bool) {
+        if v {
+            self.0 |= FL_REF;
+        } else {
+            self.0 &= !FL_REF;
+        }
+    }
+
+    #[inline]
+    pub fn set_dirty(&mut self, v: bool) {
+        if v {
+            self.0 |= FL_DIRTY;
+        } else {
+            self.0 &= !FL_DIRTY;
+        }
+    }
+
+    #[inline]
+    pub fn set_pinned(&mut self, v: bool) {
+        if v {
+            self.0 |= FL_PIN;
+        } else {
+            self.0 &= !FL_PIN;
+        }
+    }
+}
+
+/// Dense page index (vpn - base_vpn); the LRU lists and the rmap use
+/// this as their key.
+pub type PageIdx = u32;
+
+/// The process-wide elastic page table.
+#[derive(Debug)]
+pub struct ElasticPageTable {
+    base_vpn: u64,
+    ptes: Vec<Pte>,
+    resident_per_node: [u32; MAX_NODES],
+}
+
+impl ElasticPageTable {
+    /// Table covering vpns `[base_vpn, base_vpn + n_pages)`.
+    pub fn new(base_vpn: u64, n_pages: u64) -> Self {
+        ElasticPageTable {
+            base_vpn,
+            ptes: vec![Pte::UNMAPPED; n_pages as usize],
+            resident_per_node: [0; MAX_NODES],
+        }
+    }
+
+    /// Grow the table to cover `n_pages` entries (new entries
+    /// unmapped). Called when the address space maps new areas.
+    pub fn grow_to(&mut self, n_pages: u64) {
+        if n_pages as usize > self.ptes.len() {
+            self.ptes.resize(n_pages as usize, Pte::UNMAPPED);
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, vpn: Vpn) -> PageIdx {
+        debug_assert!(vpn.0 >= self.base_vpn, "vpn {vpn:?} below table base");
+        (vpn.0 - self.base_vpn) as PageIdx
+    }
+
+    #[inline]
+    pub fn vpn(&self, idx: PageIdx) -> Vpn {
+        Vpn(self.base_vpn + idx as u64)
+    }
+
+    #[inline]
+    pub fn get(&self, idx: PageIdx) -> Pte {
+        self.ptes[idx as usize]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, idx: PageIdx) -> &mut Pte {
+        &mut self.ptes[idx as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.ptes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ptes.is_empty()
+    }
+
+    /// Map a page as resident at (node, frame). Pte must currently be
+    /// unmapped — movements must go through `relocate`/`unmap`.
+    pub fn map(&mut self, idx: PageIdx, node: NodeId, frame: FrameId) {
+        let pte = &mut self.ptes[idx as usize];
+        debug_assert!(pte.is_unmapped(), "mapping an already-mapped page {idx}");
+        *pte = Pte::resident(node, frame);
+        self.resident_per_node[node.0 as usize] += 1;
+    }
+
+    /// Move a resident page to a new (node, frame) — the push/pull
+    /// primitive's table update. Flags (dirty/pinned) are preserved;
+    /// referenced is cleared (it is a per-residence signal).
+    pub fn relocate(&mut self, idx: PageIdx, node: NodeId, frame: FrameId) {
+        let pte = &mut self.ptes[idx as usize];
+        debug_assert!(pte.is_resident(), "relocating a non-resident page {idx}");
+        let old_node = pte.node();
+        let mut new = Pte::resident(node, frame);
+        new.set_dirty(pte.dirty());
+        new.set_pinned(pte.pinned());
+        *pte = new;
+        self.resident_per_node[old_node.0 as usize] -= 1;
+        self.resident_per_node[node.0 as usize] += 1;
+    }
+
+    /// Unmap a page entirely (used by tests and area teardown).
+    pub fn unmap(&mut self, idx: PageIdx) {
+        let pte = &mut self.ptes[idx as usize];
+        if pte.is_resident() {
+            self.resident_per_node[pte.node().0 as usize] -= 1;
+        }
+        *pte = Pte::UNMAPPED;
+    }
+
+    /// Number of pages resident at `node` (the rss_stat analogue).
+    #[inline]
+    pub fn resident_at(&self, node: NodeId) -> u32 {
+        self.resident_per_node[node.0 as usize]
+    }
+
+    /// Total resident pages across all nodes (total_vm analogue).
+    pub fn total_resident(&self) -> u32 {
+        self.resident_per_node.iter().sum()
+    }
+
+    /// Iterate (idx, pte) over all resident pages.
+    pub fn iter_resident(&self) -> impl Iterator<Item = (PageIdx, Pte)> + '_ {
+        self.ptes
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_resident())
+            .map(|(i, p)| (i as PageIdx, *p))
+    }
+
+    /// Full-table invariant check (O(n); tests only):
+    /// * per-node resident counters match the PTE contents,
+    /// * no two pages share a (node, frame) slot.
+    pub fn verify(&self) -> Result<(), String> {
+        let mut counts = [0u32; MAX_NODES];
+        let mut seen = std::collections::HashSet::new();
+        for (i, p) in self.ptes.iter().enumerate() {
+            if p.is_resident() {
+                counts[p.node().0 as usize] += 1;
+                if !seen.insert((p.node().0, p.frame().0)) {
+                    return Err(format!(
+                        "page {i} shares frame {:?} on {:?} with another page",
+                        p.frame(),
+                        p.node()
+                    ));
+                }
+            }
+        }
+        if counts != self.resident_per_node {
+            return Err(format!(
+                "resident counters drifted: cached {:?} actual {:?}",
+                self.resident_per_node, counts
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(i: u8) -> NodeId {
+        NodeId(i)
+    }
+
+    #[test]
+    fn pte_packing_round_trips() {
+        let mut p = Pte::resident(n(3), FrameId(0xDEAD));
+        assert!(p.is_resident());
+        assert_eq!(p.node(), n(3));
+        assert_eq!(p.frame(), FrameId(0xDEAD));
+        assert!(!p.referenced() && !p.dirty() && !p.pinned());
+        p.set_referenced(true);
+        p.set_dirty(true);
+        p.set_pinned(true);
+        assert!(p.referenced() && p.dirty() && p.pinned());
+        assert_eq!(p.node(), n(3));
+        assert_eq!(p.frame(), FrameId(0xDEAD));
+        p.set_referenced(false);
+        assert!(!p.referenced() && p.dirty());
+    }
+
+    #[test]
+    fn map_and_counters() {
+        let mut t = ElasticPageTable::new(0x10, 100);
+        t.map(5, n(0), FrameId(1));
+        t.map(6, n(1), FrameId(1));
+        assert_eq!(t.resident_at(n(0)), 1);
+        assert_eq!(t.resident_at(n(1)), 1);
+        assert_eq!(t.total_resident(), 2);
+        t.verify().unwrap();
+    }
+
+    #[test]
+    fn relocate_moves_counters_and_keeps_flags() {
+        let mut t = ElasticPageTable::new(0, 10);
+        t.map(3, n(0), FrameId(7));
+        t.get_mut(3).set_dirty(true);
+        t.get_mut(3).set_referenced(true);
+        t.relocate(3, n(1), FrameId(2));
+        let p = t.get(3);
+        assert_eq!(p.node(), n(1));
+        assert_eq!(p.frame(), FrameId(2));
+        assert!(p.dirty(), "dirty must survive relocation");
+        assert!(!p.referenced(), "referenced must reset on relocation");
+        assert_eq!(t.resident_at(n(0)), 0);
+        assert_eq!(t.resident_at(n(1)), 1);
+        t.verify().unwrap();
+    }
+
+    #[test]
+    fn unmap_clears() {
+        let mut t = ElasticPageTable::new(0, 10);
+        t.map(3, n(0), FrameId(7));
+        t.unmap(3);
+        assert!(t.get(3).is_unmapped());
+        assert_eq!(t.total_resident(), 0);
+        t.verify().unwrap();
+    }
+
+    #[test]
+    fn verify_catches_frame_aliasing() {
+        let mut t = ElasticPageTable::new(0, 10);
+        t.map(1, n(0), FrameId(7));
+        t.map(2, n(0), FrameId(7)); // aliased frame — illegal state
+        assert!(t.verify().is_err());
+    }
+
+    #[test]
+    fn idx_vpn_round_trip() {
+        let t = ElasticPageTable::new(0x1000, 10);
+        let vpn = Vpn(0x1005);
+        assert_eq!(t.vpn(t.idx(vpn)), vpn);
+    }
+
+    #[test]
+    fn iter_resident_finds_all() {
+        let mut t = ElasticPageTable::new(0, 32);
+        for i in [1u32, 5, 9] {
+            t.map(i, n(0), FrameId(i));
+        }
+        let got: Vec<PageIdx> = t.iter_resident().map(|(i, _)| i).collect();
+        assert_eq!(got, vec![1, 5, 9]);
+    }
+}

@@ -1,0 +1,157 @@
+//! A tiny software TLB for the pager's fast path.
+//!
+//! Every workload memory access goes through the pager; a page-table
+//! walk per access would dominate the run.  Real CPUs solve this with a
+//! TLB, and so do we: a direct-mapped cache from vpn → frame pointer.
+//! An entry is only installed for pages resident on the *currently
+//! executing* node, so a hit can read/write the frame bytes directly.
+//!
+//! Correctness hinges on invalidation, exactly like a hardware TLB:
+//! * a page evicted/pushed away → `invalidate(vpn)` (single-entry)
+//! * execution jumps to another node → `flush()` (full)
+//!
+//! Writes need the dirty bit maintained: an entry installed by a read
+//! has `write_ok = false`, so the first write to the page takes the
+//! slow path once (setting PTE.dirty), then upgrades the entry.
+
+use super::addr::Vpn;
+
+/// Number of direct-mapped slots (power of two).
+pub const TLB_SLOTS: usize = 512;
+
+#[derive(Clone, Copy)]
+struct Entry {
+    /// Tag; u64::MAX = invalid.
+    vpn: u64,
+    /// Direct pointer to the frame's first byte in the executing
+    /// node's pool.
+    ptr: *mut u8,
+    /// Dirty bit already set — writes may take the fast path.
+    write_ok: bool,
+}
+
+const INVALID: Entry = Entry { vpn: u64::MAX, ptr: std::ptr::null_mut(), write_ok: false };
+
+/// Direct-mapped software TLB.
+pub struct Tlb {
+    slots: [Entry; TLB_SLOTS],
+}
+
+impl Tlb {
+    pub fn new() -> Box<Tlb> {
+        Box::new(Tlb { slots: [INVALID; TLB_SLOTS] })
+    }
+
+    #[inline(always)]
+    fn slot(vpn: u64) -> usize {
+        (vpn as usize) & (TLB_SLOTS - 1)
+    }
+
+    /// Look up a read mapping. Returns the frame pointer on hit.
+    #[inline(always)]
+    pub fn lookup_read(&self, vpn: u64) -> Option<*mut u8> {
+        let e = &self.slots[Self::slot(vpn)];
+        if e.vpn == vpn {
+            Some(e.ptr)
+        } else {
+            None
+        }
+    }
+
+    /// Look up a write mapping (requires `write_ok`).
+    #[inline(always)]
+    pub fn lookup_write(&self, vpn: u64) -> Option<*mut u8> {
+        let e = &self.slots[Self::slot(vpn)];
+        if e.vpn == vpn && e.write_ok {
+            Some(e.ptr)
+        } else {
+            None
+        }
+    }
+
+    /// Install a mapping (replacing whatever shared the slot).
+    #[inline]
+    pub fn install(&mut self, vpn: u64, ptr: *mut u8, write_ok: bool) {
+        self.slots[Self::slot(vpn)] = Entry { vpn, ptr, write_ok };
+    }
+
+    /// Drop one page's mapping if present.
+    #[inline]
+    pub fn invalidate(&mut self, vpn: Vpn) {
+        let e = &mut self.slots[Self::slot(vpn.0)];
+        if e.vpn == vpn.0 {
+            *e = INVALID;
+        }
+    }
+
+    /// Drop everything (on jump: the executing node changed, so every
+    /// cached translation is stale).
+    pub fn flush(&mut self) {
+        self.slots = [INVALID; TLB_SLOTS];
+    }
+}
+
+impl std::fmt::Debug for Tlb {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let live = self.slots.iter().filter(|e| e.vpn != u64::MAX).count();
+        write!(f, "Tlb({live}/{TLB_SLOTS} live)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let mut t = Tlb::new();
+        let mut byte = 0u8;
+        assert!(t.lookup_read(5).is_none());
+        t.install(5, &mut byte, false);
+        assert_eq!(t.lookup_read(5), Some(&mut byte as *mut u8));
+    }
+
+    #[test]
+    fn write_requires_write_ok() {
+        let mut t = Tlb::new();
+        let mut byte = 0u8;
+        t.install(5, &mut byte, false);
+        assert!(t.lookup_write(5).is_none());
+        t.install(5, &mut byte, true);
+        assert!(t.lookup_write(5).is_some());
+    }
+
+    #[test]
+    fn invalidate_single() {
+        let mut t = Tlb::new();
+        let mut b = 0u8;
+        t.install(5, &mut b, false);
+        t.install(6, &mut b, false);
+        t.invalidate(Vpn(5));
+        assert!(t.lookup_read(5).is_none());
+        assert!(t.lookup_read(6).is_some());
+    }
+
+    #[test]
+    fn conflicting_slot_evicts() {
+        let mut t = Tlb::new();
+        let mut b = 0u8;
+        t.install(1, &mut b, false);
+        t.install(1 + TLB_SLOTS as u64, &mut b, false); // same slot
+        assert!(t.lookup_read(1).is_none());
+        assert!(t.lookup_read(1 + TLB_SLOTS as u64).is_some());
+    }
+
+    #[test]
+    fn flush_clears_all() {
+        let mut t = Tlb::new();
+        let mut b = 0u8;
+        for vpn in 0..100u64 {
+            t.install(vpn, &mut b, true);
+        }
+        t.flush();
+        for vpn in 0..100u64 {
+            assert!(t.lookup_read(vpn).is_none());
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Cluster membership: the startup announce protocol (paper §4
+//! "System Startup").
+//!
+//! "Whenever a machine starts, it sends a message on a pre-configured
+//! port announcing its readiness to share its resources … connectivity
+//! parameters such as IP addresses and port numbers [and] the
+//! machine's available resources, which includes total and free RAM.
+//! Next, each participating node records the information received
+//! about the newly-available node…"
+//!
+//! [`Registry`] is that per-node record book; [`Announce`] is the wire
+//! message (UDP-style datagram payload; the TCP peer runtime reuses it
+//! inside its Hello).  Liveness: members that have not re-announced
+//! within `ttl` are expired, and resource info is refreshed on each
+//! announce.
+
+use crate::mem::NodeId;
+use crate::util::{Dec, DecodeError, Enc};
+
+/// A node's self-description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Announce {
+    pub node: NodeId,
+    pub addr: String,
+    pub port: u16,
+    pub total_frames: u32,
+    pub free_frames: u32,
+}
+
+impl Announce {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u8(self.node.0);
+        e.str(&self.addr);
+        e.u16(self.port);
+        e.u32(self.total_frames);
+        e.u32(self.free_frames);
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, DecodeError> {
+        let mut d = Dec::new(buf);
+        Ok(Announce {
+            node: NodeId(d.u8()?),
+            addr: d.str(256)?,
+            port: d.u16()?,
+            total_frames: d.u32()?,
+            free_frames: d.u32()?,
+        })
+    }
+}
+
+/// One registry entry with liveness bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Member {
+    pub info: Announce,
+    pub last_seen_ns: u64,
+}
+
+/// The membership table each participating node maintains.
+#[derive(Debug, Default)]
+pub struct Registry {
+    members: Vec<Member>,
+    /// Liveness horizon: members silent for longer are dropped.
+    pub ttl_ns: u64,
+}
+
+impl Registry {
+    pub fn new(ttl_ns: u64) -> Self {
+        Registry { members: Vec::new(), ttl_ns }
+    }
+
+    /// Record (or refresh) an announce heard at `now_ns`.
+    pub fn observe(&mut self, info: Announce, now_ns: u64) {
+        if let Some(m) = self.members.iter_mut().find(|m| m.info.node == info.node) {
+            m.info = info;
+            m.last_seen_ns = now_ns;
+        } else {
+            self.members.push(Member { info, last_seen_ns: now_ns });
+        }
+    }
+
+    /// Drop members not seen within the TTL; returns how many expired.
+    pub fn expire(&mut self, now_ns: u64) -> usize {
+        let ttl = self.ttl_ns;
+        let before = self.members.len();
+        self.members.retain(|m| now_ns.saturating_sub(m.last_seen_ns) <= ttl);
+        before - self.members.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn get(&self, node: NodeId) -> Option<&Member> {
+        self.members.iter().find(|m| m.info.node == node)
+    }
+
+    /// Live members ordered by free RAM (descending) — the stretch /
+    /// push target preference order (paper §4: nodes announce total
+    /// and free RAM so others can pick).
+    pub fn by_free_ram(&self) -> Vec<&Member> {
+        let mut v: Vec<&Member> = self.members.iter().collect();
+        v.sort_by(|a, b| b.info.free_frames.cmp(&a.info.free_frames));
+        v
+    }
+
+    /// Total cluster frames currently advertised.
+    pub fn cluster_frames(&self) -> u64 {
+        self.members.iter().map(|m| m.info.total_frames as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ann(node: u8, free: u32) -> Announce {
+        Announce {
+            node: NodeId(node),
+            addr: format!("10.0.0.{node}"),
+            port: 7000 + node as u16,
+            total_frames: 8192,
+            free_frames: free,
+        }
+    }
+
+    #[test]
+    fn announce_codec_round_trip() {
+        let a = ann(3, 4096);
+        assert_eq!(Announce::decode(&a.encode()).unwrap(), a);
+    }
+
+    #[test]
+    fn observe_inserts_and_refreshes() {
+        let mut r = Registry::new(1_000);
+        r.observe(ann(1, 100), 0);
+        r.observe(ann(2, 200), 0);
+        assert_eq!(r.len(), 2);
+        r.observe(ann(1, 50), 500); // refresh with new free count
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(NodeId(1)).unwrap().info.free_frames, 50);
+        assert_eq!(r.get(NodeId(1)).unwrap().last_seen_ns, 500);
+    }
+
+    #[test]
+    fn expiry_drops_silent_members() {
+        let mut r = Registry::new(1_000);
+        r.observe(ann(1, 100), 0);
+        r.observe(ann(2, 200), 900);
+        assert_eq!(r.expire(1_500), 1); // node1 silent for 1500 > ttl
+        assert_eq!(r.len(), 1);
+        assert!(r.get(NodeId(1)).is_none());
+        assert!(r.get(NodeId(2)).is_some());
+    }
+
+    #[test]
+    fn free_ram_ordering() {
+        let mut r = Registry::new(u64::MAX);
+        r.observe(ann(1, 100), 0);
+        r.observe(ann(2, 900), 0);
+        r.observe(ann(3, 500), 0);
+        let order: Vec<u8> = r.by_free_ram().iter().map(|m| m.info.node.0).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+        assert_eq!(r.cluster_frames(), 3 * 8192);
+    }
+}

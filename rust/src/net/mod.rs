@@ -1,0 +1,8 @@
+//! Networking: the wire protocol shared by the simulated fabric and
+//! the real-TCP cluster runtime (peer).
+
+pub mod cluster;
+pub mod peer;
+pub mod proto;
+
+pub use proto::{read_msg, write_msg, Msg};

@@ -1,0 +1,203 @@
+//! Wire protocol between ElasticOS nodes.
+//!
+//! These are the paper's control/data messages: the stretch checkpoint
+//! (p_export → p_import), VBD page pushes and pull request/replies
+//! (pg_inject / pg_extract), jump checkpoints, mmap state-sync
+//! multicasts, and the startup announce (paper §4 "System Startup").
+//!
+//! Framing is a u32 length prefix followed by the encoded message; the
+//! codec is the hand-rolled one in [`crate::util::bytes`] (serde is not
+//! available offline).  Every message carries its exact byte size on
+//! the wire, which is what the traffic accounting in the evaluation
+//! counts — for the simulated fabric the *same* encoders are used, so
+//! sim-mode byte counts equal real-TCP byte counts.
+
+use crate::mem::page_table::PageIdx;
+use crate::mem::NodeId;
+use crate::util::{Dec, DecodeError, Enc};
+use std::io::{Read, Write};
+
+/// Page payload limit (one 4 KiB page plus slack).
+const MAX_PAGE: usize = 8192;
+/// Checkpoint payload limit (stretch checkpoints are ~9 KB; allow slack
+/// for big vm-area lists).
+const MAX_CKPT: usize = 1 << 20;
+
+/// A protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Startup announce: node id + contributed RAM (paper §4).
+    Hello { node: NodeId, ram_frames: u32 },
+    /// Stretch: create a suspended process shell from this checkpoint.
+    Stretch { ckpt: Vec<u8> },
+    /// Stretch done; remote shell exists, source may resume.
+    StretchAck,
+    /// Push one page into the receiver's pool (VBD → pg_inject).
+    Push { idx: PageIdx, data: Vec<u8> },
+    /// Ask the owner to extract + return one page (VBD → pg_extract).
+    PullReq { idx: PageIdx },
+    /// Pull reply with the page contents.
+    PullData { idx: PageIdx, data: Vec<u8> },
+    /// Transfer execution: jump checkpoint (registers, stack top, …).
+    Jump { ckpt: Vec<u8> },
+    /// State synchronization multicast (mmap/open events, §3.1).
+    Sync { event: Vec<u8> },
+    /// Execution finished at the active node (digest + stats snapshot).
+    Done { digest: u64, stats: Vec<u8> },
+    /// Orderly shutdown.
+    Bye,
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 0,
+            Msg::Stretch { .. } => 1,
+            Msg::StretchAck => 2,
+            Msg::Push { .. } => 3,
+            Msg::PullReq { .. } => 4,
+            Msg::PullData { .. } => 5,
+            Msg::Jump { .. } => 6,
+            Msg::Sync { .. } => 7,
+            Msg::Done { .. } => 8,
+            Msg::Bye => 9,
+        }
+    }
+
+    /// Encode to bytes (no frame prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(64);
+        e.u8(self.tag());
+        match self {
+            Msg::Hello { node, ram_frames } => {
+                e.u8(node.0);
+                e.u32(*ram_frames);
+            }
+            Msg::Stretch { ckpt } => e.bytes(ckpt),
+            Msg::StretchAck | Msg::Bye => {}
+            Msg::Push { idx, data } => {
+                e.u32(*idx);
+                e.bytes(data);
+            }
+            Msg::PullReq { idx } => e.u32(*idx),
+            Msg::PullData { idx, data } => {
+                e.u32(*idx);
+                e.bytes(data);
+            }
+            Msg::Jump { ckpt } => e.bytes(ckpt),
+            Msg::Sync { event } => e.bytes(event),
+            Msg::Done { digest, stats } => {
+                e.u64(*digest);
+                e.bytes(stats);
+            }
+        }
+        e.into_vec()
+    }
+
+    /// Decode from bytes (no frame prefix).
+    pub fn decode(buf: &[u8]) -> Result<Msg, DecodeError> {
+        let mut d = Dec::new(buf);
+        let tag = d.u8()?;
+        let msg = match tag {
+            0 => Msg::Hello { node: NodeId(d.u8()?), ram_frames: d.u32()? },
+            1 => Msg::Stretch { ckpt: d.bytes(MAX_CKPT)?.to_vec() },
+            2 => Msg::StretchAck,
+            3 => Msg::Push { idx: d.u32()?, data: d.bytes(MAX_PAGE)?.to_vec() },
+            4 => Msg::PullReq { idx: d.u32()? },
+            5 => Msg::PullData { idx: d.u32()?, data: d.bytes(MAX_PAGE)?.to_vec() },
+            6 => Msg::Jump { ckpt: d.bytes(MAX_CKPT)?.to_vec() },
+            7 => Msg::Sync { event: d.bytes(MAX_CKPT)?.to_vec() },
+            8 => Msg::Done { digest: d.u64()?, stats: d.bytes(MAX_CKPT)?.to_vec() },
+            9 => Msg::Bye,
+            tag => return Err(DecodeError::BadTag { tag, what: "Msg" }),
+        };
+        Ok(msg)
+    }
+
+    /// Size on the wire including the u32 frame prefix — this is what
+    /// the traffic accounting charges.
+    pub fn wire_size(&self) -> u64 {
+        self.encode().len() as u64 + 4
+    }
+}
+
+/// Write one length-prefixed message to a stream.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
+    let body = msg.encode();
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed message from a stream.
+pub fn read_msg<R: Read>(r: &mut R) -> std::io::Result<Msg> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_CKPT + 64 {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("frame too large: {len}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Msg::decode(&body).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(m: Msg) {
+        let enc = m.encode();
+        assert_eq!(Msg::decode(&enc).unwrap(), m);
+    }
+
+    #[test]
+    fn all_variants_round_trip() {
+        round_trip(Msg::Hello { node: NodeId(3), ram_frames: 8192 });
+        round_trip(Msg::Stretch { ckpt: vec![1, 2, 3] });
+        round_trip(Msg::StretchAck);
+        round_trip(Msg::Push { idx: 42, data: vec![7; 4096] });
+        round_trip(Msg::PullReq { idx: 9 });
+        round_trip(Msg::PullData { idx: 9, data: vec![1; 4096] });
+        round_trip(Msg::Jump { ckpt: vec![5; 9216] });
+        round_trip(Msg::Sync { event: vec![2; 64] });
+        round_trip(Msg::Done { digest: 0xDEADBEEF, stats: vec![] });
+        round_trip(Msg::Bye);
+    }
+
+    #[test]
+    fn page_messages_are_page_plus_small_header() {
+        // Paper Table 2: push/pull transfer ≈ 4 KB.
+        let m = Msg::Push { idx: 1, data: vec![0; 4096] };
+        let sz = m.wire_size();
+        assert!((4096..4096 + 32).contains(&sz), "push wire size {sz}");
+    }
+
+    #[test]
+    fn oversized_page_rejected() {
+        let mut e = Enc::new();
+        e.u8(3); // Push
+        e.u32(1);
+        e.bytes(&vec![0u8; MAX_PAGE + 1]);
+        assert!(Msg::decode(e.as_slice()).is_err());
+    }
+
+    #[test]
+    fn stream_framing_round_trip() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::PullReq { idx: 7 }).unwrap();
+        write_msg(&mut buf, &Msg::Bye).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_msg(&mut cur).unwrap(), Msg::PullReq { idx: 7 });
+        assert_eq!(read_msg(&mut cur).unwrap(), Msg::Bye);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Jump { ckpt: vec![0; 128] }).unwrap();
+        buf.truncate(buf.len() - 10);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_msg(&mut cur).is_err());
+    }
+}

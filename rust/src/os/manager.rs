@@ -1,0 +1,180 @@
+//! The EOS manager (paper Fig 3, §3.1, §4 "System Startup").
+//!
+//! Continuously monitors per-process memory counters — the analogues of
+//! Linux's `task_size`, `total_vm`, `rss_stat` and `maj_flt` — plus the
+//! node's free-memory watermarks, and decides when a process is "too
+//! big to fit into the node where it is running", at which point it
+//! raises SIGSTRETCH (here: returns a stretch directive the system acts
+//! on).  It also picks stretch/push targets among participating nodes.
+
+use crate::mem::addr::{NodeId, MAX_NODES};
+
+/// Per-process memory counters the manager samples (paper §4 lists the
+/// exact `mm_struct` fields these mirror).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProcCounters {
+    /// Mapped virtual memory in pages (task_size >> PAGE_SHIFT).
+    pub task_pages: u64,
+    /// Resident pages on the home node (rss_stat).
+    pub resident_pages: u64,
+    /// Swap-ins / remote faults (maj_flt).
+    pub maj_flt: u64,
+}
+
+/// What the manager decided after a monitoring pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ManagerAction {
+    None,
+    /// Raise SIGSTRETCH: extend the address space to `target`.
+    Stretch { target: NodeId },
+}
+
+/// Cluster membership info the manager keeps per node (from the
+/// startup announce protocol).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeInfo {
+    pub id: NodeId,
+    pub total_frames: u32,
+    pub free_frames: u32,
+    /// Whether the process already has a shell on this node.
+    pub stretched: bool,
+}
+
+/// The monitoring/decision component.
+#[derive(Debug)]
+pub struct EosManager {
+    /// Stretch when resident+mapped demand exceeds this fraction of the
+    /// home node's frames.
+    pub pressure_ratio: f64,
+    /// Require at least this many remote faults… not for stretch (that
+    /// is size-driven) but kept for marking processes elastic.
+    pub min_task_pages: u64,
+}
+
+impl Default for EosManager {
+    fn default() -> Self {
+        // Stretch when the process alone would consume ≥ ~85% of the
+        // home node (leaving the watermark reserves).
+        EosManager { pressure_ratio: 0.85, min_task_pages: 16 }
+    }
+}
+
+impl EosManager {
+    /// One monitoring pass for a process running on `home`.
+    pub fn check(&self, counters: &ProcCounters, nodes: &[NodeInfo], home: NodeId) -> ManagerAction {
+        if counters.task_pages < self.min_task_pages {
+            return ManagerAction::None;
+        }
+        let home_info = nodes.iter().find(|n| n.id == home);
+        let Some(home_info) = home_info else {
+            return ManagerAction::None;
+        };
+        let demand = counters.task_pages.max(counters.resident_pages);
+        let limit = (home_info.total_frames as f64 * self.pressure_ratio) as u64;
+        if demand >= limit {
+            if let Some(target) = self.pick_stretch_target(nodes, home) {
+                return ManagerAction::Stretch { target };
+            }
+        }
+        ManagerAction::None
+    }
+
+    /// Choose the unstretched node with the most free RAM (paper:
+    /// nodes announce total and free RAM at startup).
+    pub fn pick_stretch_target(&self, nodes: &[NodeInfo], home: NodeId) -> Option<NodeId> {
+        nodes
+            .iter()
+            .filter(|n| n.id != home && !n.stretched)
+            .max_by_key(|n| n.free_frames)
+            .map(|n| n.id)
+    }
+
+    /// Choose where a pushed page should go: the stretched node (other
+    /// than `from`) with the most free frames.
+    pub fn pick_push_target(nodes: &[NodeInfo], from: NodeId) -> Option<NodeId> {
+        nodes
+            .iter()
+            .filter(|n| n.id != from && n.stretched && n.free_frames > 0)
+            .max_by_key(|n| n.free_frames)
+            .map(|n| n.id)
+    }
+}
+
+/// Compact cluster view builder used by the system.
+pub fn node_infos(
+    total: &[u32],
+    free: &[u32],
+    stretched_mask: &[bool; MAX_NODES],
+) -> Vec<NodeInfo> {
+    total
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| NodeInfo {
+            id: NodeId(i as u8),
+            total_frames: t,
+            free_frames: free[i],
+            stretched: stretched_mask[i],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(free: &[u32], stretched: &[bool]) -> Vec<NodeInfo> {
+        free.iter()
+            .enumerate()
+            .map(|(i, &f)| NodeInfo {
+                id: NodeId(i as u8),
+                total_frames: 1000,
+                free_frames: f,
+                stretched: stretched[i],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_process_never_stretches() {
+        let m = EosManager::default();
+        let c = ProcCounters { task_pages: 8, resident_pages: 8, maj_flt: 0 };
+        let ns = nodes(&[100, 1000], &[true, false]);
+        assert_eq!(m.check(&c, &ns, NodeId(0)), ManagerAction::None);
+    }
+
+    #[test]
+    fn stretch_triggers_at_pressure() {
+        let m = EosManager::default();
+        let c = ProcCounters { task_pages: 900, resident_pages: 850, maj_flt: 0 };
+        let ns = nodes(&[50, 800], &[true, false]);
+        assert_eq!(m.check(&c, &ns, NodeId(0)), ManagerAction::Stretch { target: NodeId(1) });
+    }
+
+    #[test]
+    fn stretch_prefers_most_free_node() {
+        let m = EosManager::default();
+        let ns = nodes(&[10, 300, 900], &[true, false, false]);
+        assert_eq!(m.pick_stretch_target(&ns, NodeId(0)), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn no_target_when_all_stretched() {
+        let m = EosManager::default();
+        let c = ProcCounters { task_pages: 2000, resident_pages: 900, maj_flt: 0 };
+        let ns = nodes(&[10, 5], &[true, true]);
+        assert_eq!(m.check(&c, &ns, NodeId(0)), ManagerAction::None);
+    }
+
+    #[test]
+    fn push_target_needs_stretched_with_space() {
+        let ns = nodes(&[0, 40, 90], &[true, true, false]);
+        // node2 has most free but is not stretched; node1 wins
+        assert_eq!(EosManager::pick_push_target(&ns, NodeId(0)), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn push_target_none_when_cluster_full() {
+        let ns = nodes(&[0, 0], &[true, true]);
+        assert_eq!(EosManager::pick_push_target(&ns, NodeId(0)), None);
+    }
+}

@@ -1,0 +1,177 @@
+//! Run metrics: everything the paper's evaluation reports.
+//!
+//! Execution time (Fig 8, 10, 11, 13), network traffic (Fig 9), jump
+//! counts and frequencies (Table 3, Fig 12, 14), and the per-node
+//! residence timeline behind Fig 15 ("maximum time spent on a machine
+//! without jumping").
+
+use crate::mem::addr::{NodeId, MAX_NODES};
+
+/// One execution-transfer record: (sim time ns, from, to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JumpRecord {
+    pub at_ns: u64,
+    pub from: NodeId,
+    pub to: NodeId,
+}
+
+/// Counters + timeline for one run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    // fault counters
+    pub minor_faults: u64,
+    /// Remote page faults = pulls (paper's maj_flt analogue for the
+    /// elastic swap device).
+    pub remote_faults: u64,
+    pub pushes: u64,
+    pub jumps: u64,
+    pub stretches: u64,
+    pub sync_events: u64,
+    pub policy_evals: u64,
+
+    // traffic, in bytes on the wire (message-encoded sizes)
+    pub bytes_pull: u64,
+    pub bytes_push: u64,
+    pub bytes_jump: u64,
+    pub bytes_stretch: u64,
+    pub bytes_sync: u64,
+
+    pub jump_timeline: Vec<JumpRecord>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Total bytes moved over the fabric (Fig 9's metric).
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_pull + self.bytes_push + self.bytes_jump + self.bytes_stretch + self.bytes_sync
+    }
+
+    pub fn record_jump(&mut self, at_ns: u64, from: NodeId, to: NodeId, bytes: u64) {
+        self.jumps += 1;
+        self.bytes_jump += bytes;
+        self.jump_timeline.push(JumpRecord { at_ns, from, to });
+    }
+
+    /// Time spent executing on each node, given the run's start node
+    /// and total duration (derived from the jump timeline).
+    pub fn node_residence_ns(&self, start_node: NodeId, total_ns: u64) -> [u64; MAX_NODES] {
+        let mut out = [0u64; MAX_NODES];
+        let mut cur = start_node;
+        let mut last = 0u64;
+        for j in &self.jump_timeline {
+            out[cur.0 as usize] += j.at_ns.saturating_sub(last);
+            last = j.at_ns;
+            cur = j.to;
+        }
+        out[cur.0 as usize] += total_ns.saturating_sub(last);
+        out
+    }
+
+    /// Longest contiguous interval spent on one machine without
+    /// jumping (Fig 15's metric).
+    pub fn max_stay_ns(&self, total_ns: u64) -> u64 {
+        let mut best = 0u64;
+        let mut last = 0u64;
+        for j in &self.jump_timeline {
+            best = best.max(j.at_ns.saturating_sub(last));
+            last = j.at_ns;
+        }
+        best.max(total_ns.saturating_sub(last))
+    }
+
+    /// Jumps per second of simulated execution (Table 3's frequency).
+    pub fn jump_frequency(&self, total_ns: u64) -> f64 {
+        if total_ns == 0 {
+            return 0.0;
+        }
+        self.jumps as f64 / (total_ns as f64 / 1e9)
+    }
+}
+
+/// Final report of one workload run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub workload: String,
+    pub mode: String,
+    pub policy: String,
+    /// Workload-computed digest (must match ground truth).
+    pub digest: u64,
+    /// Simulated execution time.
+    pub sim_ns: u64,
+    /// Wall-clock time of the emulation itself (perf accounting only).
+    pub wall_ns: u64,
+    /// Total paged memory accesses.
+    pub accesses: u64,
+    pub start_node: NodeId,
+    pub metrics: Metrics,
+}
+
+impl RunReport {
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<14} {:<8} sim={:>10} jumps={:<6} pulls={:<8} pushes={:<8} net={:>10} digest={:#018x}",
+            self.workload,
+            self.mode,
+            crate::util::stats::fmt_ns(self.sim_ns as f64),
+            self.metrics.jumps,
+            self.metrics.remote_faults,
+            self.metrics.pushes,
+            crate::util::stats::fmt_bytes(self.metrics.total_bytes() as f64),
+            self.digest,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(i: u8) -> NodeId {
+        NodeId(i)
+    }
+
+    #[test]
+    fn residence_no_jumps() {
+        let m = Metrics::new();
+        let r = m.node_residence_ns(n(0), 1000);
+        assert_eq!(r[0], 1000);
+        assert_eq!(r[1], 0);
+        assert_eq!(m.max_stay_ns(1000), 1000);
+    }
+
+    #[test]
+    fn residence_with_jumps() {
+        let mut m = Metrics::new();
+        m.record_jump(300, n(0), n(1), 9000);
+        m.record_jump(700, n(1), n(0), 9000);
+        let r = m.node_residence_ns(n(0), 1000);
+        assert_eq!(r[0], 300 + 300); // 0..300 and 700..1000
+        assert_eq!(r[1], 400); // 300..700
+        assert_eq!(m.max_stay_ns(1000), 400);
+        assert_eq!(m.jumps, 2);
+        assert_eq!(m.bytes_jump, 18000);
+    }
+
+    #[test]
+    fn jump_frequency_per_second() {
+        let mut m = Metrics::new();
+        m.record_jump(1, n(0), n(1), 1);
+        m.record_jump(2, n(1), n(0), 1);
+        // 2 jumps in 0.5 simulated seconds = 4 jumps/sec
+        assert!((m.jump_frequency(500_000_000) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_bytes_sums_categories() {
+        let mut m = Metrics::new();
+        m.bytes_pull = 10;
+        m.bytes_push = 20;
+        m.bytes_jump = 30;
+        m.bytes_stretch = 40;
+        m.bytes_sync = 5;
+        assert_eq!(m.total_bytes(), 105);
+    }
+}

@@ -1,0 +1,12 @@
+//! The ElasticOS coordinator: manager, pager, policies, metrics, and
+//! the system composition implementing the four primitives.
+
+pub mod manager;
+pub mod metrics;
+pub mod pager;
+pub mod policy;
+pub mod system;
+
+pub use metrics::{Metrics, RunReport};
+pub use policy::{BurstPolicy, Decision, EwmaPolicy, JumpPolicy, NeverJump, ThresholdPolicy};
+pub use system::{ElasticSystem, Mode, SystemConfig};

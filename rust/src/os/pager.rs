@@ -1,0 +1,362 @@
+//! The pager: ElasticOS's modified page-fault handler (paper §3.3 +
+//! Fig 6) and the [`ElasticMem`] implementation workloads run against.
+//!
+//! Fast path: a software-TLB probe and a direct frame load/store —
+//! two compares and a pointer add per access.  Slow path (TLB miss):
+//! walk the elastic page table and either
+//!
+//! * **minor fault** — first touch: allocate a zeroed frame on the
+//!   executing node (reclaiming if the watermarks demand it),
+//! * **local install** — page is resident here: set referenced, touch
+//!   the LRU, install the TLB entry, or
+//! * **remote fault** — page is resident on another node: **pull** it
+//!   through the VBD path, charge the Table-2 cost, bump the fault
+//!   counters, and consult the jumping policy, which may **jump**
+//!   execution instead of continuing to pull (§3.4).
+//!
+//! Safety of the raw frame pointers: frame pools are allocated once at
+//! construction and never resized, so `*mut u8` into them stay valid
+//! for the system's lifetime; entries are invalidated whenever their
+//! page moves (push/pull) and wholesale on jumps, and the system is
+//! single-threaded, so no pointer is dereferenced after its page moved.
+
+use crate::mem::addr::{AreaKind, Vpn, PAGE_SIZE};
+use crate::mem::page_table::PageIdx;
+use crate::os::policy::Decision;
+use crate::os::system::{ElasticSystem, Mode};
+use crate::proc::sync::SyncEvent;
+use crate::workloads::mem::ElasticMem;
+
+impl ElasticSystem {
+    /// Resolve a faulting access and return a pointer to the page's
+    /// frame bytes. `write` requests dirty tracking.
+    #[cold]
+    #[inline(never)]
+    pub(crate) fn resolve_slow(&mut self, addr: u64, write: bool) -> *mut u8 {
+        let vpn = Vpn::of_addr(addr);
+        let idx = self.pt.idx(vpn);
+        let mut pte = self.pt.get(idx);
+
+        if pte.is_unmapped() {
+            self.minor_fault(idx);
+            pte = self.pt.get(idx);
+        } else if pte.node() != self.running {
+            self.remote_fault(idx);
+            pte = self.pt.get(idx);
+        }
+
+        // Flag maintenance + LRU touch (the slow path stands in for the
+        // hardware setting PG_ACCESSED).
+        let local = pte.node() == self.running;
+        {
+            let p = self.pt.get_mut(idx);
+            p.set_referenced(true);
+            if write {
+                p.set_dirty(true);
+            }
+        }
+        self.lru.touch(idx);
+        let pte = self.pt.get(idx);
+        let ptr = self.pools[pte.node().0 as usize].frame_ptr(pte.frame());
+
+        // Install a TLB entry only if the page is local to the (possibly
+        // just-changed) executing node — a jump during remote_fault means
+        // this access completes against the old node's copy, uncached.
+        if local && pte.node() == self.running {
+            self.tlb.install(vpn.0, ptr, pte.dirty());
+        }
+        ptr
+    }
+
+    /// First touch of an anonymous page: allocate + map a zeroed frame
+    /// on the executing node.
+    pub(crate) fn minor_fault(&mut self, idx: PageIdx) {
+        debug_assert!(
+            self.asp.area_of(self.pt.vpn(idx).base_addr()).is_some(),
+            "touch of unmapped address {:#x} (guard page?)",
+            self.pt.vpn(idx).base_addr()
+        );
+        let node = self.running;
+        let frame = match self.pools[node.0 as usize].alloc() {
+            Some(f) => f,
+            None => {
+                self.direct_reclaim(node);
+                self.pools[node.0 as usize]
+                    .alloc()
+                    .or_else(|| self.pools[node.0 as usize].alloc_reserve())
+                    .expect("cluster out of memory: no frame for minor fault (size the workload within total RAM)")
+            }
+        };
+        self.pt.map(idx, node, frame);
+        if self.cfg.pin_stack {
+            let addr = self.pt.vpn(idx).base_addr();
+            if matches!(self.asp.area_of(addr).map(|a| &a.kind), Some(AreaKind::Stack)) {
+                self.pt.get_mut(idx).set_pinned(true);
+            }
+        }
+        self.lru.push_hot(node, idx);
+        self.clock.advance(self.cfg.costs.minor_fault_ns);
+        self.metrics.minor_faults += 1;
+        // EOS manager monitoring + background reclaim.
+        self.maybe_stretch();
+        self.kswapd(node);
+    }
+
+    /// Remote fault: pull the page to the executing node (paper §3.3),
+    /// then consult the jumping policy (§3.4).
+    pub(crate) fn remote_fault(&mut self, idx: PageIdx) {
+        let owner = self.pt.get(idx).node();
+        debug_assert_ne!(owner, self.running);
+
+        // Keep a sliver of headroom so the incoming page always fits.
+        let node = self.running;
+        if self.pools[node.0 as usize].free_frames() <= self.pools[node.0 as usize].watermarks.min {
+            self.direct_reclaim(node);
+        }
+        // Data + table movement (falls back to a staged swap when the
+        // cluster is completely full — see pull_page).
+        self.pull_page(idx);
+
+        // Costs + counters: a pull is a request message out and a page
+        // message back, synchronous for the faulting process.
+        self.metrics.remote_faults += 1;
+        self.metrics.bytes_pull += self.pull_req_bytes + self.page_msg_bytes;
+        self.clock.advance(self.cfg.costs.pull_ns(self.page_msg_bytes));
+
+        // Restore watermark headroom in the background.
+        self.kswapd(node);
+
+        // Jumping policy: remote page fault counters are exactly the
+        // signal the paper feeds its policy.
+        let cost = self.policy.eval_cost_ns();
+        if cost > 0 {
+            self.clock.advance(cost);
+            self.metrics.policy_evals += 1;
+        }
+        let decision = self.policy.on_remote_fault(self.running, owner, self.clock.now());
+        if self.cfg.mode == Mode::Elastic {
+            if let Decision::JumpTo(target) = decision {
+                if target != self.running && self.stretched[target.0 as usize] {
+                    self.jump_to(target);
+                }
+            }
+        }
+    }
+}
+
+impl ElasticMem for ElasticSystem {
+    fn mmap(&mut self, len: u64, kind: AreaKind, name: &str) -> u64 {
+        let area = self.asp.mmap(len, kind, name).clone();
+        let pages = self.asp.vpn_limit() - self.asp.vpn_base();
+        self.pt.grow_to(pages);
+        self.lru.grow_to(pages as usize);
+        self.meta.areas.push(area.clone());
+        self.queue_sync(SyncEvent::Mmap(area.clone()));
+        // The EOS manager reacts to task_size growth (SIGSTRETCH when
+        // the process no longer fits its node).
+        self.maybe_stretch();
+        area.start
+    }
+
+    #[inline]
+    fn read_u8(&mut self, addr: u64) -> u8 {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.tlb.lookup_read(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, false),
+        };
+        unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) }
+    }
+
+    #[inline]
+    fn read_u32(&mut self, addr: u64) -> u32 {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.tlb.lookup_read(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, false),
+        };
+        debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u32).read() }
+    }
+
+    #[inline]
+    fn read_u64(&mut self, addr: u64) -> u64 {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.tlb.lookup_read(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, false),
+        };
+        debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u64).read() }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, addr: u64, v: u8) {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.tlb.lookup_write(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, true),
+        };
+        unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) = v }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, addr: u64, v: u32) {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.tlb.lookup_write(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, true),
+        };
+        debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u32).write(v) }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, addr: u64, v: u64) {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.tlb.lookup_write(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, true),
+        };
+        debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u64).write(v) }
+    }
+
+    fn regs_mut(&mut self) -> &mut [u64; 16] {
+        &mut self.regs.gpr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::os::system::SystemConfig;
+    use crate::sim::CostModel;
+
+    fn tiny_system(mode: Mode) -> ElasticSystem {
+        let cfg = SystemConfig {
+            node_frames: vec![64, 64],
+            mode,
+            costs: CostModel::default(),
+            ..SystemConfig::default()
+        };
+        ElasticSystem::new(cfg, 16)
+    }
+
+    #[test]
+    fn read_write_round_trip_single_page() {
+        let mut sys = tiny_system(Mode::Elastic);
+        let a = sys.mmap(4096, AreaKind::Heap, "a");
+        sys.write_u64(a, 0xABCD);
+        assert_eq!(sys.read_u64(a), 0xABCD);
+        assert_eq!(sys.metrics.minor_faults, 1);
+        sys.verify().unwrap();
+    }
+
+    #[test]
+    fn first_touch_is_minor_fault_then_tlb_hits() {
+        let mut sys = tiny_system(Mode::Elastic);
+        let a = sys.mmap(2 * 4096, AreaKind::Heap, "a");
+        sys.read_u64(a);
+        sys.read_u64(a + 8);
+        sys.read_u64(a + 16);
+        assert_eq!(sys.metrics.minor_faults, 1, "only the first touch faults");
+        sys.read_u64(a + 4096);
+        assert_eq!(sys.metrics.minor_faults, 2);
+    }
+
+    #[test]
+    fn writes_set_dirty_via_slow_path_once() {
+        let mut sys = tiny_system(Mode::Elastic);
+        let a = sys.mmap(4096, AreaKind::Heap, "a");
+        sys.read_u64(a); // installs read-only entry
+        sys.write_u64(a, 1); // slow path, sets dirty
+        sys.write_u64(a + 8, 2); // fast path now
+        let idx = sys.pt.idx(Vpn::of_addr(a));
+        assert!(sys.pt.get(idx).dirty());
+    }
+
+    #[test]
+    fn overcommit_triggers_stretch_and_pushes() {
+        let mut sys = tiny_system(Mode::Elastic);
+        // 96 pages data > 64-frame home node
+        let a = sys.mmap(96 * 4096, AreaKind::Heap, "big");
+        for p in 0..96u64 {
+            sys.write_u64(a + p * 4096, p);
+        }
+        assert!(sys.is_stretched(), "must have stretched");
+        assert!(sys.metrics.pushes > 0, "kswapd must have pushed pages");
+        assert_eq!(sys.metrics.stretches, 1);
+        assert!(sys.resident_at(crate::mem::NodeId(1)) > 0);
+        sys.verify().unwrap();
+        // all data still correct
+        for p in 0..96u64 {
+            assert_eq!(sys.read_u64(a + p * 4096), p, "page {p}");
+        }
+    }
+
+    #[test]
+    fn remote_access_pulls_page_back() {
+        let mut sys = tiny_system(Mode::Nswap);
+        let a = sys.mmap(96 * 4096, AreaKind::Heap, "big");
+        for p in 0..96u64 {
+            sys.write_u64(a + p * 4096, p * 7);
+        }
+        // early pages were pushed to node 1; re-reading pulls them
+        let before = sys.metrics.remote_faults;
+        assert_eq!(sys.read_u64(a), 0);
+        assert!(sys.metrics.remote_faults > before, "expected a pull");
+        sys.verify().unwrap();
+    }
+
+    #[test]
+    fn nswap_never_jumps_elastic_does() {
+        for (mode, expect_jumps) in [(Mode::Nswap, false), (Mode::Elastic, true)] {
+            let mut sys = tiny_system(mode);
+            let a = sys.mmap(100 * 4096, AreaKind::Heap, "big");
+            // two full sequential passes force remote faults
+            for _ in 0..2 {
+                for p in 0..100u64 {
+                    sys.write_u64(a + p * 4096, p);
+                }
+            }
+            assert_eq!(sys.metrics.jumps > 0, expect_jumps, "mode {mode:?}");
+            sys.verify().unwrap();
+        }
+    }
+
+    #[test]
+    fn data_integrity_across_many_passes() {
+        let mut sys = tiny_system(Mode::Elastic);
+        let a = sys.mmap(90 * 4096, AreaKind::Heap, "big");
+        let n = 90 * 512u64; // u64 elements
+        for i in 0..n {
+            sys.write_u64(a + i * 8, i.wrapping_mul(0x9E3779B97F4A7C15));
+        }
+        for _ in 0..3 {
+            for i in 0..n {
+                assert_eq!(sys.read_u64(a + i * 8), i.wrapping_mul(0x9E3779B97F4A7C15));
+            }
+        }
+        sys.verify().unwrap();
+    }
+
+    #[test]
+    fn sim_clock_advances_with_faults() {
+        let mut sys = tiny_system(Mode::Elastic);
+        let a = sys.mmap(4096, AreaKind::Heap, "a");
+        let t0 = sys.clock.now();
+        sys.read_u64(a);
+        let t1 = sys.clock.now();
+        assert!(t1 > t0, "minor fault must cost time");
+        sys.read_u64(a + 8);
+        // fast path costs only the per-access charge
+        assert_eq!(sys.clock.now() - t1, 2);
+    }
+}

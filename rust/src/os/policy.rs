@@ -1,0 +1,453 @@
+//! Jumping policies — *when* to move execution to the data.
+//!
+//! The paper ships a simple policy (§5.1): count remote page faults and
+//! jump to the remote machine when a threshold is crossed, resetting
+//! the counter.  It frames the policy as "a flexible module within
+//! which new decision making algorithms can be integrated seamlessly";
+//! [`JumpPolicy`] is that module boundary.  Three implementations:
+//!
+//! * [`ThresholdPolicy`] — the paper's counter (evaluated in Figs
+//!   10–14, Table 3).
+//! * [`EwmaPolicy`] — a pure-Rust exponentially-decayed score with
+//!   hysteresis (the paper's §6 "adaptive" direction, cheap flavour).
+//! * `ModelPolicy` (in [`crate::runtime::policy_model`]) — the same
+//!   decayed-locality computation as an AOT-compiled JAX/Pallas model
+//!   executed via PJRT, exercising the three-layer stack on the
+//!   decision path.
+//!
+//! Policies never see pages, only *remote fault events attributed to
+//! the owning node* — exactly the signal the paper's modified fault
+//! handler maintains (§3.3).
+
+use crate::mem::addr::{NodeId, MAX_NODES};
+
+/// Decision returned by a policy after observing a remote fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Stay,
+    JumpTo(NodeId),
+}
+
+/// The flexible policy module interface.
+pub trait JumpPolicy {
+    /// A remote fault was serviced: the faulting page lived at `owner`
+    /// while execution runs at `running`. `now_ns` is simulated time.
+    fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision;
+
+    /// Execution jumped (by our decision or not). Policies reset here.
+    fn on_jump(&mut self, to: NodeId, now_ns: u64);
+
+    /// Human-readable description for reports.
+    fn describe(&self) -> String;
+
+    /// Simulated cost (ns) of one policy evaluation, charged by the
+    /// system when a decision is computed. The counter policy is free;
+    /// the PJRT model policy reports its measured cost.
+    fn eval_cost_ns(&self) -> u64 {
+        0
+    }
+}
+
+/// A policy that never jumps — this *is* Nswap (the paper's baseline:
+/// same system, jumping disabled).
+#[derive(Debug, Default)]
+pub struct NeverJump;
+
+impl JumpPolicy for NeverJump {
+    fn on_remote_fault(&mut self, _running: NodeId, _owner: NodeId, _now: u64) -> Decision {
+        Decision::Stay
+    }
+
+    fn on_jump(&mut self, _to: NodeId, _now: u64) {}
+
+    fn describe(&self) -> String {
+        "never (nswap)".into()
+    }
+}
+
+/// The paper's policy: a remote-fault counter with a threshold.
+///
+/// "A simple remote page fault counter is updated for each remote
+/// pull, and whenever a counter threshold value is reached, then a
+/// process will jump its execution to the remote machine. In addition,
+/// the counter is then reset." (§5.1)
+///
+/// With more than two nodes the jump target is the node that owned the
+/// most faults since the last reset (the paper only ran two nodes, for
+/// which this degenerates to "the other machine").
+#[derive(Debug)]
+pub struct ThresholdPolicy {
+    pub threshold: u64,
+    counter: u64,
+    per_node: [u64; MAX_NODES],
+}
+
+impl ThresholdPolicy {
+    pub fn new(threshold: u64) -> Self {
+        assert!(threshold > 0, "threshold must be positive");
+        ThresholdPolicy { threshold, counter: 0, per_node: [0; MAX_NODES] }
+    }
+
+    fn reset(&mut self) {
+        self.counter = 0;
+        self.per_node = [0; MAX_NODES];
+    }
+}
+
+impl JumpPolicy for ThresholdPolicy {
+    fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, _now: u64) -> Decision {
+        self.counter += 1;
+        self.per_node[owner.0 as usize] += 1;
+        if self.counter >= self.threshold {
+            // Jump towards the node owning most of the recent faults.
+            let mut best = running;
+            let mut best_count = 0u64;
+            for (i, &c) in self.per_node.iter().enumerate() {
+                if i != running.0 as usize && c > best_count {
+                    best = NodeId(i as u8);
+                    best_count = c;
+                }
+            }
+            self.reset();
+            if best != running {
+                return Decision::JumpTo(best);
+            }
+        }
+        Decision::Stay
+    }
+
+    fn on_jump(&mut self, _to: NodeId, _now: u64) {
+        self.reset();
+    }
+
+    fn describe(&self) -> String {
+        format!("threshold({})", self.threshold)
+    }
+}
+
+/// Exponentially-decayed per-node fault mass with hysteresis — the
+/// in-Rust adaptive policy (ablation A1 compares this and the PJRT
+/// model policy against the counter).
+#[derive(Debug)]
+pub struct EwmaPolicy {
+    /// Decay applied per `bucket_ns` of elapsed simulated time.
+    pub decay: f64,
+    pub bucket_ns: u64,
+    /// Jump when `mass[best] - mass[running] > hysteresis`.
+    pub hysteresis: f64,
+    /// …and total mass at least this (noise floor).
+    pub min_mass: f64,
+    /// Refractory period after a jump (suppresses ping-pong on
+    /// scattered access patterns).
+    pub cooldown_ns: u64,
+    mass: [f64; MAX_NODES],
+    last_decay_ns: u64,
+    last_jump_ns: u64,
+}
+
+impl EwmaPolicy {
+    pub fn new(decay: f64, bucket_ns: u64, hysteresis: f64, min_mass: f64) -> Self {
+        assert!((0.0..=1.0).contains(&decay));
+        EwmaPolicy {
+            decay,
+            bucket_ns,
+            hysteresis,
+            min_mass,
+            cooldown_ns: 5_000_000,
+            mass: [0.0; MAX_NODES],
+            last_decay_ns: 0,
+            last_jump_ns: 0,
+        }
+    }
+
+    /// Defaults tuned to behave like a mid-range counter threshold on
+    /// the paper's workload mix: with pulls arriving every ~35 us and
+    /// 200 us buckets, steady-state mass is fault_rate/(1-decay) ~ 36,
+    /// so the floor/hysteresis must sit well below that.
+    pub fn default_tuned() -> Self {
+        EwmaPolicy::new(0.85, 200_000, 8.0, 16.0)
+    }
+
+    fn decay_to(&mut self, now_ns: u64) {
+        if now_ns <= self.last_decay_ns {
+            return;
+        }
+        let steps = (now_ns - self.last_decay_ns) / self.bucket_ns;
+        if steps > 0 {
+            let f = self.decay.powi(steps.min(64) as i32);
+            for m in &mut self.mass {
+                *m *= f;
+            }
+            self.last_decay_ns += steps * self.bucket_ns;
+        }
+    }
+}
+
+impl JumpPolicy for EwmaPolicy {
+    fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision {
+        self.decay_to(now_ns);
+        self.mass[owner.0 as usize] += 1.0;
+        if now_ns.saturating_sub(self.last_jump_ns) < self.cooldown_ns && self.last_jump_ns > 0 {
+            return Decision::Stay; // refractory
+        }
+        let total: f64 = self.mass.iter().sum();
+        if total < self.min_mass {
+            return Decision::Stay;
+        }
+        let (best, best_mass) = self
+            .mass
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, m)| (NodeId(i as u8), *m))
+            .unwrap();
+        if best != running && best_mass - self.mass[running.0 as usize] > self.hysteresis {
+            return Decision::JumpTo(best);
+        }
+        Decision::Stay
+    }
+
+    fn on_jump(&mut self, _to: NodeId, now_ns: u64) {
+        self.decay_to(now_ns);
+        self.last_jump_ns = now_ns.max(1);
+        // keep mass: the point of EWMA is memory across jumps, but damp
+        // it so we don't immediately bounce back
+        for m in &mut self.mass {
+            *m *= 0.25;
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("ewma(decay={},hyst={})", self.decay, self.hysteresis)
+    }
+}
+
+
+/// Burst-aware policy (paper §6: "we will explore whether incorporating
+/// into the jumping decision the burstiness of remote page faulting
+/// brings any benefit").
+///
+/// Rationale: a *burst* of remote faults (many pulls with tiny gaps)
+/// is the signature of execution entering a locality island that lives
+/// on another node — the exact situation where jumping beats pulling.
+/// Sparse faults (long gaps) are background noise that a plain counter
+/// would eventually, wrongly, act on.  The policy tracks the gap
+/// between consecutive remote faults; faults within `burst_gap_ns` of
+/// each other extend the current burst, and the process jumps to the
+/// burst's majority owner once the burst reaches `burst_len`.
+#[derive(Debug)]
+pub struct BurstPolicy {
+    /// Max gap between faults within one burst.
+    pub burst_gap_ns: u64,
+    /// Burst length that triggers a jump.
+    pub burst_len: u64,
+    /// Refractory period after a jump.
+    pub cooldown_ns: u64,
+    last_fault_ns: u64,
+    last_jump_ns: u64,
+    burst: u64,
+    per_node: [u64; MAX_NODES],
+}
+
+impl BurstPolicy {
+    pub fn new(burst_gap_ns: u64, burst_len: u64) -> Self {
+        assert!(burst_len > 0);
+        BurstPolicy {
+            burst_gap_ns,
+            burst_len,
+            cooldown_ns: 2_000_000,
+            last_fault_ns: 0,
+            last_jump_ns: 0,
+            burst: 0,
+            per_node: [0; MAX_NODES],
+        }
+    }
+
+    /// Defaults: pulls are ~35 us apart inside an island sweep; treat
+    /// gaps beyond 8 pulls' worth as burst breaks.
+    pub fn default_tuned() -> Self {
+        BurstPolicy::new(300_000, 48)
+    }
+
+    fn reset_burst(&mut self) {
+        self.burst = 0;
+        self.per_node = [0; MAX_NODES];
+    }
+}
+
+impl JumpPolicy for BurstPolicy {
+    fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision {
+        let gap = now_ns.saturating_sub(self.last_fault_ns);
+        self.last_fault_ns = now_ns;
+        if gap > self.burst_gap_ns {
+            self.reset_burst();
+        }
+        self.burst += 1;
+        self.per_node[owner.0 as usize] += 1;
+        if self.last_jump_ns > 0 && now_ns.saturating_sub(self.last_jump_ns) < self.cooldown_ns {
+            return Decision::Stay;
+        }
+        if self.burst >= self.burst_len {
+            let mut best = running;
+            let mut best_count = 0u64;
+            for (i, &c) in self.per_node.iter().enumerate() {
+                if i != running.0 as usize && c > best_count {
+                    best = NodeId(i as u8);
+                    best_count = c;
+                }
+            }
+            self.reset_burst();
+            if best != running {
+                return Decision::JumpTo(best);
+            }
+        }
+        Decision::Stay
+    }
+
+    fn on_jump(&mut self, _to: NodeId, now_ns: u64) {
+        self.last_jump_ns = now_ns.max(1);
+        self.reset_burst();
+    }
+
+    fn describe(&self) -> String {
+        format!("burst(gap={}us,len={})", self.burst_gap_ns / 1000, self.burst_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(i: u8) -> NodeId {
+        NodeId(i)
+    }
+
+    #[test]
+    fn never_jump_stays() {
+        let mut p = NeverJump;
+        for _ in 0..1000 {
+            assert_eq!(p.on_remote_fault(n(0), n(1), 0), Decision::Stay);
+        }
+    }
+
+    #[test]
+    fn threshold_fires_exactly_at_threshold() {
+        let mut p = ThresholdPolicy::new(32);
+        for i in 1..32 {
+            assert_eq!(p.on_remote_fault(n(0), n(1), i), Decision::Stay, "fault {i}");
+        }
+        assert_eq!(p.on_remote_fault(n(0), n(1), 32), Decision::JumpTo(n(1)));
+    }
+
+    #[test]
+    fn threshold_resets_after_jump() {
+        let mut p = ThresholdPolicy::new(4);
+        for _ in 0..3 {
+            p.on_remote_fault(n(0), n(1), 0);
+        }
+        p.on_jump(n(1), 0);
+        for i in 0..3 {
+            assert_eq!(p.on_remote_fault(n(1), n(0), i), Decision::Stay);
+        }
+        assert_eq!(p.on_remote_fault(n(1), n(0), 3), Decision::JumpTo(n(0)));
+    }
+
+    #[test]
+    fn threshold_targets_majority_owner() {
+        let mut p = ThresholdPolicy::new(10);
+        for i in 0..6 {
+            p.on_remote_fault(n(0), n(2), i);
+        }
+        for i in 0..3 {
+            p.on_remote_fault(n(0), n(1), i);
+        }
+        assert_eq!(p.on_remote_fault(n(0), n(1), 99), Decision::JumpTo(n(2)));
+    }
+
+    #[test]
+    fn ewma_jumps_towards_dominant_mass() {
+        let mut p = EwmaPolicy::new(0.9, 1000, 5.0, 10.0);
+        let mut jumped = None;
+        for i in 0..100u64 {
+            if let Decision::JumpTo(t) = p.on_remote_fault(n(0), n(1), i * 10) {
+                jumped = Some(t);
+                break;
+            }
+        }
+        assert_eq!(jumped, Some(n(1)));
+    }
+
+    #[test]
+    fn ewma_respects_noise_floor() {
+        let mut p = EwmaPolicy::new(0.9, 1000, 0.1, 1000.0);
+        for i in 0..100u64 {
+            assert_eq!(p.on_remote_fault(n(0), n(1), i), Decision::Stay);
+        }
+    }
+
+
+    #[test]
+    fn burst_policy_jumps_on_tight_bursts() {
+        let mut p = BurstPolicy::new(1_000, 8);
+        let mut jumped = false;
+        for i in 0..16u64 {
+            // 500 ns apart: one burst
+            if let Decision::JumpTo(t) = p.on_remote_fault(n(0), n(1), 1_000_000 + i * 500) {
+                assert_eq!(t, n(1));
+                jumped = true;
+                break;
+            }
+        }
+        assert!(jumped);
+    }
+
+    #[test]
+    fn burst_policy_ignores_sparse_faults() {
+        let mut p = BurstPolicy::new(1_000, 8);
+        for i in 0..100u64 {
+            // 10 us apart: every fault breaks the burst
+            assert_eq!(p.on_remote_fault(n(0), n(1), i * 10_000), Decision::Stay, "fault {i}");
+        }
+    }
+
+    #[test]
+    fn burst_policy_respects_cooldown() {
+        let mut p = BurstPolicy::new(1_000, 4);
+        p.cooldown_ns = 1_000_000;
+        // first burst jumps
+        let mut t = 5_000_000u64;
+        let mut jumps = 0;
+        for _ in 0..4 {
+            if p.on_remote_fault(n(0), n(1), t) != Decision::Stay {
+                jumps += 1;
+                p.on_jump(n(1), t); // the system notifies the policy
+            }
+            t += 100;
+        }
+        assert_eq!(jumps, 1);
+        // immediate second burst is suppressed by the cooldown
+        for _ in 0..8 {
+            assert_eq!(p.on_remote_fault(n(1), n(0), t), Decision::Stay);
+            t += 100;
+        }
+    }
+
+    #[test]
+    fn ewma_decays_old_evidence() {
+        let mut p = EwmaPolicy::new(0.5, 1000, 1.0, 0.5);
+        // Build mass for node 1 at t≈0
+        for i in 0..20u64 {
+            p.on_remote_fault(n(0), n(1), i);
+        }
+        // A long quiet period decays it; a small burst for node 2 at
+        // t=100000 should now dominate.
+        let d = p.on_remote_fault(n(0), n(2), 100_000);
+        // one fault isn't enough mass yet
+        assert_eq!(d, Decision::Stay);
+        let mut last = Decision::Stay;
+        for k in 0..5u64 {
+            last = p.on_remote_fault(n(0), n(2), 100_000 + k);
+        }
+        assert_eq!(last, Decision::JumpTo(n(2)));
+    }
+}

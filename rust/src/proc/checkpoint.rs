@@ -1,0 +1,244 @@
+//! Stretch and jump checkpoints.
+//!
+//! The paper's two checkpoint flavours (§3.1, §3.4, §4):
+//!
+//! * **Stretch checkpoint** — infrequently-changing kernel metadata
+//!   plus the program data segment; ~9 KB in the paper's experiments,
+//!   shipped once per remote node to create the suspended shell.
+//! * **Jump checkpoint** — only the state that changes at a high rate:
+//!   register file, pending signals, audit counters, I/O context, and
+//!   the top stack pages (the dominant part; two 4 KiB pages in the
+//!   paper).  ~9 KB, shipped on every execution transfer.
+
+use super::meta::ProcessMeta;
+use crate::mem::addr::Vpn;
+use crate::util::{Dec, DecodeError, Enc};
+
+/// x86-64-ish register file (thread context).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegisterFile {
+    /// 16 general-purpose registers. The workload engine uses these as
+    /// its resumable scalar state (loop indices, accumulators…), which
+    /// is exactly the role they play for a real migrated thread.
+    pub gpr: [u64; 16],
+    pub rip: u64,
+    pub rflags: u64,
+    /// FP/vector state (XSAVE area digest — we carry 64 bytes).
+    pub fpu: [u8; 64],
+}
+
+impl Default for RegisterFile {
+    fn default() -> Self {
+        RegisterFile { gpr: [0; 16], rip: 0, rflags: 0x202, fpu: [0; 64] }
+    }
+}
+
+impl RegisterFile {
+    pub fn encode(&self, e: &mut Enc) {
+        for r in self.gpr {
+            e.u64(r);
+        }
+        e.u64(self.rip);
+        e.u64(self.rflags);
+        e.raw(&self.fpu);
+    }
+
+    pub fn decode(d: &mut Dec) -> Result<Self, DecodeError> {
+        let mut gpr = [0u64; 16];
+        for r in &mut gpr {
+            *r = d.u64()?;
+        }
+        let rip = d.u64()?;
+        let rflags = d.u64()?;
+        let mut fpu = [0u8; 64];
+        fpu.copy_from_slice(d.raw(64)?);
+        Ok(RegisterFile { gpr, rip, rflags, fpu })
+    }
+}
+
+/// A queued-but-undelivered signal (struct sigpending entry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PendingSignal {
+    pub signo: u8,
+    pub code: i64,
+    pub value: u64,
+}
+
+/// Stretch checkpoint: metadata + data segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StretchCheckpoint {
+    pub meta: ProcessMeta,
+    /// Program data segment contents (initialized globals). Dominates
+    /// the checkpoint size, as in the paper (~9 KB total).
+    pub data_segment: Vec<u8>,
+}
+
+impl StretchCheckpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(1024 + self.data_segment.len());
+        self.meta.encode(&mut e);
+        e.bytes(&self.data_segment);
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, DecodeError> {
+        let mut d = Dec::new(buf);
+        let meta = ProcessMeta::decode(&mut d)?;
+        let data_segment = d.bytes(1 << 24)?.to_vec();
+        Ok(StretchCheckpoint { meta, data_segment })
+    }
+}
+
+/// Jump checkpoint: the high-rate state only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JumpCheckpoint {
+    pub regs: RegisterFile,
+    pub pending: Vec<PendingSignal>,
+    /// Auditing counters (paper lists them explicitly).
+    pub audit: [u64; 4],
+    /// I/O context: current working fd offsets that moved since stretch.
+    pub io_offsets: Vec<(u32, u64)>,
+    /// Top stack pages: (vpn, contents). The paper ships the two
+    /// topmost pages of the VM_GROWSDOWN area.
+    pub stack_pages: Vec<(Vpn, Vec<u8>)>,
+    /// Opaque engine state for resumable workloads beyond what fits in
+    /// the register file (kept small; asserted in tests).
+    pub engine_state: Vec<u8>,
+}
+
+impl JumpCheckpoint {
+    pub fn new(regs: RegisterFile) -> Self {
+        JumpCheckpoint {
+            regs,
+            pending: Vec::new(),
+            audit: [0; 4],
+            io_offsets: Vec::new(),
+            stack_pages: Vec::new(),
+            engine_state: Vec::new(),
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(512 + self.stack_pages.len() * 4200);
+        self.regs.encode(&mut e);
+        e.u32(self.pending.len() as u32);
+        for s in &self.pending {
+            e.u8(s.signo);
+            e.i64(s.code);
+            e.u64(s.value);
+        }
+        for a in self.audit {
+            e.u64(a);
+        }
+        e.u32(self.io_offsets.len() as u32);
+        for (fd, off) in &self.io_offsets {
+            e.u32(*fd);
+            e.u64(*off);
+        }
+        e.u32(self.stack_pages.len() as u32);
+        for (vpn, data) in &self.stack_pages {
+            e.u64(vpn.0);
+            e.bytes(data);
+        }
+        e.bytes(&self.engine_state);
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, DecodeError> {
+        let mut d = Dec::new(buf);
+        let regs = RegisterFile::decode(&mut d)?;
+        let n_pending = d.u32()? as usize;
+        if n_pending > 1024 {
+            return Err(DecodeError::TooLong { len: n_pending, limit: 1024 });
+        }
+        let mut pending = Vec::with_capacity(n_pending);
+        for _ in 0..n_pending {
+            pending.push(PendingSignal { signo: d.u8()?, code: d.i64()?, value: d.u64()? });
+        }
+        let mut audit = [0u64; 4];
+        for a in &mut audit {
+            *a = d.u64()?;
+        }
+        let n_io = d.u32()? as usize;
+        if n_io > 65536 {
+            return Err(DecodeError::TooLong { len: n_io, limit: 65536 });
+        }
+        let mut io_offsets = Vec::with_capacity(n_io);
+        for _ in 0..n_io {
+            io_offsets.push((d.u32()?, d.u64()?));
+        }
+        let n_stack = d.u32()? as usize;
+        if n_stack > 64 {
+            return Err(DecodeError::TooLong { len: n_stack, limit: 64 });
+        }
+        let mut stack_pages = Vec::with_capacity(n_stack);
+        for _ in 0..n_stack {
+            let vpn = Vpn(d.u64()?);
+            stack_pages.push((vpn, d.bytes(8192)?.to_vec()));
+        }
+        let engine_state = d.bytes(1 << 20)?.to_vec();
+        Ok(JumpCheckpoint { regs, pending, audit, io_offsets, stack_pages, engine_state })
+    }
+
+    /// Wire size of the encoded checkpoint.
+    pub fn size(&self) -> u64 {
+        self.encode().len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::PAGE_SIZE;
+
+    #[test]
+    fn register_file_round_trip() {
+        let mut r = RegisterFile::default();
+        r.gpr[0] = 42;
+        r.gpr[15] = u64::MAX;
+        r.rip = 0x400123;
+        r.fpu[63] = 9;
+        let mut e = Enc::new();
+        r.encode(&mut e);
+        let v = e.into_vec();
+        let mut d = Dec::new(&v);
+        assert_eq!(RegisterFile::decode(&mut d).unwrap(), r);
+    }
+
+    #[test]
+    fn stretch_checkpoint_round_trip_and_size() {
+        let meta = ProcessMeta::minimal(7, "bench");
+        let ckpt = StretchCheckpoint { meta, data_segment: vec![0xAA; 8 * 1024] };
+        let enc = ckpt.encode();
+        // Paper: stretch checkpoints average ~9 KB, dominated by the
+        // data segment.
+        assert!((8 * 1024..10 * 1024).contains(&enc.len()), "size={}", enc.len());
+        assert_eq!(StretchCheckpoint::decode(&enc).unwrap(), ckpt);
+    }
+
+    #[test]
+    fn jump_checkpoint_round_trip_and_size() {
+        let mut ckpt = JumpCheckpoint::new(RegisterFile::default());
+        ckpt.pending.push(PendingSignal { signo: 10, code: -1, value: 5 });
+        ckpt.audit = [1, 2, 3, 4];
+        ckpt.io_offsets.push((3, 8192));
+        ckpt.stack_pages.push((Vpn(100), vec![1; PAGE_SIZE]));
+        ckpt.stack_pages.push((Vpn(101), vec![2; PAGE_SIZE]));
+        let enc = ckpt.encode();
+        // Paper §4: ~9 KB, dominated by the two 4 KiB stack frames.
+        assert!((8 * 1024..10 * 1024).contains(&enc.len()), "size={}", enc.len());
+        assert_eq!(JumpCheckpoint::decode(&enc).unwrap(), ckpt);
+    }
+
+    #[test]
+    fn jump_without_stack_is_sub_kilobyte() {
+        let ckpt = JumpCheckpoint::new(RegisterFile::default());
+        assert!(ckpt.size() < 1024);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(JumpCheckpoint::decode(&[0u8; 3]).is_err());
+        assert!(StretchCheckpoint::decode(&[0u8; 2]).is_err());
+    }
+}

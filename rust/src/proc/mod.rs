@@ -1,0 +1,10 @@
+//! The elasticized process: metadata, checkpoints, and state
+//! synchronization (paper §3.1, §3.4, §4).
+
+pub mod checkpoint;
+pub mod meta;
+pub mod sync;
+
+pub use checkpoint::{JumpCheckpoint, PendingSignal, RegisterFile, StretchCheckpoint};
+pub use meta::{OpenFile, ProcessMeta, SchedClass};
+pub use sync::{apply_event, SyncEvent, SyncQueue};

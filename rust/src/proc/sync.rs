@@ -1,0 +1,193 @@
+//! State synchronization (paper §3.1 "State Synchronization", §4).
+//!
+//! Intermediate-rate state changes — mapping new memory regions,
+//! opening/closing files — are multicast to every participating node so
+//! each process shell stays consistent.  The paper calls out a pitfall:
+//! *"the operating system scheduler may delay flushing all such
+//! synchronization messages until after a jump is performed; if this
+//! happens, the system may arrive at an incorrect state or even
+//! crash."*  [`SyncQueue`] models exactly that: events are queued, a
+//! flush delivers them, and the jump path asserts the queue is empty
+//! before transferring execution (enforced in `os::system`, property-
+//! tested in rust/tests/properties.rs).
+
+use crate::mem::addr::VmArea;
+use crate::util::{Dec, DecodeError, Enc};
+
+/// A state-change event that must reach all replicas.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SyncEvent {
+    /// A new region was mapped (sync_new_mmap hook).
+    Mmap(VmArea),
+    /// A region was unmapped.
+    Munmap { start: u64 },
+    /// A file was opened.
+    Open { fd: u32, path: String, flags: u32 },
+    /// A file was closed.
+    Close { fd: u32 },
+    /// Scheduling parameters changed.
+    Renice { nice: i64 },
+}
+
+impl SyncEvent {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            SyncEvent::Mmap(a) => {
+                e.u8(0);
+                a.encode(&mut e);
+            }
+            SyncEvent::Munmap { start } => {
+                e.u8(1);
+                e.u64(*start);
+            }
+            SyncEvent::Open { fd, path, flags } => {
+                e.u8(2);
+                e.u32(*fd);
+                e.str(path);
+                e.u32(*flags);
+            }
+            SyncEvent::Close { fd } => {
+                e.u8(3);
+                e.u32(*fd);
+            }
+            SyncEvent::Renice { nice } => {
+                e.u8(4);
+                e.i64(*nice);
+            }
+        }
+        e.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, DecodeError> {
+        let mut d = Dec::new(buf);
+        Ok(match d.u8()? {
+            0 => SyncEvent::Mmap(VmArea::decode(&mut d)?),
+            1 => SyncEvent::Munmap { start: d.u64()? },
+            2 => SyncEvent::Open { fd: d.u32()?, path: d.str(4096)?, flags: d.u32()? },
+            3 => SyncEvent::Close { fd: d.u32()? },
+            4 => SyncEvent::Renice { nice: d.i64()? },
+            tag => return Err(DecodeError::BadTag { tag, what: "SyncEvent" }),
+        })
+    }
+}
+
+/// Queue of not-yet-multicast events.
+#[derive(Debug, Default)]
+pub struct SyncQueue {
+    pending: Vec<SyncEvent>,
+    /// Total events flushed over the queue's lifetime.
+    pub flushed: u64,
+}
+
+impl SyncQueue {
+    pub fn new() -> Self {
+        SyncQueue::default()
+    }
+
+    /// Queue an event for multicast.
+    pub fn enqueue(&mut self, ev: SyncEvent) {
+        self.pending.push(ev);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_flushed(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drain the queue, handing each event to `deliver` (the multicast
+    /// sender). MUST be called before any jump — `os::system` enforces
+    /// this ordering.
+    pub fn flush<F: FnMut(&SyncEvent)>(&mut self, mut deliver: F) -> usize {
+        let n = self.pending.len();
+        for ev in self.pending.drain(..) {
+            deliver(&ev);
+        }
+        self.flushed += n as u64;
+        n
+    }
+}
+
+/// Replica-side applicator: applies delivered events to a process
+/// shell's metadata (used by TCP workers and by the property tests to
+/// check leader/replica convergence).
+pub fn apply_event(meta: &mut crate::proc::meta::ProcessMeta, ev: &SyncEvent) {
+    match ev {
+        SyncEvent::Mmap(a) => meta.areas.push(a.clone()),
+        SyncEvent::Munmap { start } => meta.areas.retain(|a| a.start != *start),
+        SyncEvent::Open { fd, path, flags } => meta.files.push(crate::proc::meta::OpenFile {
+            fd: *fd,
+            path: path.clone(),
+            offset: 0,
+            flags: *flags,
+        }),
+        SyncEvent::Close { fd } => meta.files.retain(|f| f.fd != *fd),
+        SyncEvent::Renice { nice } => meta.nice = *nice,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::AreaKind;
+    use crate::proc::meta::ProcessMeta;
+
+    fn area(start: u64) -> VmArea {
+        VmArea { start, len: 0x1000, kind: AreaKind::Heap, name: "t".into() }
+    }
+
+    #[test]
+    fn event_codec_round_trip() {
+        for ev in [
+            SyncEvent::Mmap(area(0x5000)),
+            SyncEvent::Munmap { start: 0x5000 },
+            SyncEvent::Open { fd: 4, path: "/tmp/x".into(), flags: 2 },
+            SyncEvent::Close { fd: 4 },
+            SyncEvent::Renice { nice: -3 },
+        ] {
+            assert_eq!(SyncEvent::decode(&ev.encode()).unwrap(), ev);
+        }
+    }
+
+    #[test]
+    fn flush_delivers_in_order() {
+        let mut q = SyncQueue::new();
+        q.enqueue(SyncEvent::Mmap(area(0x1000)));
+        q.enqueue(SyncEvent::Munmap { start: 0x1000 });
+        let mut got = Vec::new();
+        let n = q.flush(|ev| got.push(ev.clone()));
+        assert_eq!(n, 2);
+        assert!(q.is_flushed());
+        assert!(matches!(got[0], SyncEvent::Mmap(_)));
+        assert!(matches!(got[1], SyncEvent::Munmap { .. }));
+    }
+
+    #[test]
+    fn replica_converges_via_events() {
+        let mut leader = ProcessMeta::minimal(1, "p");
+        let mut replica = leader.clone();
+        let mut q = SyncQueue::new();
+
+        // leader mutates locally and queues the same events
+        leader.areas.push(area(0x1000));
+        q.enqueue(SyncEvent::Mmap(area(0x1000)));
+        leader.files.push(crate::proc::meta::OpenFile { fd: 5, path: "/f".into(), offset: 0, flags: 0 });
+        q.enqueue(SyncEvent::Open { fd: 5, path: "/f".into(), flags: 0 });
+        leader.nice = 7;
+        q.enqueue(SyncEvent::Renice { nice: 7 });
+
+        q.flush(|ev| apply_event(&mut replica, ev));
+        assert_eq!(leader, replica);
+    }
+
+    #[test]
+    fn unflushed_queue_detectable() {
+        let mut q = SyncQueue::new();
+        q.enqueue(SyncEvent::Close { fd: 1 });
+        assert!(!q.is_flushed());
+        assert_eq!(q.pending_len(), 1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Model-driven eviction scoring: the kswapd page-scanner's
+//! second-chance aging as the AOT-compiled `evict_rank` model
+//! (python/compile/model.py → Pallas `lru_age` kernel), executed via
+//! PJRT in fixed-size blocks.
+//!
+//! Used by the bulk balancer (`balance_on_stretch` / ablation A2) to
+//! rank a node's resident pages for pushing, and benchmarked head-to-
+//! head against the pure-Rust second-chance scan in
+//! benches/policy_model.rs.
+
+use super::Model;
+use crate::mem::page_table::PageIdx;
+
+/// Must match python/compile/model.py (EVICT_B).
+pub const B: usize = 2048;
+
+/// One page's scanner-visible metadata.
+#[derive(Debug, Clone, Copy)]
+pub struct PageMeta {
+    pub idx: PageIdx,
+    /// Scans since last reference.
+    pub age: f32,
+    pub referenced: bool,
+    pub dirty: bool,
+    pub pinned: bool,
+}
+
+/// PJRT-backed eviction ranker.
+pub struct ModelEvictor {
+    model: Model,
+    pub evals: u64,
+}
+
+impl ModelEvictor {
+    pub fn new(model: Model) -> Self {
+        ModelEvictor { model, evals: 0 }
+    }
+
+    /// Score a batch of pages; returns (idx, priority) sorted by
+    /// descending eviction priority (evict-first first). Pinned pages
+    /// sink to the bottom via the kernel's penalty.
+    pub fn rank(&mut self, pages: &[PageMeta]) -> Vec<(PageIdx, f32)> {
+        let mut out = Vec::with_capacity(pages.len());
+        for chunk in pages.chunks(B) {
+            let mut age = [0f32; B];
+            let mut refd = [0f32; B];
+            let mut dirty = [0f32; B];
+            let mut pinned = [1f32; B]; // padding: treat as pinned so it never ranks
+            for (i, p) in chunk.iter().enumerate() {
+                age[i] = p.age;
+                refd[i] = p.referenced as u8 as f32;
+                dirty[i] = p.dirty as u8 as f32;
+                pinned[i] = p.pinned as u8 as f32;
+            }
+            self.evals += 1;
+            let res = match self.model.run_f32(&[
+                (&age, &[B as i64]),
+                (&refd, &[B as i64]),
+                (&dirty, &[B as i64]),
+                (&pinned, &[B as i64]),
+            ]) {
+                Ok(r) => r,
+                Err(e) => {
+                    log::warn!("evict model failed ({e}); falling back to age order");
+                    for p in chunk {
+                        out.push((p.idx, p.age));
+                    }
+                    continue;
+                }
+            };
+            let prio = &res[1];
+            for (i, p) in chunk.iter().enumerate() {
+                out.push((p.idx, prio[i]));
+            }
+        }
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        out
+    }
+}
+
+/// Pure-Rust reference ranking (same formula as the kernel); used by
+/// tests and as the no-artifacts fallback.
+pub fn rank_reference(pages: &[PageMeta]) -> Vec<(PageIdx, f32)> {
+    let mut out: Vec<(PageIdx, f32)> = pages
+        .iter()
+        .map(|p| {
+            let new_age = if p.referenced { 0.0 } else { p.age + 1.0 };
+            let prio = new_age - 0.25 * (p.dirty as u8 as f32) - 1.0e9 * (p.pinned as u8 as f32);
+            (p.idx, prio)
+        })
+        .collect();
+    out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_dir, Engine};
+
+    fn sample(n: usize) -> Vec<PageMeta> {
+        let mut rng = crate::util::Rng::new(77);
+        (0..n)
+            .map(|i| PageMeta {
+                idx: i as PageIdx,
+                age: (rng.next_u64() % 100) as f32,
+                referenced: rng.chance(0.3),
+                dirty: rng.chance(0.4),
+                pinned: rng.chance(0.05),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reference_ranking_properties() {
+        let pages = sample(500);
+        let ranked = rank_reference(&pages);
+        assert_eq!(ranked.len(), 500);
+        // descending priority
+        for w in ranked.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        // pinned pages are at the very bottom
+        let pinned: std::collections::HashSet<_> =
+            pages.iter().filter(|p| p.pinned).map(|p| p.idx).collect();
+        let tail: std::collections::HashSet<_> =
+            ranked[ranked.len() - pinned.len()..].iter().map(|(i, _)| *i).collect();
+        assert_eq!(pinned, tail);
+    }
+
+    #[test]
+    fn model_matches_reference() {
+        let path = artifacts_dir().join("evict.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = Engine::cpu().unwrap();
+        let mut ev = ModelEvictor::new(eng.load(path).unwrap());
+        let pages = sample(3000); // spans two blocks
+        let got = ev.rank(&pages);
+        let want = rank_reference(&pages);
+        assert_eq!(got.len(), want.len());
+        // priorities must match element-wise per page id
+        let mut got_by_idx: Vec<(PageIdx, f32)> = got.clone();
+        got_by_idx.sort_by_key(|(i, _)| *i);
+        let mut want_by_idx = want.clone();
+        want_by_idx.sort_by_key(|(i, _)| *i);
+        for ((gi, gp), (wi, wp)) in got_by_idx.iter().zip(want_by_idx.iter()) {
+            assert_eq!(gi, wi);
+            assert!((gp - wp).abs() < 1e-3, "page {gi}: {gp} vs {wp}");
+        }
+        assert_eq!(ev.evals, 2, "3000 pages = two blocks");
+    }
+}

@@ -1,0 +1,125 @@
+//! PJRT runtime: loads the AOT-compiled L2/L1 artifacts (HLO text
+//! emitted by `python/compile/aot.py`) and executes them from the Rust
+//! decision paths.  Python never runs here — the HLO text is compiled
+//! once by the in-process XLA CPU client at startup.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod evict_model;
+pub mod policy_model;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub use evict_model::ModelEvictor;
+pub use policy_model::ModelJumpPolicy;
+
+/// Shared PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());
+        Ok(Engine { client })
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Model> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling HLO")?;
+        Ok(Model { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled executable (jax function lowered with
+/// `return_tuple=True`, so outputs always come back as a tuple).
+pub struct Model {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Model {
+    /// Execute with f32 inputs of the given shapes; returns each tuple
+    /// element flattened to a f32 vec.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() == 1 && dims[0] as usize == data.len() {
+                    Ok(lit)
+                } else {
+                    lit.reshape(dims).map_err(anyhow::Error::from)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Resolve the artifacts directory: $ELASTICOS_ARTIFACTS or
+/// ./artifacts relative to the workspace root.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("ELASTICOS_ARTIFACTS") {
+        return d.into();
+    }
+    for base in [".", "..", "../.."] {
+        let p = std::path::Path::new(base).join("artifacts");
+        if p.join("policy.hlo.txt").exists() {
+            return p;
+        }
+    }
+    "artifacts".into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are also
+    /// covered by rust/tests/runtime_pjrt.rs which skips cleanly.
+    fn artifacts_present() -> bool {
+        artifacts_dir().join("policy.hlo.txt").exists()
+    }
+
+    #[test]
+    fn load_and_run_policy_artifact() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = Engine::cpu().unwrap();
+        let model = eng.load(artifacts_dir().join("policy.hlo.txt")).unwrap();
+        let window = vec![0f32; 64 * 16];
+        let mut onehot = vec![0f32; 16];
+        onehot[0] = 1.0;
+        let params = vec![0.9f32, 1.0, 4.0, 0.0];
+        let out = model
+            .run_f32(&[(&window, &[64, 16]), (&onehot, &[16]), (&params, &[4])])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].len(), 16);
+        assert_eq!(out[2][0], 0.0, "zero window must not jump");
+    }
+}

@@ -1,0 +1,255 @@
+//! The model-driven jumping policy: the paper's §6 "improved jumping
+//! algorithms that actively learn about memory access patterns"
+//! implemented as the AOT-compiled JAX/Pallas `policy_step` model
+//! (python/compile/model.py), executed via PJRT on the L3 decision
+//! path.
+//!
+//! The policy maintains the same state the kernel would: a ring of
+//! time-bucketed remote-fault counts per owner node.  Every
+//! `consult_every` remote faults it flattens the ring into the model's
+//! `(W, N)` window (row W-1 newest) and runs one inference; the model
+//! returns per-node locality mass, the preferred node, and a
+//! jump/stay decision with hysteresis.
+
+use super::Model;
+use crate::mem::addr::{NodeId, MAX_NODES};
+use crate::os::policy::{Decision, JumpPolicy};
+
+/// Must match python/compile/model.py (POLICY_W / POLICY_N).
+pub const W: usize = 64;
+pub const N: usize = MAX_NODES;
+
+/// Tunables forwarded to the model as its params vector.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelPolicyParams {
+    /// Per-bucket decay in (0, 1].
+    pub decay: f32,
+    /// Required mass margin (preferred vs current) before jumping.
+    pub hysteresis: f32,
+    /// Noise floor: total decayed mass required before any jump.
+    pub min_mass: f32,
+    /// Simulated-time length of one window bucket.
+    pub bucket_ns: u64,
+    /// Run the model every this many remote faults.
+    pub consult_every: u32,
+    /// Simulated cost charged per model evaluation (measured by
+    /// benches/policy_model.rs; see EXPERIMENTS.md §Perf).
+    pub eval_cost_ns: u64,
+    /// Refractory period after a jump (suppresses ping-pong).
+    pub cooldown_ns: u64,
+}
+
+impl Default for ModelPolicyParams {
+    fn default() -> Self {
+        ModelPolicyParams {
+            decay: 0.9,
+            hysteresis: 8.0,
+            min_mass: 16.0,
+            bucket_ns: 200_000,
+            consult_every: 32,
+            eval_cost_ns: 53_000, // measured: benches/policy_model.rs
+            cooldown_ns: 5_000_000,
+        }
+    }
+}
+
+/// PJRT-backed jumping policy.
+pub struct ModelJumpPolicy {
+    model: Model,
+    params: ModelPolicyParams,
+    /// Ring of fault counts: ring[b][n], b advances with sim time.
+    ring: [[f32; N]; W],
+    head: usize,
+    head_bucket: u64,
+    faults_since_consult: u32,
+    last_jump_ns: u64,
+    pub evals: u64,
+}
+
+impl ModelJumpPolicy {
+    pub fn new(model: Model, params: ModelPolicyParams) -> Self {
+        ModelJumpPolicy {
+            model,
+            params,
+            ring: [[0.0; N]; W],
+            head: 0,
+            head_bucket: 0,
+            faults_since_consult: 0,
+            last_jump_ns: 0,
+            evals: 0,
+        }
+    }
+
+    /// Advance the ring so `head` corresponds to `now`'s bucket,
+    /// zeroing skipped buckets.
+    fn advance_to(&mut self, now_ns: u64) {
+        let bucket = now_ns / self.params.bucket_ns;
+        let steps = bucket.saturating_sub(self.head_bucket);
+        for _ in 0..steps.min(W as u64) {
+            self.head = (self.head + 1) % W;
+            self.ring[self.head] = [0.0; N];
+        }
+        if steps as usize >= W {
+            // everything aged out
+            self.ring = [[0.0; N]; W];
+        }
+        self.head_bucket = bucket;
+    }
+
+    /// Flatten the ring oldest→newest into the model's window layout.
+    fn window(&self) -> Vec<f32> {
+        let mut out = vec![0f32; W * N];
+        for i in 0..W {
+            // oldest bucket first: head+1 is the oldest slot
+            let slot = (self.head + 1 + i) % W;
+            out[i * N..(i + 1) * N].copy_from_slice(&self.ring[slot]);
+        }
+        out
+    }
+
+    fn consult(&mut self, running: NodeId) -> Decision {
+        self.evals += 1;
+        let window = self.window();
+        let mut onehot = [0f32; N];
+        onehot[running.0 as usize] = 1.0;
+        let params = [self.params.decay, self.params.hysteresis, self.params.min_mass, 0.0];
+        let out = match self.model.run_f32(&[
+            (&window, &[W as i64, N as i64]),
+            (&onehot, &[N as i64]),
+            (&params, &[4]),
+        ]) {
+            Ok(o) => o,
+            Err(e) => {
+                log::warn!("policy model failed ({e}); staying");
+                return Decision::Stay;
+            }
+        };
+        let preferred = out[1][0] as usize;
+        let decision = out[2][0];
+        if decision > 0.5 && preferred < N && preferred != running.0 as usize {
+            Decision::JumpTo(NodeId(preferred as u8))
+        } else {
+            Decision::Stay
+        }
+    }
+}
+
+impl JumpPolicy for ModelJumpPolicy {
+    fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision {
+        self.advance_to(now_ns);
+        self.ring[self.head][owner.0 as usize] += 1.0;
+        self.faults_since_consult += 1;
+        if self.faults_since_consult < self.params.consult_every {
+            return Decision::Stay;
+        }
+        self.faults_since_consult = 0;
+        if self.last_jump_ns > 0
+            && now_ns.saturating_sub(self.last_jump_ns) < self.params.cooldown_ns
+        {
+            return Decision::Stay; // refractory
+        }
+        self.consult(running)
+    }
+
+    fn on_jump(&mut self, _to: NodeId, now_ns: u64) {
+        self.advance_to(now_ns);
+        self.last_jump_ns = now_ns.max(1);
+        // Damp accumulated evidence so we don't bounce straight back.
+        for b in &mut self.ring {
+            for m in b.iter_mut() {
+                *m *= 0.25;
+            }
+        }
+        self.faults_since_consult = 0;
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "model(decay={},hyst={},every={})",
+            self.params.decay, self.params.hysteresis, self.params.consult_every
+        )
+    }
+
+    fn eval_cost_ns(&self) -> u64 {
+        // Amortized: the model runs once per consult_every faults.
+        self.params.eval_cost_ns / self.params.consult_every as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_dir, Engine};
+
+    fn load_policy() -> Option<ModelJumpPolicy> {
+        let path = artifacts_dir().join("policy.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let eng = Engine::cpu().unwrap();
+        let model = eng.load(path).unwrap();
+        Some(ModelJumpPolicy::new(
+            model,
+            ModelPolicyParams { consult_every: 4, min_mass: 4.0, hysteresis: 2.0, ..Default::default() },
+        ))
+    }
+
+    #[test]
+    fn model_policy_jumps_towards_mass() {
+        let Some(mut p) = load_policy() else { return };
+        let mut decision = Decision::Stay;
+        for i in 0..64u64 {
+            decision = p.on_remote_fault(NodeId(0), NodeId(1), i * 1000);
+            if decision != Decision::Stay {
+                break;
+            }
+        }
+        assert_eq!(decision, Decision::JumpTo(NodeId(1)));
+        assert!(p.evals >= 1);
+    }
+
+    #[test]
+    fn model_policy_targets_majority_owner() {
+        let Some(mut p) = load_policy() else { return };
+        // 3:1 fault ratio for node2 over node1 — any jump must target
+        // the majority owner.
+        for i in 0..64u64 {
+            let owner = if i % 4 == 0 { NodeId(1) } else { NodeId(2) };
+            if let Decision::JumpTo(t) = p.on_remote_fault(NodeId(0), owner, i * 1000) {
+                assert_eq!(t, NodeId(2), "must jump towards the dominant mass");
+                return;
+            }
+        }
+        panic!("expected a jump towards node2");
+    }
+
+    #[test]
+    fn model_policy_stays_below_noise_floor() {
+        let path = artifacts_dir().join("policy.hlo.txt");
+        if !path.exists() {
+            return;
+        }
+        let eng = Engine::cpu().unwrap();
+        let model = eng.load(path).unwrap();
+        let mut p = ModelJumpPolicy::new(
+            model,
+            ModelPolicyParams { consult_every: 1, min_mass: 1.0e6, ..Default::default() },
+        );
+        for i in 0..32u64 {
+            assert_eq!(p.on_remote_fault(NodeId(0), NodeId(1), i * 1000), Decision::Stay);
+        }
+    }
+
+    #[test]
+    fn ring_ages_out_old_faults() {
+        let Some(mut p) = load_policy() else { return };
+        for i in 0..32u64 {
+            p.on_remote_fault(NodeId(0), NodeId(1), i);
+        }
+        // jump far into the future: all evidence aged out
+        p.advance_to(10_000_000_000);
+        let w = p.window();
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Simulated-time substrate: the virtual clock and the calibrated cost
+//! model that stands in for the paper's Emulab D710 + GbE testbed (see
+//! DESIGN.md §1, substitution table).
+
+pub mod clock;
+pub mod costs;
+
+pub use clock::SimClock;
+pub use costs::CostModel;

@@ -1,0 +1,123 @@
+//! Mini property-testing kit (proptest is unavailable offline;
+//! DESIGN.md §3).
+//!
+//! Deterministic, seed-reporting randomized testing: a [`Runner`]
+//! executes a property over many generated cases; on failure it panics
+//! with the case's seed so the exact input can be replayed by setting
+//! `ELASTICOS_PROPTEST_SEED`.  No shrinking — generators are expected
+//! to produce smallish cases directly.
+
+use crate::util::Rng;
+
+/// Number of cases per property (override with ELASTICOS_PROPTEST_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("ELASTICOS_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Randomized-property runner.
+pub struct Runner {
+    pub name: &'static str,
+    pub cases: u64,
+    base_seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &'static str) -> Self {
+        let base_seed = std::env::var("ELASTICOS_PROPTEST_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0x51ED_0000);
+        Runner { name, cases: default_cases(), base_seed }
+    }
+
+    pub fn with_cases(mut self, cases: u64) -> Self {
+        self.cases = cases;
+        self
+    }
+
+    /// Run `prop` over `cases` seeds; panic with the failing seed.
+    pub fn run<F: FnMut(&mut Rng)>(&self, mut prop: F) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case);
+            let mut rng = Rng::new(seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut rng);
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{}' failed at case {case} (replay with ELASTICOS_PROPTEST_SEED={seed}):\n{msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+/// Generator helpers over the deterministic RNG.
+pub mod gen {
+    use crate::util::Rng;
+
+    /// Vec of length in [min_len, max_len] with elements from `f`.
+    pub fn vec_of<T>(rng: &mut Rng, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let len = min_len + rng.below_usize(max_len - min_len + 1);
+        (0..len).map(|_| f(rng)).collect()
+    }
+
+    /// One of the provided items, by value.
+    pub fn one_of<T: Clone>(rng: &mut Rng, items: &[T]) -> T {
+        items[rng.below_usize(items.len())].clone()
+    }
+
+    /// u64 biased towards small values and edge cases.
+    pub fn u64_edgy(rng: &mut Rng) -> u64 {
+        match rng.below(8) {
+            0 => 0,
+            1 => 1,
+            2 => u64::MAX,
+            3 => u64::MAX - 1,
+            4 => rng.below(256),
+            _ => rng.next_u64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_passes_trivial_property() {
+        Runner::new("trivial").with_cases(16).run(|rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with ELASTICOS_PROPTEST_SEED=")]
+    fn runner_reports_seed_on_failure() {
+        Runner::new("failing").with_cases(4).run(|rng| {
+            assert!(rng.below(2) == 3, "always fails");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..100 {
+            let v = gen::vec_of(&mut rng, 2, 5, |r| r.below(10));
+            assert!((2..=5).contains(&v.len()));
+            let x = gen::one_of(&mut rng, &[1, 2, 3]);
+            assert!((1..=3).contains(&x));
+            let _ = gen::u64_edgy(&mut rng);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Hand-rolled binary wire codec (serde/bincode are unavailable in the
+//! offline build environment; see DESIGN.md §3).
+//!
+//! The format is little-endian, length-prefixed where needed, and
+//! deliberately simple: every message type in [`crate::net::proto`]
+//! implements encode/decode on top of these primitives.  All decodes are
+//! bounds-checked and return [`DecodeError`] instead of panicking.
+
+use thiserror::Error;
+
+/// Error returned by the decoding primitives.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("buffer underrun: needed {needed} bytes, had {have}")]
+    Underrun { needed: usize, have: usize },
+    #[error("invalid tag {tag} for {what}")]
+    BadTag { tag: u8, what: &'static str },
+    #[error("length {len} exceeds limit {limit}")]
+    TooLong { len: usize, limit: usize },
+    #[error("invalid utf-8 in string field")]
+    BadUtf8,
+}
+
+/// Append-only encoder.
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::with_capacity(64) }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Enc { buf: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Length-prefixed byte slice (u32 length).
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Raw bytes, no prefix (caller knows the length).
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Cursor-based decoder over a byte slice.
+#[derive(Debug)]
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    #[inline]
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeError::Underrun { needed: n, have: self.buf.len() - self.pos });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn i64(&mut self) -> Result<i64, DecodeError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn bool(&mut self) -> Result<bool, DecodeError> {
+        Ok(self.u8()? != 0)
+    }
+
+    /// Length-prefixed byte slice, with a sanity limit.
+    pub fn bytes(&mut self, limit: usize) -> Result<&'a [u8], DecodeError> {
+        let len = self.u32()? as usize;
+        if len > limit {
+            return Err(DecodeError::TooLong { len, limit });
+        }
+        self.take(len)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, limit: usize) -> Result<String, DecodeError> {
+        let b = self.bytes(limit)?;
+        String::from_utf8(b.to_vec()).map_err(|_| DecodeError::BadUtf8)
+    }
+
+    /// Raw bytes of a known length.
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        self.take(n)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_scalars() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u16(300);
+        e.u32(70_000);
+        e.u64(u64::MAX - 1);
+        e.i64(-42);
+        e.f64(3.5);
+        e.bool(true);
+        let v = e.into_vec();
+        let mut d = Dec::new(&v);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 300);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(d.i64().unwrap(), -42);
+        assert_eq!(d.f64().unwrap(), 3.5);
+        assert!(d.bool().unwrap());
+        assert!(d.is_done());
+    }
+
+    #[test]
+    fn round_trip_bytes_and_str() {
+        let mut e = Enc::new();
+        e.bytes(b"hello");
+        e.str("world");
+        let v = e.into_vec();
+        let mut d = Dec::new(&v);
+        assert_eq!(d.bytes(1024).unwrap(), b"hello");
+        assert_eq!(d.str(1024).unwrap(), "world");
+    }
+
+    #[test]
+    fn underrun_detected() {
+        let mut d = Dec::new(&[1, 2]);
+        assert!(matches!(d.u64(), Err(DecodeError::Underrun { .. })));
+    }
+
+    #[test]
+    fn length_limit_enforced() {
+        let mut e = Enc::new();
+        e.bytes(&[0u8; 100]);
+        let v = e.into_vec();
+        let mut d = Dec::new(&v);
+        assert!(matches!(d.bytes(50), Err(DecodeError::TooLong { .. })));
+    }
+
+    #[test]
+    fn bad_utf8_detected() {
+        let mut e = Enc::new();
+        e.bytes(&[0xff, 0xfe]);
+        let v = e.into_vec();
+        let mut d = Dec::new(&v);
+        assert_eq!(d.str(10), Err(DecodeError::BadUtf8));
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal `log` facade backend (env_logger is unavailable offline).
+//!
+//! Level is controlled by `ELASTICOS_LOG` (error|warn|info|debug|trace),
+//! defaulting to `warn` so benches stay quiet.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed();
+            eprintln!(
+                "[{:>9.3}s {:5} {}] {}",
+                t.as_secs_f64(),
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("ELASTICOS_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("info") => LevelFilter::Info,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Warn,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+    let _ = Level::Info; // keep the import used in all cfgs
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::debug!("logger alive");
+    }
+}

@@ -1,0 +1,13 @@
+//! Cross-cutting utilities: deterministic RNG, stats, wire codec,
+//! logging.  These stand in for `rand`, `criterion`'s stats, `bincode`,
+//! and `env_logger`, none of which are available in the offline build
+//! environment (DESIGN.md §3).
+
+pub mod bytes;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+pub use bytes::{Dec, DecodeError, Enc};
+pub use rng::Rng;
+pub use stats::Summary;

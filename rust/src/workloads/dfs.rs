@@ -1,0 +1,245 @@
+//! Depth-first search (paper Table 1: "330 million nodes (15 GB)").
+//!
+//! The paper's nuanced case (§5.4.2): graph nodes are laid out in one
+//! order in memory, but DFS visits them branch-by-branch in another,
+//! so locality is weaker than linear search (~1.5x at thresholds > 64,
+//! *worse* than Nswap at very small thresholds due to jump thrashing).
+//! "Increasing the depth of the graph would make branches longer,
+//! resulting in a longer branch that occupies more memory pages,
+//! increasing the chance of a single branch having pages located both
+//! on local and remote machines" (Figs 13/14) — the `depth` knob
+//! reproduces exactly that.
+//!
+//! Graph shape: a forest of chains (branches) of length `depth`.
+//! Nodes were allocated breadth-first across branches — node j of
+//! branch i sits at memory slot `j*W + i` within the branch group —
+//! so *one step down a branch moves one page forward* in memory: a
+//! branch of depth d occupies d pages (the paper's long-branch page
+//! spread), adjacent branches re-traverse the same d pages (the reuse
+//! that gives DFS its exploitable-but-weaker locality), and a
+//! `shuffle` fraction of nodes is relocated to random slots (the
+//! mismatch noise).  Records are fixed-size with the visited flag
+//! *inline* — `[visited, value, pad..]`, 32 B, 128 per page — so a
+//! visit touches exactly one page.  The DFS stack is an explicit
+//! elastic Stack area whose top pages ship with jump checkpoints.
+
+use super::mem::{ElasticMem, U32Array};
+use super::{fnv1a, Scale, Workload, FNV_SEED};
+use crate::mem::addr::AreaKind;
+use crate::util::Rng;
+
+/// u32 words per node record (32 B/node, 128 records per 4 KiB page).
+const REC: u64 = 8;
+/// Records (branches) per page row.
+const W: u64 = crate::mem::PAGE_SIZE as u64 / (REC * 4);
+
+pub struct Dfs {
+    /// Node count (rounded to full branch groups).
+    pub n: u64,
+    /// Branch length in nodes == pages spanned per branch.
+    pub depth: u64,
+    /// Fraction of nodes relocated to random memory slots.
+    pub shuffle: f64,
+    seed: u64,
+    nodes: Option<U32Array>,
+    /// id -> memory slot (host-side metadata, like the C pointers of
+    /// the original implementation).
+    perm: Vec<u32>,
+    stack_base: u64,
+    stack_cap: u64,
+}
+
+impl Dfs {
+    pub fn new(scale: Scale) -> Self {
+        let mut w = Dfs {
+            n: 0,
+            depth: 0, // 0 = derive from footprint in resize()
+            shuffle: 0.25,
+            seed: 0xDF5,
+            nodes: None,
+            perm: Vec::new(),
+            stack_base: 0,
+            stack_cap: 0,
+        };
+        w.resize(scale.bytes());
+        w
+    }
+
+    fn resize(&mut self, bytes: u64) {
+        let target = (bytes / (REC * 4)).max(4 * W);
+        if self.depth == 0 {
+            // default: one branch group spanning the whole footprint —
+            // every branch is a full page-sweep of the dataset, the
+            // "long branches" regime the paper's DFS discussion centers
+            // on (each branch re-walks pages on both machines)
+            self.depth = target / W;
+        }
+        // round to full W x depth groups
+        let group = W * self.depth;
+        self.n = (target / group).max(1) * group;
+    }
+
+    /// Override the branch length (Fig 13/14 sweep); keeps the
+    /// footprint by re-rounding n. Depth is clamped so one branch
+    /// group never exceeds the existing footprint.
+    pub fn with_depth(mut self, depth: u64) -> Self {
+        let bytes = self.n * REC * 4;
+        let total_pages = (bytes / crate::mem::PAGE_SIZE as u64).max(1);
+        self.depth = depth.clamp(1, total_pages);
+        let group = W * self.depth;
+        self.n = ((bytes / (REC * 4)) / group).max(1) * group;
+        self
+    }
+
+    /// Override the relocated-node fraction.
+    pub fn with_shuffle(mut self, f: f64) -> Self {
+        self.shuffle = f.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Number of branches in the forest.
+    pub fn branches(&self) -> u64 {
+        self.n / self.depth
+    }
+
+    /// slot of (branch b, position j): branches are grouped W at a
+    /// time; a group occupies `W*depth` consecutive slots = `depth`
+    /// pages, one row of W records per page.
+    #[inline]
+    fn slot(&self, b: u64, j: u64) -> u64 {
+        let group = b / W;
+        let col = b % W;
+        group * (W * self.depth) + j * W + col
+    }
+}
+
+impl Workload for Dfs {
+    fn name(&self) -> &'static str {
+        "dfs"
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.n * REC * 4 + 4096 * 4 // records + stack
+    }
+
+    fn setup(&mut self, mem: &mut dyn ElasticMem) {
+        let n = self.n;
+        let mut rng = Rng::new(self.seed);
+
+        // id==slot identity, then relocate `shuffle` of the nodes via
+        // random transpositions (the perm is consulted per visit, like
+        // chasing the original's pointers).
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        let relocations = (n as f64 * self.shuffle / 2.0) as u64;
+        for _ in 0..relocations {
+            let a = rng.below_usize(n as usize);
+            let b = rng.below_usize(n as usize);
+            perm.swap(a, b);
+        }
+
+        // Allocation sweep: write records in slot order.
+        let nodes = U32Array::map(mem, n * REC, "dfs.nodes");
+        for slot in 0..n {
+            let base = slot * REC;
+            nodes.set(mem, base, 0); // visited flag
+            nodes.set(mem, base + 1, rng.next_u32()); // payload
+        }
+
+        // Explicit DFS stack (VM_GROWSDOWN analogue): holds the path
+        // to the current node — `depth` entries of 8 bytes.
+        self.stack_cap = self.depth + 8;
+        self.stack_base = mem.mmap(self.stack_cap * 8, AreaKind::Stack, "dfs.stack");
+        self.nodes = Some(nodes);
+        self.perm = perm;
+    }
+
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
+        let nodes = self.nodes.unwrap();
+        let stack_base = self.stack_base;
+        let depth = self.depth;
+        let branches = self.branches();
+
+        let mut digest = FNV_SEED;
+        let mut visit_count = 0u64;
+        for b in 0..branches {
+            // descend the branch, maintaining the real path stack
+            let mut sp = 0u64;
+            for j in 0..depth {
+                let slot = self.perm[self.slot(b, j) as usize] as u64;
+                let base = slot * REC;
+                if nodes.get(mem, base) == 0 {
+                    nodes.set(mem, base, 1);
+                    let val = nodes.get(mem, base + 1);
+                    digest = fnv1a(digest, val as u64);
+                    visit_count += 1;
+                }
+                mem.write_u64(stack_base + sp * 8, slot);
+                sp += 1;
+            }
+            // unwind (pops touch the stack pages top-down)
+            while sp > 0 {
+                sp -= 1;
+                let _ = mem.read_u64(stack_base + sp * 8);
+            }
+        }
+        fnv1a(digest, visit_count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mem::DirectMem;
+
+    #[test]
+    fn visits_every_node_exactly_once() {
+        let mut w = Dfs::new(Scale::Tiny);
+        let mut m = DirectMem::new();
+        w.setup(&mut m);
+        let _ = w.run(&mut m);
+        let nodes = w.nodes.unwrap();
+        for slot in 0..w.n {
+            assert_eq!(nodes.get(&mut m, slot * REC), 1, "slot {slot} unvisited");
+        }
+    }
+
+    #[test]
+    fn digest_is_deterministic() {
+        let d: Vec<u64> = (0..2)
+            .map(|_| {
+                let mut w = Dfs::new(Scale::Tiny);
+                let mut m = DirectMem::new();
+                w.setup(&mut m);
+                w.run(&mut m)
+            })
+            .collect();
+        assert_eq!(d[0], d[1]);
+    }
+
+    #[test]
+    fn depth_changes_structure_not_coverage() {
+        for depth in [4u64, 64, 512] {
+            let mut w = Dfs::new(Scale::Tiny).with_depth(depth);
+            let mut m = DirectMem::new();
+            w.setup(&mut m);
+            let _ = w.run(&mut m);
+            assert_eq!(w.n % depth, 0);
+            let nodes = w.nodes.unwrap();
+            for slot in 0..w.n {
+                assert_eq!(nodes.get(&mut m, slot * REC), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn slot_layout_one_page_per_step() {
+        let w = Dfs::new(Scale::Tiny);
+        // consecutive steps of one branch are exactly W records apart
+        // = one page apart
+        let s0 = w.slot(3, 0);
+        let s1 = w.slot(3, 1);
+        assert_eq!(s1 - s0, W);
+        // adjacent branches share the same pages (adjacent columns)
+        assert_eq!(w.slot(4, 0) - w.slot(3, 0), 1);
+    }
+}

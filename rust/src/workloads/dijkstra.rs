@@ -1,0 +1,163 @@
+//! Dijkstra's algorithm (paper Table 1: "3.5 billion int weights
+//! (14 GB)").
+//!
+//! The paper's no-speedup case (§5.4.3): the adjacency matrix is
+//! scanned row-by-row, each row touched *once*, while the hot state
+//! (distance array, visited set) is small and stays local.  Jumping
+//! cannot save much time — but it does save traffic (the paper reports
+//! ~70% network reduction from the few early jumps).
+//!
+//! Implementation: dense adjacency matrix of u32 weights (0 = no
+//! edge), classic O(n²) Dijkstra.
+
+use super::mem::{ElasticMem, U32Array, U64Array};
+use super::{fnv1a, Scale, Workload, FNV_SEED};
+use crate::util::Rng;
+
+const INF: u64 = u64::MAX / 2;
+
+pub struct Dijkstra {
+    /// Vertex count; matrix is n*n u32.
+    pub n: u64,
+    seed: u64,
+    matrix: Option<U32Array>,
+    dist: Option<U64Array>,
+    visited: Option<U32Array>,
+}
+
+impl Dijkstra {
+    pub fn new(scale: Scale) -> Self {
+        // matrix dominates: n^2 * 4 bytes ≈ footprint
+        let n = ((scale.bytes() / 4) as f64).sqrt() as u64;
+        Dijkstra { n: n.max(16), seed: 0xD1, matrix: None, dist: None, visited: None }
+    }
+}
+
+impl Workload for Dijkstra {
+    fn name(&self) -> &'static str {
+        "dijkstra"
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.n * self.n * 4 + self.n * 8 + self.n * 4
+    }
+
+    fn setup(&mut self, mem: &mut dyn ElasticMem) {
+        let n = self.n;
+        let matrix = U32Array::map(mem, n * n, "dijkstra.adj");
+        let dist = U64Array::map(mem, n, "dijkstra.dist");
+        let visited = U32Array::map(mem, n, "dijkstra.visited");
+        let mut rng = Rng::new(self.seed);
+
+        // Sparse-ish structured graph in a dense matrix: a ring (so the
+        // graph is connected and paths are long) plus ~4 random edges
+        // per vertex. Row-major writes — sequential, like building the
+        // dataset in the paper's C programs.
+        for u in 0..n {
+            let ring = (u + 1) % n;
+            for v in 0..n {
+                let w = if v == ring {
+                    1 + (rng.next_u32() % 64)
+                } else if rng.below(n) < 4 {
+                    64 + (rng.next_u32() % 1024)
+                } else {
+                    0
+                };
+                matrix.set(mem, u * n + v, w);
+            }
+        }
+        for v in 0..n {
+            dist.set(mem, v, INF);
+        }
+        self.matrix = Some(matrix);
+        self.dist = Some(dist);
+        self.visited = Some(visited);
+    }
+
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
+        let matrix = self.matrix.unwrap();
+        let dist = self.dist.unwrap();
+        let visited = self.visited.unwrap();
+        let n = self.n;
+
+        dist.set(mem, 0, 0);
+        for _ in 0..n {
+            // extract-min over the (hot, local) distance array
+            let mut best = INF;
+            let mut u = n;
+            for v in 0..n {
+                if visited.get(mem, v) == 0 {
+                    let d = dist.get(mem, v);
+                    if d < best {
+                        best = d;
+                        u = v;
+                    }
+                }
+            }
+            if u == n {
+                break; // disconnected remainder
+            }
+            visited.set(mem, u, 1);
+            // relax: one full row of the (cold, huge) matrix
+            let row = u * n;
+            for v in 0..n {
+                let w = matrix.get(mem, row + v) as u64;
+                if w != 0 && visited.get(mem, v) == 0 {
+                    let nd = best + w;
+                    if nd < dist.get(mem, v) {
+                        dist.set(mem, v, nd);
+                    }
+                }
+            }
+        }
+
+        let mut digest = FNV_SEED;
+        for v in 0..n {
+            digest = fnv1a(digest, dist.get(mem, v));
+        }
+        digest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mem::DirectMem;
+
+    #[test]
+    fn ring_guarantees_reachability() {
+        let mut w = Dijkstra::new(Scale::Bytes(64 * 1024));
+        let mut m = DirectMem::new();
+        w.setup(&mut m);
+        let _ = w.run(&mut m);
+        let dist = w.dist.unwrap();
+        for v in 0..w.n {
+            assert!(dist.get(&mut m, v) < INF, "vertex {v} unreachable");
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_on_ring() {
+        // dist to ring-successor can never exceed dist[u] + max ring weight
+        let mut w = Dijkstra::new(Scale::Bytes(64 * 1024));
+        let mut m = DirectMem::new();
+        w.setup(&mut m);
+        let _ = w.run(&mut m);
+        let dist = w.dist.unwrap();
+        for u in 0..w.n {
+            let v = (u + 1) % w.n;
+            assert!(dist.get(&mut m, v) <= dist.get(&mut m, u) + 64 + 1024);
+        }
+    }
+
+    #[test]
+    fn deterministic_digest() {
+        let run = || {
+            let mut w = Dijkstra::new(Scale::Bytes(64 * 1024));
+            let mut m = DirectMem::new();
+            w.setup(&mut m);
+            w.run(&mut m)
+        };
+        assert_eq!(run(), run());
+    }
+}

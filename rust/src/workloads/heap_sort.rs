@@ -1,0 +1,150 @@
+//! Heap sort (paper Table 1: "1.8 billion long int (14 GB)").
+//!
+//! Root-to-leaf sift-down paths: the top of the heap is blisteringly
+//! hot (stays resident wherever execution is) while the leaf half of
+//! the array is touched in an order driven by the data — scattered,
+//! but with enough reuse that pushing cold leaf regions to the remote
+//! node creates jumpable islands.  The paper measured threshold 512
+//! best with ~12 jumps/sec.
+
+use super::mem::{ElasticMem, U64Array};
+use super::{fnv1a, Scale, Workload, FNV_SEED};
+use crate::util::Rng;
+
+pub struct HeapSort {
+    pub n: u64,
+    seed: u64,
+    arr: Option<U64Array>,
+}
+
+impl HeapSort {
+    pub fn new(scale: Scale) -> Self {
+        HeapSort { n: (scale.bytes() / 8).max(8), seed: 0x4EA9, arr: None }
+    }
+}
+
+#[inline]
+fn sift_down<M: ElasticMem + ?Sized>(mem: &mut M, arr: U64Array, mut root: u64, end: u64) {
+    let v = arr.get(mem, root);
+    loop {
+        let mut child = 2 * root + 1;
+        if child >= end {
+            break;
+        }
+        let mut cv = arr.get(mem, child);
+        if child + 1 < end {
+            let rv = arr.get(mem, child + 1);
+            if rv > cv {
+                child += 1;
+                cv = rv;
+            }
+        }
+        if cv <= v {
+            break;
+        }
+        arr.set(mem, root, cv);
+        root = child;
+    }
+    arr.set(mem, root, v);
+}
+
+impl Workload for HeapSort {
+    fn name(&self) -> &'static str {
+        "heap_sort"
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.n * 8
+    }
+
+    fn setup(&mut self, mem: &mut dyn ElasticMem) {
+        let arr = U64Array::map(mem, self.n, "hsort.arr");
+        let mut rng = Rng::new(self.seed);
+        for i in 0..self.n {
+            arr.set(mem, i, rng.next_u64());
+        }
+        self.arr = Some(arr);
+    }
+
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
+        let arr = self.arr.unwrap();
+        let n = self.n;
+
+        // heapify
+        let mut i = n / 2;
+        while i > 0 {
+            i -= 1;
+            sift_down(mem, arr, i, n);
+        }
+        // extract max repeatedly
+        let mut end = n;
+        while end > 1 {
+            end -= 1;
+            let top = arr.get(mem, 0);
+            let last = arr.get(mem, end);
+            arr.set(mem, 0, last);
+            arr.set(mem, end, top);
+            sift_down(mem, arr, 0, end);
+        }
+
+        // Digest: sortedness-sensitive sample hash.
+        let mut digest = FNV_SEED;
+        let mut prev = 0u64;
+        let mut sorted = 1u64;
+        for i in (0..n).step_by(11) {
+            let v = arr.get(mem, i);
+            if v < prev {
+                sorted = 0;
+            }
+            prev = v;
+            digest = fnv1a(digest, v);
+        }
+        fnv1a(digest, sorted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mem::DirectMem;
+
+    #[test]
+    fn sorts_correctly() {
+        let mut w = HeapSort::new(Scale::Bytes(128 * 1024));
+        let mut m = DirectMem::new();
+        w.setup(&mut m);
+        let _ = w.run(&mut m);
+        let arr = w.arr.unwrap();
+        let mut prev = 0u64;
+        for i in 0..w.n {
+            let v = arr.get(&mut m, i);
+            assert!(v >= prev, "unsorted at {i}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn matches_std_sort() {
+        let mut w = HeapSort::new(Scale::Bytes(64 * 1024));
+        let mut m = DirectMem::new();
+        w.setup(&mut m);
+        let arr = w.arr.unwrap();
+        let mut expect: Vec<u64> = (0..w.n).map(|i| arr.get(&mut m, i)).collect();
+        let _ = w.run(&mut m);
+        expect.sort_unstable();
+        for (i, &v) in expect.iter().enumerate() {
+            assert_eq!(arr.get(&mut m, i as u64), v);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut w = HeapSort::new(Scale::Bytes(64 * 1024));
+            let mut m = DirectMem::new();
+            w.setup(&mut m);
+            w.run(&mut m)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,142 @@
+//! Linear search (paper Table 1: "2 billion long int (15 GB)").
+//!
+//! The paper's best case (§5.4.1): the address space is scanned
+//! linearly, so consecutive pages age together in the LRU lists and
+//! get pushed to the remote node together, forming large contiguous
+//! islands.  Jumping into an island converts thousands of remote pulls
+//! into local accesses — the source of the ~10x speedup at small
+//! thresholds (Fig 10).
+
+use super::mem::{ElasticMem, U64Array};
+use super::{fnv1a, Scale, Workload, FNV_SEED};
+use crate::util::Rng;
+
+pub struct LinearSearch {
+    /// Element count (u64s).
+    pub n: u64,
+    /// Number of full scan passes (the paper's runs are effectively a
+    /// small number of passes over the array).
+    pub passes: u32,
+    seed: u64,
+    arr: Option<U64Array>,
+    /// Values planted at known positions; the search must find them.
+    targets: Vec<(u64, u64)>, // (position, value)
+}
+
+impl LinearSearch {
+    pub fn new(scale: Scale) -> Self {
+        LinearSearch { n: scale.bytes() / 8, passes: 2, seed: 0x11AE, arr: None, targets: Vec::new() }
+    }
+
+    pub fn with_passes(mut self, passes: u32) -> Self {
+        self.passes = passes;
+        self
+    }
+}
+
+impl Workload for LinearSearch {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.n * 8
+    }
+
+    fn setup(&mut self, mem: &mut dyn ElasticMem) {
+        let arr = U64Array::map(mem, self.n, "haystack");
+        let mut rng = Rng::new(self.seed);
+        // Values avoid the top bit; planted targets use it, so they are
+        // unique by construction.
+        for i in 0..self.n {
+            arr.set(mem, i, rng.next_u64() >> 1);
+        }
+        // Plant targets at deterministic spread positions.
+        self.targets.clear();
+        for k in 0..4u64 {
+            let pos = (self.n * (2 * k + 1)) / 8; // 1/8, 3/8, 5/8, 7/8
+            let val = (1 << 63) | k;
+            arr.set(mem, pos, val);
+            self.targets.push((pos, val));
+        }
+        self.arr = Some(arr);
+    }
+
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
+        let arr = self.arr.expect("setup not called");
+        let mut digest = FNV_SEED;
+        for pass in 0..self.passes {
+            // Each pass scans the entire array, tracking the positions
+            // of all planted targets and a running population count.
+            let mut found = 0u64;
+            let mut hits = 0u64;
+            for i in 0..arr.len {
+                let v = arr.get(mem, i);
+                if v >> 63 == 1 {
+                    found = fnv1a(found, i);
+                    hits += 1;
+                }
+            }
+            digest = fnv1a(digest, found);
+            digest = fnv1a(digest, hits);
+            digest = fnv1a(digest, pass as u64);
+        }
+        digest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mem::DirectMem;
+
+    #[test]
+    fn finds_all_planted_targets() {
+        let mut w = LinearSearch::new(Scale::Tiny);
+        let mut m = DirectMem::new();
+        w.setup(&mut m);
+        assert_eq!(w.targets.len(), 4);
+        // run twice: digest must be deterministic
+        let d1 = w.run(&mut m);
+        let d2 = w.run(&mut m);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn digest_sensitive_to_target_positions() {
+        // same data, one extra planted target: the found-position hash
+        // must change
+        let mut m1 = DirectMem::new();
+        let mut w1 = LinearSearch::new(Scale::Tiny);
+        w1.setup(&mut m1);
+        let d1 = w1.run(&mut m1);
+
+        let mut m2 = DirectMem::new();
+        let mut w2 = LinearSearch::new(Scale::Tiny);
+        w2.setup(&mut m2);
+        let arr = w2.arr.unwrap();
+        arr.set(&mut m2, 7, (1 << 63) | 99); // extra target
+        let d2 = w2.run(&mut m2);
+        assert_ne!(d1, d2);
+    }
+
+    #[test]
+    fn pass_count_scales_accesses() {
+        let mut m = DirectMem::new();
+        let mut w = LinearSearch::new(Scale::Tiny).with_passes(1);
+        w.setup(&mut m);
+        let d1 = w.run(&mut m);
+        let mut w3 = LinearSearch::new(Scale::Tiny).with_passes(3);
+        let mut m3 = DirectMem::new();
+        w3.setup(&mut m3);
+        let d3 = w3.run(&mut m3);
+        // different pass counts fold differently
+        assert_ne!(d1, d3);
+    }
+
+    #[test]
+    fn footprint_matches_scale() {
+        let w = LinearSearch::new(Scale::Bytes(1 << 20));
+        assert_eq!(w.footprint_bytes(), 1 << 20);
+    }
+}

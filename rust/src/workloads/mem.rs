@@ -1,0 +1,206 @@
+//! The memory interface workloads program against.
+//!
+//! Every load/store a workload performs goes through [`ElasticMem`] —
+//! on [`crate::os::system::ElasticSystem`] that means the elastic pager
+//! (TLB fast path, elastic page table, pulls/pushes/jumps underneath);
+//! on [`DirectMem`] it is a plain flat buffer used to compute ground
+//! truth digests that every elastic run must match.
+//!
+//! Accesses must be element-aligned (arrays are page-aligned and
+//! elements never straddle pages) — debug-asserted here.
+
+use crate::mem::addr::AreaKind;
+
+/// Abstract paged memory + region mapping.
+pub trait ElasticMem {
+    /// Map a region of `len` bytes; returns the start address.
+    fn mmap(&mut self, len: u64, kind: AreaKind, name: &str) -> u64;
+
+    fn read_u8(&mut self, addr: u64) -> u8;
+    fn read_u32(&mut self, addr: u64) -> u32;
+    fn read_u64(&mut self, addr: u64) -> u64;
+    fn write_u8(&mut self, addr: u64, v: u8);
+    fn write_u32(&mut self, addr: u64, v: u32);
+    fn write_u64(&mut self, addr: u64, v: u64);
+
+    /// Scalar "register" state carried in jump checkpoints. Workloads
+    /// may stash loop counters here; purely additive fidelity.
+    fn regs_mut(&mut self) -> &mut [u64; 16];
+}
+
+/// Typed view of a mapped u64 array.
+#[derive(Debug, Clone, Copy)]
+pub struct U64Array {
+    pub base: u64,
+    pub len: u64,
+}
+
+impl U64Array {
+    pub fn map<M: ElasticMem + ?Sized>(mem: &mut M, len: u64, name: &str) -> Self {
+        let base = mem.mmap(len * 8, AreaKind::Heap, name);
+        U64Array { base, len }
+    }
+
+    #[inline]
+    pub fn get<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64) -> u64 {
+        debug_assert!(i < self.len);
+        mem.read_u64(self.base + i * 8)
+    }
+
+    #[inline]
+    pub fn set<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64, v: u64) {
+        debug_assert!(i < self.len);
+        mem.write_u64(self.base + i * 8, v)
+    }
+}
+
+/// Typed view of a mapped u32 array.
+#[derive(Debug, Clone, Copy)]
+pub struct U32Array {
+    pub base: u64,
+    pub len: u64,
+}
+
+impl U32Array {
+    pub fn map<M: ElasticMem + ?Sized>(mem: &mut M, len: u64, name: &str) -> Self {
+        let base = mem.mmap(len * 4, AreaKind::Heap, name);
+        U32Array { base, len }
+    }
+
+    #[inline]
+    pub fn get<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64) -> u32 {
+        debug_assert!(i < self.len);
+        mem.read_u32(self.base + i * 4)
+    }
+
+    #[inline]
+    pub fn set<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64, v: u32) {
+        debug_assert!(i < self.len);
+        mem.write_u32(self.base + i * 4, v)
+    }
+}
+
+/// Flat in-process memory — the single-node ground truth oracle.
+#[derive(Debug)]
+pub struct DirectMem {
+    base: u64,
+    data: Vec<u8>,
+    next: u64,
+    regs: [u64; 16],
+}
+
+impl DirectMem {
+    pub fn new() -> Self {
+        let base = crate::mem::AddressSpace::DEFAULT_BASE;
+        DirectMem { base, data: Vec::new(), next: base, regs: [0; 16] }
+    }
+
+    #[inline]
+    fn off(&self, addr: u64, n: usize) -> usize {
+        let o = (addr - self.base) as usize;
+        debug_assert!(o + n <= self.data.len(), "oob access at {addr:#x}");
+        o
+    }
+}
+
+impl Default for DirectMem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ElasticMem for DirectMem {
+    fn mmap(&mut self, len: u64, _kind: AreaKind, _name: &str) -> u64 {
+        use crate::mem::PAGE_SIZE;
+        let len = (len + PAGE_SIZE as u64 - 1) & !(PAGE_SIZE as u64 - 1);
+        let start = self.next;
+        // mirror AddressSpace's one guard page so addresses line up
+        self.next = start + len + PAGE_SIZE as u64;
+        let need = (self.next - self.base) as usize;
+        self.data.resize(need, 0);
+        start
+    }
+
+    #[inline]
+    fn read_u8(&mut self, addr: u64) -> u8 {
+        let o = self.off(addr, 1);
+        self.data[o]
+    }
+
+    #[inline]
+    fn read_u32(&mut self, addr: u64) -> u32 {
+        let o = self.off(addr, 4);
+        u32::from_le_bytes(self.data[o..o + 4].try_into().unwrap())
+    }
+
+    #[inline]
+    fn read_u64(&mut self, addr: u64) -> u64 {
+        let o = self.off(addr, 8);
+        u64::from_le_bytes(self.data[o..o + 8].try_into().unwrap())
+    }
+
+    #[inline]
+    fn write_u8(&mut self, addr: u64, v: u8) {
+        let o = self.off(addr, 1);
+        self.data[o] = v;
+    }
+
+    #[inline]
+    fn write_u32(&mut self, addr: u64, v: u32) {
+        let o = self.off(addr, 4);
+        self.data[o..o + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_u64(&mut self, addr: u64, v: u64) {
+        let o = self.off(addr, 8);
+        self.data[o..o + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    fn regs_mut(&mut self) -> &mut [u64; 16] {
+        &mut self.regs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_mem_round_trips() {
+        let mut m = DirectMem::new();
+        let a = m.mmap(4096, AreaKind::Heap, "a");
+        m.write_u64(a, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(m.read_u64(a), 0xDEAD_BEEF_CAFE_F00D);
+        m.write_u32(a + 8, 77);
+        assert_eq!(m.read_u32(a + 8), 77);
+        m.write_u8(a + 12, 9);
+        assert_eq!(m.read_u8(a + 12), 9);
+    }
+
+    #[test]
+    fn arrays_are_typed_views() {
+        let mut m = DirectMem::new();
+        let arr = U64Array::map(&mut m, 100, "arr");
+        for i in 0..100 {
+            arr.set(&mut m, i, i * i);
+        }
+        for i in 0..100 {
+            assert_eq!(arr.get(&mut m, i), i * i);
+        }
+        let arr32 = U32Array::map(&mut m, 10, "arr32");
+        arr32.set(&mut m, 3, 42);
+        assert_eq!(arr32.get(&mut m, 3), 42);
+    }
+
+    #[test]
+    fn regions_are_disjoint_and_zeroed() {
+        let mut m = DirectMem::new();
+        let a = m.mmap(4096, AreaKind::Heap, "a");
+        let b = m.mmap(4096, AreaKind::Heap, "b");
+        assert!(b >= a + 4096);
+        assert_eq!(m.read_u64(b), 0);
+        m.write_u64(a + 4088, u64::MAX);
+        assert_eq!(m.read_u64(b), 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! The paper's evaluation workloads (Table 1): six algorithms with
+//! large memory footprints, each implemented against [`ElasticMem`] so
+//! every load/store goes through the elastic pager.  Footprints are
+//! scaled from the paper's 13–15 GB to tens of MiB at the same
+//! footprint/RAM overcommit ratio (DESIGN.md §1).
+//!
+//! Every workload computes a digest; `DirectMem` runs provide ground
+//! truth that all elastic/nswap runs must reproduce exactly.
+
+pub mod block_sort;
+pub mod count_sort;
+pub mod dfs;
+pub mod dijkstra;
+pub mod heap_sort;
+pub mod linear_search;
+pub mod mem;
+pub mod table_scan;
+pub mod trace;
+
+pub use mem::{DirectMem, ElasticMem, U32Array, U64Array};
+
+/// A runnable benchmark algorithm.
+pub trait Workload {
+    /// Short identifier ("linear", "dfs", …).
+    fn name(&self) -> &'static str;
+
+    /// Map regions and write the input data (counted: the paper's runs
+    /// include building the dataset in memory, which is what triggers
+    /// the stretch).
+    fn setup(&mut self, mem: &mut dyn ElasticMem);
+
+    /// Execute the algorithm; returns a digest of the result.
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64;
+
+    /// Mapped footprint in bytes (for Table 1).
+    fn footprint_bytes(&self) -> u64;
+}
+
+/// The six paper workloads at a given scale, by name.
+pub fn by_name(name: &str, scale: Scale) -> Option<Box<dyn Workload>> {
+    Some(match name {
+        "linear" | "linear_search" => Box::new(linear_search::LinearSearch::new(scale)),
+        "dfs" => Box::new(dfs::Dfs::new(scale)),
+        "dijkstra" => Box::new(dijkstra::Dijkstra::new(scale)),
+        "block_sort" | "block" => Box::new(block_sort::BlockSort::new(scale)),
+        "heap_sort" | "heap" => Box::new(heap_sort::HeapSort::new(scale)),
+        "count_sort" | "count" => Box::new(count_sort::CountSort::new(scale)),
+        // extension (paper §6 future work): SQL-like operations
+        "table_scan" | "sql" => Box::new(table_scan::TableScan::new(scale)),
+        _ => return None,
+    })
+}
+
+/// All six, in the paper's Table 1 order.
+pub const ALL: [&str; 6] = ["dfs", "linear", "dijkstra", "block_sort", "heap_sort", "count_sort"];
+
+/// Workload scale knob. `Full` reproduces the paper's overcommit ratio
+/// against the default 2x32 MiB cluster; `Tiny` keeps unit tests fast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// ~48 MiB footprints (for 2 nodes x 32 MiB RAM).
+    Full,
+    /// ~1.5 MiB footprints (for tests with 2 nodes x 1 MiB).
+    Tiny,
+    /// Custom footprint in bytes.
+    Bytes(u64),
+}
+
+impl Scale {
+    /// Target footprint in bytes.
+    pub fn bytes(self) -> u64 {
+        match self {
+            Scale::Full => 48 << 20,
+            Scale::Tiny => 3 << 19, // 1.5 MiB
+            Scale::Bytes(b) => b,
+        }
+    }
+}
+
+/// FNV-1a digest helper shared by the workloads.
+#[inline]
+pub(crate) fn fnv1a(h: u64, v: u64) -> u64 {
+    let mut h = h ^ v;
+    h = h.wrapping_mul(0x100000001b3);
+    h
+}
+
+pub(crate) const FNV_SEED: u64 = 0xcbf29ce484222325;

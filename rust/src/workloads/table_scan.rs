@@ -1,0 +1,192 @@
+//! SQL-like database operations (paper §6: "We plan to test a wider
+//! variety of algorithms, including SQL-like database operations").
+//!
+//! A two-table micro-warehouse in elastic memory:
+//!
+//! ```sql
+//! SELECT o.region, COUNT(*), SUM(o.amount)
+//! FROM orders o JOIN customers c ON o.cust = c.id
+//! WHERE c.score >= :min_score
+//! GROUP BY o.region;
+//! ```
+//!
+//! executed as: sequential scan of `customers` building a bitmap of
+//! qualifying ids (linear-search-like locality), then a sequential scan
+//! of the much larger `orders` fact table probing the bitmap
+//! (sequential + scattered probe mix), aggregating into a tiny
+//! group-by array.  The fact-table scan dominates the footprint, so
+//! the locality profile sits between linear search and count sort —
+//! jumping should pay off moderately.
+
+use super::mem::{ElasticMem, U32Array, U64Array};
+use super::{fnv1a, Scale, Workload, FNV_SEED};
+use crate::util::Rng;
+
+const REGIONS: u64 = 16;
+/// orders row: [cust u32, region u32, amount u32] = 12 bytes
+const ORDER_W: u64 = 3;
+
+pub struct TableScan {
+    /// Fact-table rows.
+    pub n_orders: u64,
+    /// Dimension-table rows.
+    pub n_customers: u64,
+    /// Filter selectivity knob: qualifying score floor (0..=100).
+    pub min_score: u32,
+    seed: u64,
+    orders: Option<U32Array>,
+    customers: Option<U32Array>, // [score] per id
+    qualifies: Option<U32Array>, // bitmap (one u32 per id; built by the query)
+    groups: Option<U64Array>,    // [count, sum] x REGIONS
+}
+
+impl TableScan {
+    pub fn new(scale: Scale) -> Self {
+        // ~80% of the footprint in the fact table, 10% dimension, 10% bitmap
+        let bytes = scale.bytes();
+        let n_orders = (bytes * 8 / 10) / (ORDER_W * 4);
+        let n_customers = (bytes / 10) / 4;
+        TableScan {
+            n_orders: n_orders.max(64),
+            n_customers: n_customers.max(64),
+            min_score: 40,
+            seed: 0x5A1,
+            orders: None,
+            customers: None,
+            qualifies: None,
+            groups: None,
+        }
+    }
+}
+
+impl Workload for TableScan {
+    fn name(&self) -> &'static str {
+        "table_scan"
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.n_orders * ORDER_W * 4 + self.n_customers * 8 + REGIONS * 16
+    }
+
+    fn setup(&mut self, mem: &mut dyn ElasticMem) {
+        let mut rng = Rng::new(self.seed);
+        let customers = U32Array::map(mem, self.n_customers, "db.customers");
+        let orders = U32Array::map(mem, self.n_orders * ORDER_W, "db.orders");
+        let qualifies = U32Array::map(mem, self.n_customers, "db.qualifies");
+        let groups = U64Array::map(mem, REGIONS * 2, "db.groups");
+
+        for c in 0..self.n_customers {
+            customers.set(mem, c, (rng.next_u32() % 101) as u32); // score 0..=100
+        }
+        for o in 0..self.n_orders {
+            let base = o * ORDER_W;
+            orders.set(mem, base, rng.below(self.n_customers) as u32);
+            orders.set(mem, base + 1, rng.below(REGIONS) as u32);
+            orders.set(mem, base + 2, rng.next_u32() % 10_000);
+        }
+        self.customers = Some(customers);
+        self.orders = Some(orders);
+        self.qualifies = Some(qualifies);
+        self.groups = Some(groups);
+    }
+
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
+        let customers = self.customers.unwrap();
+        let orders = self.orders.unwrap();
+        let qualifies = self.qualifies.unwrap();
+        let groups = self.groups.unwrap();
+
+        // Phase 1: dimension scan + filter -> qualifying bitmap.
+        for c in 0..self.n_customers {
+            let q = (customers.get(mem, c) >= self.min_score) as u32;
+            qualifies.set(mem, c, q);
+        }
+        // Phase 2: fact scan + semi-join probe + group-by aggregate.
+        for o in 0..self.n_orders {
+            let base = o * ORDER_W;
+            let cust = orders.get(mem, base) as u64;
+            if qualifies.get(mem, cust) != 0 {
+                let region = orders.get(mem, base + 1) as u64;
+                let amount = orders.get(mem, base + 2) as u64;
+                let g = region * 2;
+                let cnt = groups.get(mem, g);
+                groups.set(mem, g, cnt + 1);
+                let sum = groups.get(mem, g + 1);
+                groups.set(mem, g + 1, sum + amount);
+            }
+        }
+        // Digest over the result set.
+        let mut digest = FNV_SEED;
+        for r in 0..REGIONS {
+            digest = fnv1a(digest, groups.get(mem, r * 2));
+            digest = fnv1a(digest, groups.get(mem, r * 2 + 1));
+        }
+        digest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mem::DirectMem;
+
+    #[test]
+    fn aggregates_match_manual_recount() {
+        let mut w = TableScan::new(Scale::Bytes(256 * 1024));
+        let mut m = DirectMem::new();
+        w.setup(&mut m);
+        let _ = w.run(&mut m);
+        // manual recount on the same data
+        let customers = w.customers.unwrap();
+        let orders = w.orders.unwrap();
+        let groups = w.groups.unwrap();
+        let mut count = vec![0u64; REGIONS as usize];
+        let mut sum = vec![0u64; REGIONS as usize];
+        for o in 0..w.n_orders {
+            let base = o * ORDER_W;
+            let cust = orders.get(&mut m, base) as u64;
+            if customers.get(&mut m, cust) >= w.min_score {
+                let r = orders.get(&mut m, base + 1) as usize;
+                count[r] += 1;
+                sum[r] += orders.get(&mut m, base + 2) as u64;
+            }
+        }
+        for r in 0..REGIONS as usize {
+            assert_eq!(groups.get(&mut m, r as u64 * 2), count[r], "count region {r}");
+            assert_eq!(groups.get(&mut m, r as u64 * 2 + 1), sum[r], "sum region {r}");
+        }
+    }
+
+    #[test]
+    fn selectivity_zero_and_full() {
+        // min_score = 0 qualifies everyone; 101 qualifies no one
+        let mut all = TableScan::new(Scale::Bytes(64 * 1024));
+        all.min_score = 0;
+        let mut m = DirectMem::new();
+        all.setup(&mut m);
+        let _ = all.run(&mut m);
+        let g = all.groups.unwrap();
+        let total: u64 = (0..REGIONS).map(|r| g.get(&mut m, r * 2)).sum();
+        assert_eq!(total, all.n_orders);
+
+        let mut none = TableScan::new(Scale::Bytes(64 * 1024));
+        none.min_score = 101;
+        let mut m2 = DirectMem::new();
+        none.setup(&mut m2);
+        let _ = none.run(&mut m2);
+        let g = none.groups.unwrap();
+        let total: u64 = (0..REGIONS).map(|r| g.get(&mut m2, r * 2)).sum();
+        assert_eq!(total, 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut w = TableScan::new(Scale::Bytes(64 * 1024));
+            let mut m = DirectMem::new();
+            w.setup(&mut m);
+            w.run(&mut m)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,259 @@
+//! Memory-access trace recording and replay.
+//!
+//! A [`TracingMem`] wrapper records every paged access a workload
+//! makes; [`TraceReplay`] is itself a [`Workload`] that re-issues a
+//! recorded trace against any `ElasticMem`.  This supports (a)
+//! debugging policy behaviour on frozen access patterns, (b) running
+//! the elastic system on *external* traces (the "production traces we
+//! do not have" substitution — synthetic or recorded traces exercise
+//! the identical code path), and (c) apples-to-apples policy
+//! comparisons where the access sequence is pinned regardless of what
+//! the policy decides.
+
+use super::mem::ElasticMem;
+use super::{fnv1a, Workload, FNV_SEED};
+use crate::mem::addr::AreaKind;
+
+/// One recorded access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    R8(u64),
+    R32(u64),
+    R64(u64),
+    W8(u64, u8),
+    W32(u64, u32),
+    W64(u64, u64),
+}
+
+impl Op {
+    pub fn addr(&self) -> u64 {
+        match *self {
+            Op::R8(a) | Op::R32(a) | Op::R64(a) => a,
+            Op::W8(a, _) | Op::W32(a, _) | Op::W64(a, _) => a,
+        }
+    }
+}
+
+/// A recorded trace: the mapped regions plus the op stream (addresses
+/// are region-relative so a replay can remap anywhere).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// (len, kind-is-stack, name) per region, in mmap order.
+    pub regions: Vec<(u64, bool, String)>,
+    pub ops: Vec<Op>,
+}
+
+/// Recording wrapper around any ElasticMem.
+pub struct TracingMem<'a, M: ElasticMem + ?Sized> {
+    pub inner: &'a mut M,
+    pub trace: Trace,
+    /// Region start addresses in the *inner* memory, for relativizing.
+    region_starts: Vec<u64>,
+}
+
+impl<'a, M: ElasticMem + ?Sized> TracingMem<'a, M> {
+    pub fn new(inner: &'a mut M) -> Self {
+        TracingMem { inner, trace: Trace::default(), region_starts: Vec::new() }
+    }
+
+    /// Convert an absolute inner address to (region, offset) encoded as
+    /// a synthetic address: region index in the top 16 bits.
+    fn rel(&self, addr: u64) -> u64 {
+        for (i, &start) in self.region_starts.iter().enumerate().rev() {
+            if addr >= start {
+                let len = self.trace.regions[i].0;
+                if addr < start + len {
+                    return ((i as u64) << 48) | (addr - start);
+                }
+            }
+        }
+        panic!("traced access outside any mapped region: {addr:#x}");
+    }
+}
+
+impl<M: ElasticMem + ?Sized> ElasticMem for TracingMem<'_, M> {
+    fn mmap(&mut self, len: u64, kind: AreaKind, name: &str) -> u64 {
+        let start = self.inner.mmap(len, kind.clone(), name);
+        self.region_starts.push(start);
+        self.trace.regions.push((len, matches!(kind, AreaKind::Stack), name.to_string()));
+        start
+    }
+
+    fn read_u8(&mut self, addr: u64) -> u8 {
+        let r = self.rel(addr);
+        self.trace.ops.push(Op::R8(r));
+        self.inner.read_u8(addr)
+    }
+
+    fn read_u32(&mut self, addr: u64) -> u32 {
+        let r = self.rel(addr);
+        self.trace.ops.push(Op::R32(r));
+        self.inner.read_u32(addr)
+    }
+
+    fn read_u64(&mut self, addr: u64) -> u64 {
+        let r = self.rel(addr);
+        self.trace.ops.push(Op::R64(r));
+        self.inner.read_u64(addr)
+    }
+
+    fn write_u8(&mut self, addr: u64, v: u8) {
+        let r = self.rel(addr);
+        self.trace.ops.push(Op::W8(r, v));
+        self.inner.write_u8(addr, v)
+    }
+
+    fn write_u32(&mut self, addr: u64, v: u32) {
+        let r = self.rel(addr);
+        self.trace.ops.push(Op::W32(r, v));
+        self.inner.write_u32(addr, v)
+    }
+
+    fn write_u64(&mut self, addr: u64, v: u64) {
+        let r = self.rel(addr);
+        self.trace.ops.push(Op::W64(r, v));
+        self.inner.write_u64(addr, v)
+    }
+
+    fn regs_mut(&mut self) -> &mut [u64; 16] {
+        self.inner.regs_mut()
+    }
+}
+
+/// Record a full workload run into a trace (driven against any memory).
+pub fn record<M: ElasticMem + ?Sized>(w: &mut dyn Workload, mem: &mut M) -> (Trace, u64) {
+    let mut t = TracingMem::new(mem);
+    w.setup(&mut t);
+    let digest = w.run(&mut t);
+    (t.trace, digest)
+}
+
+/// A workload that replays a recorded trace.
+pub struct TraceReplay {
+    pub trace: Trace,
+    starts: Vec<u64>,
+}
+
+impl TraceReplay {
+    pub fn new(trace: Trace) -> Self {
+        TraceReplay { trace, starts: Vec::new() }
+    }
+
+    fn abs(&self, rel: u64) -> u64 {
+        let region = (rel >> 48) as usize;
+        self.starts[region] + (rel & 0xFFFF_FFFF_FFFF)
+    }
+}
+
+impl Workload for TraceReplay {
+    fn name(&self) -> &'static str {
+        "trace_replay"
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.trace.regions.iter().map(|(l, _, _)| *l).sum()
+    }
+
+    fn setup(&mut self, mem: &mut dyn ElasticMem) {
+        self.starts.clear();
+        for (len, is_stack, name) in &self.trace.regions {
+            let kind = if *is_stack { AreaKind::Stack } else { AreaKind::Heap };
+            self.starts.push(mem.mmap(*len, kind, name));
+        }
+    }
+
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
+        let mut digest = FNV_SEED;
+        for i in 0..self.trace.ops.len() {
+            let op = self.trace.ops[i];
+            match op {
+                Op::R8(r) => {
+                    let a = self.abs(r);
+                    digest = fnv1a(digest, mem.read_u8(a) as u64);
+                }
+                Op::R32(r) => {
+                    let a = self.abs(r);
+                    digest = fnv1a(digest, mem.read_u32(a) as u64);
+                }
+                Op::R64(r) => {
+                    let a = self.abs(r);
+                    digest = fnv1a(digest, mem.read_u64(a));
+                }
+                Op::W8(r, v) => {
+                    let a = self.abs(r);
+                    mem.write_u8(a, v);
+                }
+                Op::W32(r, v) => {
+                    let a = self.abs(r);
+                    mem.write_u32(a, v);
+                }
+                Op::W64(r, v) => {
+                    let a = self.abs(r);
+                    mem.write_u64(a, v);
+                }
+            }
+        }
+        digest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mem::DirectMem;
+    use crate::workloads::{by_name, Scale};
+
+    #[test]
+    fn record_then_replay_reads_same_values() {
+        // record a count sort against flat memory
+        let mut w = by_name("count_sort", Scale::Bytes(64 * 1024)).unwrap();
+        let mut mem = DirectMem::new();
+        let (trace, _) = record(w.as_mut(), &mut mem);
+        assert!(!trace.ops.is_empty());
+        assert!(trace.regions.len() >= 3);
+
+        // replay twice on fresh flat memories: identical digests
+        let mut r1 = TraceReplay::new(trace.clone());
+        let mut m1 = DirectMem::new();
+        r1.setup(&mut m1);
+        let d1 = r1.run(&mut m1);
+
+        let mut r2 = TraceReplay::new(trace);
+        let mut m2 = DirectMem::new();
+        r2.setup(&mut m2);
+        let d2 = r2.run(&mut m2);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn replay_on_elastic_system_matches_flat_replay() {
+        use crate::os::system::{ElasticSystem, Mode, SystemConfig};
+        let mut w = by_name("linear", Scale::Bytes(96 * 4096)).unwrap();
+        let mut mem = DirectMem::new();
+        let (trace, _) = record(w.as_mut(), &mut mem);
+
+        let mut flat = TraceReplay::new(trace.clone());
+        let mut m = DirectMem::new();
+        flat.setup(&mut m);
+        let d_flat = flat.run(&mut m);
+
+        let mut elastic = TraceReplay::new(trace);
+        let cfg = SystemConfig { node_frames: vec![64, 64], mode: Mode::Elastic, ..Default::default() };
+        let mut sys = ElasticSystem::new(cfg, 32);
+        let r = sys.run_workload(&mut elastic);
+        assert_eq!(r.digest, d_flat, "trace replay must be memory-system independent");
+        assert!(r.metrics.remote_faults > 0, "overcommitted replay should fault");
+    }
+
+    #[test]
+    fn trace_ops_are_region_relative() {
+        let mut mem = DirectMem::new();
+        let mut t = TracingMem::new(&mut mem);
+        let a = t.mmap(4096, AreaKind::Heap, "a");
+        let b = t.mmap(4096, AreaKind::Heap, "b");
+        t.write_u64(a, 1);
+        t.write_u64(b + 8, 2);
+        assert_eq!(t.trace.ops[0], Op::W64(0, 1)); // region 0, offset 0
+        assert_eq!(t.trace.ops[1], Op::W64((1 << 48) | 8, 2)); // region 1, offset 8
+    }
+}

@@ -1,0 +1,248 @@
+//! Integration tests: the whole stack composed — workloads over the
+//! elastic pager across modes, correctness against ground truth,
+//! paper-shape assertions at test scale.
+
+use elastic_os::mem::addr::AreaKind;
+use elastic_os::mem::NodeId;
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::os::EwmaPolicy;
+use elastic_os::workloads::{by_name, DirectMem, ElasticMem, Scale, Workload, ALL};
+
+/// Small but pressure-inducing testbed: 2 nodes x 384 KiB, ~1.3x
+/// overcommitted footprints.
+fn test_cfg(mode: Mode) -> SystemConfig {
+    SystemConfig { node_frames: vec![96, 96], mode, ..SystemConfig::default() }
+}
+
+fn footprint() -> u64 {
+    96 * 4096 * 13 / 10
+}
+
+fn ground_truth(workload: &str) -> u64 {
+    let mut w = by_name(workload, Scale::Bytes(footprint())).unwrap();
+    let mut mem = DirectMem::new();
+    w.setup(&mut mem);
+    w.run(&mut mem)
+}
+
+#[test]
+fn all_workloads_match_ground_truth_under_eos() {
+    for wl in ALL {
+        let expect = ground_truth(wl);
+        let mut w = by_name(wl, Scale::Bytes(footprint())).unwrap();
+        let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 64);
+        let r = sys.run_workload(w.as_mut());
+        assert_eq!(r.digest, expect, "{wl}: elastic digest != ground truth");
+        sys.verify().unwrap_or_else(|e| panic!("{wl}: {e}"));
+    }
+}
+
+#[test]
+fn all_workloads_match_ground_truth_under_nswap() {
+    for wl in ALL {
+        let expect = ground_truth(wl);
+        let mut w = by_name(wl, Scale::Bytes(footprint())).unwrap();
+        let mut sys = ElasticSystem::new(test_cfg(Mode::Nswap), 64);
+        let r = sys.run_workload(w.as_mut());
+        assert_eq!(r.digest, expect, "{wl}: nswap digest != ground truth");
+        assert_eq!(r.metrics.jumps, 0, "{wl}: nswap must never jump");
+    }
+}
+
+#[test]
+fn digests_stable_across_thresholds_and_policies() {
+    let expect = ground_truth("count_sort");
+    for threshold in [16u64, 64, 1024] {
+        let mut w = by_name("count_sort", Scale::Bytes(footprint())).unwrap();
+        let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), threshold);
+        assert_eq!(sys.run_workload(w.as_mut()).digest, expect, "threshold {threshold}");
+    }
+    let mut w = by_name("count_sort", Scale::Bytes(footprint())).unwrap();
+    let mut sys = ElasticSystem::with_policy(
+        test_cfg(Mode::Elastic),
+        Box::new(EwmaPolicy::default_tuned()),
+    );
+    assert_eq!(sys.run_workload(w.as_mut()).digest, expect, "ewma policy");
+}
+
+#[test]
+fn overcommitted_run_stretches_exactly_once_on_two_nodes() {
+    let mut w = by_name("linear", Scale::Bytes(footprint())).unwrap();
+    let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 64);
+    let r = sys.run_workload(w.as_mut());
+    assert_eq!(r.metrics.stretches, 1);
+    assert!(sys.is_stretched());
+}
+
+#[test]
+fn in_memory_run_never_stretches() {
+    // footprint well below one node: no elasticity needed
+    let mut w = by_name("linear", Scale::Bytes(64 * 4096)).unwrap();
+    let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 64);
+    let r = sys.run_workload(w.as_mut());
+    assert_eq!(r.metrics.stretches, 0);
+    assert_eq!(r.metrics.remote_faults, 0);
+    assert_eq!(r.metrics.jumps, 0);
+}
+
+#[test]
+fn eos_beats_nswap_on_linear_search() {
+    // the paper's headline shape at test scale: EOS with a small
+    // threshold must beat Nswap on a sequential scan
+    let run = |mode, threshold| {
+        let mut w = by_name("linear", Scale::Bytes(footprint())).unwrap();
+        let mut sys = ElasticSystem::new(test_cfg(mode), threshold);
+        sys.run_workload(w.as_mut())
+    };
+    let nswap = run(Mode::Nswap, 32);
+    let eos = run(Mode::Elastic, 32);
+    assert!(eos.metrics.jumps > 0, "eos must jump");
+    assert!(
+        eos.sim_ns < nswap.sim_ns,
+        "eos ({}) must beat nswap ({})",
+        eos.sim_ns,
+        nswap.sim_ns
+    );
+    assert!(
+        eos.metrics.total_bytes() < nswap.metrics.total_bytes(),
+        "eos must also reduce traffic"
+    );
+}
+
+#[test]
+fn jump_requires_flushed_sync_queue() {
+    // mmap while stretched enqueues sync events; a jump must flush them
+    let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 1_000_000);
+    let a = sys.mmap(150 * 4096, AreaKind::Heap, "big");
+    for p in 0..150u64 {
+        sys.write_u64(a + p * 4096, p);
+    }
+    assert!(sys.is_stretched());
+    let _b = sys.mmap(4 * 4096, AreaKind::Heap, "late"); // queued event
+    sys.jump_to(NodeId(1));
+    assert!(sys.metrics.sync_events > 0, "sync events must be flushed by the jump");
+    assert_eq!(sys.running_on(), NodeId(1));
+    sys.verify().unwrap();
+}
+
+#[test]
+fn balance_on_stretch_prepopulates_remote_node() {
+    let mut cfg = test_cfg(Mode::Elastic);
+    cfg.balance_on_stretch = true;
+    let mut w = by_name("linear", Scale::Bytes(footprint())).unwrap();
+    let mut sys = ElasticSystem::new(cfg, 64);
+    let r = sys.run_workload(w.as_mut());
+    assert_eq!(r.digest, ground_truth("linear"));
+    assert!(r.metrics.pushes > 0);
+}
+
+#[test]
+fn three_node_cluster_works() {
+    let cfg = SystemConfig {
+        node_frames: vec![64, 64, 64],
+        mode: Mode::Elastic,
+        ..SystemConfig::default()
+    };
+    // footprint needs two stretches: > 2 nodes' capacity at 85%
+    let fp = 64 * 4096 * 2;
+    let expect = {
+        let mut w = by_name("count_sort", Scale::Bytes(fp)).unwrap();
+        let mut mem = DirectMem::new();
+        w.setup(&mut mem);
+        w.run(&mut mem)
+    };
+    let mut w = by_name("count_sort", Scale::Bytes(fp)).unwrap();
+    let mut sys = ElasticSystem::new(cfg, 64);
+    let r = sys.run_workload(w.as_mut());
+    assert_eq!(r.digest, expect);
+    assert_eq!(r.metrics.stretches, 2, "must stretch to both extra nodes");
+    sys.verify().unwrap();
+}
+
+#[test]
+fn metrics_residence_covers_total_time() {
+    let mut w = by_name("linear", Scale::Bytes(footprint())).unwrap();
+    let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 32);
+    let r = sys.run_workload(w.as_mut());
+    let res = r.metrics.node_residence_ns(r.start_node, r.sim_ns);
+    let sum: u64 = res.iter().sum();
+    assert_eq!(sum, r.sim_ns, "residence must partition total time");
+    assert!(r.metrics.max_stay_ns(r.sim_ns) <= r.sim_ns);
+}
+
+#[test]
+fn dfs_depth_increases_jumping() {
+    // paper Figs 13/14 shape: much deeper graphs jump at least as much
+    let run = |depth| {
+        let mut w = elastic_os::workloads::dfs::Dfs::new(Scale::Bytes(footprint()))
+            .with_depth(depth);
+        let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 128);
+        let r = sys.run_workload(&mut w);
+        r.metrics.jumps
+    };
+    let shallow = run(8);
+    let deep = run(footprint() / 4096); // one branch spans the footprint
+    assert!(
+        deep >= shallow,
+        "deep graphs should jump at least as much (shallow={shallow}, deep={deep})"
+    );
+}
+
+#[test]
+fn workload_table1_footprints_are_close_to_target() {
+    for wl in ALL {
+        let w = by_name(wl, Scale::Bytes(footprint())).unwrap();
+        let fp = w.footprint_bytes() as f64;
+        let target = footprint() as f64;
+        assert!(
+            fp > target * 0.5 && fp < target * 1.6,
+            "{wl}: footprint {fp} too far from target {target}"
+        );
+    }
+}
+
+#[test]
+fn extension_workloads_match_ground_truth() {
+    // paper §6 future-work extensions run through the same machinery
+    for wl in ["table_scan"] {
+        let expect = ground_truth(wl);
+        let mut w = by_name(wl, Scale::Bytes(footprint())).unwrap();
+        let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 256);
+        let r = sys.run_workload(w.as_mut());
+        assert_eq!(r.digest, expect, "{wl}");
+        sys.verify().unwrap();
+    }
+}
+
+#[test]
+fn burst_policy_runs_whole_workloads_correctly() {
+    let expect = ground_truth("linear");
+    let mut w = by_name("linear", Scale::Bytes(footprint())).unwrap();
+    let mut sys = ElasticSystem::with_policy(
+        test_cfg(Mode::Elastic),
+        Box::new(elastic_os::os::BurstPolicy::default_tuned()),
+    );
+    let r = sys.run_workload(w.as_mut());
+    assert_eq!(r.digest, expect);
+    sys.verify().unwrap();
+}
+
+#[test]
+fn trace_record_replay_round_trip_through_elastic_system() {
+    use elastic_os::workloads::trace::{record, TraceReplay};
+    // record the SQL workload against flat memory, replay it under
+    // pressure on the elastic system: byte-identical reads
+    let mut w = by_name("table_scan", Scale::Bytes(footprint() / 2)).unwrap();
+    let mut flat = DirectMem::new();
+    let (trace, _) = record(w.as_mut(), &mut flat);
+
+    let mut flat_replay = TraceReplay::new(trace.clone());
+    let mut m = DirectMem::new();
+    flat_replay.setup(&mut m);
+    let d_flat = flat_replay.run(&mut m);
+
+    let mut elastic_replay = TraceReplay::new(trace);
+    let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 64);
+    let r = sys.run_workload(&mut elastic_replay);
+    assert_eq!(r.digest, d_flat);
+}

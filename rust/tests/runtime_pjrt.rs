@@ -1,0 +1,124 @@
+//! PJRT runtime integration: load the AOT artifacts (HLO text from
+//! `make artifacts`), execute them, and cross-check against the same
+//! semantics implemented in Rust.  Skips (with a note) if artifacts
+//! are absent so `cargo test` works before `make artifacts`.
+
+use elastic_os::mem::NodeId;
+use elastic_os::os::policy::{Decision, JumpPolicy};
+use elastic_os::runtime::policy_model::ModelPolicyParams;
+use elastic_os::runtime::{artifacts_dir, Engine, ModelJumpPolicy};
+
+fn engine_and(path: &str) -> Option<(Engine, elastic_os::runtime::Model)> {
+    let p = artifacts_dir().join(path);
+    if !p.exists() {
+        eprintln!("skipping: {} missing (run `make artifacts`)", p.display());
+        return None;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let model = engine.load(&p).expect("compile HLO");
+    Some((engine, model))
+}
+
+#[test]
+fn policy_artifact_matches_rust_reference_scoring() {
+    let Some((_e, model)) = engine_and("policy.hlo.txt") else { return };
+    // decayed sum with decay d: newest bucket weight 1
+    let w = 64usize;
+    let n = 16usize;
+    let mut window = vec![0f32; w * n];
+    // node 2: 5 faults in the newest bucket; node 1: 8 faults in the
+    // oldest
+    window[(w - 1) * n + 2] = 5.0;
+    window[2 * n + 1] = 8.0; // an old bucket (index 2)
+    let mut onehot = vec![0f32; n];
+    onehot[0] = 1.0;
+    let decay = 0.9f32;
+    let params = vec![decay, 0.5, 0.1, 0.0];
+    let out = model
+        .run_f32(&[(&window, &[64, 16]), (&onehot, &[16]), (&params, &[4])])
+        .unwrap();
+    let scores = &out[0];
+    // rust-side reference
+    let expect2 = 5.0f32; // newest bucket, weight decay^0
+    let expect1 = 8.0f32 * decay.powi((w - 1 - 2) as i32);
+    assert!((scores[2] - expect2).abs() < 1e-3, "{} vs {expect2}", scores[2]);
+    assert!((scores[1] - expect1).abs() < 1e-4, "{} vs {expect1}", scores[1]);
+    // preferred = node 2 (old faults decayed away), decision = jump
+    assert_eq!(out[1][0] as usize, 2);
+    assert_eq!(out[2][0], 1.0);
+}
+
+#[test]
+fn evict_artifact_second_chance_semantics() {
+    let Some((_e, model)) = engine_and("evict.hlo.txt") else { return };
+    let b = 2048usize;
+    let mut age = vec![0f32; b];
+    let mut refd = vec![0f32; b];
+    let mut dirty = vec![0f32; b];
+    let mut pinned = vec![0f32; b];
+    age[0] = 10.0; // old, unreferenced -> prio 11
+    age[1] = 50.0;
+    refd[1] = 1.0; // referenced -> age resets, prio 0
+    age[2] = 10.0;
+    dirty[2] = 1.0; // dirty discount
+    age[3] = 10.0;
+    pinned[3] = 1.0; // pinned -> massively negative
+    let out = model
+        .run_f32(&[(&age, &[2048]), (&refd, &[2048]), (&dirty, &[2048]), (&pinned, &[2048])])
+        .unwrap();
+    let (new_age, prio) = (&out[0], &out[1]);
+    assert_eq!(new_age[0], 11.0);
+    assert_eq!(new_age[1], 0.0);
+    assert_eq!(prio[0], 11.0);
+    assert_eq!(prio[1], 0.0);
+    assert!((prio[2] - 10.75).abs() < 1e-4);
+    assert!(prio[3] < -1e8);
+}
+
+#[test]
+fn model_policy_drives_a_real_system_run() {
+    let Some((_e, model)) = engine_and("policy.hlo.txt") else { return };
+    use elastic_os::mem::addr::AreaKind;
+    use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+    use elastic_os::workloads::ElasticMem;
+
+    let policy = ModelJumpPolicy::new(
+        model,
+        ModelPolicyParams { consult_every: 8, min_mass: 8.0, hysteresis: 4.0, ..Default::default() },
+    );
+    let cfg = SystemConfig { node_frames: vec![96, 96], mode: Mode::Elastic, ..SystemConfig::default() };
+    let mut sys = ElasticSystem::with_policy(cfg, Box::new(policy));
+    let a = sys.mmap(150 * 4096, AreaKind::Heap, "model-driven");
+    // three sequential passes: enough remote-fault mass to trigger
+    // model-decided jumps
+    for _ in 0..3 {
+        for p in 0..150u64 {
+            sys.write_u64(a + p * 4096, p);
+        }
+    }
+    assert!(sys.metrics.jumps > 0, "model policy should jump on sequential scans");
+    assert!(sys.metrics.policy_evals > 0, "policy cost must be charged");
+    sys.verify().unwrap();
+    // data intact
+    for p in 0..150u64 {
+        assert_eq!(sys.read_u64(a + p * 4096), p);
+    }
+}
+
+#[test]
+fn model_policy_unit_decisions() {
+    let Some((_e, model)) = engine_and("policy.hlo.txt") else { return };
+    let mut p = ModelJumpPolicy::new(
+        model,
+        ModelPolicyParams { consult_every: 4, min_mass: 4.0, hysteresis: 1.0, ..Default::default() },
+    );
+    let mut jumped = false;
+    for i in 0..32u64 {
+        if let Decision::JumpTo(t) = p.on_remote_fault(NodeId(0), NodeId(3), i * 1000) {
+            assert_eq!(t, NodeId(3));
+            jumped = true;
+            break;
+        }
+    }
+    assert!(jumped, "sustained one-owner faults must trigger a jump");
+}

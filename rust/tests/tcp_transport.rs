@@ -1,0 +1,55 @@
+//! Real-TCP fabric tests: the stretch/push/pull/jump protocol over
+//! actual localhost sockets between two peers (worker in a thread).
+//! Proves the evaluation's message formats and execution-transfer
+//! semantics do not depend on the in-process simulation shortcut.
+
+use elastic_os::net::peer::{expected_digest, run_local_pair};
+
+#[test]
+fn scan_completes_over_tcp_with_jumps() {
+    let n_pages = 256;
+    let threshold = 16;
+    let (leader, worker) = run_local_pair(n_pages, threshold).expect("pair run");
+    let expect = expected_digest(n_pages);
+    assert_eq!(leader.digest, expect, "leader digest");
+    assert_eq!(worker.digest, expect, "worker digest");
+    // the leader hits the worker's half and must jump (pages/2 > threshold)
+    assert!(leader.stats.jumps_sent >= 1, "leader should have jumped");
+    assert!(worker.stats.jumps_received >= 1);
+    // pulls happen up to the threshold before each jump
+    assert!(leader.stats.pulls <= threshold as u64 + 1);
+}
+
+#[test]
+fn scan_completes_over_tcp_without_jumps_when_threshold_huge() {
+    let n_pages = 64;
+    let threshold = 10_000; // never jump: pure network swap over TCP
+    let (leader, worker) = run_local_pair(n_pages, threshold).expect("pair run");
+    let expect = expected_digest(n_pages);
+    assert_eq!(leader.digest, expect);
+    assert_eq!(worker.digest, expect);
+    assert_eq!(leader.stats.jumps_sent, 0);
+    // every worker-owned page is pulled over the wire
+    assert_eq!(leader.stats.pulls, (n_pages / 2) as u64);
+    assert_eq!(worker.stats.pulls_served, (n_pages / 2) as u64);
+}
+
+#[test]
+fn tcp_traffic_is_page_dominated() {
+    let n_pages = 128;
+    let (leader, worker) = run_local_pair(n_pages, 8).expect("pair run");
+    // bytes sent by the page-serving side must be at least the pages
+    // it served
+    let served_bytes = worker.stats.pulls_served * 4096;
+    assert!(worker.stats.bytes_sent >= served_bytes);
+    let _ = leader;
+}
+
+#[test]
+fn repeated_sessions_are_deterministic() {
+    let a = run_local_pair(96, 12).expect("first");
+    let b = run_local_pair(96, 12).expect("second");
+    assert_eq!(a.0.digest, b.0.digest);
+    assert_eq!(a.0.stats.pulls, b.0.stats.pulls);
+    assert_eq!(a.0.stats.jumps_sent, b.0.stats.jumps_sent);
+}
