@@ -1,0 +1,76 @@
+//! Multi-process scheduler benches: wall time of contended multi-tenant
+//! runs (2 nodes, 4 procs) so the round-robin scheduler's overhead is
+//! tracked next to the single-process engine.
+//! `cargo bench --bench multi_tenant_sched`.
+
+mod bench_util;
+
+use bench_util::bench;
+use elastic_os::mem::NodeId;
+use elastic_os::os::kernel::ClusterConfig;
+use elastic_os::os::sched::{record_ground_truth, ElasticCluster};
+use elastic_os::os::system::Mode;
+use elastic_os::workloads::trace::Trace;
+use elastic_os::workloads::{by_name, Scale};
+
+const NODE_FRAMES: u32 = 512;
+const PROCS: usize = 4;
+
+fn tenants() -> Vec<(&'static str, Trace, u64)> {
+    // 1.6x home-node overcommit across 4 tenants, fitting cluster RAM.
+    let per_fp = (NODE_FRAMES as u64 * 4096) * 16 / 10 / PROCS as u64;
+    ["linear", "count_sort", "table_scan", "linear"]
+        .iter()
+        .map(|wl| {
+            let mut w = by_name(wl, Scale::Bytes(per_fp)).unwrap();
+            let (t, d) = record_ground_truth(w.as_mut());
+            (*wl, t, d)
+        })
+        .collect()
+}
+
+fn run_once(tenants: &[(&'static str, Trace, u64)], mode: Mode, quantum_ns: u64) -> u64 {
+    let cfg = ClusterConfig { node_frames: vec![NODE_FRAMES; 2], ..ClusterConfig::default() };
+    let mut cluster = ElasticCluster::new(cfg);
+    cluster.quantum_ns = quantum_ns;
+    let mut jobs = Vec::new();
+    for (wl, trace, _) in tenants {
+        let slot = cluster.spawn(mode, NodeId(0), wl, 512);
+        jobs.push((slot, trace.clone()));
+    }
+    let reports = cluster.run_concurrent(jobs);
+    for (r, (wl, _, truth)) in reports.iter().zip(tenants.iter()) {
+        assert_eq!(r.digest, *truth, "{wl} diverged");
+    }
+    cluster.clock.now()
+}
+
+fn main() {
+    println!("== multi_tenant_sched (emulator wall time, 2x{NODE_FRAMES}-frame nodes, {PROCS} procs) ==");
+    let ts = tenants();
+    let total_ops: u64 = ts.iter().map(|(_, t, _)| t.ops.len() as u64).sum();
+    println!("total replayed ops per run: {total_ops}");
+
+    for (label, mode) in [("eos", Mode::Elastic), ("nswap", Mode::Nswap)] {
+        for quantum in [200_000u64, 2_000_000] {
+            let name = format!("4-proc contention [{label}] quantum={}us", quantum / 1000);
+            bench(&name, 1, 5, || {
+                std::hint::black_box(run_once(&ts, mode, quantum));
+            });
+        }
+    }
+
+    // Scheduler overhead reference: the same total work as one process
+    // per cluster, run back to back (no contention, no slicing).
+    bench("1-proc baseline x4 (no contention)", 1, 5, || {
+        for (wl, trace, truth) in &ts {
+            let cfg =
+                ClusterConfig { node_frames: vec![NODE_FRAMES; 2], ..ClusterConfig::default() };
+            let mut cluster = ElasticCluster::new(cfg);
+            let slot = cluster.spawn(Mode::Elastic, NodeId(0), wl, 512);
+            let reports = cluster.run_concurrent(vec![(slot, trace.clone())]);
+            assert_eq!(reports[0].digest, *truth, "{wl} diverged");
+            std::hint::black_box(cluster.clock.now());
+        }
+    });
+}

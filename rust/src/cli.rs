@@ -43,6 +43,17 @@ impl Args {
     pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
         self.flags.get(name).and_then(|v| v.parse().ok())
     }
+
+    /// Comma-separated list flag ("linear,dfs"); missing flag -> None,
+    /// empty items are dropped.
+    pub fn flag_list(&self, name: &str) -> Option<Vec<String>> {
+        self.flags.get(name).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
 }
 
 #[cfg(test)]
@@ -67,5 +78,17 @@ mod tests {
         let a = parse(&["eval", "fig8", "--fast"]);
         assert_eq!(a.positional, vec!["eval", "fig8"]);
         assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn list_flags_split_on_commas() {
+        let a = parse(&["run", "--workload", "linear, dfs,count_sort,"]);
+        assert_eq!(
+            a.flag_list("workload"),
+            Some(vec!["linear".to_string(), "dfs".to_string(), "count_sort".to_string()])
+        );
+        assert_eq!(a.flag_list("missing"), None);
+        let single = parse(&["run", "--workload=dfs"]);
+        assert_eq!(single.flag_list("workload"), Some(vec!["dfs".to_string()]));
     }
 }

@@ -377,6 +377,75 @@ pub fn multinode(cfg: &EvalConfig) -> Table {
     t
 }
 
+/// Multi-tenant contention (beyond the paper; ROADMAP north star):
+/// N processes with mixed workloads time-sliced on a 2-node cluster,
+/// contending for the same frames. For each process we report its
+/// elastic vs nswap *per-process* execution time; every digest is
+/// asserted against that process's single-process DirectMem ground
+/// truth, so correctness under contention is checked, not assumed.
+pub fn multi_tenant(cfg: &EvalConfig) -> Table {
+    use crate::mem::NodeId;
+    use crate::os::kernel::ClusterConfig;
+    use crate::os::sched::{record_ground_truth, ElasticCluster};
+
+    let procs = 4usize;
+    let wls = ["linear", "count_sort", "table_scan", "dfs"];
+    let mut t = Table::new(
+        &format!(
+            "Multi-tenant: {procs} processes homed on one of 2x{} -frame nodes \
+             (1.6x home-node overcommit; per-process eos vs nswap, threshold 512)",
+            cfg.node_frames
+        ),
+        &["proc", "workload", "home", "nswap time", "eos time", "speedup", "eos jumps", "eos pulls"],
+    );
+
+    // Record each tenant's trace + ground-truth digest once. Together
+    // the tenants overcommit their shared home node 1.6x while fitting
+    // total cluster RAM (there is no disk swap to spill to).
+    let per_fp = (cfg.node_frames as u64 * 4096) * 16 / 10 / procs as u64;
+    let mut tenants = Vec::new();
+    for i in 0..procs {
+        let wl = wls[i % wls.len()];
+        let mut w = by_name(wl, Scale::Bytes(per_fp)).unwrap();
+        let (trace, truth) = record_ground_truth(w.as_mut());
+        tenants.push((wl, trace, truth));
+    }
+
+    let run = |mode: Mode| -> Vec<crate::os::sched::ProcRunReport> {
+        let ccfg = ClusterConfig {
+            node_frames: vec![cfg.node_frames; 2],
+            ..ClusterConfig::default()
+        };
+        let mut cluster = ElasticCluster::new(ccfg);
+        let mut jobs = Vec::new();
+        for (wl, trace, _) in tenants.iter() {
+            let slot = cluster.spawn(mode, NodeId(0), wl, 512);
+            jobs.push((slot, trace.clone()));
+        }
+        let reports = cluster.run_concurrent(jobs);
+        cluster.verify().expect("cluster invariants after multi-tenant run");
+        reports
+    };
+
+    let eos = run(Mode::Elastic);
+    let nswap = run(Mode::Nswap);
+    for (i, (wl, _, truth)) in tenants.iter().enumerate() {
+        assert_eq!(eos[i].digest, *truth, "{wl}: eos digest != ground truth under contention");
+        assert_eq!(nswap[i].digest, *truth, "{wl}: nswap digest != ground truth under contention");
+        t.row(vec![
+            format!("pid{}", eos[i].pid),
+            wl.to_string(),
+            eos[i].start_node.to_string(),
+            fmt_ns(nswap[i].cpu_ns as f64),
+            fmt_ns(eos[i].cpu_ns as f64),
+            fmt_x(nswap[i].cpu_ns as f64 / eos[i].cpu_ns.max(1) as f64),
+            eos[i].metrics.jumps.to_string(),
+            eos[i].metrics.remote_faults.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Run everything, in paper order.
 pub fn run_all(cfg: &EvalConfig) {
     table1(cfg).emit("table1.txt");
@@ -391,6 +460,7 @@ pub fn run_all(cfg: &EvalConfig) {
     ablation_policy(cfg).emit("ablation_policy.txt");
     ablation_balance(cfg).emit("ablation_balance.txt");
     multinode(cfg).emit("multinode.txt");
+    multi_tenant(cfg).emit("multi_tenant.txt");
 }
 
 /// Dispatch by experiment name (CLI).
@@ -408,6 +478,7 @@ pub fn run_named(cfg: &EvalConfig, name: &str) -> bool {
         "ablation-policy" => ablation_policy(cfg).emit("ablation_policy.txt"),
         "ablation-balance" => ablation_balance(cfg).emit("ablation_balance.txt"),
         "multinode" => multinode(cfg).emit("multinode.txt"),
+        "multi-tenant" | "multi_tenant" => multi_tenant(cfg).emit("multi_tenant.txt"),
         "all" => run_all(cfg),
         _ => return false,
     }

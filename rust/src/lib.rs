@@ -9,7 +9,11 @@
 //!   table, second-chance LRU + watermark-driven reclaim, the jumping
 //!   policies, the network protocol (simulated-cost and real-TCP
 //!   fabrics), the six evaluation workloads, and the harness that
-//!   regenerates every table and figure of the paper.
+//!   regenerates every table and figure of the paper. The engine is
+//!   split into a shared node-kernel and per-process contexts
+//!   ([`os::kernel`]), so one cluster runs N elasticized processes
+//!   contending for the same frames ([`os::sched::ElasticCluster`]);
+//!   [`os::system::ElasticSystem`] is the one-process facade.
 //! * **L2 (python/compile/model.py)** — the adaptive jumping-policy and
 //!   eviction-scoring compute graphs in JAX, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the decayed
@@ -31,5 +35,6 @@ pub mod util;
 pub mod workloads;
 
 pub use mem::{NodeId, PAGE_SIZE};
+pub use os::sched::ElasticCluster;
 pub use os::system::{ElasticSystem, Mode, SystemConfig};
 pub use sim::CostModel;

@@ -38,10 +38,14 @@ const USAGE: &str = "\
 elasticos — ElasticOS: joint disaggregation of memory and computation
 
 USAGE:
-  elasticos run --workload <name> [--mode eos|nswap] [--threshold N]
-                [--frames F] [--footprint BYTES] [--policy threshold|ewma|burst|model]
+  elasticos run --workload <name[,name...]> [--mode eos|nswap] [--threshold N]
+                [--frames F] [--footprint BYTES] [--nodes N] [--procs N] [--spread]
+                [--policy threshold|ewma|burst|model]
+                (--procs N > 1 time-slices N processes — cycling through the
+                 workload list — on one cluster, contending for its frames;
+                 --footprint is then the TOTAL across processes)
   elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
-                  ablation-policy|ablation-balance|multinode|all> [--fast]
+                  ablation-policy|ablation-balance|multinode|multi-tenant|all> [--fast]
   elasticos cluster [--pages N] [--threshold N]
   elasticos info
 
@@ -58,6 +62,13 @@ fn cmd_run(args: &Args) -> i32 {
     let footprint: u64 =
         args.flag_parse("footprint").unwrap_or(frames as u64 * 4096 * 13 / 10);
 
+    let procs: usize = args.flag_parse("procs").unwrap_or(1);
+    if procs > 1 {
+        return cmd_run_multi(args, mode, threshold, frames, footprint, procs);
+    }
+
+    // A comma list with --procs 1 just runs the first workload.
+    let workload = workload.split(',').next().unwrap_or("linear").trim().to_string();
     let Some(mut w) = by_name(&workload, Scale::Bytes(footprint)) else {
         eprintln!("unknown workload '{workload}'");
         return 2;
@@ -110,6 +121,115 @@ fn cmd_run(args: &Args) -> i32 {
         elastic_os::util::stats::fmt_ns(report.wall_ns as f64),
     );
     0
+}
+
+/// `run --procs N`: N elasticized processes, each replaying one of the
+/// requested workloads, time-sliced on a shared cluster and contending
+/// for its frames. Digests are verified against each process's
+/// single-process DirectMem ground truth.
+fn cmd_run_multi(
+    args: &Args,
+    mode: Mode,
+    threshold: u64,
+    frames: u32,
+    footprint: u64,
+    procs: usize,
+) -> i32 {
+    use elastic_os::os::kernel::ClusterConfig;
+    use elastic_os::os::sched::{record_ground_truth, ElasticCluster};
+
+    let nodes: usize = args.flag_parse("nodes").unwrap_or(2);
+    let workloads = args
+        .flag_list("workload")
+        .unwrap_or_else(|| vec!["linear".to_string()]);
+    if workloads.is_empty() {
+        eprintln!("--workload list is empty");
+        return 2;
+    }
+    let policy = args.flag("policy");
+    if policy.as_deref() == Some("model") {
+        eprintln!("--policy model is not supported with --procs > 1 (one PJRT model per tenant)");
+        return 2;
+    }
+    let per_fp = (footprint / procs as u64).max(16 * 4096);
+
+    // Record each tenant's trace + ground truth.
+    let mut tenants = Vec::new();
+    for i in 0..procs {
+        let wl = &workloads[i % workloads.len()];
+        let Some(mut w) = by_name(wl, Scale::Bytes(per_fp)) else {
+            eprintln!("unknown workload '{wl}'");
+            return 2;
+        };
+        let (trace, truth) = record_ground_truth(w.as_mut());
+        tenants.push((wl.clone(), trace, truth));
+    }
+
+    let cfg = ClusterConfig { node_frames: vec![frames; nodes], ..ClusterConfig::default() };
+    let mut cluster = ElasticCluster::new(cfg);
+    let mut jobs = Vec::new();
+    for (i, (wl, trace, _)) in tenants.iter().enumerate() {
+        // Default: every tenant starts on node 0 (the overloaded
+        // machine elasticizing onto the rest); --spread round-robins
+        // homes across nodes instead.
+        let home = if args.has("spread") { NodeId((i % nodes) as u8) } else { NodeId(0) };
+        let slot = match policy.as_deref() {
+            Some("ewma") => cluster.spawn_with_policy(
+                mode,
+                home,
+                wl,
+                Box::new(EwmaPolicy::default_tuned()),
+            ),
+            Some("burst") => cluster.spawn_with_policy(
+                mode,
+                home,
+                wl,
+                Box::new(elastic_os::os::BurstPolicy::default_tuned()),
+            ),
+            _ => cluster.spawn(mode, home, wl, threshold),
+        };
+        jobs.push((slot, trace.clone()));
+    }
+    let reports = cluster.run_concurrent(jobs);
+
+    let mut ok = true;
+    for (report, (wl, _, truth)) in reports.iter().zip(tenants.iter()) {
+        let verdict = if report.digest == *truth { "ok" } else { "MISMATCH" };
+        if report.digest != *truth {
+            ok = false;
+        }
+        println!(
+            "pid{:<5} {:<12} {:<6} home={} cpu={:>10} done@{:>10} jumps={:<5} pulls={:<7} pushes={:<7} net={:>9} digest {}",
+            report.pid,
+            wl,
+            report.mode,
+            report.start_node,
+            elastic_os::util::stats::fmt_ns(report.cpu_ns as f64),
+            elastic_os::util::stats::fmt_ns(report.finished_at_ns as f64),
+            report.metrics.jumps,
+            report.metrics.remote_faults,
+            report.metrics.pushes,
+            elastic_os::util::stats::fmt_bytes(report.metrics.total_bytes() as f64),
+            verdict,
+        );
+    }
+    println!(
+        "cluster: {} procs on {} nodes x {} frames, makespan {}",
+        procs,
+        nodes,
+        frames,
+        elastic_os::util::stats::fmt_ns(cluster.clock.now() as f64),
+    );
+    if let Err(e) = cluster.verify() {
+        eprintln!("cluster invariants violated: {e}");
+        return 1;
+    }
+    if ok {
+        0
+    } else {
+        eprintln!("DIGEST MISMATCH under contention");
+        1
+    }
 }
 
 fn cmd_eval(args: &Args) -> i32 {

@@ -9,9 +9,16 @@
 //! page leaving a node (pulled elsewhere) is unlinked without scanning.
 //!
 //! The actual eviction decision (check referenced bit, give second
-//! chance) lives in the reclaim driver (`os::system`), or in the
-//! model-driven evictor (`runtime::evict_model`) which scores candidate
-//! batches with the Pallas `lru_age` kernel.
+//! chance) lives in the reclaim driver, or in the model-driven evictor
+//! (`runtime::evict_model`) which scores candidate batches with the
+//! Pallas `lru_age` kernel.
+//!
+//! **Note:** since the node-kernel / process-context split, the engine
+//! reclaims across *all* processes and uses
+//! [`super::proc_lru::ClusterLru`] (same list semantics, keyed by
+//! `(process, page)`). This dense single-process structure is kept as
+//! the allocation-free reference implementation its tests exercise;
+//! new engine code should use `ClusterLru`.
 
 use super::addr::{NodeId, MAX_NODES};
 use super::page_table::PageIdx;

@@ -7,10 +7,12 @@ pub mod addr;
 pub mod frame;
 pub mod lru;
 pub mod page_table;
+pub mod proc_lru;
 pub mod tlb;
 
 pub use addr::{AddressSpace, AreaKind, FrameId, NodeId, VmArea, Vpn, MAX_NODES, PAGE_SIZE};
 pub use frame::{FramePool, Watermarks};
 pub use lru::LruLists;
 pub use page_table::{ElasticPageTable, PageIdx, Pte};
+pub use proc_lru::{ClusterLru, PageKey};
 pub use tlb::Tlb;

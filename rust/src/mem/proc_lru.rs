@@ -1,0 +1,341 @@
+//! Node-kernel LRU lists over *all* elasticized processes.
+//!
+//! The single-process engine used [`super::lru::LruLists`], an intrusive
+//! list over one process's dense page-index space. With N concurrent
+//! processes per cluster a node's reclaim scanner must order the pages
+//! of *every* process resident in its pool — Linux's per-zone LRU does
+//! not care which `mm_struct` a page belongs to, and neither does the
+//! paper's page balancer (§3.2). [`ClusterLru`] is that structure: one
+//! cold→hot list per node whose elements are [`PageKey`]s, i.e.
+//! `(process slot, page index)` pairs.
+//!
+//! Representation: an arena of links plus a `HashMap` from key to arena
+//! slot. Every operation is O(1) amortized. The map is only ever used
+//! for point lookups — iteration always walks the intrusive list — so
+//! ordering (and therefore the whole simulation) stays deterministic.
+
+use super::addr::{NodeId, MAX_NODES};
+use super::page_table::PageIdx;
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+/// Identity of a page in the cluster: which process (by process-table
+/// slot) and which page of its address space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageKey {
+    /// Process-table slot (stable for the life of the cluster).
+    pub proc: u32,
+    /// Dense page index within that process's elastic page table.
+    pub idx: PageIdx,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Link {
+    key: PageKey,
+    prev: u32,
+    next: u32,
+    /// Which node's list this link is on.
+    on: u32,
+}
+
+/// Per-node LRU lists keyed by (process, page).
+#[derive(Debug)]
+pub struct ClusterLru {
+    links: Vec<Link>,
+    free: Vec<u32>,
+    slot_of: HashMap<PageKey, u32>,
+    head: [u32; MAX_NODES],
+    tail: [u32; MAX_NODES],
+    len: [u32; MAX_NODES],
+}
+
+impl ClusterLru {
+    pub fn new() -> ClusterLru {
+        ClusterLru {
+            links: Vec::new(),
+            free: Vec::new(),
+            slot_of: HashMap::new(),
+            head: [NIL; MAX_NODES],
+            tail: [NIL; MAX_NODES],
+            len: [0; MAX_NODES],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self, node: NodeId) -> u32 {
+        self.len[node.0 as usize]
+    }
+
+    pub fn is_empty(&self, node: NodeId) -> bool {
+        self.len(node) == 0
+    }
+
+    /// Which node's list holds this page, if any.
+    pub fn list_of(&self, key: PageKey) -> Option<NodeId> {
+        self.slot_of.get(&key).map(|&s| NodeId(self.links[s as usize].on as u8))
+    }
+
+    /// Insert at the hot (MRU) end.
+    pub fn push_hot(&mut self, node: NodeId, key: PageKey) {
+        debug_assert!(!self.slot_of.contains_key(&key), "page {key:?} already on a list");
+        let n = node.0 as usize;
+        let old_tail = self.tail[n];
+        let link = Link { key, prev: old_tail, next: NIL, on: node.0 as u32 };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.links[s as usize] = link;
+                s
+            }
+            None => {
+                self.links.push(link);
+                (self.links.len() - 1) as u32
+            }
+        };
+        if old_tail == NIL {
+            self.head[n] = slot;
+        } else {
+            self.links[old_tail as usize].next = slot;
+        }
+        self.tail[n] = slot;
+        self.len[n] += 1;
+        self.slot_of.insert(key, slot);
+    }
+
+    /// Coldest page (LRU end), if any.
+    #[inline]
+    pub fn coldest(&self, node: NodeId) -> Option<PageKey> {
+        let h = self.head[node.0 as usize];
+        if h == NIL {
+            None
+        } else {
+            Some(self.links[h as usize].key)
+        }
+    }
+
+    /// Remove a specific page from whatever list it is on.
+    pub fn remove(&mut self, key: PageKey) {
+        let slot = self.slot_of.remove(&key).unwrap_or_else(|| {
+            panic!("removing page {key:?} that is on no list");
+        });
+        let link = self.links[slot as usize];
+        let n = link.on as usize;
+        if link.prev == NIL {
+            self.head[n] = link.next;
+        } else {
+            self.links[link.prev as usize].next = link.next;
+        }
+        if link.next == NIL {
+            self.tail[n] = link.prev;
+        } else {
+            self.links[link.next as usize].prev = link.prev;
+        }
+        self.len[n] -= 1;
+        self.free.push(slot);
+    }
+
+    /// Second-chance rotation: move the coldest page to the hot end.
+    pub fn rotate(&mut self, node: NodeId) {
+        if let Some(key) = self.coldest(node) {
+            self.remove(key);
+            self.push_hot(node, key);
+        }
+    }
+
+    /// Touch: move a page to the hot end of whatever list it is on.
+    pub fn touch(&mut self, key: PageKey) {
+        if let Some(node) = self.list_of(key) {
+            self.remove(key);
+            self.push_hot(node, key);
+        }
+    }
+
+    /// Iterate cold → hot over one node's list.
+    pub fn iter(&self, node: NodeId) -> ClusterLruIter<'_> {
+        ClusterLruIter { lru: self, cur: self.head[node.0 as usize] }
+    }
+
+    /// Check internal consistency for one node's list (tests).
+    pub fn verify(&self, node: NodeId) -> Result<(), String> {
+        let n = node.0 as usize;
+        let mut count = 0u32;
+        let mut cur = self.head[n];
+        let mut prev = NIL;
+        while cur != NIL {
+            let link = self.links[cur as usize];
+            if link.on != n as u32 {
+                return Err(format!("page {:?} linked into list {n} but tagged {}", link.key, link.on));
+            }
+            if link.prev != prev {
+                return Err(format!("back-pointer broken at {:?}", link.key));
+            }
+            if self.slot_of.get(&link.key) != Some(&cur) {
+                return Err(format!("slot map out of sync for {:?}", link.key));
+            }
+            prev = cur;
+            cur = link.next;
+            count += 1;
+            if count > self.links.len() as u32 {
+                return Err("cycle detected".into());
+            }
+        }
+        if self.tail[n] != prev {
+            return Err("tail pointer broken".into());
+        }
+        if count != self.len[n] {
+            return Err(format!("len cache {} != actual {count}", self.len[n]));
+        }
+        Ok(())
+    }
+}
+
+impl Default for ClusterLru {
+    fn default() -> Self {
+        ClusterLru::new()
+    }
+}
+
+/// Cold-to-hot iterator.
+pub struct ClusterLruIter<'a> {
+    lru: &'a ClusterLru,
+    cur: u32,
+}
+
+impl Iterator for ClusterLruIter<'_> {
+    type Item = PageKey;
+
+    fn next(&mut self) -> Option<PageKey> {
+        if self.cur == NIL {
+            return None;
+        }
+        let link = self.lru.links[self.cur as usize];
+        self.cur = link.next;
+        Some(link.key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(i: u8) -> NodeId {
+        NodeId(i)
+    }
+
+    fn k(proc_slot: u32, idx: PageIdx) -> PageKey {
+        PageKey { proc: proc_slot, idx }
+    }
+
+    #[test]
+    fn push_order_is_cold_to_hot() {
+        let mut l = ClusterLru::new();
+        l.push_hot(n(0), k(0, 1));
+        l.push_hot(n(0), k(1, 1));
+        l.push_hot(n(0), k(0, 2));
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![k(0, 1), k(1, 1), k(0, 2)]);
+        assert_eq!(l.coldest(n(0)), Some(k(0, 1)));
+        l.verify(n(0)).unwrap();
+    }
+
+    #[test]
+    fn same_idx_different_procs_are_distinct() {
+        let mut l = ClusterLru::new();
+        l.push_hot(n(0), k(0, 7));
+        l.push_hot(n(0), k(1, 7));
+        l.remove(k(0, 7));
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![k(1, 7)]);
+        assert_eq!(l.list_of(k(0, 7)), None);
+        assert_eq!(l.list_of(k(1, 7)), Some(n(0)));
+        l.verify(n(0)).unwrap();
+    }
+
+    #[test]
+    fn remove_middle_and_slot_reuse() {
+        let mut l = ClusterLru::new();
+        for i in 1..=3 {
+            l.push_hot(n(0), k(0, i));
+        }
+        l.remove(k(0, 2));
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![k(0, 1), k(0, 3)]);
+        // freed arena slot gets reused
+        l.push_hot(n(1), k(2, 9));
+        assert_eq!(l.links.len(), 3);
+        l.verify(n(0)).unwrap();
+        l.verify(n(1)).unwrap();
+    }
+
+    #[test]
+    fn rotate_gives_second_chance() {
+        let mut l = ClusterLru::new();
+        for i in 1..=3 {
+            l.push_hot(n(0), k(0, i));
+        }
+        l.rotate(n(0));
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![k(0, 2), k(0, 3), k(0, 1)]);
+        l.verify(n(0)).unwrap();
+    }
+
+    #[test]
+    fn touch_moves_to_hot_end() {
+        let mut l = ClusterLru::new();
+        for i in 1..=3 {
+            l.push_hot(n(0), k(1, i));
+        }
+        l.touch(k(1, 1));
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![k(1, 2), k(1, 3), k(1, 1)]);
+        l.touch(k(9, 9)); // not on any list: no-op
+    }
+
+    #[test]
+    fn page_moves_between_node_lists() {
+        let mut l = ClusterLru::new();
+        l.push_hot(n(0), k(0, 5));
+        l.remove(k(0, 5));
+        l.push_hot(n(1), k(0, 5));
+        assert!(l.is_empty(n(0)));
+        assert_eq!(l.coldest(n(1)), Some(k(0, 5)));
+    }
+
+    #[test]
+    fn empty_list_behaviour() {
+        let mut l = ClusterLru::new();
+        assert_eq!(l.coldest(n(0)), None);
+        l.rotate(n(0)); // no-op, no panic
+        assert!(l.iter(n(0)).next().is_none());
+    }
+
+    #[test]
+    fn stress_random_ops_stay_consistent() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xC10C);
+        let mut l = ClusterLru::new();
+        // membership model: (proc in 0..4, idx in 0..32) -> node
+        let mut member: Vec<Option<u8>> = vec![None; 4 * 32];
+        for _ in 0..8000 {
+            let proc_slot = rng.below(4) as u32;
+            let idx = rng.below(32) as PageIdx;
+            let key = k(proc_slot, idx);
+            let m = (proc_slot * 32 + idx) as usize;
+            match member[m] {
+                None => {
+                    let node = rng.below(4) as u8;
+                    l.push_hot(n(node), key);
+                    member[m] = Some(node);
+                }
+                Some(_) => {
+                    if rng.chance(0.4) {
+                        l.remove(key);
+                        member[m] = None;
+                    } else {
+                        l.touch(key);
+                    }
+                }
+            }
+        }
+        for node in 0..4u8 {
+            l.verify(n(node)).unwrap();
+            let expect = member.iter().filter(|m| **m == Some(node)).count() as u32;
+            assert_eq!(l.len(n(node)), expect);
+        }
+    }
+}

@@ -80,6 +80,22 @@ impl Registry {
         }
     }
 
+    /// Lightweight liveness/resource refresh for an already-known
+    /// member (the periodic heartbeat re-announce carries only the
+    /// counters, so no addressing info needs to be rebuilt). Returns
+    /// false if the node has never announced.
+    pub fn heartbeat(&mut self, node: NodeId, total_frames: u32, free_frames: u32, now_ns: u64) -> bool {
+        match self.members.iter_mut().find(|m| m.info.node == node) {
+            Some(m) => {
+                m.info.total_frames = total_frames;
+                m.info.free_frames = free_frames;
+                m.last_seen_ns = now_ns;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Drop members not seen within the TTL; returns how many expired.
     pub fn expire(&mut self, now_ns: u64) -> usize {
         let ttl = self.ttl_ns;
@@ -167,5 +183,69 @@ mod tests {
         let order: Vec<u8> = r.by_free_ram().iter().map(|m| m.info.node.0).collect();
         assert_eq!(order, vec![2, 3, 1]);
         assert_eq!(r.cluster_frames(), 3 * 8192);
+    }
+
+    #[test]
+    fn announce_codec_edge_values() {
+        // Empty address, min/max numeric fields.
+        for a in [
+            Announce { node: NodeId(0), addr: String::new(), port: 0, total_frames: 0, free_frames: 0 },
+            Announce {
+                node: NodeId(u8::MAX),
+                addr: "a".repeat(255),
+                port: u16::MAX,
+                total_frames: u32::MAX,
+                free_frames: u32::MAX,
+            },
+        ] {
+            assert_eq!(Announce::decode(&a.encode()).unwrap(), a, "round trip for {a:?}");
+        }
+        // Truncated buffers must error, never panic.
+        let enc = ann(1, 2).encode();
+        for cut in 0..enc.len() {
+            assert!(Announce::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn refresh_keeps_member_alive_across_rolling_horizon() {
+        let mut r = Registry::new(1_000);
+        r.observe(ann(1, 100), 0);
+        // re-announce every 800 ns: never silent past the TTL
+        for k in 1..=5u64 {
+            r.observe(ann(1, 100 - k as u32), k * 800);
+            assert_eq!(r.expire(k * 800 + 999), 0, "refreshed member must survive at k={k}");
+        }
+        // the refresh also updated the resource info each time
+        assert_eq!(r.get(NodeId(1)).unwrap().info.free_frames, 95);
+        // then it goes silent and ages out
+        assert_eq!(r.expire(4_000 + 1_001 + 1), 1);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn heartbeat_refreshes_without_reannounce() {
+        let mut r = Registry::new(1_000);
+        assert!(!r.heartbeat(NodeId(1), 8192, 10, 0), "unknown member: heartbeat refused");
+        r.observe(ann(1, 100), 0);
+        assert!(r.heartbeat(NodeId(1), 8192, 42, 900));
+        let m = r.get(NodeId(1)).unwrap();
+        assert_eq!(m.info.free_frames, 42);
+        assert_eq!(m.last_seen_ns, 900);
+        assert_eq!(m.info.addr, "10.0.0.1", "addressing info untouched");
+        assert_eq!(r.expire(1_800), 0, "heartbeat keeps the member alive");
+    }
+
+    #[test]
+    fn expire_is_idempotent_and_updates_orderings() {
+        let mut r = Registry::new(1_000);
+        r.observe(ann(1, 900), 0);
+        r.observe(ann(2, 100), 2_000);
+        assert_eq!(r.expire(3_500), 1); // node1 expired
+        assert_eq!(r.expire(3_500), 0, "second expire at same instant is a no-op");
+        let order: Vec<u8> = r.by_free_ram().iter().map(|m| m.info.node.0).collect();
+        assert_eq!(order, vec![2], "expired members drop out of target preference");
+        assert_eq!(r.cluster_frames(), 8192);
+        assert_eq!(r.len(), 1);
     }
 }

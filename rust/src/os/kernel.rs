@@ -1,0 +1,1021 @@
+//! The node-kernel / process-context split.
+//!
+//! The paper's EOS manager (Fig 3, §4) monitors *processes* — plural —
+//! per node. The original engine hard-wired exactly one elasticized
+//! process per cluster; this module is the refactor that separates the
+//! two kinds of state so N processes can contend for the same frames:
+//!
+//! * [`NodeKernel`] — what the participating nodes own collectively and
+//!   share across every process: the per-node [`FramePool`]s with their
+//!   watermarks, the reclaim LRU ([`ClusterLru`], keyed by
+//!   `(process, page)`), the [`EosManager`], the cluster membership
+//!   [`Registry`] fed by the startup announce protocol, the calibrated
+//!   [`CostModel`], and the precomputed wire sizes.
+//! * [`ProcessCtx`] — one elasticized process: its address space,
+//!   elastic page table, software TLB, register file, jump policy,
+//!   state-sync queue, per-process metrics, and which nodes it has
+//!   stretched to / is executing on.
+//! * [`Engine`] — a borrow bundle `(kernel, clock, process table,
+//!   current pid)` that the four primitives are implemented against.
+//!   Both the single-process [`ElasticSystem`](super::system::ElasticSystem)
+//!   facade and the multi-process [`ElasticCluster`](super::sched::ElasticCluster)
+//!   scheduler drive exactly this code, so single- and multi-tenant
+//!   behavior cannot drift apart.
+//!
+//! Residence rule: a process's pages only ever live on nodes that
+//! process has stretched to (the paper ships a shell before any page
+//! or execution lands remotely), so eviction under contention picks
+//! push targets per victim, from the *victim's* stretch set.
+
+use crate::mem::addr::{AddressSpace, AreaKind, NodeId, Vpn, MAX_NODES, PAGE_SIZE};
+use crate::mem::frame::FramePool;
+use crate::mem::page_table::{ElasticPageTable, PageIdx};
+use crate::mem::proc_lru::{ClusterLru, PageKey};
+use crate::mem::tlb::Tlb;
+use crate::net::cluster::{Announce, Registry};
+use crate::net::proto::Msg;
+use crate::os::manager::{EosManager, ManagerAction, NodeInfo, ProcCounters};
+use crate::os::metrics::Metrics;
+use crate::os::policy::{Decision, JumpPolicy, NeverJump};
+use crate::os::system::Mode;
+use crate::proc::checkpoint::{JumpCheckpoint, RegisterFile, StretchCheckpoint};
+use crate::proc::meta::ProcessMeta;
+use crate::proc::sync::{SyncEvent, SyncQueue};
+use crate::sim::{CostModel, SimClock};
+
+/// Cluster-level construction parameters (the node-kernel half of the
+/// old `SystemConfig`; per-process knobs live in [`ProcSpec`]).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Frames contributed by each participating node.
+    pub node_frames: Vec<u32>,
+    pub costs: CostModel,
+    /// Bulk-balance pages to the new node right after a stretch.
+    pub balance_on_stretch: bool,
+    /// Pin stack-area pages (they travel with jump checkpoints).
+    pub pin_stack: bool,
+    /// Data-segment bytes carried in stretch checkpoints.
+    pub stretch_data_segment: usize,
+    /// Direct-reclaim batch: victims pushed per allocation stall.
+    pub reclaim_batch: u32,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            node_frames: vec![8192, 8192],
+            costs: CostModel::default(),
+            balance_on_stretch: false,
+            pin_stack: true,
+            stretch_data_segment: 8 * 1024,
+            reclaim_batch: 32,
+        }
+    }
+}
+
+/// Per-process spawn parameters.
+pub struct ProcSpec {
+    pub mode: Mode,
+    pub home: NodeId,
+    /// Command name (task_struct.comm analogue; shows up in reports).
+    pub comm: String,
+    pub policy: Box<dyn JumpPolicy>,
+}
+
+/// Node-level state shared by every elasticized process on the cluster.
+pub struct NodeKernel {
+    pub(crate) pools: Vec<FramePool>,
+    pub(crate) lru: ClusterLru,
+    pub(crate) manager: EosManager,
+    /// Cluster membership book from the startup announce protocol;
+    /// refreshed with current free-RAM figures as the simulation runs.
+    pub(crate) registry: Registry,
+    pub(crate) costs: CostModel,
+    pub(crate) node_frames: Vec<u32>,
+    pub(crate) balance_on_stretch: bool,
+    pub(crate) pin_stack: bool,
+    pub(crate) stretch_data_segment: usize,
+    pub(crate) reclaim_batch: u32,
+    /// Precomputed wire sizes (constant per message shape).
+    pub(crate) pull_req_bytes: u64,
+    pub(crate) page_msg_bytes: u64,
+}
+
+impl NodeKernel {
+    pub fn new(cfg: ClusterConfig) -> NodeKernel {
+        assert!(!cfg.node_frames.is_empty() && cfg.node_frames.len() <= MAX_NODES);
+        let pools: Vec<FramePool> = cfg.node_frames.iter().map(|&f| FramePool::new(f)).collect();
+        let mut registry = Registry::new(u64::MAX);
+        for (i, &frames) in cfg.node_frames.iter().enumerate() {
+            registry.observe(
+                Announce {
+                    node: NodeId(i as u8),
+                    addr: format!("sim://node{i}"),
+                    port: 7000 + i as u16,
+                    total_frames: frames,
+                    free_frames: frames,
+                },
+                0,
+            );
+        }
+        NodeKernel {
+            pools,
+            lru: ClusterLru::new(),
+            manager: EosManager::default(),
+            registry,
+            costs: cfg.costs,
+            node_frames: cfg.node_frames,
+            balance_on_stretch: cfg.balance_on_stretch,
+            pin_stack: cfg.pin_stack,
+            stretch_data_segment: cfg.stretch_data_segment,
+            reclaim_batch: cfg.reclaim_batch,
+            pull_req_bytes: Msg::PullReq { idx: 0 }.wire_size(),
+            page_msg_bytes: Msg::Push { idx: 0, data: vec![0; PAGE_SIZE] }.wire_size(),
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn free_frames(&self, node: NodeId) -> u32 {
+        self.pools[node.0 as usize].free_frames()
+    }
+
+    /// Refresh each member's advertised free RAM (the periodic
+    /// heartbeat re-announce of the startup protocol, driven by
+    /// simulated time). Every node announced at construction, so this
+    /// is allocation-free on the manager's monitoring path.
+    pub(crate) fn refresh_registry(&mut self, now_ns: u64) {
+        for (i, pool) in self.pools.iter().enumerate() {
+            let refreshed =
+                self.registry.heartbeat(NodeId(i as u8), pool.capacity(), pool.free_frames(), now_ns);
+            debug_assert!(refreshed, "node{i} missing from the announce registry");
+        }
+    }
+
+    /// Build the manager's view of the cluster for one process: per-node
+    /// totals and free frames from the registry, plus that process's
+    /// stretch mask.
+    pub(crate) fn view_for(&self, stretched: &[bool; MAX_NODES]) -> Vec<NodeInfo> {
+        (0..self.pools.len())
+            .map(|i| {
+                let member = self.registry.get(NodeId(i as u8));
+                NodeInfo {
+                    id: NodeId(i as u8),
+                    total_frames: member
+                        .map(|m| m.info.total_frames)
+                        .unwrap_or(self.node_frames[i]),
+                    free_frames: member
+                        .map(|m| m.info.free_frames)
+                        .unwrap_or_else(|| self.pools[i].free_frames()),
+                    stretched: stretched[i],
+                }
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for NodeKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NodeKernel")
+            .field("nodes", &self.pools.len())
+            .field(
+                "free",
+                &self.pools.iter().map(|p| p.free_frames()).collect::<Vec<_>>(),
+            )
+            .finish()
+    }
+}
+
+/// One elasticized process: everything that is private to a single
+/// address space and execution context.
+pub struct ProcessCtx {
+    /// Process id (also the key the node-kernel LRU uses, via the
+    /// process-table slot).
+    pub pid: u32,
+    pub(crate) mode: Mode,
+    pub(crate) home: NodeId,
+    pub(crate) asp: AddressSpace,
+    pub(crate) pt: ElasticPageTable,
+    pub(crate) tlb: Box<Tlb>,
+    pub(crate) running: NodeId,
+    pub(crate) stretched: [bool; MAX_NODES],
+    pub(crate) policy: Box<dyn JumpPolicy>,
+    pub(crate) syncq: SyncQueue,
+    pub metrics: Metrics,
+    pub(crate) meta: ProcessMeta,
+    pub(crate) regs: RegisterFile,
+    /// Simulated ns this process spent actively executing (filled in by
+    /// the scheduler; the facade leaves it at the full run time).
+    pub cpu_ns: u64,
+}
+
+impl ProcessCtx {
+    pub(crate) fn new(slot: usize, spec: ProcSpec) -> ProcessCtx {
+        let asp = AddressSpace::new();
+        let mut stretched = [false; MAX_NODES];
+        stretched[spec.home.0 as usize] = true;
+        let policy: Box<dyn JumpPolicy> = match spec.mode {
+            Mode::Elastic => spec.policy,
+            Mode::Nswap => Box::new(NeverJump),
+        };
+        ProcessCtx {
+            pid: 1000 + slot as u32,
+            mode: spec.mode,
+            home: spec.home,
+            pt: ElasticPageTable::new(asp.vpn_base(), 0),
+            tlb: Tlb::new(),
+            running: spec.home,
+            stretched,
+            policy,
+            syncq: SyncQueue::new(),
+            metrics: Metrics::new(),
+            meta: ProcessMeta::minimal(1000 + slot as u32, &spec.comm),
+            regs: RegisterFile::default(),
+            cpu_ns: 0,
+            asp,
+        }
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn home(&self) -> NodeId {
+        self.home
+    }
+
+    pub fn running_on(&self) -> NodeId {
+        self.running
+    }
+
+    pub fn is_stretched(&self) -> bool {
+        self.stretched.iter().filter(|&&s| s).count() > 1
+    }
+
+    pub fn resident_at(&self, node: NodeId) -> u32 {
+        self.pt.resident_at(node)
+    }
+
+    pub fn policy_describe(&self) -> String {
+        self.policy.describe()
+    }
+
+    /// Base address of the first page resident on a node other than
+    /// the executing one (diagnostics / micro-benchmarks).
+    pub fn first_remote_page(&self) -> Option<u64> {
+        self.pt
+            .iter_resident()
+            .find(|(_, pte)| pte.node() != self.running)
+            .map(|(idx, _)| self.pt.vpn(idx).base_addr())
+    }
+}
+
+impl std::fmt::Debug for ProcessCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProcessCtx")
+            .field("pid", &self.pid)
+            .field("running", &self.running)
+            .field("resident", &self.pt.total_resident())
+            .finish()
+    }
+}
+
+/// Consistency check over the whole cluster (tests): every process's
+/// page table is internally consistent, per-node LRU length and pool
+/// usage match the sum of resident pages, no two pages (of any process)
+/// alias a frame, and every process only occupies nodes it stretched to.
+pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Result<(), String> {
+    let mut seen = std::collections::HashSet::new();
+    for (slot, p) in procs.iter().enumerate() {
+        p.pt.verify().map_err(|e| format!("pid{}: {e}", p.pid))?;
+        for (idx, pte) in p.pt.iter_resident() {
+            if !p.stretched[pte.node().0 as usize] {
+                return Err(format!(
+                    "pid{} page {idx} resident on unstretched {}",
+                    p.pid,
+                    pte.node()
+                ));
+            }
+            if !seen.insert((pte.node().0, pte.frame().0)) {
+                return Err(format!(
+                    "pid{} page {idx} aliases frame {:?} on {} with another process",
+                    p.pid,
+                    pte.frame(),
+                    pte.node()
+                ));
+            }
+            let key = PageKey { proc: slot as u32, idx };
+            if kernel.lru.list_of(key) != Some(pte.node()) {
+                return Err(format!(
+                    "pid{} page {idx} resident on {} but LRU says {:?}",
+                    p.pid,
+                    pte.node(),
+                    kernel.lru.list_of(key)
+                ));
+            }
+        }
+    }
+    for i in 0..kernel.pools.len() {
+        let node = NodeId(i as u8);
+        kernel.lru.verify(node)?;
+        let resident: u32 = procs.iter().map(|p| p.pt.resident_at(node)).sum();
+        let on_lru = kernel.lru.len(node);
+        if on_lru != resident {
+            return Err(format!("{node}: lru={on_lru} resident={resident}"));
+        }
+        let used = kernel.pools[i].used_frames();
+        if used != resident {
+            return Err(format!("{node}: used_frames={used} resident={resident}"));
+        }
+    }
+    Ok(())
+}
+
+/// The borrow bundle the elastic primitives are implemented against:
+/// the shared node kernel + clock, the whole process table, and the
+/// index of the currently-executing process.
+pub(crate) struct Engine<'a> {
+    pub kernel: &'a mut NodeKernel,
+    pub clock: &'a mut SimClock,
+    pub procs: &'a mut [ProcessCtx],
+    pub cur: usize,
+}
+
+impl<'a> Engine<'a> {
+    // ----- paged access (the ElasticMem surface) ---------------------------
+
+    #[inline]
+    pub fn read_u8(&mut self, addr: u64) -> u8 {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.procs[self.cur].tlb.lookup_read(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, false),
+        };
+        unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) }
+    }
+
+    #[inline]
+    pub fn read_u32(&mut self, addr: u64) -> u32 {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.procs[self.cur].tlb.lookup_read(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, false),
+        };
+        debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u32).read() }
+    }
+
+    #[inline]
+    pub fn read_u64(&mut self, addr: u64) -> u64 {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.procs[self.cur].tlb.lookup_read(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, false),
+        };
+        debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u64).read() }
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, addr: u64, v: u8) {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.procs[self.cur].tlb.lookup_write(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, true),
+        };
+        unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) = v }
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, addr: u64, v: u32) {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.procs[self.cur].tlb.lookup_write(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, true),
+        };
+        debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u32).write(v) }
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, addr: u64, v: u64) {
+        self.clock.tick_accesses(1);
+        let vpn = addr >> 12;
+        let ptr = match self.procs[self.cur].tlb.lookup_write(vpn) {
+            Some(p) => p,
+            None => self.resolve_slow(addr, true),
+        };
+        debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
+        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u64).write(v) }
+    }
+
+    /// Map a region for the current process (charges no time itself;
+    /// the EOS manager reacts to the task_size growth).
+    pub fn mmap(&mut self, len: u64, kind: AreaKind, name: &str) -> u64 {
+        let cur = self.cur;
+        let area = self.procs[cur].asp.mmap(len, kind, name).clone();
+        let pages = self.procs[cur].asp.vpn_limit() - self.procs[cur].asp.vpn_base();
+        self.procs[cur].pt.grow_to(pages);
+        self.procs[cur].meta.areas.push(area.clone());
+        self.queue_sync(SyncEvent::Mmap(area.clone()));
+        self.maybe_stretch();
+        area.start
+    }
+
+    // ----- fault handling --------------------------------------------------
+
+    /// Resolve a faulting access and return a pointer to the page's
+    /// frame bytes. `write` requests dirty tracking.
+    #[cold]
+    #[inline(never)]
+    pub(crate) fn resolve_slow(&mut self, addr: u64, write: bool) -> *mut u8 {
+        let cur = self.cur;
+        let vpn = Vpn::of_addr(addr);
+        let idx = self.procs[cur].pt.idx(vpn);
+        let mut pte = self.procs[cur].pt.get(idx);
+
+        if pte.is_unmapped() {
+            self.minor_fault(idx);
+            pte = self.procs[cur].pt.get(idx);
+        } else if pte.node() != self.procs[cur].running {
+            self.remote_fault(idx);
+            pte = self.procs[cur].pt.get(idx);
+        }
+
+        // Flag maintenance + LRU touch (the slow path stands in for the
+        // hardware setting PG_ACCESSED).
+        let local = pte.node() == self.procs[cur].running;
+        {
+            let p = self.procs[cur].pt.get_mut(idx);
+            p.set_referenced(true);
+            if write {
+                p.set_dirty(true);
+            }
+        }
+        self.kernel.lru.touch(PageKey { proc: cur as u32, idx });
+        let pte = self.procs[cur].pt.get(idx);
+        let ptr = self.kernel.pools[pte.node().0 as usize].frame_ptr(pte.frame());
+
+        // Install a TLB entry only if the page is local to the (possibly
+        // just-changed) executing node — a jump during remote_fault means
+        // this access completes against the old node's copy, uncached.
+        if local && pte.node() == self.procs[cur].running {
+            self.procs[cur].tlb.install(vpn.0, ptr, pte.dirty());
+        }
+        ptr
+    }
+
+    /// First touch of an anonymous page: allocate + map a zeroed frame
+    /// on the executing node.
+    pub(crate) fn minor_fault(&mut self, idx: PageIdx) {
+        let cur = self.cur;
+        debug_assert!(
+            self.procs[cur]
+                .asp
+                .area_of(self.procs[cur].pt.vpn(idx).base_addr())
+                .is_some(),
+            "touch of unmapped address {:#x} (guard page?)",
+            self.procs[cur].pt.vpn(idx).base_addr()
+        );
+        let node = self.procs[cur].running;
+        let frame = match self.kernel.pools[node.0 as usize].alloc() {
+            Some(f) => f,
+            None => {
+                self.direct_reclaim(node);
+                let pool = &mut self.kernel.pools[node.0 as usize];
+                match pool.alloc() {
+                    Some(f) => f,
+                    None => pool.alloc_reserve().expect(
+                        "cluster out of memory: no frame for minor fault \
+                         (size the workloads within total RAM)",
+                    ),
+                }
+            }
+        };
+        self.procs[cur].pt.map(idx, node, frame);
+        if self.kernel.pin_stack {
+            let addr = self.procs[cur].pt.vpn(idx).base_addr();
+            if matches!(
+                self.procs[cur].asp.area_of(addr).map(|a| &a.kind),
+                Some(AreaKind::Stack)
+            ) {
+                self.procs[cur].pt.get_mut(idx).set_pinned(true);
+            }
+        }
+        self.kernel.lru.push_hot(node, PageKey { proc: cur as u32, idx });
+        self.clock.advance(self.kernel.costs.minor_fault_ns);
+        self.procs[cur].metrics.minor_faults += 1;
+        // EOS manager monitoring + background reclaim.
+        self.maybe_stretch();
+        self.kswapd(node);
+    }
+
+    /// Remote fault: pull the page to the executing node (paper §3.3),
+    /// then consult the jumping policy (§3.4).
+    pub(crate) fn remote_fault(&mut self, idx: PageIdx) {
+        let cur = self.cur;
+        let owner_node = self.procs[cur].pt.get(idx).node();
+        let node = self.procs[cur].running;
+        debug_assert_ne!(owner_node, node);
+
+        // Keep a sliver of headroom so the incoming page always fits.
+        if self.kernel.pools[node.0 as usize].free_frames()
+            <= self.kernel.pools[node.0 as usize].watermarks.min
+        {
+            self.direct_reclaim(node);
+        }
+        // Data + table movement (falls back to a staged swap when the
+        // cluster is completely full — see pull_page).
+        self.pull_page(idx);
+
+        // Costs + counters: a pull is a request message out and a page
+        // message back, synchronous for the faulting process.
+        let (pull_req, page_msg) = (self.kernel.pull_req_bytes, self.kernel.page_msg_bytes);
+        self.procs[cur].metrics.remote_faults += 1;
+        self.procs[cur].metrics.bytes_pull += pull_req + page_msg;
+        self.clock.advance(self.kernel.costs.pull_ns(page_msg));
+
+        // Restore watermark headroom in the background.
+        self.kswapd(node);
+
+        // Jumping policy: remote page fault counters are exactly the
+        // signal the paper feeds its policy.
+        let cost = self.procs[cur].policy.eval_cost_ns();
+        if cost > 0 {
+            self.clock.advance(cost);
+            self.procs[cur].metrics.policy_evals += 1;
+        }
+        let now = self.clock.now();
+        let running = self.procs[cur].running;
+        let decision = self.procs[cur].policy.on_remote_fault(running, owner_node, now);
+        if self.procs[cur].mode == Mode::Elastic {
+            if let Decision::JumpTo(target) = decision {
+                if target != running && self.procs[cur].stretched[target.0 as usize] {
+                    self.jump_to(target);
+                }
+            }
+        }
+    }
+
+    // ----- stretch ---------------------------------------------------------
+
+    /// Extend the current process to `target`: ship the stretch
+    /// checkpoint and create the suspended shell (paper §3.1).
+    /// Idempotent per node.
+    pub fn stretch_to(&mut self, target: NodeId) {
+        let cur = self.cur;
+        let t = target.0 as usize;
+        if self.procs[cur].stretched[t] {
+            return;
+        }
+        let ckpt = StretchCheckpoint {
+            meta: self.procs[cur].meta.clone(),
+            data_segment: vec![0; self.kernel.stretch_data_segment],
+        };
+        let bytes = Msg::Stretch { ckpt: ckpt.encode() }.wire_size() + Msg::StretchAck.wire_size();
+        self.clock.advance(self.kernel.costs.stretch_ns(bytes));
+        let now = self.clock.now();
+        let p = &mut self.procs[cur];
+        p.metrics.stretches += 1;
+        p.metrics.bytes_stretch += bytes;
+        p.stretched[t] = true;
+        log::info!(
+            "pid{} stretch -> {target} at {} (task {} pages)",
+            p.pid,
+            crate::util::stats::fmt_ns(now as f64),
+            p.asp.total_pages()
+        );
+        if self.kernel.balance_on_stretch {
+            self.balance_to(target);
+        }
+    }
+
+    /// Bulk page balance after a stretch (paper Fig 2 step 2): move the
+    /// coldest half of this process's pages on its executing node over
+    /// to the new node.
+    fn balance_to(&mut self, target: NodeId) {
+        let cur = self.cur;
+        let from = self.procs[cur].running;
+        let n = (self.procs[cur].pt.resident_at(from) / 2)
+            .min(self.kernel.pools[target.0 as usize].free_frames());
+        for _ in 0..n {
+            if !self.push_one_to(from, target) {
+                break;
+            }
+        }
+    }
+
+    /// One EOS-manager monitoring pass for the current process (Fig 3):
+    /// sample its counters, view the cluster, and stretch if the
+    /// manager says the process no longer fits the capacity available
+    /// to it. Capacity is *shared-aware*: free frames plus this
+    /// process's own resident pages over its stretched set, so
+    /// co-tenants shrink each other's effective capacity. With one
+    /// process this degenerates exactly to the old demand-vs-capacity
+    /// rule.
+    pub(crate) fn maybe_stretch(&mut self) {
+        let cur = self.cur;
+        let counters = ProcCounters {
+            task_pages: self.procs[cur].asp.total_pages(),
+            resident_pages: self.procs[cur].pt.total_resident() as u64,
+            maj_flt: self.procs[cur].metrics.remote_faults,
+        };
+        let demand = counters.task_pages.max(counters.resident_pages);
+        let mut own_resident = [0u32; MAX_NODES];
+        let mut avail = 0u64;
+        for i in 0..self.kernel.pools.len() {
+            let own = self.procs[cur].pt.resident_at(NodeId(i as u8));
+            own_resident[i] = own;
+            if self.procs[cur].stretched[i] {
+                avail += self.kernel.pools[i].free_frames() as u64 + own as u64;
+            }
+        }
+        // Allocation-free fast path for the common no-pressure case:
+        // with demand below the shared-capacity threshold, check_shared
+        // (whose view mirrors exactly these pool figures) would return
+        // None, so skip the registry refresh + view build entirely.
+        if (demand as f64) < self.kernel.manager.pressure_ratio * avail as f64 {
+            return;
+        }
+        let view = self.cluster_view();
+        let running = self.procs[cur].running;
+        let action = self.kernel.manager.check_shared(
+            &counters,
+            &view,
+            &own_resident[..self.kernel.pools.len()],
+            running,
+        );
+        if let ManagerAction::Stretch { target } = action {
+            self.stretch_to(target);
+        }
+    }
+
+    /// Current cluster view for the current process (refreshes the
+    /// membership registry with up-to-date free-RAM figures first).
+    pub(crate) fn cluster_view(&mut self) -> Vec<NodeInfo> {
+        let now = self.clock.now();
+        self.kernel.refresh_registry(now);
+        let stretched = self.procs[self.cur].stretched;
+        self.kernel.view_for(&stretched)
+    }
+
+    // ----- push (evict) ----------------------------------------------------
+
+    /// Evict one page from `from` using second-chance selection across
+    /// *all* processes and push it to the best target in the victim's
+    /// stretch set. Returns false if no victim or no target exists.
+    pub fn push_one(&mut self, from: NodeId) -> bool {
+        match self.select_push(from, None) {
+            Some((owner, idx, target)) => {
+                self.do_push(owner, idx, target);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict one page from `from` to `target` (both data + table moves;
+    /// paper §3.2). The victim must belong to a process stretched to
+    /// `target`.
+    pub(crate) fn push_one_to(&mut self, from: NodeId, target: NodeId) -> bool {
+        debug_assert_ne!(from, target);
+        match self.select_push(from, Some(target)) {
+            Some((owner, idx, t)) => {
+                self.do_push(owner, idx, t);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn do_push(&mut self, owner: usize, idx: PageIdx, target: NodeId) {
+        self.move_page(owner, idx, target, true);
+        let bytes = self.kernel.page_msg_bytes;
+        let p = &mut self.procs[owner];
+        p.metrics.pushes += 1;
+        p.metrics.bytes_push += bytes;
+        self.clock.advance(self.kernel.costs.push_ns(bytes));
+    }
+
+    /// Does any process on the cluster have a viable push target other
+    /// than `from`? (Fast-fail so a fruitless scan never disturbs the
+    /// second-chance state — matches the old target-first ordering.)
+    fn any_push_target(&self, from: NodeId) -> bool {
+        self.kernel.pools.iter().enumerate().any(|(i, pool)| {
+            i != from.0 as usize
+                && pool.free_frames() > 0
+                && self.procs.iter().any(|p| p.stretched[i])
+        })
+    }
+
+    /// Best push target for a victim owned by process `owner`: the
+    /// stretched node (other than `from`) with the most free frames.
+    /// Ties resolve to the highest node id, matching
+    /// `EosManager::pick_push_target`'s `max_by_key`.
+    fn push_target_for(&self, owner: usize, from: NodeId) -> Option<NodeId> {
+        let stretched = &self.procs[owner].stretched;
+        let mut best: Option<(u32, NodeId)> = None;
+        for (i, pool) in self.kernel.pools.iter().enumerate() {
+            if i == from.0 as usize || !stretched[i] {
+                continue;
+            }
+            let free = pool.free_frames();
+            if free == 0 {
+                continue;
+            }
+            if best.map(|(bf, _)| free >= bf).unwrap_or(true) {
+                best = Some((free, NodeId(i as u8)));
+            }
+        }
+        best.map(|(_, n)| n)
+    }
+
+    /// Second-chance victim selection on `from`'s node-level LRU list:
+    /// referenced pages get rotated with their bit cleared; pinned
+    /// pages are skipped; victims whose owner cannot reach the (forced
+    /// or computed) target are skipped without flag changes. Bounded by
+    /// 2x the list length, with a "coldest unpinned anyway" fallback.
+    fn select_push(
+        &mut self,
+        from: NodeId,
+        forced_target: Option<NodeId>,
+    ) -> Option<(usize, PageIdx, NodeId)> {
+        let len = self.kernel.lru.len(from);
+        if len == 0 {
+            return None;
+        }
+        match forced_target {
+            Some(t) => {
+                if self.kernel.pools[t.0 as usize].free_frames() == 0 {
+                    return None;
+                }
+            }
+            None => {
+                if !self.any_push_target(from) {
+                    return None;
+                }
+            }
+        }
+        for _ in 0..2 * len as usize {
+            let key = self.kernel.lru.coldest(from)?;
+            let owner = key.proc as usize;
+            let pte = self.procs[owner].pt.get(key.idx);
+            if pte.pinned() {
+                self.kernel.lru.rotate(from);
+                continue;
+            }
+            if pte.referenced() {
+                self.procs[owner].pt.get_mut(key.idx).set_referenced(false);
+                self.kernel.lru.rotate(from);
+                continue;
+            }
+            match self.target_for_victim(owner, from, forced_target) {
+                Some(t) => return Some((owner, key.idx, t)),
+                None => {
+                    self.kernel.lru.rotate(from);
+                    continue;
+                }
+            }
+        }
+        // Everything is hot/pinned/unreachable; take the coldest
+        // unpinned page with a reachable target anyway.
+        let keys: Vec<PageKey> = self.kernel.lru.iter(from).collect();
+        for key in keys {
+            let owner = key.proc as usize;
+            if self.procs[owner].pt.get(key.idx).pinned() {
+                continue;
+            }
+            if let Some(t) = self.target_for_victim(owner, from, forced_target) {
+                return Some((owner, key.idx, t));
+            }
+        }
+        None
+    }
+
+    fn target_for_victim(
+        &self,
+        owner: usize,
+        from: NodeId,
+        forced_target: Option<NodeId>,
+    ) -> Option<NodeId> {
+        match forced_target {
+            Some(t) => {
+                if self.procs[owner].stretched[t.0 as usize] {
+                    Some(t)
+                } else {
+                    None
+                }
+            }
+            None => self.push_target_for(owner, from),
+        }
+    }
+
+    /// Move one resident page of process `owner` to (target, fresh
+    /// frame): copies bytes, updates pool/table/LRU, invalidates the
+    /// owner's TLB entry.
+    pub(crate) fn move_page(&mut self, owner: usize, idx: PageIdx, target: NodeId, make_hot: bool) {
+        let pte = self.procs[owner].pt.get(idx);
+        debug_assert!(pte.is_resident());
+        let from = pte.node();
+        debug_assert_ne!(from, target);
+        debug_assert!(
+            self.procs[owner].stretched[target.0 as usize],
+            "moving a page to a node its process has not stretched to"
+        );
+        // free source frame first (contents stay valid until another
+        // allocation overwrites them; single-threaded, so the copy
+        // below happens before any reuse)
+        let src_frame = pte.frame();
+        self.kernel.pools[from.0 as usize].dealloc(src_frame);
+        self.kernel.lru.remove(PageKey { proc: owner as u32, idx });
+        // allocate at target (reserve allowed: reclaim paths use this)
+        let frame = self.kernel.pools[target.0 as usize]
+            .alloc_reserve()
+            .expect("move_page: target has no frames");
+        // direct frame->frame copy: from != target, so the borrows are
+        // of two distinct pools (split via raw pointer; checked above)
+        {
+            let src_ptr = self.kernel.pools[from.0 as usize].frame_ptr(src_frame) as *const u8;
+            let dst_ptr = self.kernel.pools[target.0 as usize].frame_ptr(frame);
+            unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
+        }
+        self.procs[owner].pt.relocate(idx, target, frame);
+        let _ = make_hot;
+        self.kernel.lru.push_hot(target, PageKey { proc: owner as u32, idx });
+        let vpn = self.procs[owner].pt.vpn(idx);
+        self.procs[owner].tlb.invalidate(vpn);
+    }
+
+    /// Pull one remote page of the current process to its executing
+    /// node. Normally delegates to [`Self::move_page`]; when the
+    /// executing node is completely out of frames AND reclaim could not
+    /// free any, it performs a staged *swap*: free the incoming page's
+    /// frame at the owner node first, push some victim into the freed
+    /// headroom, then land the incoming page — so a full cluster can
+    /// still make progress as long as footprints fit in total RAM.
+    pub(crate) fn pull_page(&mut self, idx: PageIdx) {
+        let cur = self.cur;
+        let run = self.procs[cur].running;
+        if self.kernel.pools[run.0 as usize].free_frames() > 0 {
+            self.move_page(cur, idx, run, true);
+            return;
+        }
+        let pte = self.procs[cur].pt.get(idx);
+        let owner_node = pte.node();
+        // Stage 1: copy out + free at the owner node.
+        let mut buf = [0u8; PAGE_SIZE];
+        buf.copy_from_slice(self.kernel.pools[owner_node.0 as usize].frame(pte.frame()));
+        self.kernel.pools[owner_node.0 as usize].dealloc(pte.frame());
+        self.kernel.lru.remove(PageKey { proc: cur as u32, idx });
+        // Stage 2: push a victim off the executing node into the hole
+        // just opened at the owner node (guaranteed to have room, and
+        // the current process can always host pages there). If no
+        // victim on `run` may live at the owner node, fall back to any
+        // reachable target.
+        if !self.push_one_to(run, owner_node) && !self.push_one(run) {
+            panic!(
+                "cluster out of memory: {run} full and no evictable victim \
+                 (footprints must fit in total cluster RAM)"
+            );
+        }
+        // Stage 3: land the incoming page.
+        let frame = self.kernel.pools[run.0 as usize]
+            .alloc_reserve()
+            .expect("pull_page: freed a frame but allocation failed");
+        self.kernel.pools[run.0 as usize].frame_mut(frame).copy_from_slice(&buf);
+        self.procs[cur].pt.relocate(idx, run, frame);
+        self.kernel.lru.push_hot(run, PageKey { proc: cur as u32, idx });
+        let vpn = self.procs[cur].pt.vpn(idx);
+        self.procs[cur].tlb.invalidate(vpn);
+    }
+
+    /// kswapd: when `node` is below the low watermark, push pages out
+    /// until the high watermark is restored (paper §3.2 + §4).
+    pub(crate) fn kswapd(&mut self, node: NodeId) {
+        if !self.kernel.pools[node.0 as usize].below_low() {
+            return;
+        }
+        self.maybe_stretch();
+        while !self.kernel.pools[node.0 as usize].at_high() {
+            if !self.push_one(node) {
+                break;
+            }
+        }
+    }
+
+    /// Direct reclaim: free at least one frame on `node` right now.
+    pub(crate) fn direct_reclaim(&mut self, node: NodeId) -> bool {
+        self.maybe_stretch();
+        let mut freed = false;
+        for _ in 0..self.kernel.reclaim_batch {
+            if !self.push_one(node) {
+                break;
+            }
+            freed = true;
+        }
+        freed
+    }
+
+    // ----- jump ------------------------------------------------------------
+
+    /// Transfer the current process's execution to `target` (paper
+    /// §3.4): flush pending sync messages (the ordering pitfall), ship
+    /// the jump checkpoint with the top stack pages, flip the running
+    /// node, flush the TLB.
+    pub fn jump_to(&mut self, target: NodeId) {
+        let cur = self.cur;
+        debug_assert_ne!(target, self.procs[cur].running);
+        debug_assert!(
+            self.procs[cur].stretched[target.0 as usize],
+            "jump to unstretched node"
+        );
+        let from = self.procs[cur].running;
+
+        // 1. Flush state synchronization BEFORE the jump — the paper's
+        // correctness pitfall (§3.1). The multicast fans out to every
+        // other stretched node.
+        self.flush_sync();
+
+        // 2. Build the checkpoint: registers + top stack pages.
+        let mut ckpt = JumpCheckpoint::new(self.procs[cur].regs.clone());
+        {
+            let m = &self.procs[cur].metrics;
+            ckpt.audit = [m.remote_faults, m.minor_faults, m.jumps, m.pushes];
+        }
+        let stack_pages: Vec<Vpn> = self.procs[cur]
+            .asp
+            .stack()
+            .map(|s| s.pages().take(2).collect())
+            .unwrap_or_default();
+        for vpn in &stack_pages {
+            let idx = self.procs[cur].pt.idx(*vpn);
+            let pte = self.procs[cur].pt.get(idx);
+            if pte.is_resident() {
+                let data = self.kernel.pools[pte.node().0 as usize].frame(pte.frame()).to_vec();
+                ckpt.stack_pages.push((*vpn, data));
+                // The checkpoint delivers these pages to the target:
+                // relocate them there if not already resident (no extra
+                // wire charge — they are inside the checkpoint).
+                if pte.node() != target && self.kernel.pools[target.0 as usize].free_frames() > 0 {
+                    self.move_page(cur, idx, target, true);
+                }
+            }
+        }
+
+        // 3. Charge + record.
+        let bytes = Msg::Jump { ckpt: ckpt.encode() }.wire_size();
+        self.clock.advance(self.kernel.costs.jump_ns(bytes));
+        let now = self.clock.now();
+        let p = &mut self.procs[cur];
+        p.metrics.record_jump(now, from, target, bytes);
+
+        // 4. Flip execution; all cached translations are stale.
+        p.running = target;
+        p.tlb.flush();
+        p.policy.on_jump(target, now);
+        log::debug!(
+            "pid{} jump {from} -> {target} at {}",
+            p.pid,
+            crate::util::stats::fmt_ns(now as f64)
+        );
+    }
+
+    /// Multicast all queued state-sync events of the current process to
+    /// its other stretched nodes, charging wire costs.
+    pub(crate) fn flush_sync(&mut self) {
+        let cur = self.cur;
+        if self.procs[cur].syncq.is_flushed() {
+            return;
+        }
+        let replicas = self.procs[cur]
+            .stretched
+            .iter()
+            .filter(|&&s| s)
+            .count()
+            .saturating_sub(1) as u64;
+        let mut total_bytes = 0u64;
+        self.procs[cur].syncq.flush(|ev| {
+            total_bytes += Msg::Sync { event: ev.encode() }.wire_size() * replicas;
+        });
+        let p = &mut self.procs[cur];
+        p.metrics.sync_events = p.syncq.flushed;
+        p.metrics.bytes_sync += total_bytes;
+        self.clock.advance(self.kernel.costs.wire_ns(total_bytes.max(1)));
+    }
+
+    /// Queue a state-sync event (mmap etc.); multicast is lazy but
+    /// always flushed before jumps.
+    pub(crate) fn queue_sync(&mut self, ev: SyncEvent) {
+        let p = &mut self.procs[self.cur];
+        if p.stretched.iter().filter(|&&s| s).count() > 1 {
+            p.syncq.enqueue(ev);
+        }
+    }
+}

@@ -44,10 +44,16 @@ pub struct NodeInfo {
 #[derive(Debug)]
 pub struct EosManager {
     /// Stretch when resident+mapped demand exceeds this fraction of the
-    /// home node's frames.
+    /// capacity available to the process (its home node in [`Self::check`];
+    /// its whole stretched set, minus co-tenant usage, in
+    /// [`Self::check_shared`]).
     pub pressure_ratio: f64,
-    /// Require at least this many remote faults… not for stretch (that
-    /// is size-driven) but kept for marking processes elastic.
+    /// Size floor in mapped pages: processes smaller than this are not
+    /// tracked as elastizable, so co-tenant squeeze alone never
+    /// stretches them ([`Self::check_shared`]); absolute pressure — the
+    /// process not fitting its stretched nodes even alone — overrides
+    /// the floor. (This is a *task-size* gate; stretch itself stays
+    /// size/pressure-driven, never remote-fault-driven.)
     pub min_task_pages: u64,
 }
 
@@ -77,6 +83,54 @@ impl EosManager {
             }
         }
         ManagerAction::None
+    }
+
+    /// One monitoring pass for a process sharing its nodes with other
+    /// tenants. Like [`Self::check`], but pressure is measured against
+    /// the capacity actually *available* to this process over its
+    /// stretched set: free frames plus its own resident pages (frames
+    /// held by co-tenant processes are not available to it). With a
+    /// single process this is exactly the stretched-set capacity, so
+    /// single-tenant behavior is unchanged; under contention, processes
+    /// that individually fit a node still stretch when their co-tenants
+    /// squeeze them.
+    ///
+    /// `own_resident[i]` is this process's resident page count on node
+    /// `i`; `running` is the node it currently executes on.
+    pub fn check_shared(
+        &self,
+        counters: &ProcCounters,
+        nodes: &[NodeInfo],
+        own_resident: &[u32],
+        running: NodeId,
+    ) -> ManagerAction {
+        // NOTE: `Engine::maybe_stretch` (os/kernel.rs) inlines this
+        // same free+own availability formula as an allocation-free
+        // fast-path gate; if the capacity definition here changes,
+        // change it there too.
+        let demand = counters.task_pages.max(counters.resident_pages);
+        let (mut avail, mut stretched_cap) = (0u64, 0u64);
+        for (n, &own) in nodes.iter().zip(own_resident.iter()) {
+            if n.stretched {
+                avail += n.free_frames as u64 + own as u64;
+                stretched_cap += n.total_frames as u64;
+            }
+        }
+        // Absolute pressure: the process would not fit its stretched
+        // nodes even with them to itself — the pre-contention rule,
+        // which must fire regardless of the size floor (a tiny process
+        // on a tiny node still needs to stretch rather than OOM).
+        let pressured_alone = (demand as f64) >= self.pressure_ratio * stretched_cap as f64;
+        if counters.task_pages < self.min_task_pages && !pressured_alone {
+            return ManagerAction::None;
+        }
+        if (demand as f64) < self.pressure_ratio * avail as f64 {
+            return ManagerAction::None;
+        }
+        match self.pick_stretch_target(nodes, running) {
+            Some(target) => ManagerAction::Stretch { target },
+            None => ManagerAction::None,
+        }
     }
 
     /// Choose the unstretched node with the most free RAM (paper:
@@ -176,5 +230,81 @@ mod tests {
     fn push_target_none_when_cluster_full() {
         let ns = nodes(&[0, 0], &[true, true]);
         assert_eq!(EosManager::pick_push_target(&ns, NodeId(0)), None);
+    }
+
+    #[test]
+    fn check_stretch_target_is_most_free_unstretched_node() {
+        // The satellite-task regression test: check()'s directive must
+        // carry the most-free *unstretched* node, even when a fuller
+        // unstretched node exists.
+        let m = EosManager::default();
+        let c = ProcCounters { task_pages: 950, resident_pages: 900, maj_flt: 0 };
+        let ns = nodes(&[20, 300, 700, 900], &[true, false, false, true]);
+        // node3 has most free but is already stretched; node2 wins
+        assert_eq!(m.check(&c, &ns, NodeId(0)), ManagerAction::Stretch { target: NodeId(2) });
+    }
+
+    #[test]
+    fn min_task_pages_is_a_size_floor_not_a_fault_gate() {
+        // A process below the floor never stretches, no matter how many
+        // remote faults it has taken — the floor gates on task size only.
+        let m = EosManager::default();
+        let c = ProcCounters { task_pages: m.min_task_pages - 1, resident_pages: 8, maj_flt: 1 << 30 };
+        let ns = nodes(&[0, 1000], &[true, false]);
+        assert_eq!(m.check(&c, &ns, NodeId(0)), ManagerAction::None);
+        assert_eq!(m.check_shared(&c, &ns, &[8, 0], NodeId(0)), ManagerAction::None);
+        // ...and zero faults does not prevent a stretch at pressure.
+        let big = ProcCounters { task_pages: 900, resident_pages: 850, maj_flt: 0 };
+        assert_eq!(m.check(&big, &ns, NodeId(0)), ManagerAction::Stretch { target: NodeId(1) });
+    }
+
+    #[test]
+    fn absolute_pressure_overrides_the_size_floor() {
+        // A sub-floor process that does not fit its node even alone
+        // must still stretch (otherwise it OOMs on a tiny node).
+        let m = EosManager::default();
+        let ns = vec![
+            NodeInfo { id: NodeId(0), total_frames: 8, free_frames: 1, stretched: true },
+            NodeInfo { id: NodeId(1), total_frames: 8, free_frames: 8, stretched: false },
+        ];
+        let c = ProcCounters { task_pages: 10, resident_pages: 7, maj_flt: 0 };
+        assert_eq!(
+            m.check_shared(&c, &ns, &[7, 0], NodeId(0)),
+            ManagerAction::Stretch { target: NodeId(1) }
+        );
+    }
+
+    #[test]
+    fn check_shared_matches_check_for_a_lone_tenant() {
+        // One process on its home node: free + own_resident == capacity,
+        // so the shared-capacity rule equals the single-tenant rule.
+        let m = EosManager::default();
+        let ns = nodes(&[150, 1000], &[true, false]);
+        let own = [850u32, 0];
+        for task_pages in [100u64, 800, 849, 850, 900, 2000] {
+            let c = ProcCounters { task_pages, resident_pages: 850, maj_flt: 0 };
+            assert_eq!(
+                m.check_shared(&c, &ns, &own, NodeId(0)),
+                m.check(&c, &ns, NodeId(0)),
+                "task_pages={task_pages}"
+            );
+        }
+    }
+
+    #[test]
+    fn check_shared_sees_co_tenant_pressure() {
+        let m = EosManager::default();
+        // Node 0: 1000 frames, 100 free; this process owns 300 of the
+        // used frames, a co-tenant owns the other 600. Available to us:
+        // 100 + 300 = 400. Demand 500 >= 0.85*400 -> stretch, even
+        // though 500 would fit the node if we had it to ourselves.
+        let ns = nodes(&[100, 900], &[true, false]);
+        let c = ProcCounters { task_pages: 500, resident_pages: 300, maj_flt: 0 };
+        assert_eq!(
+            m.check_shared(&c, &ns, &[300, 0], NodeId(0)),
+            ManagerAction::Stretch { target: NodeId(1) }
+        );
+        // The plain single-tenant rule would not fire here.
+        assert_eq!(m.check(&c, &ns, NodeId(0)), ManagerAction::None);
     }
 }

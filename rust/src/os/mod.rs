@@ -1,12 +1,18 @@
 //! The ElasticOS coordinator: manager, pager, policies, metrics, and
-//! the system composition implementing the four primitives.
+//! the engine composing the four primitives — split into a shared
+//! node-kernel + per-process contexts ([`kernel`]), a single-process
+//! facade ([`system`]), and a multi-process scheduler ([`sched`]).
 
+pub mod kernel;
 pub mod manager;
 pub mod metrics;
 pub mod pager;
 pub mod policy;
+pub mod sched;
 pub mod system;
 
+pub use kernel::{ClusterConfig, NodeKernel, ProcSpec, ProcessCtx};
 pub use metrics::{Metrics, RunReport};
 pub use policy::{BurstPolicy, Decision, EwmaPolicy, JumpPolicy, NeverJump, ThresholdPolicy};
+pub use sched::{ElasticCluster, ProcRunReport};
 pub use system::{ElasticSystem, Mode, SystemConfig};

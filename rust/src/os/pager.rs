@@ -1,5 +1,5 @@
 //! The pager: ElasticOS's modified page-fault handler (paper §3.3 +
-//! Fig 6) and the [`ElasticMem`] implementation workloads run against.
+//! Fig 6) as the [`ElasticMem`] surface workloads run against.
 //!
 //! Fast path: a software-TLB probe and a direct frame load/store —
 //! two compares and a pointer add per access.  Slow path (TLB miss):
@@ -14,229 +14,66 @@
 //!   counters, and consult the jumping policy, which may **jump**
 //!   execution instead of continuing to pull (§3.4).
 //!
+//! The implementation lives in [`crate::os::kernel`]'s `Engine` (shared
+//! with the multi-process scheduler, so one process or N contending
+//! processes exercise identical fault paths); this module binds it to
+//! the single-process [`ElasticSystem`] facade.
+//!
 //! Safety of the raw frame pointers: frame pools are allocated once at
 //! construction and never resized, so `*mut u8` into them stay valid
-//! for the system's lifetime; entries are invalidated whenever their
+//! for the kernel's lifetime; entries are invalidated whenever their
 //! page moves (push/pull) and wholesale on jumps, and the system is
 //! single-threaded, so no pointer is dereferenced after its page moved.
 
-use crate::mem::addr::{AreaKind, Vpn, PAGE_SIZE};
-use crate::mem::page_table::PageIdx;
-use crate::os::policy::Decision;
-use crate::os::system::{ElasticSystem, Mode};
-use crate::proc::sync::SyncEvent;
+use crate::mem::addr::AreaKind;
+use crate::os::system::ElasticSystem;
 use crate::workloads::mem::ElasticMem;
-
-impl ElasticSystem {
-    /// Resolve a faulting access and return a pointer to the page's
-    /// frame bytes. `write` requests dirty tracking.
-    #[cold]
-    #[inline(never)]
-    pub(crate) fn resolve_slow(&mut self, addr: u64, write: bool) -> *mut u8 {
-        let vpn = Vpn::of_addr(addr);
-        let idx = self.pt.idx(vpn);
-        let mut pte = self.pt.get(idx);
-
-        if pte.is_unmapped() {
-            self.minor_fault(idx);
-            pte = self.pt.get(idx);
-        } else if pte.node() != self.running {
-            self.remote_fault(idx);
-            pte = self.pt.get(idx);
-        }
-
-        // Flag maintenance + LRU touch (the slow path stands in for the
-        // hardware setting PG_ACCESSED).
-        let local = pte.node() == self.running;
-        {
-            let p = self.pt.get_mut(idx);
-            p.set_referenced(true);
-            if write {
-                p.set_dirty(true);
-            }
-        }
-        self.lru.touch(idx);
-        let pte = self.pt.get(idx);
-        let ptr = self.pools[pte.node().0 as usize].frame_ptr(pte.frame());
-
-        // Install a TLB entry only if the page is local to the (possibly
-        // just-changed) executing node — a jump during remote_fault means
-        // this access completes against the old node's copy, uncached.
-        if local && pte.node() == self.running {
-            self.tlb.install(vpn.0, ptr, pte.dirty());
-        }
-        ptr
-    }
-
-    /// First touch of an anonymous page: allocate + map a zeroed frame
-    /// on the executing node.
-    pub(crate) fn minor_fault(&mut self, idx: PageIdx) {
-        debug_assert!(
-            self.asp.area_of(self.pt.vpn(idx).base_addr()).is_some(),
-            "touch of unmapped address {:#x} (guard page?)",
-            self.pt.vpn(idx).base_addr()
-        );
-        let node = self.running;
-        let frame = match self.pools[node.0 as usize].alloc() {
-            Some(f) => f,
-            None => {
-                self.direct_reclaim(node);
-                self.pools[node.0 as usize]
-                    .alloc()
-                    .or_else(|| self.pools[node.0 as usize].alloc_reserve())
-                    .expect("cluster out of memory: no frame for minor fault (size the workload within total RAM)")
-            }
-        };
-        self.pt.map(idx, node, frame);
-        if self.cfg.pin_stack {
-            let addr = self.pt.vpn(idx).base_addr();
-            if matches!(self.asp.area_of(addr).map(|a| &a.kind), Some(AreaKind::Stack)) {
-                self.pt.get_mut(idx).set_pinned(true);
-            }
-        }
-        self.lru.push_hot(node, idx);
-        self.clock.advance(self.cfg.costs.minor_fault_ns);
-        self.metrics.minor_faults += 1;
-        // EOS manager monitoring + background reclaim.
-        self.maybe_stretch();
-        self.kswapd(node);
-    }
-
-    /// Remote fault: pull the page to the executing node (paper §3.3),
-    /// then consult the jumping policy (§3.4).
-    pub(crate) fn remote_fault(&mut self, idx: PageIdx) {
-        let owner = self.pt.get(idx).node();
-        debug_assert_ne!(owner, self.running);
-
-        // Keep a sliver of headroom so the incoming page always fits.
-        let node = self.running;
-        if self.pools[node.0 as usize].free_frames() <= self.pools[node.0 as usize].watermarks.min {
-            self.direct_reclaim(node);
-        }
-        // Data + table movement (falls back to a staged swap when the
-        // cluster is completely full — see pull_page).
-        self.pull_page(idx);
-
-        // Costs + counters: a pull is a request message out and a page
-        // message back, synchronous for the faulting process.
-        self.metrics.remote_faults += 1;
-        self.metrics.bytes_pull += self.pull_req_bytes + self.page_msg_bytes;
-        self.clock.advance(self.cfg.costs.pull_ns(self.page_msg_bytes));
-
-        // Restore watermark headroom in the background.
-        self.kswapd(node);
-
-        // Jumping policy: remote page fault counters are exactly the
-        // signal the paper feeds its policy.
-        let cost = self.policy.eval_cost_ns();
-        if cost > 0 {
-            self.clock.advance(cost);
-            self.metrics.policy_evals += 1;
-        }
-        let decision = self.policy.on_remote_fault(self.running, owner, self.clock.now());
-        if self.cfg.mode == Mode::Elastic {
-            if let Decision::JumpTo(target) = decision {
-                if target != self.running && self.stretched[target.0 as usize] {
-                    self.jump_to(target);
-                }
-            }
-        }
-    }
-}
 
 impl ElasticMem for ElasticSystem {
     fn mmap(&mut self, len: u64, kind: AreaKind, name: &str) -> u64 {
-        let area = self.asp.mmap(len, kind, name).clone();
-        let pages = self.asp.vpn_limit() - self.asp.vpn_base();
-        self.pt.grow_to(pages);
-        self.lru.grow_to(pages as usize);
-        self.meta.areas.push(area.clone());
-        self.queue_sync(SyncEvent::Mmap(area.clone()));
-        // The EOS manager reacts to task_size growth (SIGSTRETCH when
-        // the process no longer fits its node).
-        self.maybe_stretch();
-        area.start
+        self.engine().mmap(len, kind, name)
     }
 
     #[inline]
     fn read_u8(&mut self, addr: u64) -> u8 {
-        self.clock.tick_accesses(1);
-        let vpn = addr >> 12;
-        let ptr = match self.tlb.lookup_read(vpn) {
-            Some(p) => p,
-            None => self.resolve_slow(addr, false),
-        };
-        unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) }
+        self.engine().read_u8(addr)
     }
 
     #[inline]
     fn read_u32(&mut self, addr: u64) -> u32 {
-        self.clock.tick_accesses(1);
-        let vpn = addr >> 12;
-        let ptr = match self.tlb.lookup_read(vpn) {
-            Some(p) => p,
-            None => self.resolve_slow(addr, false),
-        };
-        debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
-        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u32).read() }
+        self.engine().read_u32(addr)
     }
 
     #[inline]
     fn read_u64(&mut self, addr: u64) -> u64 {
-        self.clock.tick_accesses(1);
-        let vpn = addr >> 12;
-        let ptr = match self.tlb.lookup_read(vpn) {
-            Some(p) => p,
-            None => self.resolve_slow(addr, false),
-        };
-        debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
-        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u64).read() }
+        self.engine().read_u64(addr)
     }
 
     #[inline]
     fn write_u8(&mut self, addr: u64, v: u8) {
-        self.clock.tick_accesses(1);
-        let vpn = addr >> 12;
-        let ptr = match self.tlb.lookup_write(vpn) {
-            Some(p) => p,
-            None => self.resolve_slow(addr, true),
-        };
-        unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) = v }
+        self.engine().write_u8(addr, v)
     }
 
     #[inline]
     fn write_u32(&mut self, addr: u64, v: u32) {
-        self.clock.tick_accesses(1);
-        let vpn = addr >> 12;
-        let ptr = match self.tlb.lookup_write(vpn) {
-            Some(p) => p,
-            None => self.resolve_slow(addr, true),
-        };
-        debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
-        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u32).write(v) }
+        self.engine().write_u32(addr, v)
     }
 
     #[inline]
     fn write_u64(&mut self, addr: u64, v: u64) {
-        self.clock.tick_accesses(1);
-        let vpn = addr >> 12;
-        let ptr = match self.tlb.lookup_write(vpn) {
-            Some(p) => p,
-            None => self.resolve_slow(addr, true),
-        };
-        debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
-        unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u64).write(v) }
+        self.engine().write_u64(addr, v)
     }
 
     fn regs_mut(&mut self) -> &mut [u64; 16] {
-        &mut self.regs.gpr
+        &mut self.procs[0].regs.gpr
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::os::system::SystemConfig;
+    use crate::mem::addr::Vpn;
+    use crate::os::system::{Mode, SystemConfig};
     use crate::sim::CostModel;
 
     fn tiny_system(mode: Mode) -> ElasticSystem {

@@ -1,31 +1,31 @@
-//! The ElasticOS engine: one elasticized process spanning N nodes.
+//! The single-process ElasticOS facade.
 //!
-//! This module composes the whole paper: the address space and elastic
-//! page table, per-node frame pools with watermarks, second-chance LRU
-//! + the kswapd-analogue reclaim loop driving **push**, the modified
-//! fault handler driving **pull** (in `pager.rs`, an `impl` block of
-//! this struct), **stretch** with checkpoint + state-sync, and **jump**
-//! via the pluggable [`JumpPolicy`].  Running the identical system with
-//! the [`NeverJump`] policy is the paper's Nswap baseline.
+//! Historically `ElasticSystem` *was* the whole engine: one elasticized
+//! process whose struct also owned the node-level frame pools and
+//! reclaim lists. The engine now lives in [`crate::os::kernel`], split
+//! into a [`NodeKernel`] (per-node pools, watermark reclaim, the
+//! cluster-wide LRU, the EOS manager and membership registry — shared
+//! by every process) and per-process [`ProcessCtx`]s; the four
+//! primitives are implemented once, against that split, in
+//! `kernel::Engine` and the fault-handling half in
+//! [`crate::os::pager`].
+//!
+//! `ElasticSystem` remains the one-process composition of those parts —
+//! same constructors, same public surface, same behavior — so all
+//! existing tests, examples and experiments run unmodified. For N
+//! concurrent elasticized processes contending for the same frames, use
+//! [`crate::os::sched::ElasticCluster`].
 //!
 //! All time is simulated (see [`crate::sim`]): primitives charge the
 //! calibrated Table-2 costs, bulk memory accesses are counted by the
-//! pager and converted lazily.  All traffic is counted in *encoded
+//! pager and converted lazily. All traffic is counted in *encoded
 //! message bytes* using the same codec the real TCP fabric uses, so
 //! simulated byte counts match what would cross a wire.
 
-use crate::mem::addr::{AddressSpace, NodeId, Vpn, MAX_NODES, PAGE_SIZE};
-use crate::mem::frame::FramePool;
-use crate::mem::lru::LruLists;
-use crate::mem::page_table::{ElasticPageTable, PageIdx};
-use crate::mem::tlb::Tlb;
-use crate::net::proto::Msg;
-use crate::os::manager::{node_infos, EosManager, NodeInfo, ProcCounters};
-use crate::os::metrics::{Metrics, RunReport};
-use crate::os::policy::{JumpPolicy, NeverJump, ThresholdPolicy};
-use crate::proc::checkpoint::{JumpCheckpoint, RegisterFile, StretchCheckpoint};
-use crate::proc::meta::ProcessMeta;
-use crate::proc::sync::{SyncEvent, SyncQueue};
+use crate::mem::addr::{NodeId, MAX_NODES};
+use crate::os::kernel::{verify_cluster, ClusterConfig, Engine, NodeKernel, ProcSpec, ProcessCtx};
+use crate::os::metrics::RunReport;
+use crate::os::policy::{JumpPolicy, ThresholdPolicy};
 use crate::sim::{CostModel, SimClock};
 use crate::workloads::Workload;
 
@@ -47,7 +47,8 @@ impl Mode {
     }
 }
 
-/// System construction parameters.
+/// System construction parameters (single-process form; the cluster
+/// half converts into a [`ClusterConfig`]).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
     /// Frames contributed by each participating node.
@@ -84,28 +85,47 @@ impl Default for SystemConfig {
     }
 }
 
-/// The engine. See module docs; the pager half of the implementation
-/// (the `ElasticMem` fast path + fault handling) lives in
+impl SystemConfig {
+    /// The node-kernel half of this configuration.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            node_frames: self.node_frames.clone(),
+            costs: self.costs.clone(),
+            balance_on_stretch: self.balance_on_stretch,
+            pin_stack: self.pin_stack,
+            stretch_data_segment: self.stretch_data_segment,
+            reclaim_batch: self.reclaim_batch,
+        }
+    }
+}
+
+/// The engine facade: one elasticized process on a shared node kernel.
+/// See module docs; the pager half of the implementation (the
+/// `ElasticMem` fast path + fault handling) lives in
 /// [`crate::os::pager`].
 pub struct ElasticSystem {
     pub(crate) cfg: SystemConfig,
     pub clock: SimClock,
-    pub(crate) asp: AddressSpace,
-    pub(crate) pt: ElasticPageTable,
-    pub(crate) lru: LruLists,
-    pub(crate) pools: Vec<FramePool>,
-    pub(crate) tlb: Box<Tlb>,
-    pub(crate) running: NodeId,
-    pub(crate) stretched: [bool; MAX_NODES],
-    pub(crate) policy: Box<dyn JumpPolicy>,
-    pub(crate) syncq: SyncQueue,
-    pub metrics: Metrics,
-    pub(crate) meta: ProcessMeta,
-    pub(crate) regs: RegisterFile,
-    pub(crate) manager: EosManager,
-    /// Precomputed wire sizes (constant per message shape).
-    pub(crate) pull_req_bytes: u64,
-    pub(crate) page_msg_bytes: u64,
+    pub(crate) kernel: NodeKernel,
+    /// Exactly one process; a Vec so the shared engine code sees the
+    /// same process-table shape the multi-process scheduler uses.
+    pub(crate) procs: Vec<ProcessCtx>,
+}
+
+/// Field access to the per-process state (`sys.metrics`, …) keeps
+/// working through deref, so pre-split call sites compile unchanged.
+impl std::ops::Deref for ElasticSystem {
+    type Target = ProcessCtx;
+
+    fn deref(&self) -> &ProcessCtx {
+        &self.procs[0]
+    }
+}
+
+impl std::ops::DerefMut for ElasticSystem {
+    fn deref_mut(&mut self) -> &mut ProcessCtx {
+        &mut self.procs[0]
+    }
 }
 
 impl ElasticSystem {
@@ -113,36 +133,13 @@ impl ElasticSystem {
     pub fn with_policy(cfg: SystemConfig, policy: Box<dyn JumpPolicy>) -> Self {
         assert!(!cfg.node_frames.is_empty() && cfg.node_frames.len() <= MAX_NODES);
         assert!((cfg.home.0 as usize) < cfg.node_frames.len());
-        let pools: Vec<FramePool> = cfg.node_frames.iter().map(|&f| FramePool::new(f)).collect();
-        let asp = AddressSpace::new();
+        let kernel = NodeKernel::new(cfg.cluster_config());
         let clock = SimClock::new(cfg.costs.local_access_num, cfg.costs.local_access_den);
-        let mut stretched = [false; MAX_NODES];
-        stretched[cfg.home.0 as usize] = true;
-        let pull_req_bytes = Msg::PullReq { idx: 0 }.wire_size();
-        let page_msg_bytes = Msg::Push { idx: 0, data: vec![0; PAGE_SIZE] }.wire_size();
-        let policy: Box<dyn JumpPolicy> = match cfg.mode {
-            Mode::Elastic => policy,
-            Mode::Nswap => Box::new(NeverJump),
-        };
-        ElasticSystem {
-            running: cfg.home,
-            meta: ProcessMeta::minimal(1000, "elastic"),
-            pt: ElasticPageTable::new(asp.vpn_base(), 0),
-            lru: LruLists::new(0),
-            tlb: Tlb::new(),
-            pools,
-            asp,
-            clock,
-            stretched,
-            policy,
-            syncq: SyncQueue::new(),
-            metrics: Metrics::new(),
-            regs: RegisterFile::default(),
-            manager: EosManager::default(),
-            pull_req_bytes,
-            page_msg_bytes,
-            cfg,
-        }
+        let process = ProcessCtx::new(
+            0,
+            ProcSpec { mode: cfg.mode, home: cfg.home, comm: "elastic".into(), policy },
+        );
+        ElasticSystem { clock, kernel, procs: vec![process], cfg }
     }
 
     /// Build with the paper's threshold policy (or NeverJump in Nswap
@@ -151,365 +148,69 @@ impl ElasticSystem {
         Self::with_policy(cfg, Box::new(ThresholdPolicy::new(threshold)))
     }
 
+    /// Borrow bundle the primitive implementations run against.
+    #[inline]
+    pub(crate) fn engine(&mut self) -> Engine<'_> {
+        Engine { kernel: &mut self.kernel, clock: &mut self.clock, procs: &mut self.procs, cur: 0 }
+    }
+
     // ----- introspection ---------------------------------------------------
 
     pub fn running_on(&self) -> NodeId {
-        self.running
+        self.procs[0].running_on()
     }
 
     pub fn is_stretched(&self) -> bool {
-        self.stretched.iter().filter(|&&s| s).count() > 1
+        self.procs[0].is_stretched()
     }
 
     pub fn node_count(&self) -> usize {
-        self.pools.len()
+        self.kernel.node_count()
     }
 
     pub fn resident_at(&self, node: NodeId) -> u32 {
-        self.pt.resident_at(node)
+        self.procs[0].resident_at(node)
     }
 
     pub fn free_frames(&self, node: NodeId) -> u32 {
-        self.pools[node.0 as usize].free_frames()
+        self.kernel.free_frames(node)
     }
 
     pub fn policy_describe(&self) -> String {
-        self.policy.describe()
+        self.procs[0].policy_describe()
     }
 
     /// Base address of the first page resident on a node other than
     /// the executing one (diagnostics / micro-benchmarks).
     pub fn first_remote_page(&self) -> Option<u64> {
-        self.pt
-            .iter_resident()
-            .find(|(_, pte)| pte.node() != self.running)
-            .map(|(idx, _)| self.pt.vpn(idx).base_addr())
-    }
-
-    pub(crate) fn cluster_view(&self) -> Vec<NodeInfo> {
-        let free: Vec<u32> = self.pools.iter().map(|p| p.free_frames()).collect();
-        node_infos(&self.cfg.node_frames, &free, &self.stretched)
+        self.procs[0].first_remote_page()
     }
 
     /// Consistency check used by tests: page table counters vs pools vs
     /// LRU lists all agree.
     pub fn verify(&self) -> Result<(), String> {
-        self.pt.verify()?;
-        for i in 0..self.pools.len() {
-            let node = NodeId(i as u8);
-            self.lru.verify(node)?;
-            let on_lru = self.lru.len(node);
-            let resident = self.pt.resident_at(node);
-            if on_lru != resident {
-                return Err(format!("{node}: lru={on_lru} resident={resident}"));
-            }
-            let used = self.pools[i].used_frames();
-            if used != resident {
-                return Err(format!("{node}: used_frames={used} resident={resident}"));
-            }
-        }
-        Ok(())
+        verify_cluster(&self.kernel, &self.procs)
     }
 
-    // ----- stretch ---------------------------------------------------------
+    // ----- primitives ------------------------------------------------------
 
     /// Extend the process to `target`: ship the stretch checkpoint and
     /// create the suspended shell (paper §3.1). Idempotent per node.
     pub fn stretch_to(&mut self, target: NodeId) {
-        let t = target.0 as usize;
-        if self.stretched[t] {
-            return;
-        }
-        let ckpt = StretchCheckpoint {
-            meta: self.meta.clone(),
-            data_segment: vec![0; self.cfg.stretch_data_segment],
-        };
-        let bytes = Msg::Stretch { ckpt: ckpt.encode() }.wire_size() + Msg::StretchAck.wire_size();
-        self.clock.advance(self.cfg.costs.stretch_ns(bytes));
-        self.metrics.stretches += 1;
-        self.metrics.bytes_stretch += bytes;
-        self.stretched[t] = true;
-        log::info!(
-            "stretch -> {target} at {} (task {} pages)",
-            crate::util::stats::fmt_ns(self.clock.now() as f64),
-            self.asp.total_pages()
-        );
-        if self.cfg.balance_on_stretch {
-            self.balance_to(target);
-        }
+        self.engine().stretch_to(target)
     }
-
-    /// Bulk page balance after a stretch (paper Fig 2 step 2): move the
-    /// coldest half of the home node's resident pages to the new node.
-    fn balance_to(&mut self, target: NodeId) {
-        let from = self.running;
-        let n = (self.pt.resident_at(from) / 2).min(self.pools[target.0 as usize].free_frames());
-        for _ in 0..n {
-            if !self.push_one_to(from, target) {
-                break;
-            }
-        }
-    }
-
-    /// Check memory pressure and stretch if needed (the EOS manager's
-    /// monitoring pass, invoked from mmap and the allocation paths).
-    ///
-    /// Pressure is generalized over the currently-stretched capacity so
-    /// the same rule drives the first stretch (demand vs the home node,
-    /// the paper's 2-node case) and later ones (demand vs the whole
-    /// stretched set, §6 "expand testing to more than two nodes").
-    pub(crate) fn maybe_stretch(&mut self) {
-        let counters = ProcCounters {
-            task_pages: self.asp.total_pages(),
-            resident_pages: self.pt.total_resident() as u64,
-            maj_flt: self.metrics.remote_faults,
-        };
-        let demand = counters.task_pages.max(counters.resident_pages);
-        let cap: u64 = self
-            .pools
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| self.stretched[*i])
-            .map(|(_, p)| p.capacity() as u64)
-            .sum();
-        if (demand as f64) < self.manager.pressure_ratio * cap as f64 {
-            return;
-        }
-        let view = self.cluster_view();
-        if let Some(target) = self.manager.pick_stretch_target(&view, self.running) {
-            self.stretch_to(target);
-        }
-    }
-
-    // ----- push (evict) ----------------------------------------------------
 
     /// Evict one page from `from` using second-chance selection and
     /// push it to the best target (the push primitive as kswapd
     /// invokes it). Returns false if no victim or no target exists.
     pub fn push_one(&mut self, from: NodeId) -> bool {
-        let view = self.cluster_view();
-        match EosManager::pick_push_target(&view, from) {
-            Some(target) => self.push_one_to(from, target),
-            None => false,
-        }
+        self.engine().push_one(from)
     }
-
-    /// Evict one page from `from` to `target` (both data + table moves;
-    /// paper §3.2).
-    pub(crate) fn push_one_to(&mut self, from: NodeId, target: NodeId) -> bool {
-        debug_assert_ne!(from, target);
-        let Some(victim) = self.select_victim(from) else {
-            return false;
-        };
-        if self.pools[target.0 as usize].free_frames() == 0 {
-            return false;
-        }
-        self.move_page(victim, target, true);
-        self.metrics.pushes += 1;
-        self.metrics.bytes_push += self.page_msg_bytes;
-        self.clock.advance(self.cfg.costs.push_ns(self.page_msg_bytes));
-        true
-    }
-
-    /// Second-chance victim selection on `from`'s LRU list: referenced
-    /// pages get rotated with their bit cleared; pinned pages are
-    /// skipped. Bounded by 2x the list length.
-    pub(crate) fn select_victim(&mut self, from: NodeId) -> Option<PageIdx> {
-        let len = self.lru.len(from);
-        if len == 0 {
-            return None;
-        }
-        for _ in 0..2 * len as usize {
-            let idx = self.lru.coldest(from)?;
-            let pte = self.pt.get_mut(idx);
-            if pte.pinned() {
-                self.lru.rotate(from);
-                continue;
-            }
-            if pte.referenced() {
-                pte.set_referenced(false);
-                self.lru.rotate(from);
-                continue;
-            }
-            return Some(idx);
-        }
-        // Everything is hot/pinned; take the coldest unpinned anyway.
-        self.lru.iter(from).find(|&i| !self.pt.get(i).pinned())
-    }
-
-    /// Move one resident page to (target, fresh frame): copies bytes,
-    /// updates pool/table/LRU, invalidates the TLB entry. `make_hot`
-    /// controls where it lands on the target's LRU list.
-    pub(crate) fn move_page(&mut self, idx: PageIdx, target: NodeId, make_hot: bool) {
-        let pte = self.pt.get(idx);
-        debug_assert!(pte.is_resident());
-        let from = pte.node();
-        debug_assert_ne!(from, target);
-        // free source frame first (contents stay valid until another
-        // allocation overwrites them; single-threaded, so the copy
-        // below happens before any reuse)
-        let src_frame = pte.frame();
-        self.pools[from.0 as usize].dealloc(src_frame);
-        self.lru.remove(idx);
-        // allocate at target (reserve allowed: reclaim paths use this)
-        let frame = self.pools[target.0 as usize]
-            .alloc_reserve()
-            .expect("move_page: target has no frames");
-        // direct frame->frame copy: from != target, so the borrows are
-        // of two distinct pools (split via raw pointer; checked above)
-        {
-            let src_ptr = self.pools[from.0 as usize].frame_ptr(src_frame) as *const u8;
-            let dst_ptr = self.pools[target.0 as usize].frame_ptr(frame);
-            unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
-        }
-        self.pt.relocate(idx, target, frame);
-        let _ = make_hot;
-        self.lru.push_hot(target, idx);
-        self.tlb.invalidate(self.pt.vpn(idx));
-    }
-
-    /// Pull one remote page to the executing node (data movement half
-    /// of the pull primitive).  Normally delegates to [`Self::move_page`];
-    /// when the executing node is completely out of frames AND reclaim
-    /// could not free any (the whole cluster is tight), it performs a
-    /// staged *swap*: free the incoming page's frame at the owner
-    /// first, push a local victim into that hole, then land the
-    /// incoming page — so a full cluster can still make progress as
-    /// long as the footprint fits in total RAM.
-    pub(crate) fn pull_page(&mut self, idx: PageIdx) {
-        let run = self.running;
-        if self.pools[run.0 as usize].free_frames() > 0 {
-            self.move_page(idx, run, true);
-            return;
-        }
-        let pte = self.pt.get(idx);
-        let owner = pte.node();
-        // Stage 1: copy out + free at the owner.
-        let mut buf = [0u8; PAGE_SIZE];
-        buf.copy_from_slice(self.pools[owner.0 as usize].frame(pte.frame()));
-        self.pools[owner.0 as usize].dealloc(pte.frame());
-        self.lru.remove(idx);
-        // Stage 2: push a victim into the hole we just made.
-        if !self.push_one_to(run, owner) {
-            panic!(
-                "cluster out of memory: {run} full and no evictable victim \
-                 (footprint must fit in total cluster RAM)"
-            );
-        }
-        // Stage 3: land the incoming page.
-        let frame = self.pools[run.0 as usize]
-            .alloc_reserve()
-            .expect("pull_page: freed a frame but allocation failed");
-        self.pools[run.0 as usize].frame_mut(frame).copy_from_slice(&buf);
-        self.pt.relocate(idx, run, frame);
-        self.lru.push_hot(run, idx);
-        self.tlb.invalidate(self.pt.vpn(idx));
-    }
-
-    /// kswapd: when `node` is below the low watermark, push pages out
-    /// until the high watermark is restored (paper §3.2 + §4).
-    pub(crate) fn kswapd(&mut self, node: NodeId) {
-        if !self.pools[node.0 as usize].below_low() {
-            return;
-        }
-        self.maybe_stretch();
-        while !self.pools[node.0 as usize].at_high() {
-            if !self.push_one(node) {
-                break;
-            }
-        }
-    }
-
-    /// Direct reclaim: free at least one frame on `node` right now.
-    pub(crate) fn direct_reclaim(&mut self, node: NodeId) -> bool {
-        self.maybe_stretch();
-        let mut freed = false;
-        for _ in 0..self.cfg.reclaim_batch {
-            if !self.push_one(node) {
-                break;
-            }
-            freed = true;
-        }
-        freed
-    }
-
-    // ----- jump ------------------------------------------------------------
 
     /// Transfer execution to `target` (paper §3.4): flush pending sync
-    /// messages (the ordering pitfall), ship the jump checkpoint with
-    /// the top stack pages, flip the running node, flush the TLB.
+    /// messages, ship the jump checkpoint, flip the running node.
     pub fn jump_to(&mut self, target: NodeId) {
-        debug_assert_ne!(target, self.running);
-        debug_assert!(self.stretched[target.0 as usize], "jump to unstretched node");
-        let from = self.running;
-
-        // 1. Flush state synchronization BEFORE the jump — the paper's
-        // correctness pitfall (§3.1). The multicast fans out to every
-        // other stretched node.
-        self.flush_sync();
-
-        // 2. Build the checkpoint: registers + top stack pages.
-        let mut ckpt = JumpCheckpoint::new(self.regs.clone());
-        ckpt.audit = [
-            self.metrics.remote_faults,
-            self.metrics.minor_faults,
-            self.metrics.jumps,
-            self.metrics.pushes,
-        ];
-        let stack_pages: Vec<Vpn> = self
-            .asp
-            .stack()
-            .map(|s| s.pages().take(2).collect())
-            .unwrap_or_default();
-        for vpn in &stack_pages {
-            let idx = self.pt.idx(*vpn);
-            let pte = self.pt.get(idx);
-            if pte.is_resident() {
-                let data = self.pools[pte.node().0 as usize].frame(pte.frame()).to_vec();
-                ckpt.stack_pages.push((*vpn, data));
-                // The checkpoint delivers these pages to the target:
-                // relocate them there if not already resident (no extra
-                // wire charge — they are inside the checkpoint).
-                if pte.node() != target && self.pools[target.0 as usize].free_frames() > 0 {
-                    self.move_page(idx, target, true);
-                }
-            }
-        }
-
-        // 3. Charge + record.
-        let bytes = Msg::Jump { ckpt: ckpt.encode() }.wire_size();
-        self.clock.advance(self.cfg.costs.jump_ns(bytes));
-        self.metrics.record_jump(self.clock.now(), from, target, bytes);
-
-        // 4. Flip execution; all cached translations are stale.
-        self.running = target;
-        self.tlb.flush();
-        self.policy.on_jump(target, self.clock.now());
-        log::debug!("jump {from} -> {target} at {}", crate::util::stats::fmt_ns(self.clock.now() as f64));
-    }
-
-    /// Multicast all queued state-sync events to the other stretched
-    /// nodes, charging wire costs.
-    pub(crate) fn flush_sync(&mut self) {
-        if self.syncq.is_flushed() {
-            return;
-        }
-        let replicas = self.stretched.iter().filter(|&&s| s).count().saturating_sub(1) as u64;
-        let mut total_bytes = 0u64;
-        self.syncq.flush(|ev| {
-            total_bytes += Msg::Sync { event: ev.encode() }.wire_size() * replicas;
-        });
-        self.metrics.sync_events = self.syncq.flushed;
-        self.metrics.bytes_sync += total_bytes;
-        self.clock.advance(self.cfg.costs.wire_ns(total_bytes.max(1)));
-    }
-
-    /// Queue a state-sync event (mmap etc.); multicast is lazy but
-    /// always flushed before jumps.
-    pub(crate) fn queue_sync(&mut self, ev: SyncEvent) {
-        if self.is_stretched() {
-            self.syncq.enqueue(ev);
-        }
+        self.engine().jump_to(target)
     }
 
     // ----- driving workloads -----------------------------------------------
@@ -520,16 +221,17 @@ impl ElasticSystem {
         w.setup(self);
         let digest = w.run(self);
         let wall_ns = wall_start.elapsed().as_nanos() as u64;
+        self.procs[0].cpu_ns = self.clock.now();
         RunReport {
             workload: w.name().to_string(),
             mode: self.cfg.mode.as_str().to_string(),
-            policy: self.policy.describe(),
+            policy: self.procs[0].policy_describe(),
             digest,
             sim_ns: self.clock.now(),
             wall_ns,
             accesses: self.clock.accesses(),
             start_node: self.cfg.home,
-            metrics: self.metrics.clone(),
+            metrics: self.procs[0].metrics.clone(),
         }
     }
 }
@@ -537,9 +239,9 @@ impl ElasticSystem {
 impl std::fmt::Debug for ElasticSystem {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ElasticSystem")
-            .field("running", &self.running)
-            .field("nodes", &self.pools.len())
-            .field("resident", &self.pt.total_resident())
+            .field("running", &self.procs[0].running_on())
+            .field("nodes", &self.kernel.node_count())
+            .field("resident", &self.procs[0].pt.total_resident())
             .field("sim_ns", &self.clock.now())
             .finish()
     }

@@ -1,76 +1,67 @@
-//! PJRT runtime: loads the AOT-compiled L2/L1 artifacts (HLO text
-//! emitted by `python/compile/aot.py`) and executes them from the Rust
-//! decision paths.  Python never runs here — the HLO text is compiled
-//! once by the in-process XLA CPU client at startup.
+//! PJRT runtime boundary: loads the AOT-compiled L2/L1 artifacts (HLO
+//! text emitted by `python/compile/aot.py`) and executes them from the
+//! Rust decision paths.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! **Offline build note.** The native XLA/PJRT backend (the `xla`
+//! crate plus `libxla_extension`) is not available in this build
+//! environment, so [`Engine::cpu`] returns an error and every consumer
+//! falls back to its pure-Rust path: the eval harness skips the
+//! `model(pjrt)` rows, `ModelJumpPolicy`/`ModelEvictor` are never
+//! constructed (their loaders fail first), and the PJRT tests skip
+//! cleanly. The public API (`Engine`, `Model::run_f32`,
+//! `artifacts_dir`) is kept identical to the PJRT-backed version so the
+//! native backend can be swapped back in without touching callers; the
+//! model *semantics* stay covered by the pure-Rust references
+//! (`evict_model::rank_reference`, `os::policy::EwmaPolicy`) that the
+//! artifacts are cross-checked against when present.
 
 pub mod evict_model;
 pub mod policy_model;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Result};
 use std::path::Path;
 
 pub use evict_model::ModelEvictor;
 pub use policy_model::ModelJumpPolicy;
 
-/// Shared PJRT CPU client.
+/// Shared PJRT CPU client (stubbed: construction always fails in the
+/// offline build; see module docs).
 pub struct Engine {
-    client: xla::PjRtClient,
+    _priv: (),
 }
 
 impl Engine {
-    /// Create the CPU PJRT client.
+    /// Create the CPU PJRT client. Errors in this build — there is no
+    /// native XLA backend; callers treat that as "run without the
+    /// model" exactly as they do when artifacts are missing.
     pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::info!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());
-        Ok(Engine { client })
+        Err(anyhow!(
+            "PJRT CPU client unavailable: this build has no native XLA backend \
+             (offline environment; see runtime/mod.rs)"
+        ))
     }
 
     /// Load + compile one HLO-text artifact.
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Model> {
         let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("compiling HLO")?;
-        Ok(Model { exe, name: path.display().to_string() })
+        Err(anyhow!(
+            "cannot compile {}: no native XLA backend in this build",
+            path.display()
+        ))
     }
 }
 
 /// One compiled executable (jax function lowered with
 /// `return_tuple=True`, so outputs always come back as a tuple).
 pub struct Model {
-    exe: xla::PjRtLoadedExecutable,
     name: String,
 }
 
 impl Model {
     /// Execute with f32 inputs of the given shapes; returns each tuple
     /// element flattened to a f32 vec.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let lit = xla::Literal::vec1(data);
-                if dims.len() == 1 && dims[0] as usize == data.len() {
-                    Ok(lit)
-                } else {
-                    lit.reshape(dims).map_err(anyhow::Error::from)
-                }
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(anyhow::Error::from))
-            .collect()
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("{}: no native XLA backend in this build", self.name))
     }
 
     pub fn name(&self) -> &str {
@@ -97,29 +88,26 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 mod tests {
     use super::*;
 
-    /// These tests need `make artifacts` to have run; they are also
-    /// covered by rust/tests/runtime_pjrt.rs which skips cleanly.
-    fn artifacts_present() -> bool {
-        artifacts_dir().join("policy.hlo.txt").exists()
+    #[test]
+    fn engine_fails_gracefully_without_native_backend() {
+        // The offline stub must error (never panic) so every caller's
+        // fallback path engages.
+        match Engine::cpu() {
+            Ok(engine) => {
+                // A future PJRT-backed build: loading a missing file
+                // must still error cleanly.
+                assert!(engine.load("definitely-missing.hlo.txt").is_err());
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("PJRT"), "unexpected error: {e}");
+            }
+        }
     }
 
     #[test]
-    fn load_and_run_policy_artifact() {
-        if !artifacts_present() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let eng = Engine::cpu().unwrap();
-        let model = eng.load(artifacts_dir().join("policy.hlo.txt")).unwrap();
-        let window = vec![0f32; 64 * 16];
-        let mut onehot = vec![0f32; 16];
-        onehot[0] = 1.0;
-        let params = vec![0.9f32, 1.0, 4.0, 0.0];
-        let out = model
-            .run_f32(&[(&window, &[64, 16]), (&onehot, &[16]), (&params, &[4])])
-            .unwrap();
-        assert_eq!(out.len(), 3);
-        assert_eq!(out[0].len(), 16);
-        assert_eq!(out[2][0], 0.0, "zero window must not jump");
+    fn artifacts_dir_is_usable_even_when_absent() {
+        let d = artifacts_dir();
+        // Never panics; joining paths on it must work.
+        let _ = d.join("policy.hlo.txt");
     }
 }

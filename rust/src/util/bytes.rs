@@ -6,20 +6,34 @@
 //! implements encode/decode on top of these primitives.  All decodes are
 //! bounds-checked and return [`DecodeError`] instead of panicking.
 
-use thiserror::Error;
-
 /// Error returned by the decoding primitives.
-#[derive(Debug, Error, PartialEq, Eq)]
+///
+/// (`Display`/`Error` are hand-implemented; the offline build has no
+/// `thiserror` derive.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("buffer underrun: needed {needed} bytes, had {have}")]
     Underrun { needed: usize, have: usize },
-    #[error("invalid tag {tag} for {what}")]
     BadTag { tag: u8, what: &'static str },
-    #[error("length {len} exceeds limit {limit}")]
     TooLong { len: usize, limit: usize },
-    #[error("invalid utf-8 in string field")]
     BadUtf8,
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Underrun { needed, have } => {
+                write!(f, "buffer underrun: needed {needed} bytes, had {have}")
+            }
+            DecodeError::BadTag { tag, what } => write!(f, "invalid tag {tag} for {what}"),
+            DecodeError::TooLong { len, limit } => {
+                write!(f, "length {len} exceeds limit {limit}")
+            }
+            DecodeError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Append-only encoder.
 #[derive(Debug, Default)]

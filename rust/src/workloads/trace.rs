@@ -43,6 +43,19 @@ pub struct Trace {
     pub ops: Vec<Op>,
 }
 
+impl Trace {
+    /// Decode a region-relative synthetic address (the inverse of
+    /// `TracingMem::rel`: region index in the top 16 bits, offset
+    /// below) against a replay's region start table. Shared by
+    /// [`TraceReplay`] and the multi-process scheduler so the encoding
+    /// lives in exactly one place.
+    #[inline]
+    pub fn resolve(starts: &[u64], rel: u64) -> u64 {
+        let region = (rel >> 48) as usize;
+        starts[region] + (rel & 0xFFFF_FFFF_FFFF)
+    }
+}
+
 /// Recording wrapper around any ElasticMem.
 pub struct TracingMem<'a, M: ElasticMem + ?Sized> {
     pub inner: &'a mut M,
@@ -140,8 +153,7 @@ impl TraceReplay {
     }
 
     fn abs(&self, rel: u64) -> u64 {
-        let region = (rel >> 48) as usize;
-        self.starts[region] + (rel & 0xFFFF_FFFF_FFFF)
+        Trace::resolve(&self.starts, rel)
     }
 }
 

@@ -1,0 +1,262 @@
+//! Offline vendored facade for the `log` crate.
+//!
+//! Implements exactly the subset this repository uses: the five level
+//! macros, the [`Log`] trait, and the global logger/level registry.
+//! The API mirrors upstream `log` 0.4 so the real crate can be swapped
+//! back in when a registry is available.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::fmt;
+use std::sync::RwLock;
+
+/// Logging verbosity levels, most severe first.
+#[repr(usize)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn to_level_filter(&self) -> LevelFilter {
+        match self {
+            Level::Error => LevelFilter::Error,
+            Level::Warn => LevelFilter::Warn,
+            Level::Info => LevelFilter::Info,
+            Level::Debug => LevelFilter::Debug,
+            Level::Trace => LevelFilter::Trace,
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Level filter: like [`Level`] plus `Off`.
+#[repr(usize)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<CmpOrdering> {
+        Some((*self as usize).cmp(&(*other as usize)))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<CmpOrdering> {
+        Some((*self as usize).cmp(&(*other as usize)))
+    }
+}
+
+/// Metadata about a log record.
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log event.
+#[derive(Debug, Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+
+    fn log(&self, _: &Record) {}
+
+    fn flush(&self) {}
+}
+
+static LOGGER: RwLock<Option<&'static dyn Log>> = RwLock::new(None);
+static MAX_LEVEL: RwLock<LevelFilter> = RwLock::new(LevelFilter::Off);
+
+/// Error returned by [`set_logger`] when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("attempted to set a logger after one was already set")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger. Fails if one is already installed.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let mut slot = LOGGER.write().unwrap_or_else(|e| e.into_inner());
+    if slot.is_some() {
+        return Err(SetLoggerError(()));
+    }
+    *slot = Some(logger);
+    Ok(())
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(level: LevelFilter) {
+    *MAX_LEVEL.write().unwrap_or_else(|e| e.into_inner()) = level;
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    *MAX_LEVEL.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Dispatch one record to the installed logger (macro plumbing).
+#[doc(hidden)]
+pub fn __private_api_log(args: fmt::Arguments, level: Level, target: &str) {
+    let guard = LOGGER.read().unwrap_or_else(|e| e.into_inner());
+    if let Some(logger) = *guard {
+        let record = Record { metadata: Metadata { level, target }, args };
+        logger.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    (target: $target:expr, $lvl:expr, $($arg:tt)+) => ({
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__private_api_log(format_args!($($arg)+), lvl, $target);
+        }
+    });
+    ($lvl:expr, $($arg:tt)+) => ($crate::log!(target: module_path!(), $lvl, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! error {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Error, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Error, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! warn {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Warn, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Warn, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! info {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Info, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Info, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! debug {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Debug, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Debug, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! trace {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Trace, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Trace, $($arg)+));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Warn);
+        assert!(Level::Info > LevelFilter::Warn);
+        assert!(!(Level::Debug <= LevelFilter::Off));
+        assert_eq!(Level::Warn, LevelFilter::Warn);
+    }
+
+    #[test]
+    fn macros_compile_and_respect_level() {
+        // No logger installed: must be a silent no-op at any level.
+        set_max_level(LevelFilter::Trace);
+        error!("e {}", 1);
+        warn!("w");
+        info!("i {x}", x = 3);
+        debug!("d");
+        trace!("t");
+    }
+
+    #[test]
+    fn level_display_matches_upstream() {
+        assert_eq!(Level::Warn.to_string(), "WARN");
+        assert_eq!(format!("{:5}", Level::Info), "INFO ");
+    }
+}

@@ -1,0 +1,106 @@
+//! Offline vendored facade for `once_cell`.
+//!
+//! Provides `once_cell::sync::OnceCell` with the constructors and
+//! accessors this repository uses, built on `std::sync::Once` (rather
+//! than `std::sync::OnceLock`, to keep the minimum toolchain low).
+
+pub mod sync {
+    use std::cell::UnsafeCell;
+    use std::sync::Once;
+
+    /// A thread-safe cell that can be written to at most once.
+    pub struct OnceCell<T> {
+        once: Once,
+        value: UnsafeCell<Option<T>>,
+    }
+
+    // Safety: `value` is only written inside `Once::call_once`, which
+    // synchronizes with (and happens-before) every subsequent
+    // `is_completed() == true` observation; after completion the value
+    // is only accessed through shared references.
+    unsafe impl<T: Send + Sync> Sync for OnceCell<T> {}
+    unsafe impl<T: Send> Send for OnceCell<T> {}
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell { once: Once::new(), value: UnsafeCell::new(None) }
+        }
+
+        /// The stored value, if initialization has completed.
+        pub fn get(&self) -> Option<&T> {
+            if self.once.is_completed() {
+                unsafe { (*self.value.get()).as_ref() }
+            } else {
+                None
+            }
+        }
+
+        /// Get the value, initializing it with `f` if the cell is empty.
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.once.call_once(|| unsafe {
+                *self.value.get() = Some(f());
+            });
+            unsafe { (*self.value.get()).as_ref().expect("OnceCell initialized") }
+        }
+
+        /// Set the value; fails (returning it back) if already set.
+        pub fn set(&self, value: T) -> Result<(), T> {
+            let mut slot = Some(value);
+            self.once.call_once(|| unsafe {
+                *self.value.get() = slot.take();
+            });
+            match slot {
+                None => Ok(()),
+                Some(v) => Err(v),
+            }
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            OnceCell::new()
+        }
+    }
+
+    impl<T: std::fmt::Debug> std::fmt::Debug for OnceCell<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            match self.get() {
+                Some(v) => f.debug_tuple("OnceCell").field(v).finish(),
+                None => f.write_str("OnceCell(<uninit>)"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::OnceCell;
+
+    #[test]
+    fn get_or_init_runs_once() {
+        let cell: OnceCell<u32> = OnceCell::new();
+        assert_eq!(cell.get(), None);
+        assert_eq!(*cell.get_or_init(|| 7), 7);
+        assert_eq!(*cell.get_or_init(|| 9), 7, "second init closure ignored");
+        assert_eq!(cell.get(), Some(&7));
+    }
+
+    #[test]
+    fn set_once() {
+        let cell: OnceCell<String> = OnceCell::new();
+        assert!(cell.set("a".into()).is_ok());
+        assert_eq!(cell.set("b".into()), Err("b".to_string()));
+        assert_eq!(cell.get().map(|s| s.as_str()), Some("a"));
+    }
+
+    #[test]
+    fn static_usage() {
+        static CELL: OnceCell<u64> = OnceCell::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| CELL.get_or_init(|| 42));
+            }
+        });
+        assert_eq!(CELL.get(), Some(&42));
+    }
+}
