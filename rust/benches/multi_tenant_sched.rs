@@ -35,7 +35,7 @@ fn run_once(tenants: &[(&'static str, Trace, u64)], mode: Mode, quantum_ns: u64)
     cluster.quantum_ns = quantum_ns;
     let mut jobs = Vec::new();
     for (wl, trace, _) in tenants {
-        let slot = cluster.spawn(mode, NodeId(0), wl, 512);
+        let slot = cluster.spawn(mode, NodeId(0), wl, 512).unwrap();
         jobs.push((slot, trace.clone()));
     }
     let reports = cluster.run_concurrent(jobs);
@@ -67,7 +67,7 @@ fn main() {
             let cfg =
                 ClusterConfig { node_frames: vec![NODE_FRAMES; 2], ..ClusterConfig::default() };
             let mut cluster = ElasticCluster::new(cfg);
-            let slot = cluster.spawn(Mode::Elastic, NodeId(0), wl, 512);
+            let slot = cluster.spawn(Mode::Elastic, NodeId(0), wl, 512).unwrap();
             let reports = cluster.run_concurrent(vec![(slot, trace.clone())]);
             assert_eq!(reports[0].digest, *truth, "{wl} diverged");
             std::hint::black_box(cluster.clock.now());

@@ -7,7 +7,7 @@ use super::{best_threshold, run_avg, run_once, run_once_with_policy, EvalConfig}
 use crate::mem::addr::AreaKind;
 use crate::os::system::{ElasticSystem, Mode, SystemConfig};
 use crate::util::stats::{fmt_bytes, fmt_ns};
-use crate::workloads::{by_name, ElasticMem, Scale, ALL};
+use crate::workloads::{by_name, by_name_seeded, ElasticMem, Scale, ALL};
 
 /// Table 1: tested algorithms and their (scaled) memory footprints.
 pub fn table1(cfg: &EvalConfig) -> Table {
@@ -401,12 +401,14 @@ pub fn multi_tenant(cfg: &EvalConfig) -> Table {
 
     // Record each tenant's trace + ground-truth digest once. Together
     // the tenants overcommit their shared home node 1.6x while fitting
-    // total cluster RAM (there is no disk swap to spill to).
+    // total cluster RAM (there is no disk swap to spill to). `--seed`
+    // reseeds the whole family reproducibly.
     let per_fp = (cfg.node_frames as u64 * 4096) * 16 / 10 / procs as u64;
     let mut tenants = Vec::new();
     for i in 0..procs {
         let wl = wls[i % wls.len()];
-        let mut w = by_name(wl, Scale::Bytes(per_fp)).unwrap();
+        let seed = crate::workloads::tenant_seed(cfg.seed, i);
+        let mut w = by_name_seeded(wl, Scale::Bytes(per_fp), seed).unwrap();
         let (trace, truth) = record_ground_truth(w.as_mut());
         tenants.push((wl, trace, truth));
     }
@@ -419,7 +421,7 @@ pub fn multi_tenant(cfg: &EvalConfig) -> Table {
         let mut cluster = ElasticCluster::new(ccfg);
         let mut jobs = Vec::new();
         for (wl, trace, _) in tenants.iter() {
-            let slot = cluster.spawn(mode, NodeId(0), wl, 512);
+            let slot = cluster.spawn(mode, NodeId(0), wl, 512).expect("node 0 is live");
             jobs.push((slot, trace.clone()));
         }
         let reports = cluster.run_concurrent(jobs);
@@ -446,6 +448,133 @@ pub fn multi_tenant(cfg: &EvalConfig) -> Table {
     t
 }
 
+/// Churn (membership control plane; closes ROADMAP "Node churn" +
+/// "Cross-node process placement"): three tenants placed by the
+/// least-loaded policy on a 2-node cluster; node 2 *joins* mid-run
+/// (frames stretchable immediately) and node 1 *leaves* mid-run via
+/// the drain protocol (pages pushed to survivors or declared lost and
+/// re-faulted from ground truth; execution force-jumped off first).
+/// Every surviving process's final digest is asserted against its
+/// DirectMem ground truth, and the table reports per-process eos vs
+/// nswap execution time under the identical churn schedule.
+pub fn churn(cfg: &EvalConfig) -> Table {
+    use crate::os::kernel::ClusterConfig;
+    use crate::os::membership::{ChurnEvent, ChurnOp, ChurnSchedule};
+    use crate::os::sched::{record_ground_truth, ElasticCluster, ProcRunReport};
+
+    let wls = ["linear", "count_sort", "table_scan"];
+    let frames = cfg.node_frames;
+    // Total footprint = 1.3x ONE node's RAM: overcommits the tenants'
+    // home nodes (forcing elasticity) while always fitting the two
+    // live nodes the cluster never drops below.
+    let per_fp = (frames as u64 * 4096 * 13) / 10 / wls.len() as u64;
+    let mut tenants = Vec::new();
+    for (i, wl) in wls.iter().enumerate() {
+        let seed = crate::workloads::tenant_seed(cfg.seed, i);
+        let mut w = by_name_seeded(wl, Scale::Bytes(per_fp), seed).unwrap();
+        let (trace, truth) = record_ground_truth(w.as_mut());
+        tenants.push((*wl, trace, truth));
+    }
+
+    let run = |mode: Mode,
+               schedule: Option<ChurnSchedule>|
+     -> (ElasticCluster, Vec<ProcRunReport>) {
+        let ccfg = ClusterConfig { node_frames: vec![frames; 2], ..ClusterConfig::default() };
+        let mut cluster = ElasticCluster::new(ccfg);
+        if let Some(s) = schedule {
+            cluster.set_churn(s);
+        }
+        let mut jobs = Vec::new();
+        for (wl, trace, _) in tenants.iter() {
+            // No explicit home: the default least-loaded placement
+            // policy picks from live registry members.
+            let slot = cluster.spawn_placed(mode, wl, 512).expect("live cluster placement");
+            jobs.push((slot, trace.clone()));
+        }
+        let reports = cluster.run_concurrent(jobs);
+        cluster.verify().expect("cluster invariants after churn run");
+        (cluster, reports)
+    };
+
+    // Calibrate the schedule per mode off an undisturbed run: join
+    // node2 at ~15% of that mode's makespan and retire node1 at ~30%.
+    // Up to the first event the churn run replays the calibration run
+    // bit-for-bit, so both events are guaranteed to land mid-run.
+    let churned = |mode: Mode| -> (ElasticCluster, Vec<ProcRunReport>) {
+        let (cal, _) = run(mode, None);
+        let makespan = cal.clock.now().max(1);
+        run(
+            mode,
+            Some(ChurnSchedule::new(vec![
+                ChurnEvent { at_ns: makespan * 15 / 100, op: ChurnOp::Join { node: 2, frames } },
+                ChurnEvent { at_ns: makespan * 30 / 100, op: ChurnOp::Leave { node: 1 } },
+            ])),
+        )
+    };
+    let (eos_cluster, eos) = churned(Mode::Elastic);
+    let (nswap_cluster, nswap) = churned(Mode::Nswap);
+    for (cl, label) in [(&eos_cluster, "eos"), (&nswap_cluster, "nswap")] {
+        let joins =
+            cl.churn_log.iter().filter(|a| matches!(a.op, ChurnOp::Join { .. })).count();
+        let leaves =
+            cl.churn_log.iter().filter(|a| matches!(a.op, ChurnOp::Leave { .. })).count();
+        assert!(joins >= 1, "{label}: no mid-run join was applied");
+        assert!(leaves >= 1, "{label}: no mid-run leave was applied");
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Churn: 3 procs, 2x{frames}-frame boot nodes; +node2@15%, -node1@30% of the \
+             calibrated makespan (per-process eos vs nswap under identical churn)"
+        ),
+        &[
+            "proc", "workload", "home", "nswap time", "eos time", "speedup", "evac", "lost",
+            "refaults",
+        ],
+    );
+    for (i, (wl, _, truth)) in tenants.iter().enumerate() {
+        assert_eq!(
+            eos[i].digest, *truth,
+            "{wl}: eos digest != DirectMem ground truth across join/leave"
+        );
+        assert_eq!(
+            nswap[i].digest, *truth,
+            "{wl}: nswap digest != DirectMem ground truth across join/leave"
+        );
+        let m = &eos[i].metrics;
+        t.row(vec![
+            format!("pid{}", eos[i].pid),
+            wl.to_string(),
+            eos[i].start_node.to_string(),
+            fmt_ns(nswap[i].cpu_ns as f64),
+            fmt_ns(eos[i].cpu_ns as f64),
+            fmt_x(nswap[i].cpu_ns as f64 / eos[i].cpu_ns.max(1) as f64),
+            m.pages_evacuated.to_string(),
+            m.pages_lost.to_string(),
+            m.refaults.to_string(),
+        ]);
+    }
+    // One summary row for the control plane itself.
+    let drains: Vec<String> = eos_cluster
+        .churn_log
+        .iter()
+        .filter_map(|a| a.drain)
+        .map(|d| format!("evac={} lost={} fjumps={}", d.evacuated, d.lost, d.forced_jumps))
+        .collect();
+    t.row(vec![
+        "churn".into(),
+        format!("{} events", eos_cluster.churn_log.len()),
+        "-".into(),
+        fmt_ns(nswap_cluster.churn_ns as f64),
+        fmt_ns(eos_cluster.churn_ns as f64),
+        "-".into(),
+        drains.join("; "),
+        "-".into(),
+        "-".into(),
+    ]);
+    t
+}
+
 /// Run everything, in paper order.
 pub fn run_all(cfg: &EvalConfig) {
     table1(cfg).emit("table1.txt");
@@ -461,6 +590,7 @@ pub fn run_all(cfg: &EvalConfig) {
     ablation_balance(cfg).emit("ablation_balance.txt");
     multinode(cfg).emit("multinode.txt");
     multi_tenant(cfg).emit("multi_tenant.txt");
+    churn(cfg).emit("churn.txt");
 }
 
 /// Dispatch by experiment name (CLI).
@@ -479,6 +609,7 @@ pub fn run_named(cfg: &EvalConfig, name: &str) -> bool {
         "ablation-balance" => ablation_balance(cfg).emit("ablation_balance.txt"),
         "multinode" => multinode(cfg).emit("multinode.txt"),
         "multi-tenant" | "multi_tenant" => multi_tenant(cfg).emit("multi_tenant.txt"),
+        "churn" => churn(cfg).emit("churn.txt"),
         "all" => run_all(cfg),
         _ => return false,
     }

@@ -9,7 +9,7 @@ pub mod report;
 use crate::os::policy::JumpPolicy;
 use crate::os::system::{ElasticSystem, Mode, SystemConfig};
 use crate::os::RunReport;
-use crate::workloads::{by_name, Scale};
+use crate::workloads::{by_name_seeded, Scale};
 
 /// Shared experiment parameters (scaled-down testbed; DESIGN.md §1).
 #[derive(Debug, Clone)]
@@ -27,6 +27,11 @@ pub struct EvalConfig {
     pub thresholds: Vec<u64>,
     /// Use the PJRT model policy instead of the counter (ablation).
     pub model_policy: bool,
+    /// Workload input seed override (CLI `--seed`): `None` keeps each
+    /// workload's fixed default, so results match historical runs;
+    /// `Some(s)` reseeds input generation for reproducible variation
+    /// (multi-tenant and churn runs derive per-tenant seeds from it).
+    pub seed: Option<u64>,
 }
 
 impl Default for EvalConfig {
@@ -38,6 +43,7 @@ impl Default for EvalConfig {
             repeats: 1,
             thresholds: vec![32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 32768],
             model_policy: false,
+            seed: None,
         }
     }
 }
@@ -65,7 +71,7 @@ impl EvalConfig {
 
 /// Run one (workload, mode, threshold) combination once.
 pub fn run_once(cfg: &EvalConfig, workload: &str, mode: Mode, threshold: u64) -> RunReport {
-    let mut w = by_name(workload, Scale::Bytes(self_footprint(cfg, workload)))
+    let mut w = by_name_seeded(workload, Scale::Bytes(self_footprint(cfg, workload)), cfg.seed)
         .unwrap_or_else(|| panic!("unknown workload {workload}"));
     let mut sys = ElasticSystem::new(cfg.system_config(mode), threshold);
     sys.run_workload(w.as_mut())
@@ -78,7 +84,7 @@ pub fn run_once_with_policy(
     mode: Mode,
     policy: Box<dyn JumpPolicy>,
 ) -> RunReport {
-    let mut w = by_name(workload, Scale::Bytes(self_footprint(cfg, workload)))
+    let mut w = by_name_seeded(workload, Scale::Bytes(self_footprint(cfg, workload)), cfg.seed)
         .unwrap_or_else(|| panic!("unknown workload {workload}"));
     let mut sys = ElasticSystem::with_policy(cfg.system_config(mode), policy);
     sys.run_workload(w.as_mut())

@@ -14,9 +14,10 @@ mod cli;
 use cli::Args;
 use elastic_os::eval::{experiments, EvalConfig};
 use elastic_os::mem::NodeId;
+use elastic_os::os::membership::{ChurnSchedule, Pinned, RoundRobin};
 use elastic_os::os::system::{ElasticSystem, Mode};
 use elastic_os::os::EwmaPolicy;
-use elastic_os::workloads::{by_name, Scale};
+use elastic_os::workloads::{by_name_seeded, Scale};
 
 fn main() {
     elastic_os::util::logging::init();
@@ -39,13 +40,21 @@ elasticos — ElasticOS: joint disaggregation of memory and computation
 
 USAGE:
   elasticos run --workload <name[,name...]> [--mode eos|nswap] [--threshold N]
-                [--frames F] [--footprint BYTES] [--nodes N] [--procs N] [--spread]
-                [--policy threshold|ewma|burst|model]
+                [--frames F] [--footprint BYTES] [--nodes N] [--procs N]
+                [--seed N] [--policy threshold|ewma|burst|model]
+                [--spread | --home N]            (multi-proc placement; default:
+                                                  least-loaded from live registry)
+                [--churn SPEC]                   (membership schedule, e.g.
+                                                  \"+2@5ms,-1@20ms\": node 2 joins
+                                                  at 5 ms sim time, node 1 leaves
+                                                  at 20 ms; \"+3:1024@1s\" joins
+                                                  node 3 with 1024 frames)
                 (--procs N > 1 time-slices N processes — cycling through the
                  workload list — on one cluster, contending for its frames;
                  --footprint is then the TOTAL across processes)
   elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
-                  ablation-policy|ablation-balance|multinode|multi-tenant|all> [--fast]
+                  ablation-policy|ablation-balance|multinode|multi-tenant|churn|all>
+                 [--fast] [--seed N]
   elasticos cluster [--pages N] [--threshold N]
   elasticos info
 
@@ -66,10 +75,19 @@ fn cmd_run(args: &Args) -> i32 {
     if procs > 1 {
         return cmd_run_multi(args, mode, threshold, frames, footprint, procs);
     }
+    // Cluster-scheduler flags only make sense with the multi-process
+    // scheduler; refuse rather than silently ignore the schedule.
+    for flag in ["churn", "spread", "home"] {
+        if args.has(flag) {
+            eprintln!("--{flag} requires --procs > 1 (the cluster scheduler)");
+            return 2;
+        }
+    }
 
     // A comma list with --procs 1 just runs the first workload.
     let workload = workload.split(',').next().unwrap_or("linear").trim().to_string();
-    let Some(mut w) = by_name(&workload, Scale::Bytes(footprint)) else {
+    let seed = args.flag_parse::<u64>("seed");
+    let Some(mut w) = by_name_seeded(&workload, Scale::Bytes(footprint), seed) else {
         eprintln!("unknown workload '{workload}'");
         return 2;
     };
@@ -152,12 +170,15 @@ fn cmd_run_multi(
         return 2;
     }
     let per_fp = (footprint / procs as u64).max(16 * 4096);
+    let seed = args.flag_parse::<u64>("seed");
 
-    // Record each tenant's trace + ground truth.
+    // Record each tenant's trace + ground truth (per-tenant seeds are
+    // decorrelated from --seed so the whole family reproduces).
     let mut tenants = Vec::new();
     for i in 0..procs {
         let wl = &workloads[i % workloads.len()];
-        let Some(mut w) = by_name(wl, Scale::Bytes(per_fp)) else {
+        let tseed = elastic_os::workloads::tenant_seed(seed, i);
+        let Some(mut w) = by_name_seeded(wl, Scale::Bytes(per_fp), tseed) else {
             eprintln!("unknown workload '{wl}'");
             return 2;
         };
@@ -167,30 +188,77 @@ fn cmd_run_multi(
 
     let cfg = ClusterConfig { node_frames: vec![frames; nodes], ..ClusterConfig::default() };
     let mut cluster = ElasticCluster::new(cfg);
+
+    // Placement: least-loaded from the live registry by default
+    // (announce-driven, like the paper's startup protocol); --spread
+    // round-robins the live members; --home N pins every tenant.
+    if args.has("spread") {
+        cluster.set_placement(Box::new(RoundRobin::default()));
+    } else if let Some(home) = args.flag_parse::<u8>("home") {
+        cluster.set_placement(Box::new(Pinned(NodeId(home))));
+    }
+
+    // Membership churn schedule (joins default to --frames frames).
+    if let Some(spec) = args.flag("churn") {
+        match ChurnSchedule::parse(&spec, frames) {
+            Ok(s) => cluster.set_churn(s),
+            Err(e) => {
+                eprintln!("bad --churn spec: {e}");
+                return 2;
+            }
+        }
+    }
+
     let mut jobs = Vec::new();
-    for (i, (wl, trace, _)) in tenants.iter().enumerate() {
-        // Default: every tenant starts on node 0 (the overloaded
-        // machine elasticizing onto the rest); --spread round-robins
-        // homes across nodes instead.
-        let home = if args.has("spread") { NodeId((i % nodes) as u8) } else { NodeId(0) };
-        let slot = match policy.as_deref() {
-            Some("ewma") => cluster.spawn_with_policy(
+    for (wl, trace, _) in tenants.iter() {
+        let spawned = match policy.as_deref() {
+            Some("ewma") => cluster.spawn_placed_with_policy(
                 mode,
-                home,
                 wl,
                 Box::new(EwmaPolicy::default_tuned()),
             ),
-            Some("burst") => cluster.spawn_with_policy(
+            Some("burst") => cluster.spawn_placed_with_policy(
                 mode,
-                home,
                 wl,
                 Box::new(elastic_os::os::BurstPolicy::default_tuned()),
             ),
-            _ => cluster.spawn(mode, home, wl, threshold),
+            _ => cluster.spawn_placed(mode, wl, threshold),
+        };
+        let slot = match spawned {
+            Ok(slot) => slot,
+            Err(e) => {
+                eprintln!("cannot place tenant '{wl}': {e}");
+                return 2;
+            }
         };
         jobs.push((slot, trace.clone()));
     }
     let reports = cluster.run_concurrent(jobs);
+
+    if cluster.churn_pending() > 0 {
+        eprintln!(
+            "warning: {} --churn event(s) never came due (scheduled past the {} makespan)",
+            cluster.churn_pending(),
+            elastic_os::util::stats::fmt_ns(cluster.clock.now() as f64),
+        );
+    }
+    for applied in &cluster.churn_log {
+        match applied.drain {
+            None => println!(
+                "churn: {:?} applied at {}",
+                applied.op,
+                elastic_os::util::stats::fmt_ns(applied.at_ns as f64)
+            ),
+            Some(d) => println!(
+                "churn: {:?} applied at {} (evacuated={} lost={} forced_jumps={})",
+                applied.op,
+                elastic_os::util::stats::fmt_ns(applied.at_ns as f64),
+                d.evacuated,
+                d.lost,
+                d.forced_jumps
+            ),
+        }
+    }
 
     let mut ok = true;
     for (report, (wl, _, truth)) in reports.iter().zip(tenants.iter()) {
@@ -242,6 +310,7 @@ fn cmd_eval(args: &Args) -> i32 {
     if let Some(r) = args.flag_parse::<u32>("repeats") {
         cfg.repeats = r;
     }
+    cfg.seed = args.flag_parse::<u64>("seed");
     if experiments::run_named(&cfg, &name) {
         0
     } else {

@@ -150,6 +150,21 @@ impl ClusterLru {
         }
     }
 
+    /// Unlink *every* page on `node`'s list and return the keys in
+    /// cold → hot order, leaving other nodes' lists untouched. This
+    /// pins the drop-set semantics of node retirement: the drain
+    /// protocol in `os::membership` unlinks exactly these (process,
+    /// page) entries — one at a time, via `move_page`/`remove`, so
+    /// each page can be migrated or stashed as it leaves — and the
+    /// tests below assert the set-level behavior the two paths share.
+    pub fn drain_node(&mut self, node: NodeId) -> Vec<PageKey> {
+        let keys: Vec<PageKey> = self.iter(node).collect();
+        for key in &keys {
+            self.remove(*key);
+        }
+        keys
+    }
+
     /// Iterate cold → hot over one node's list.
     pub fn iter(&self, node: NodeId) -> ClusterLruIter<'_> {
         ClusterLruIter { lru: self, cur: self.head[node.0 as usize] }
@@ -302,6 +317,34 @@ mod tests {
         assert_eq!(l.coldest(n(0)), None);
         l.rotate(n(0)); // no-op, no panic
         assert!(l.iter(n(0)).next().is_none());
+    }
+
+    #[test]
+    fn drain_node_removes_exactly_that_nodes_entries() {
+        // Satellite regression: node departure must drop exactly the
+        // departed node's (pid, page) entries, nothing else.
+        let mut l = ClusterLru::new();
+        l.push_hot(n(0), k(0, 1));
+        l.push_hot(n(1), k(0, 2));
+        l.push_hot(n(1), k(1, 2));
+        l.push_hot(n(2), k(1, 3));
+        let drained = l.drain_node(n(1));
+        assert_eq!(drained, vec![k(0, 2), k(1, 2)], "cold -> hot order");
+        assert!(l.is_empty(n(1)));
+        assert_eq!(l.list_of(k(0, 2)), None);
+        assert_eq!(l.list_of(k(1, 2)), None);
+        // survivors untouched, on their original lists
+        assert_eq!(l.list_of(k(0, 1)), Some(n(0)));
+        assert_eq!(l.list_of(k(1, 3)), Some(n(2)));
+        for node in 0..3 {
+            l.verify(n(node)).unwrap();
+        }
+        // draining an empty list is a no-op
+        assert!(l.drain_node(n(1)).is_empty());
+        // drained keys can re-enter on a surviving node (migration)
+        l.push_hot(n(0), k(0, 2));
+        assert_eq!(l.list_of(k(0, 2)), Some(n(0)));
+        l.verify(n(0)).unwrap();
     }
 
     #[test]

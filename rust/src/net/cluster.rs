@@ -96,6 +96,15 @@ impl Registry {
         }
     }
 
+    /// Remove a member immediately (a graceful `Leave` announce — the
+    /// node told us it is departing, no TTL wait needed). Returns true
+    /// if the node was known.
+    pub fn remove(&mut self, node: NodeId) -> bool {
+        let before = self.members.len();
+        self.members.retain(|m| m.info.node != node);
+        self.members.len() != before
+    }
+
     /// Drop members not seen within the TTL; returns how many expired.
     pub fn expire(&mut self, now_ns: u64) -> usize {
         let ttl = self.ttl_ns;
@@ -234,6 +243,57 @@ mod tests {
         assert_eq!(m.last_seen_ns, 900);
         assert_eq!(m.info.addr, "10.0.0.1", "addressing info untouched");
         assert_eq!(r.expire(1_800), 0, "heartbeat keeps the member alive");
+    }
+
+    #[test]
+    fn rejoin_after_expiry_refreshes_without_duplicating() {
+        // Satellite regression: expire -> re-announce must yield ONE
+        // member carrying the fresh resource figures, not a duplicate
+        // or a stale record.
+        let mut r = Registry::new(1_000);
+        r.observe(ann(1, 100), 0);
+        r.observe(ann(2, 200), 5_000);
+        assert_eq!(r.expire(5_000), 1, "node1 aged out");
+        assert!(r.get(NodeId(1)).is_none());
+        // node1 comes back with different resources (it rebooted with
+        // less RAM, say)
+        let rejoin = Announce { total_frames: 4096, free_frames: 4096, ..ann(1, 0) };
+        r.observe(rejoin, 6_000);
+        assert_eq!(r.len(), 2, "rejoin must not duplicate the member");
+        let m = r.get(NodeId(1)).unwrap();
+        assert_eq!(m.info.total_frames, 4096, "rejoin refreshes total RAM");
+        assert_eq!(m.info.free_frames, 4096, "rejoin refreshes free RAM");
+        assert_eq!(m.last_seen_ns, 6_000, "rejoin restarts the liveness clock");
+        assert_eq!(r.cluster_frames(), 8192 + 4096);
+    }
+
+    #[test]
+    fn rejoin_while_still_live_refreshes_in_place() {
+        // A re-announce arriving BEFORE expiry (e.g. quick restart
+        // within the TTL) must behave identically: refresh, never
+        // duplicate.
+        let mut r = Registry::new(10_000);
+        r.observe(ann(3, 500), 0);
+        let rejoin = Announce { total_frames: 1024, free_frames: 77, ..ann(3, 0) };
+        r.observe(rejoin, 100);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.get(NodeId(3)).unwrap().info.free_frames, 77);
+        assert_eq!(r.get(NodeId(3)).unwrap().info.total_frames, 1024);
+    }
+
+    #[test]
+    fn remove_drops_member_immediately() {
+        let mut r = Registry::new(u64::MAX);
+        r.observe(ann(1, 100), 0);
+        r.observe(ann(2, 200), 0);
+        assert!(r.remove(NodeId(1)), "known member removed");
+        assert!(!r.remove(NodeId(1)), "second remove is a no-op");
+        assert_eq!(r.len(), 1);
+        assert!(r.get(NodeId(1)).is_none());
+        // removed members can rejoin cleanly
+        r.observe(ann(1, 300), 10);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(NodeId(1)).unwrap().info.free_frames, 300);
     }
 
     #[test]

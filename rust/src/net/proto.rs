@@ -46,6 +46,20 @@ pub enum Msg {
     Done { digest: u64, stats: Vec<u8> },
     /// Orderly shutdown.
     Bye,
+    /// Membership: a node joins mid-run. Carries its encoded
+    /// [`Announce`](crate::net::cluster::Announce) — same payload as
+    /// the startup announce, so late joiners and boot-time members walk
+    /// the identical admission path (paper §4's announce protocol,
+    /// extended to steady state).
+    Join { announce: Vec<u8> },
+    /// Membership: a graceful departure announce. Every recipient drops
+    /// the node from its registry immediately instead of waiting for
+    /// TTL expiry.
+    Leave { node: NodeId },
+    /// Membership: drain progress from a departing node — how many
+    /// resident pages still await evacuation. `remaining == 0` means
+    /// the node is empty and its `Leave` follows.
+    Drain { node: NodeId, remaining: u32 },
 }
 
 impl Msg {
@@ -61,6 +75,9 @@ impl Msg {
             Msg::Sync { .. } => 7,
             Msg::Done { .. } => 8,
             Msg::Bye => 9,
+            Msg::Join { .. } => 10,
+            Msg::Leave { .. } => 11,
+            Msg::Drain { .. } => 12,
         }
     }
 
@@ -90,6 +107,12 @@ impl Msg {
                 e.u64(*digest);
                 e.bytes(stats);
             }
+            Msg::Join { announce } => e.bytes(announce),
+            Msg::Leave { node } => e.u8(node.0),
+            Msg::Drain { node, remaining } => {
+                e.u8(node.0);
+                e.u32(*remaining);
+            }
         }
         e.into_vec()
     }
@@ -109,6 +132,9 @@ impl Msg {
             7 => Msg::Sync { event: d.bytes(MAX_CKPT)?.to_vec() },
             8 => Msg::Done { digest: d.u64()?, stats: d.bytes(MAX_CKPT)?.to_vec() },
             9 => Msg::Bye,
+            10 => Msg::Join { announce: d.bytes(MAX_CKPT)?.to_vec() },
+            11 => Msg::Leave { node: NodeId(d.u8()?) },
+            12 => Msg::Drain { node: NodeId(d.u8()?), remaining: d.u32()? },
             tag => return Err(DecodeError::BadTag { tag, what: "Msg" }),
         };
         Ok(msg)
@@ -163,6 +189,38 @@ mod tests {
         round_trip(Msg::Sync { event: vec![2; 64] });
         round_trip(Msg::Done { digest: 0xDEADBEEF, stats: vec![] });
         round_trip(Msg::Bye);
+        round_trip(Msg::Join { announce: vec![9; 32] });
+        round_trip(Msg::Leave { node: NodeId(7) });
+        round_trip(Msg::Drain { node: NodeId(2), remaining: 4096 });
+    }
+
+    #[test]
+    fn join_carries_a_decodable_announce() {
+        // The Join payload is the same codec as the startup announce,
+        // end to end.
+        use crate::net::cluster::Announce;
+        let a = Announce {
+            node: NodeId(5),
+            addr: "10.0.0.5".into(),
+            port: 7005,
+            total_frames: 2048,
+            free_frames: 2048,
+        };
+        let m = Msg::Join { announce: a.encode() };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::Join { announce } => {
+                assert_eq!(Announce::decode(&announce).unwrap(), a);
+            }
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn membership_messages_are_small_control_traffic() {
+        // Leave/Drain are control datagrams: a handful of bytes, far
+        // below a page push — churn signalling must stay cheap.
+        assert!(Msg::Leave { node: NodeId(1) }.wire_size() < 16);
+        assert!(Msg::Drain { node: NodeId(1), remaining: u32::MAX }.wire_size() < 16);
     }
 
     #[test]

@@ -85,10 +85,17 @@ pub struct ProcSpec {
 /// Node-level state shared by every elasticized process on the cluster.
 pub struct NodeKernel {
     pub(crate) pools: Vec<FramePool>,
+    /// Liveness mask parallel to `pools`: node ids are stable for the
+    /// life of the cluster, so a departed node keeps its (empty) pool
+    /// slot and is masked out of every placement / stretch / push
+    /// decision instead of shifting everyone else's id.
+    pub(crate) live: Vec<bool>,
     pub(crate) lru: ClusterLru,
     pub(crate) manager: EosManager,
-    /// Cluster membership book from the startup announce protocol;
-    /// refreshed with current free-RAM figures as the simulation runs.
+    /// Cluster membership book from the announce protocol; refreshed
+    /// with current free-RAM figures as the simulation runs, extended
+    /// by mid-run `Join` announces and pruned by `Leave`s (the
+    /// membership control plane in [`crate::os::membership`]).
     pub(crate) registry: Registry,
     pub(crate) costs: CostModel,
     pub(crate) node_frames: Vec<u32>,
@@ -119,6 +126,7 @@ impl NodeKernel {
             );
         }
         NodeKernel {
+            live: vec![true; pools.len()],
             pools,
             lru: ClusterLru::new(),
             manager: EosManager::default(),
@@ -134,20 +142,67 @@ impl NodeKernel {
         }
     }
 
+    /// Number of node *slots* (live and departed; node ids are dense
+    /// indices into this range).
     pub fn node_count(&self) -> usize {
         self.pools.len()
+    }
+
+    /// Is this node currently a live cluster member?
+    pub fn is_live(&self, node: NodeId) -> bool {
+        self.live.get(node.0 as usize).copied().unwrap_or(false)
+    }
+
+    /// Number of live members.
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
     }
 
     pub fn free_frames(&self, node: NodeId) -> u32 {
         self.pools[node.0 as usize].free_frames()
     }
 
-    /// Refresh each member's advertised free RAM (the periodic
+    /// Frame-pool half of a node admission (the membership plane in
+    /// [`crate::os::membership`] drives this): bring a pool of `frames`
+    /// online at `slot` — appending a new slot, or re-arming a departed
+    /// one (a rejoin keeps the node id). The caller records the
+    /// announce in the registry.
+    pub(crate) fn add_node_pool(&mut self, slot: usize, frames: u32) {
+        debug_assert!(slot <= self.pools.len() && slot < MAX_NODES);
+        if slot == self.pools.len() {
+            self.pools.push(FramePool::new(frames));
+            self.node_frames.push(frames);
+            self.live.push(true);
+        } else {
+            debug_assert!(!self.live[slot], "admitting a node that is already live");
+            debug_assert_eq!(self.pools[slot].used_frames(), 0, "rejoining slot still holds pages");
+            self.pools[slot] = FramePool::new(frames);
+            self.node_frames[slot] = frames;
+            self.live[slot] = true;
+        }
+    }
+
+    /// Frame-pool half of a node retirement: mark the slot departed.
+    /// The drain protocol must already have emptied the pool.
+    pub(crate) fn remove_node_pool(&mut self, node: NodeId) {
+        let n = node.0 as usize;
+        debug_assert!(self.live[n], "retiring a node that is not live");
+        debug_assert_eq!(self.pools[n].used_frames(), 0, "retiring an undrained node");
+        debug_assert_eq!(self.lru.len(node), 0, "retiring a node with LRU entries");
+        self.live[n] = false;
+        self.registry.remove(node);
+    }
+
+    /// Refresh each live member's advertised free RAM (the periodic
     /// heartbeat re-announce of the startup protocol, driven by
-    /// simulated time). Every node announced at construction, so this
-    /// is allocation-free on the manager's monitoring path.
+    /// simulated time). Every live node announced at construction or
+    /// admission, so this is allocation-free on the manager's
+    /// monitoring path.
     pub(crate) fn refresh_registry(&mut self, now_ns: u64) {
         for (i, pool) in self.pools.iter().enumerate() {
+            if !self.live[i] {
+                continue;
+            }
             let refreshed =
                 self.registry.heartbeat(NodeId(i as u8), pool.capacity(), pool.free_frames(), now_ns);
             debug_assert!(refreshed, "node{i} missing from the announce registry");
@@ -156,10 +211,21 @@ impl NodeKernel {
 
     /// Build the manager's view of the cluster for one process: per-node
     /// totals and free frames from the registry, plus that process's
-    /// stretch mask.
+    /// stretch mask. The view always has one entry per node *slot*
+    /// (callers zip it positionally with per-node arrays); departed
+    /// slots advertise zero capacity, which every target picker
+    /// interprets as "never a candidate".
     pub(crate) fn view_for(&self, stretched: &[bool; MAX_NODES]) -> Vec<NodeInfo> {
         (0..self.pools.len())
             .map(|i| {
+                if !self.live[i] {
+                    return NodeInfo {
+                        id: NodeId(i as u8),
+                        total_frames: 0,
+                        free_frames: 0,
+                        stretched: false,
+                    };
+                }
                 let member = self.registry.get(NodeId(i as u8));
                 NodeInfo {
                     id: NodeId(i as u8),
@@ -209,6 +275,12 @@ pub struct ProcessCtx {
     /// Simulated ns this process spent actively executing (filled in by
     /// the scheduler; the facade leaves it at the full run time).
     pub cpu_ns: u64,
+    /// Pages declared lost when a node retired with no survivor that
+    /// had room: contents stashed against the owner's ground truth
+    /// (paper §4: the origin node can always re-derive its process's
+    /// state), re-faulted in on next touch. Point lookups only, so
+    /// iteration order never influences the simulation.
+    pub(crate) lost_pages: std::collections::HashMap<PageIdx, Vec<u8>>,
 }
 
 impl ProcessCtx {
@@ -234,6 +306,7 @@ impl ProcessCtx {
             meta: ProcessMeta::minimal(1000 + slot as u32, &spec.comm),
             regs: RegisterFile::default(),
             cpu_ns: 0,
+            lost_pages: std::collections::HashMap::new(),
             asp,
         }
     }
@@ -285,11 +358,21 @@ impl std::fmt::Debug for ProcessCtx {
 /// Consistency check over the whole cluster (tests): every process's
 /// page table is internally consistent, per-node LRU length and pool
 /// usage match the sum of resident pages, no two pages (of any process)
-/// alias a frame, and every process only occupies nodes it stretched to.
+/// alias a frame, every process only occupies nodes it stretched to,
+/// and departed nodes hold nothing — no pages, no LRU entries, no
+/// stretch-set membership, no executing process.
 pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Result<(), String> {
     let mut seen = std::collections::HashSet::new();
     for (slot, p) in procs.iter().enumerate() {
         p.pt.verify().map_err(|e| format!("pid{}: {e}", p.pid))?;
+        if !kernel.live[p.running.0 as usize] {
+            return Err(format!("pid{} executing on departed {}", p.pid, p.running));
+        }
+        for (i, &s) in p.stretched.iter().enumerate().take(kernel.pools.len()) {
+            if s && !kernel.live[i] {
+                return Err(format!("pid{} still stretched to departed node{i}", p.pid));
+            }
+        }
         for (idx, pte) in p.pt.iter_resident() {
             if !p.stretched[pte.node().0 as usize] {
                 return Err(format!(
@@ -343,7 +426,7 @@ pub(crate) struct Engine<'a> {
     pub cur: usize,
 }
 
-impl<'a> Engine<'a> {
+impl Engine<'_> {
     // ----- paged access (the ElasticMem surface) ---------------------------
 
     #[inline]
@@ -500,6 +583,16 @@ impl<'a> Engine<'a> {
             }
         };
         self.procs[cur].pt.map(idx, node, frame);
+        // Lost-page refault: if node churn declared this page lost, its
+        // contents come back from the owner's ground truth stash at
+        // pull cost (a remote re-fetch, not a zero fill).
+        if let Some(data) = self.procs[cur].lost_pages.remove(&idx) {
+            self.kernel.pools[node.0 as usize].frame_mut(frame).copy_from_slice(&data);
+            let (pull_req, page_msg) = (self.kernel.pull_req_bytes, self.kernel.page_msg_bytes);
+            self.procs[cur].metrics.refaults += 1;
+            self.procs[cur].metrics.bytes_pull += pull_req + page_msg;
+            self.clock.advance(self.kernel.costs.pull_ns(page_msg));
+        }
         if self.kernel.pin_stack {
             let addr = self.procs[cur].pt.vpn(idx).base_addr();
             if matches!(
@@ -572,6 +665,7 @@ impl<'a> Engine<'a> {
     pub fn stretch_to(&mut self, target: NodeId) {
         let cur = self.cur;
         let t = target.0 as usize;
+        debug_assert!(self.kernel.live[t], "stretch to departed {target}");
         if self.procs[cur].stretched[t] {
             return;
         }
@@ -695,7 +789,10 @@ impl<'a> Engine<'a> {
         }
     }
 
-    fn do_push(&mut self, owner: usize, idx: PageIdx, target: NodeId) {
+    /// Move + charge one push (shared by kswapd-style eviction and the
+    /// drain protocol in `os::membership`, so push cost accounting has
+    /// exactly one definition).
+    pub(crate) fn do_push(&mut self, owner: usize, idx: PageIdx, target: NodeId) {
         self.move_page(owner, idx, target, true);
         let bytes = self.kernel.page_msg_bytes;
         let p = &mut self.procs[owner];
@@ -710,20 +807,22 @@ impl<'a> Engine<'a> {
     fn any_push_target(&self, from: NodeId) -> bool {
         self.kernel.pools.iter().enumerate().any(|(i, pool)| {
             i != from.0 as usize
+                && self.kernel.live[i]
                 && pool.free_frames() > 0
                 && self.procs.iter().any(|p| p.stretched[i])
         })
     }
 
     /// Best push target for a victim owned by process `owner`: the
-    /// stretched node (other than `from`) with the most free frames.
-    /// Ties resolve to the highest node id, matching
-    /// `EosManager::pick_push_target`'s `max_by_key`.
-    fn push_target_for(&self, owner: usize, from: NodeId) -> Option<NodeId> {
+    /// live stretched node (other than `from`) with the most free
+    /// frames. Ties resolve to the highest node id, matching
+    /// `EosManager::pick_push_target`'s `max_by_key`. (Also the drain
+    /// protocol's per-victim survivor pick — see `os::membership`.)
+    pub(crate) fn push_target_for(&self, owner: usize, from: NodeId) -> Option<NodeId> {
         let stretched = &self.procs[owner].stretched;
         let mut best: Option<(u32, NodeId)> = None;
         for (i, pool) in self.kernel.pools.iter().enumerate() {
-            if i == from.0 as usize || !stretched[i] {
+            if i == from.0 as usize || !stretched[i] || !self.kernel.live[i] {
                 continue;
             }
             let free = pool.free_frames();

@@ -134,11 +134,14 @@ impl EosManager {
     }
 
     /// Choose the unstretched node with the most free RAM (paper:
-    /// nodes announce total and free RAM at startup).
+    /// nodes announce total and free RAM at startup). Members with
+    /// zero total frames are skipped: a departed node's slot is kept in
+    /// the cluster view for index stability but advertises no capacity,
+    /// and must never become a stretch target.
     pub fn pick_stretch_target(&self, nodes: &[NodeInfo], home: NodeId) -> Option<NodeId> {
         nodes
             .iter()
-            .filter(|n| n.id != home && !n.stretched)
+            .filter(|n| n.id != home && !n.stretched && n.total_frames > 0)
             .max_by_key(|n| n.free_frames)
             .map(|n| n.id)
     }
@@ -217,6 +220,25 @@ mod tests {
         let c = ProcCounters { task_pages: 2000, resident_pages: 900, maj_flt: 0 };
         let ns = nodes(&[10, 5], &[true, true]);
         assert_eq!(m.check(&c, &ns, NodeId(0)), ManagerAction::None);
+    }
+
+    #[test]
+    fn stretch_never_targets_departed_members() {
+        // A departed node's view slot advertises zero capacity; even
+        // when it is the only unstretched candidate, no directive fires.
+        let m = EosManager::default();
+        let ns = vec![
+            NodeInfo { id: NodeId(0), total_frames: 1000, free_frames: 10, stretched: true },
+            NodeInfo { id: NodeId(1), total_frames: 0, free_frames: 0, stretched: false },
+        ];
+        assert_eq!(m.pick_stretch_target(&ns, NodeId(0)), None);
+        // ...and a live candidate still wins over the departed slot.
+        let ns2 = vec![
+            NodeInfo { id: NodeId(0), total_frames: 1000, free_frames: 10, stretched: true },
+            NodeInfo { id: NodeId(1), total_frames: 0, free_frames: 0, stretched: false },
+            NodeInfo { id: NodeId(2), total_frames: 500, free_frames: 400, stretched: false },
+        ];
+        assert_eq!(m.pick_stretch_target(&ns2, NodeId(0)), Some(NodeId(2)));
     }
 
     #[test]

@@ -1,0 +1,826 @@
+//! The membership control plane: announce-driven placement, live node
+//! join/leave, and page-migration-on-churn.
+//!
+//! The paper's startup protocol (§4 "System Startup") is deliberately
+//! symmetric: "whenever a machine starts, it sends a message on a
+//! pre-configured port announcing its readiness to share its
+//! resources", and every participant records the newcomer. Nothing in
+//! that protocol says *when* a machine may start — so this module
+//! extends it from boot time to steady state. Each mechanism maps onto
+//! §4 as follows:
+//!
+//! * **Join** ([`ElasticCluster::admit_node`] / [`Msg::Join`]) — a
+//!   node's mid-run announce. The newcomer's frames become stretchable
+//!   *immediately*: it enters the [`Registry`] with its total/free RAM,
+//!   the next EOS-manager monitoring pass (paper Fig 3) sees it as the
+//!   most-free unstretched candidate and re-homes pressured processes
+//!   onto it via the ordinary SIGSTRETCH path. Rejoins keep their node
+//!   id and re-arm the departed pool slot (§4's "records the
+//!   information received about the newly-available node" — observe
+//!   refreshes, never duplicates).
+//! * **Leave** ([`ElasticCluster::retire_node`] / [`Msg::Leave`],
+//!   [`Msg::Drain`]) — the inverse announce the paper leaves as future
+//!   work. Retirement is a *drain protocol*: first any process whose
+//!   execution context lives on the departing node jumps away (a
+//!   forced jump — §3.4's mechanism under the control plane's policy),
+//!   then every resident page is pushed to a survivor picked per
+//!   victim from the owner's stretch set (§3.2's page balancing under
+//!   watermark pressure, widened by a forced stretch when no stretched
+//!   survivor has room). Pages with nowhere to go are *declared lost*
+//!   and stashed against the owner's ground truth; the next touch
+//!   re-faults them in at pull cost (§3.3), so correctness survives
+//!   even an overfull cluster.
+//! * **Placement** ([`PlacementPolicy`]) — §4's reason for announcing
+//!   total and free RAM is "so others can pick". Spawning no longer
+//!   takes an explicit home node: [`ElasticCluster::spawn_placed`]
+//!   asks a pluggable policy — least-loaded-by-free-frames from live
+//!   registry info ([`LeastLoaded`], the default), [`RoundRobin`], or
+//!   [`Pinned`] for tests — mirroring how the manager already picks
+//!   stretch targets.
+//! * **Churn schedules** ([`ChurnSchedule`]) — deterministic join/leave
+//!   scripts over simulated time (`+node@t`, `-node@t`), applied by the
+//!   scheduler between time slices so churn runs are bit-reproducible.
+//!
+//! Node ids are dense and stable: a departed node keeps its (empty)
+//! pool slot masked out by [`NodeKernel::is_live`], so no other node's
+//! id shifts and a rejoin can re-arm the same slot.
+
+use crate::mem::addr::{NodeId, MAX_NODES};
+use crate::net::cluster::Announce;
+use crate::net::proto::Msg;
+use crate::os::kernel::Engine;
+use crate::os::policy::JumpPolicy;
+use crate::os::sched::ElasticCluster;
+use crate::os::system::Mode;
+
+/// Errors from membership operations (spawn placement, join, leave).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MembershipError {
+    /// Spawn named a home node outside the cluster's slot range.
+    HomeOutOfRange { home: NodeId, nodes: usize },
+    /// The named node exists but has departed.
+    NodeDeparted(NodeId),
+    /// No live node is available for placement.
+    NoLiveNode,
+    /// The cluster already has `MAX_NODES` slots.
+    ClusterFull { max: usize },
+    /// Join announced a node id that would leave a hole in the dense
+    /// id space (next fresh slot is `next`).
+    NonContiguousId { node: NodeId, next: usize },
+    /// Join announced a node that is already a live member.
+    AlreadyLive(NodeId),
+    /// Refusing to retire the last live node.
+    LastLiveNode(NodeId),
+    /// Join announced too few frames to be a useful member (a frame
+    /// pool needs room for its watermark reserves).
+    TooFewFrames { node: NodeId, frames: u32, min: u32 },
+}
+
+impl std::fmt::Display for MembershipError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MembershipError::HomeOutOfRange { home, nodes } => {
+                write!(f, "home {home} out of range (cluster has {nodes} node slots)")
+            }
+            MembershipError::NodeDeparted(n) => write!(f, "{n} has departed the cluster"),
+            MembershipError::NoLiveNode => write!(f, "no live node available for placement"),
+            MembershipError::ClusterFull { max } => {
+                write!(f, "cluster already has the maximum of {max} node slots")
+            }
+            MembershipError::NonContiguousId { node, next } => {
+                write!(f, "join of {node} would leave an id hole (next fresh slot is {next})")
+            }
+            MembershipError::AlreadyLive(n) => write!(f, "{n} is already a live member"),
+            MembershipError::LastLiveNode(n) => {
+                write!(f, "refusing to retire {n}: it is the last live node")
+            }
+            MembershipError::TooFewFrames { node, frames, min } => {
+                write!(f, "join of {node} with {frames} frames refused (minimum is {min})")
+            }
+        }
+    }
+}
+
+/// Smallest frame pool a joining node may contribute (matches
+/// [`FramePool::new`](crate::mem::frame::FramePool::new)'s lower bound:
+/// below this the watermark reserves leave no usable frames).
+pub const MIN_NODE_FRAMES: u32 = 8;
+
+impl std::error::Error for MembershipError {}
+
+/// One live node as the placement policies see it: the announce-book
+/// figures plus how many processes already call it home.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeCand {
+    pub id: NodeId,
+    pub total_frames: u32,
+    pub free_frames: u32,
+    /// Processes currently homed on this node (spawn-time load signal;
+    /// at spawn time no frames are allocated yet, so free RAM alone
+    /// cannot separate empty nodes).
+    pub homed: u32,
+}
+
+/// Where should a new process start? Implementations see only live
+/// members (the registry's view), so placement is announce-driven by
+/// construction.
+pub trait PlacementPolicy {
+    /// Pick a home node from the live candidates (ordered by node id).
+    /// `None` means no candidate is acceptable.
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId>;
+
+    /// Human-readable name for reports.
+    fn describe(&self) -> String;
+}
+
+/// The default policy: the live member with the most free frames,
+/// ties broken by fewest homed processes, then lowest node id — §4's
+/// "announce total and free RAM so others can pick", applied to
+/// process placement exactly as the manager applies it to stretch
+/// targets.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LeastLoaded;
+
+impl PlacementPolicy for LeastLoaded {
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId> {
+        cands
+            .iter()
+            .max_by_key(|c| (c.free_frames, std::cmp::Reverse(c.homed), std::cmp::Reverse(c.id.0)))
+            .map(|c| c.id)
+    }
+
+    fn describe(&self) -> String {
+        "least-loaded".into()
+    }
+}
+
+/// Cycle through the live members in id order (tests and synthetic
+/// spread setups).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl PlacementPolicy for RoundRobin {
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId> {
+        if cands.is_empty() {
+            return None;
+        }
+        let c = cands[self.next % cands.len()];
+        self.next = (self.next + 1) % cands.len();
+        Some(c.id)
+    }
+
+    fn describe(&self) -> String {
+        "round-robin".into()
+    }
+}
+
+/// Always the given node (tests, and the compatibility path for
+/// explicit-home callers). Fails placement if the node is not live.
+#[derive(Debug, Clone, Copy)]
+pub struct Pinned(pub NodeId);
+
+impl PlacementPolicy for Pinned {
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId> {
+        cands.iter().find(|c| c.id == self.0).map(|c| c.id)
+    }
+
+    fn describe(&self) -> String {
+        format!("pinned({})", self.0)
+    }
+}
+
+/// One scripted membership change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnOp {
+    /// Node `node` joins contributing `frames` frames.
+    Join { node: u8, frames: u32 },
+    /// Node `node` leaves (drain protocol).
+    Leave { node: u8 },
+}
+
+/// A scripted membership change at a simulated instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub at_ns: u64,
+    pub op: ChurnOp,
+}
+
+/// A deterministic join/leave script over simulated time, applied by
+/// the scheduler between time slices. Spec grammar (CLI `--churn`):
+///
+/// ```text
+/// spec   := event ("," event)*
+/// event  := "+" node [":" frames] "@" time     a join
+///         | "-" node "@" time                  a leave
+/// time   := integer-or-decimal ["ns"|"us"|"ms"|"s"]   (bare = ns)
+/// ```
+///
+/// Example: `+2@5ms,-1:@20ms` is written `+2@5ms,-1@20ms` — node 2
+/// joins (with the default frame count) at 5 ms, node 1 leaves at
+/// 20 ms. `+3:1024@1s` joins node 3 with 1024 frames at 1 s.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnSchedule {
+    events: Vec<ChurnEvent>,
+    next: usize,
+}
+
+impl ChurnSchedule {
+    pub fn new(mut events: Vec<ChurnEvent>) -> ChurnSchedule {
+        // Stable: events at the same instant apply in authoring order.
+        events.sort_by_key(|e| e.at_ns);
+        ChurnSchedule { events, next: 0 }
+    }
+
+    /// Parse a `--churn` spec; `default_frames` is used for joins that
+    /// omit an explicit `:frames`.
+    pub fn parse(spec: &str, default_frames: u32) -> Result<ChurnSchedule, String> {
+        let mut events = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let join = part.starts_with('+');
+            if !join && !part.starts_with('-') {
+                return Err(format!(
+                    "churn event '{part}': must start with '+' (join) or '-' (leave)"
+                ));
+            }
+            let rest = &part[1..];
+            let (who, at) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("churn event '{part}': missing '@time'"))?;
+            let at_ns = parse_time_ns(at)?;
+            let op = if join {
+                let (node_s, frames) = match who.split_once(':') {
+                    Some((n, f)) => (
+                        n,
+                        f.parse::<u32>()
+                            .map_err(|_| format!("churn event '{part}': bad frame count '{f}'"))?,
+                    ),
+                    None => (who, default_frames),
+                };
+                let node = node_s
+                    .parse::<u8>()
+                    .map_err(|_| format!("churn event '{part}': bad node id '{node_s}'"))?;
+                ChurnOp::Join { node, frames }
+            } else {
+                let node = who
+                    .parse::<u8>()
+                    .map_err(|_| format!("churn event '{part}': bad node id '{who}'"))?;
+                ChurnOp::Leave { node }
+            };
+            events.push(ChurnEvent { at_ns, op });
+        }
+        Ok(ChurnSchedule::new(events))
+    }
+
+    /// The next event due at or before `now_ns`, if any (consumed).
+    pub fn pop_due(&mut self, now_ns: u64) -> Option<ChurnEvent> {
+        if self.next < self.events.len() && self.events[self.next].at_ns <= now_ns {
+            let ev = self.events[self.next];
+            self.next += 1;
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    /// Events not yet applied.
+    pub fn pending(&self) -> usize {
+        self.events.len() - self.next
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+/// Parse a simulated-time literal: `250`, `250ns`, `3us`, `2.5ms`, `1s`.
+fn parse_time_ns(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let (num, mult) = if let Some(n) = s.strip_suffix("ns") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1_000)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000_000)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000_000)
+    } else {
+        (s, 1)
+    };
+    let num = num.trim();
+    if num.contains('.') {
+        num.parse::<f64>()
+            .ok()
+            .filter(|v| *v >= 0.0 && v.is_finite())
+            .map(|v| (v * mult as f64) as u64)
+            .ok_or_else(|| format!("bad time literal '{s}'"))
+    } else {
+        num.parse::<u64>()
+            .ok()
+            .and_then(|v| v.checked_mul(mult))
+            .ok_or_else(|| format!("bad time literal '{s}'"))
+    }
+}
+
+/// What retiring one node did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DrainReport {
+    /// Pages migrated to survivors.
+    pub evacuated: u32,
+    /// Pages declared lost (stashed; re-faulted on next touch).
+    pub lost: u32,
+    /// Processes whose execution was forced off the departing node.
+    pub forced_jumps: u32,
+    /// Stretches the drain issued to widen an owner's survivor set.
+    pub forced_stretches: u32,
+}
+
+/// A churn event the scheduler actually applied (with its outcome).
+#[derive(Debug, Clone, Copy)]
+pub struct AppliedChurn {
+    /// Simulated instant of application (>= the scripted `at_ns`).
+    pub at_ns: u64,
+    pub op: ChurnOp,
+    /// Drain outcome for leaves; `None` for joins.
+    pub drain: Option<DrainReport>,
+}
+
+// ----- engine-level membership operations ---------------------------------
+//
+// These are the node-kernel halves of join/leave, implemented against
+// the same borrow bundle as the four primitives so forced stretches and
+// jumps reuse the primitive code (and charge the same simulated costs).
+
+impl Engine<'_> {
+    /// Admit `node` contributing `frames` frames, effective
+    /// immediately. `node` must be the next fresh slot (a new machine)
+    /// or a departed slot (a rejoin, keeping its id).
+    pub(crate) fn admit_node(
+        &mut self,
+        node: NodeId,
+        frames: u32,
+    ) -> Result<NodeId, MembershipError> {
+        let slot = node.0 as usize;
+        let n_slots = self.kernel.node_count();
+        if slot < n_slots && self.kernel.is_live(node) {
+            return Err(MembershipError::AlreadyLive(node));
+        }
+        if slot > n_slots {
+            return Err(MembershipError::NonContiguousId { node, next: n_slots });
+        }
+        if slot >= MAX_NODES {
+            return Err(MembershipError::ClusterFull { max: MAX_NODES });
+        }
+        if frames < MIN_NODE_FRAMES {
+            return Err(MembershipError::TooFewFrames { node, frames, min: MIN_NODE_FRAMES });
+        }
+        self.kernel.add_node_pool(slot, frames);
+        let now = self.clock.now();
+        let announce = Announce {
+            node,
+            addr: format!("sim://node{}", node.0),
+            port: 7000 + node.0 as u16,
+            total_frames: frames,
+            free_frames: frames,
+        };
+        // The join announce reaches every existing live member.
+        let peers = (self.kernel.live_count() - 1) as u64;
+        let bytes = Msg::Join { announce: announce.encode() }.wire_size() * peers;
+        self.kernel.registry.observe(announce, now);
+        self.clock.advance(self.kernel.costs.wire_ns(bytes.max(1)));
+        log::info!(
+            "{node} joined with {frames} frames at {} ({} live members)",
+            crate::util::stats::fmt_ns(now as f64),
+            self.kernel.live_count()
+        );
+        Ok(node)
+    }
+
+    /// Retire `node` via the drain protocol: force execution off it,
+    /// push its resident pages to survivors (widening stretch sets
+    /// where needed), declare the rest lost, then drop it from the
+    /// membership book.
+    pub(crate) fn retire_node(&mut self, node: NodeId) -> Result<DrainReport, MembershipError> {
+        let slot = node.0 as usize;
+        if slot >= self.kernel.node_count() || !self.kernel.is_live(node) {
+            return Err(MembershipError::NodeDeparted(node));
+        }
+        if self.kernel.live_count() <= 1 {
+            return Err(MembershipError::LastLiveNode(node));
+        }
+        let mut report = DrainReport::default();
+
+        // 1. Execution first (the paper's ordering pitfall in reverse:
+        // jumping flushes state sync, so pages that follow always land
+        // behind a consistent shell). Any process executing on the
+        // departing node jumps to a survivor, stretching first if the
+        // departing node was its only foothold.
+        for slot_i in 0..self.procs.len() {
+            if self.procs[slot_i].running != node {
+                continue;
+            }
+            self.cur = slot_i;
+            let refuge = match self.stretched_refuge(slot_i, node) {
+                Some(t) => t,
+                None => {
+                    let t = self
+                        .best_live_node(node)
+                        .expect("live_count >= 2 guarantees a refuge");
+                    self.stretch_to(t);
+                    report.forced_stretches += 1;
+                    t
+                }
+            };
+            self.jump_to(refuge);
+            self.procs[slot_i].metrics.forced_jumps += 1;
+            report.forced_jumps += 1;
+        }
+
+        // 2. Page drain, coldest first (the same order kswapd would
+        // have evicted them). Each victim goes to the best live node in
+        // its owner's stretch set with room; owners with no such
+        // survivor are stretched wider; pages with nowhere to go are
+        // declared lost against the owner's ground truth.
+        let mut since_progress_msg = 0u32;
+        while let Some(key) = self.kernel.lru.coldest(node) {
+            let owner = key.proc as usize;
+            let target = match self.push_target_for(owner, node) {
+                Some(t) => Some(t),
+                None => match self.widen_target(owner, node) {
+                    Some(t) => {
+                        self.cur = owner;
+                        self.stretch_to(t);
+                        report.forced_stretches += 1;
+                        Some(t)
+                    }
+                    None => None,
+                },
+            };
+            match target {
+                Some(t) => {
+                    self.do_push(owner, key.idx, t);
+                    self.procs[owner].metrics.pages_evacuated += 1;
+                    report.evacuated += 1;
+                }
+                None => {
+                    let pte = self.procs[owner].pt.get(key.idx);
+                    let data = self.kernel.pools[slot].frame(pte.frame()).to_vec();
+                    self.kernel.pools[slot].dealloc(pte.frame());
+                    self.kernel.lru.remove(key);
+                    self.procs[owner].pt.unmap(key.idx);
+                    let vpn = self.procs[owner].pt.vpn(key.idx);
+                    self.procs[owner].tlb.invalidate(vpn);
+                    self.procs[owner].lost_pages.insert(key.idx, data);
+                    self.procs[owner].metrics.pages_lost += 1;
+                    report.lost += 1;
+                }
+            }
+            // Drain progress announces every 64 pages (control traffic
+            // so survivors can track the retirement).
+            since_progress_msg += 1;
+            if since_progress_msg == 64 {
+                since_progress_msg = 0;
+                let remaining = self.kernel.lru.len(node);
+                let bytes = Msg::Drain { node, remaining }.wire_size();
+                self.clock.advance(self.kernel.costs.wire_ns(bytes));
+            }
+        }
+
+        // 3. Membership teardown: no process may keep a foothold on the
+        // departed node, and the goodbye announce reaches all survivors.
+        for p in self.procs.iter_mut() {
+            p.stretched[slot] = false;
+        }
+        self.kernel.remove_node_pool(node);
+        let peers = self.kernel.live_count() as u64;
+        let bytes = Msg::Leave { node }.wire_size() * peers;
+        self.clock.advance(self.kernel.costs.wire_ns(bytes.max(1)));
+        log::info!(
+            "{node} left at {}: {} pages evacuated, {} lost, {} forced jumps",
+            crate::util::stats::fmt_ns(self.clock.now() as f64),
+            report.evacuated,
+            report.lost,
+            report.forced_jumps
+        );
+        Ok(report)
+    }
+
+    /// Best live stretched node (excluding `avoid`) for process `slot`
+    /// to execute on — free frames preferred but not required.
+    fn stretched_refuge(&self, slot: usize, avoid: NodeId) -> Option<NodeId> {
+        let mut best: Option<(u32, NodeId)> = None;
+        for (i, pool) in self.kernel.pools.iter().enumerate() {
+            if i == avoid.0 as usize || !self.kernel.live[i] || !self.procs[slot].stretched[i] {
+                continue;
+            }
+            let free = pool.free_frames();
+            if best.map(|(bf, _)| free >= bf).unwrap_or(true) {
+                best = Some((free, NodeId(i as u8)));
+            }
+        }
+        best.map(|(_, n)| n)
+    }
+
+    /// Best live node (excluding `avoid`) by free frames, regardless of
+    /// any stretch set.
+    fn best_live_node(&self, avoid: NodeId) -> Option<NodeId> {
+        let mut best: Option<(u32, NodeId)> = None;
+        for (i, pool) in self.kernel.pools.iter().enumerate() {
+            if i == avoid.0 as usize || !self.kernel.live[i] {
+                continue;
+            }
+            let free = pool.free_frames();
+            if best.map(|(bf, _)| free >= bf).unwrap_or(true) {
+                best = Some((free, NodeId(i as u8)));
+            }
+        }
+        best.map(|(_, n)| n)
+    }
+
+    /// Best live node `owner` has *not* stretched to (excluding
+    /// `avoid`) with room — the drain's stretch-widening target.
+    fn widen_target(&self, owner: usize, avoid: NodeId) -> Option<NodeId> {
+        let mut best: Option<(u32, NodeId)> = None;
+        for (i, pool) in self.kernel.pools.iter().enumerate() {
+            if i == avoid.0 as usize || !self.kernel.live[i] || self.procs[owner].stretched[i] {
+                continue;
+            }
+            let free = pool.free_frames();
+            if free == 0 {
+                continue;
+            }
+            if best.map(|(bf, _)| free >= bf).unwrap_or(true) {
+                best = Some((free, NodeId(i as u8)));
+            }
+        }
+        best.map(|(_, n)| n)
+    }
+}
+
+// ----- cluster-level membership API ---------------------------------------
+
+impl ElasticCluster {
+    /// Swap the placement policy consulted by [`Self::spawn_placed`].
+    pub fn set_placement(&mut self, policy: Box<dyn PlacementPolicy>) {
+        self.placement = policy;
+    }
+
+    /// Install a churn schedule; the scheduler applies due events
+    /// between time slices (see [`Self::run_concurrent`]).
+    pub fn set_churn(&mut self, schedule: ChurnSchedule) {
+        self.churn = schedule;
+    }
+
+    /// Scripted churn events that have not (yet) applied — after a run
+    /// completes, a nonzero count means part of the schedule never came
+    /// due (e.g. an event timed past the makespan).
+    pub fn churn_pending(&self) -> usize {
+        self.churn.pending()
+    }
+
+    /// Spawn with the cluster's placement policy choosing the home node
+    /// from live members (paper §4: announce so others can pick).
+    pub fn spawn_placed(
+        &mut self,
+        mode: Mode,
+        comm: &str,
+        threshold: u64,
+    ) -> Result<usize, MembershipError> {
+        let home = self.place()?;
+        self.spawn(mode, home, comm, threshold)
+    }
+
+    /// [`Self::spawn_placed`] with an explicit jumping policy.
+    pub fn spawn_placed_with_policy(
+        &mut self,
+        mode: Mode,
+        comm: &str,
+        policy: Box<dyn JumpPolicy>,
+    ) -> Result<usize, MembershipError> {
+        let home = self.place()?;
+        self.spawn_with_policy(mode, home, comm, policy)
+    }
+
+    /// Consult the placement policy over the current live membership.
+    pub fn place(&mut self) -> Result<NodeId, MembershipError> {
+        let cands = self.placement_candidates();
+        self.placement.pick(&cands).ok_or(MembershipError::NoLiveNode)
+    }
+
+    /// Live members as placement candidates: announce-book resource
+    /// figures (refreshed to now) plus current homed-process counts.
+    pub(crate) fn placement_candidates(&mut self) -> Vec<NodeCand> {
+        let now = self.clock.now();
+        self.kernel.refresh_registry(now);
+        (0..self.kernel.node_count())
+            .filter(|&i| self.kernel.live[i])
+            .map(|i| {
+                let id = NodeId(i as u8);
+                let member = self.kernel.registry.get(id);
+                NodeCand {
+                    id,
+                    total_frames: member
+                        .map(|m| m.info.total_frames)
+                        .unwrap_or_else(|| self.kernel.pools[i].capacity()),
+                    free_frames: member
+                        .map(|m| m.info.free_frames)
+                        .unwrap_or_else(|| self.kernel.pools[i].free_frames()),
+                    homed: self.procs.iter().filter(|p| p.home() == id).count() as u32,
+                }
+            })
+            .collect()
+    }
+
+    /// Admit a node mid-run (new frames stretchable immediately), then
+    /// run one manager monitoring pass so pressured processes re-home
+    /// onto the newcomer right away. Control-plane time (the announce
+    /// multicast) is charged to [`Self::churn_ns`]; stretches the
+    /// monitoring pass triggers are borne by their processes, as in
+    /// every other pass. This direct-API form monitors the whole
+    /// process table; the scheduler's churn path uses
+    /// [`Self::admit_node_for`] so exited tenants stay unmonitored and
+    /// uncharged.
+    pub fn admit_node(&mut self, node: NodeId, frames: u32) -> Result<NodeId, MembershipError> {
+        let all: Vec<usize> = (0..self.procs.len()).collect();
+        self.admit_node_for(node, frames, &all)
+    }
+
+    /// [`Self::admit_node`], restricting the post-join monitoring pass
+    /// to `monitor` (the scheduler passes its live process slots).
+    pub(crate) fn admit_node_for(
+        &mut self,
+        node: NodeId,
+        frames: u32,
+        monitor: &[usize],
+    ) -> Result<NodeId, MembershipError> {
+        let t0 = self.clock.now();
+        let admitted = Engine {
+            kernel: &mut self.kernel,
+            clock: &mut self.clock,
+            procs: &mut self.procs,
+            cur: 0,
+        }
+        .admit_node(node, frames)?;
+        self.churn_ns += self.clock.now() - t0;
+        self.manager_pass_for(monitor);
+        Ok(admitted)
+    }
+
+    /// Retire a node mid-run via the drain protocol. All drain time
+    /// (forced jumps/stretches, page pushes, announces) is charged to
+    /// [`Self::churn_ns`] — it is control-plane work, not any single
+    /// process's execution.
+    pub fn retire_node(&mut self, node: NodeId) -> Result<DrainReport, MembershipError> {
+        let t0 = self.clock.now();
+        let report = Engine {
+            kernel: &mut self.kernel,
+            clock: &mut self.clock,
+            procs: &mut self.procs,
+            cur: 0,
+        }
+        .retire_node(node)?;
+        self.churn_ns += self.clock.now() - t0;
+        Ok(report)
+    }
+
+    /// Apply every scripted churn event due at the current simulated
+    /// time; post-join monitoring passes cover only the `monitor`
+    /// slots (the scheduler's still-live processes). Invalid events
+    /// (e.g. retiring the last live node) are logged and skipped, not
+    /// applied.
+    pub(crate) fn apply_due_churn(&mut self, monitor: &[usize]) {
+        loop {
+            let now = self.clock.now();
+            let Some(ev) = self.churn.pop_due(now) else { break };
+            match ev.op {
+                ChurnOp::Join { node, frames } => match self.admit_node_for(
+                    NodeId(node),
+                    frames,
+                    monitor,
+                ) {
+                    Ok(_) => {
+                        self.churn_log.push(AppliedChurn { at_ns: now, op: ev.op, drain: None });
+                    }
+                    Err(e) => log::warn!("churn join of node{node} skipped: {e}"),
+                },
+                ChurnOp::Leave { node } => match self.retire_node(NodeId(node)) {
+                    Ok(drain) => {
+                        self.churn_log.push(AppliedChurn {
+                            at_ns: now,
+                            op: ev.op,
+                            drain: Some(drain),
+                        });
+                    }
+                    Err(e) => log::warn!("churn leave of node{node} skipped: {e}"),
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: u8, free: u32, homed: u32) -> NodeCand {
+        NodeCand { id: NodeId(id), total_frames: 1024, free_frames: free, homed }
+    }
+
+    #[test]
+    fn least_loaded_prefers_most_free_then_fewest_homed() {
+        let mut p = LeastLoaded;
+        assert_eq!(p.pick(&[cand(0, 100, 0), cand(1, 900, 3)]), Some(NodeId(1)));
+        // equal free: fewest homed wins
+        assert_eq!(p.pick(&[cand(0, 500, 2), cand(1, 500, 0)]), Some(NodeId(1)));
+        // full tie: lowest id wins
+        assert_eq!(p.pick(&[cand(0, 500, 1), cand(1, 500, 1)]), Some(NodeId(0)));
+        assert_eq!(p.pick(&[]), None);
+    }
+
+    #[test]
+    fn least_loaded_spreads_fresh_tenants() {
+        // On an empty cluster free frames tie, so successive spawns
+        // must spread by homed count instead of piling on node 0.
+        let mut p = LeastLoaded;
+        let mut homed = [0u32; 3];
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let cands: Vec<NodeCand> =
+                (0..3).map(|i| cand(i as u8, 1000, homed[i])).collect();
+            let pick = p.pick(&cands).unwrap();
+            homed[pick.0 as usize] += 1;
+            order.push(pick.0);
+        }
+        assert_eq!(order, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_cycles_live_members() {
+        let mut p = RoundRobin::default();
+        let cands = [cand(0, 1, 0), cand(2, 1, 0), cand(5, 1, 0)];
+        let picks: Vec<u8> = (0..5).map(|_| p.pick(&cands).unwrap().0).collect();
+        assert_eq!(picks, vec![0, 2, 5, 0, 2]);
+        assert_eq!(p.pick(&[]), None);
+    }
+
+    #[test]
+    fn pinned_requires_liveness() {
+        let mut p = Pinned(NodeId(1));
+        assert_eq!(p.pick(&[cand(0, 1, 0), cand(1, 1, 0)]), Some(NodeId(1)));
+        assert_eq!(p.pick(&[cand(0, 1, 0)]), None, "pinned node not live");
+    }
+
+    #[test]
+    fn churn_spec_round_trips() {
+        let s = ChurnSchedule::parse("+2@5ms, -1@20ms, +3:1024@1s", 512).unwrap();
+        assert_eq!(s.len(), 3);
+        let mut s = s;
+        assert_eq!(s.pop_due(4_999_999), None);
+        assert_eq!(
+            s.pop_due(5_000_000),
+            Some(ChurnEvent { at_ns: 5_000_000, op: ChurnOp::Join { node: 2, frames: 512 } })
+        );
+        assert_eq!(
+            s.pop_due(25_000_000),
+            Some(ChurnEvent { at_ns: 20_000_000, op: ChurnOp::Leave { node: 1 } })
+        );
+        assert_eq!(s.pop_due(999_999_999), None, "join at 1s not due yet");
+        assert_eq!(
+            s.pop_due(1_000_000_000),
+            Some(ChurnEvent { at_ns: 1_000_000_000, op: ChurnOp::Join { node: 3, frames: 1024 } })
+        );
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn churn_spec_sorts_and_accepts_time_units() {
+        let s = ChurnSchedule::parse("-1@2s,+2@500, +3@2.5us", 64).unwrap();
+        let mut s = s;
+        // sorted by time: 500ns, 2500ns, 2s
+        assert_eq!(s.pop_due(u64::MAX).unwrap().at_ns, 500);
+        assert_eq!(s.pop_due(u64::MAX).unwrap().at_ns, 2_500);
+        assert_eq!(s.pop_due(u64::MAX).unwrap().at_ns, 2_000_000_000);
+    }
+
+    #[test]
+    fn churn_spec_rejects_malformed_events() {
+        for bad in ["2@5ms", "+2", "+x@5ms", "-1@", "+1:abc@5ms", "+1@5parsecs"] {
+            assert!(ChurnSchedule::parse(bad, 64).is_err(), "'{bad}' must be rejected");
+        }
+        assert!(ChurnSchedule::parse("", 64).unwrap().is_empty(), "empty spec = no churn");
+    }
+
+    #[test]
+    fn membership_errors_display() {
+        // Display must name the node so CLI users can act on it.
+        let e = MembershipError::LastLiveNode(NodeId(3));
+        assert!(format!("{e}").contains('3'));
+        let e = MembershipError::HomeOutOfRange { home: NodeId(9), nodes: 2 };
+        assert!(format!("{e}").contains('9'));
+    }
+}

@@ -29,6 +29,19 @@ pub struct Metrics {
     pub sync_events: u64,
     pub policy_evals: u64,
 
+    // churn counters (membership control plane)
+    /// Pages of this process evacuated off a retiring node by the
+    /// drain protocol.
+    pub pages_evacuated: u64,
+    /// Pages declared lost when a retiring node had no survivor with
+    /// room (recovered later via [`Self::refaults`]).
+    pub pages_lost: u64,
+    /// Lost pages re-faulted back in from the owner's ground truth.
+    pub refaults: u64,
+    /// Jumps forced by node retirement (the process's execution context
+    /// lived on the departing node), also counted in [`Self::jumps`].
+    pub forced_jumps: u64,
+
     // traffic, in bytes on the wire (message-encoded sizes)
     pub bytes_pull: u64,
     pub bytes_push: u64,

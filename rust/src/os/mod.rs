@@ -1,10 +1,13 @@
 //! The ElasticOS coordinator: manager, pager, policies, metrics, and
 //! the engine composing the four primitives — split into a shared
 //! node-kernel + per-process contexts ([`kernel`]), a single-process
-//! facade ([`system`]), and a multi-process scheduler ([`sched`]).
+//! facade ([`system`]), a multi-process scheduler ([`sched`]), and the
+//! membership control plane for announce-driven placement and live
+//! node join/leave ([`membership`]).
 
 pub mod kernel;
 pub mod manager;
+pub mod membership;
 pub mod metrics;
 pub mod pager;
 pub mod policy;
@@ -12,6 +15,10 @@ pub mod sched;
 pub mod system;
 
 pub use kernel::{ClusterConfig, NodeKernel, ProcSpec, ProcessCtx};
+pub use membership::{
+    AppliedChurn, ChurnEvent, ChurnOp, ChurnSchedule, DrainReport, LeastLoaded, MembershipError,
+    NodeCand, Pinned, PlacementPolicy, RoundRobin,
+};
 pub use metrics::{Metrics, RunReport};
 pub use policy::{BurstPolicy, Decision, EwmaPolicy, JumpPolicy, NeverJump, ThresholdPolicy};
 pub use sched::{ElasticCluster, ProcRunReport};

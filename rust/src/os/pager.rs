@@ -19,11 +19,16 @@
 //! processes exercise identical fault paths); this module binds it to
 //! the single-process [`ElasticSystem`] facade.
 //!
-//! Safety of the raw frame pointers: frame pools are allocated once at
-//! construction and never resized, so `*mut u8` into them stay valid
-//! for the kernel's lifetime; entries are invalidated whenever their
-//! page moves (push/pull) and wholesale on jumps, and the system is
-//! single-threaded, so no pointer is dereferenced after its page moved.
+//! Safety of the raw frame pointers: a frame pool's backing buffer is
+//! allocated at pool construction and never resized, so `*mut u8` into
+//! it stays valid for the pool's lifetime; entries are invalidated
+//! whenever their page moves (push/pull/drain) and wholesale on jumps,
+//! and the system is single-threaded, so no pointer is dereferenced
+//! after its page moved. Membership churn preserves this: admitting a
+//! node appends or replaces a *pool struct* (the `Vec<FramePool>` may
+//! move, but heap buffers do not), and a pool is only ever replaced on
+//! a rejoin — whose slot the drain protocol previously emptied with
+//! every affected TLB entry invalidated or flushed.
 
 use crate::mem::addr::AreaKind;
 use crate::os::system::ElasticSystem;

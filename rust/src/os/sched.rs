@@ -25,6 +25,9 @@
 
 use crate::mem::addr::NodeId;
 use crate::os::kernel::{verify_cluster, ClusterConfig, Engine, NodeKernel, ProcSpec, ProcessCtx};
+use crate::os::membership::{
+    AppliedChurn, ChurnSchedule, LeastLoaded, MembershipError, PlacementPolicy,
+};
 use crate::os::metrics::Metrics;
 use crate::os::policy::{JumpPolicy, ThresholdPolicy};
 use crate::os::system::Mode;
@@ -87,6 +90,19 @@ pub struct ElasticCluster {
     pub(crate) procs: Vec<ProcessCtx>,
     /// Round-robin time slice in simulated ns.
     pub quantum_ns: u64,
+    /// Placement policy consulted by `spawn_placed` (default:
+    /// least-loaded-by-free-frames over live registry members).
+    pub(crate) placement: Box<dyn PlacementPolicy>,
+    /// Scripted membership changes, applied between time slices.
+    pub(crate) churn: ChurnSchedule,
+    /// Membership changes actually applied this run (with drain
+    /// outcomes), in application order.
+    pub churn_log: Vec<AppliedChurn>,
+    /// Simulated time spent by the membership control plane (join
+    /// announces, drain pushes, forced jumps) — cluster work no single
+    /// process is charged for. With churn,
+    /// `sum(cpu_ns) + churn_ns == clock.now()`.
+    pub churn_ns: u64,
 }
 
 impl ElasticCluster {
@@ -97,12 +113,25 @@ impl ElasticCluster {
             kernel: NodeKernel::new(cfg),
             procs: Vec::new(),
             quantum_ns: DEFAULT_QUANTUM_NS,
+            placement: Box::new(LeastLoaded),
+            churn: ChurnSchedule::default(),
+            churn_log: Vec::new(),
+            churn_ns: 0,
         }
     }
 
     /// Spawn a process with the paper's threshold policy (or NeverJump
-    /// in Nswap mode). Returns its process-table slot.
-    pub fn spawn(&mut self, mode: Mode, home: NodeId, comm: &str, threshold: u64) -> usize {
+    /// in Nswap mode) on an explicit live home node. Returns its
+    /// process-table slot; errs if the home node is out of range or
+    /// departed. For announce-driven placement use
+    /// [`Self::spawn_placed`](crate::os::membership).
+    pub fn spawn(
+        &mut self,
+        mode: Mode,
+        home: NodeId,
+        comm: &str,
+        threshold: u64,
+    ) -> Result<usize, MembershipError> {
         self.spawn_with_policy(mode, home, comm, Box::new(ThresholdPolicy::new(threshold)))
     }
 
@@ -113,14 +142,22 @@ impl ElasticCluster {
         home: NodeId,
         comm: &str,
         policy: Box<dyn JumpPolicy>,
-    ) -> usize {
-        assert!((home.0 as usize) < self.kernel.node_count(), "home node out of range");
+    ) -> Result<usize, MembershipError> {
+        if (home.0 as usize) >= self.kernel.node_count() {
+            return Err(MembershipError::HomeOutOfRange {
+                home,
+                nodes: self.kernel.node_count(),
+            });
+        }
+        if !self.kernel.is_live(home) {
+            return Err(MembershipError::NodeDeparted(home));
+        }
         let slot = self.procs.len();
         self.procs.push(ProcessCtx::new(
             slot,
             ProcSpec { mode, home, comm: comm.to_string(), policy },
         ));
-        slot
+        Ok(slot)
     }
 
     pub fn proc_count(&self) -> usize {
@@ -131,8 +168,20 @@ impl ElasticCluster {
         &self.procs[slot]
     }
 
+    /// Node *slots* (live and departed; ids are stable for the life of
+    /// the cluster).
     pub fn node_count(&self) -> usize {
         self.kernel.node_count()
+    }
+
+    /// Is this node currently a live member?
+    pub fn is_live(&self, node: NodeId) -> bool {
+        self.kernel.is_live(node)
+    }
+
+    /// Number of live members.
+    pub fn live_count(&self) -> usize {
+        self.kernel.live_count()
     }
 
     pub fn free_frames(&self, node: NodeId) -> u32 {
@@ -164,7 +213,7 @@ impl ElasticCluster {
         self.manager_pass_for(&all);
     }
 
-    fn manager_pass_for(&mut self, slots: &[usize]) {
+    pub(crate) fn manager_pass_for(&mut self, slots: &[usize]) {
         for &slot in slots {
             let t0 = self.clock.now();
             self.engine(slot).maybe_stretch();
@@ -216,6 +265,15 @@ impl ElasticCluster {
         // Round-robin scheduling loop.
         let quantum = self.quantum_ns.max(1);
         loop {
+            // Membership churn first: scripted joins/leaves due at the
+            // current simulated time apply on the slice boundary, so a
+            // process never observes the cluster changing mid-access
+            // and churn runs stay bit-reproducible. Post-join manager
+            // passes monitor only still-live tenants (exited ones are
+            // neither monitored nor charged).
+            let live: Vec<usize> =
+                jobs.iter().filter(|j| !j.done).map(|j| j.slot).collect();
+            self.apply_due_churn(&live);
             let mut ran_any = false;
             for j in 0..jobs.len() {
                 if jobs[j].done {
@@ -342,8 +400,8 @@ mod tests {
         let cfg = ClusterConfig { node_frames: vec![96, 96], ..ClusterConfig::default() };
         let mut cluster = ElasticCluster::new(cfg);
         cluster.quantum_ns = 100_000; // force genuine interleaving at test scale
-        let pa = cluster.spawn(Mode::Elastic, NodeId(0), "linear", 64);
-        let pb = cluster.spawn(Mode::Elastic, NodeId(1), "count_sort", 64);
+        let pa = cluster.spawn(Mode::Elastic, NodeId(0), "linear", 64).unwrap();
+        let pb = cluster.spawn(Mode::Elastic, NodeId(1), "count_sort", 64).unwrap();
         let reports = cluster.run_concurrent(vec![(pa, ta), (pb, tb)]);
         assert_eq!(reports[0].digest, da, "proc A diverged from ground truth");
         assert_eq!(reports[1].digest, db, "proc B diverged from ground truth");
@@ -366,7 +424,7 @@ mod tests {
         let mut jobs = Vec::new();
         for i in 0..3 {
             let (t, _) = truth_and_trace("linear", 60 * 4096);
-            let slot = cluster.spawn(Mode::Elastic, NodeId(0), &format!("p{i}"), 64);
+            let slot = cluster.spawn(Mode::Elastic, NodeId(0), &format!("p{i}"), 64).unwrap();
             jobs.push((slot, t));
         }
         let reports = cluster.run_concurrent(jobs);
@@ -380,10 +438,43 @@ mod tests {
     }
 
     #[test]
+    fn spawn_rejects_bad_homes_instead_of_panicking() {
+        use crate::os::membership::MembershipError;
+        let cfg = ClusterConfig { node_frames: vec![64, 64], ..ClusterConfig::default() };
+        let mut cluster = ElasticCluster::new(cfg);
+        assert_eq!(
+            cluster.spawn(Mode::Elastic, NodeId(5), "oops", 64),
+            Err(MembershipError::HomeOutOfRange { home: NodeId(5), nodes: 2 })
+        );
+        // a departed node is named, not silently remapped
+        cluster.retire_node(NodeId(1)).unwrap();
+        assert_eq!(
+            cluster.spawn(Mode::Elastic, NodeId(1), "oops", 64),
+            Err(MembershipError::NodeDeparted(NodeId(1)))
+        );
+        assert!(cluster.spawn(Mode::Elastic, NodeId(0), "fine", 64).is_ok());
+    }
+
+    #[test]
+    fn spawn_placed_spreads_over_live_members() {
+        let cfg = ClusterConfig { node_frames: vec![64, 64, 64], ..ClusterConfig::default() };
+        let mut cluster = ElasticCluster::new(cfg);
+        let mut homes = Vec::new();
+        for i in 0..6 {
+            let slot = cluster
+                .spawn_placed(Mode::Elastic, &format!("t{i}"), 64)
+                .expect("placement on a live cluster");
+            homes.push(cluster.proc(slot).home().0);
+        }
+        // least-loaded with equal free RAM spreads by homed count
+        assert_eq!(homes, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
     fn empty_trace_completes_immediately() {
         let cfg = ClusterConfig { node_frames: vec![64, 64], ..ClusterConfig::default() };
         let mut cluster = ElasticCluster::new(cfg);
-        let slot = cluster.spawn(Mode::Elastic, NodeId(0), "idle", 64);
+        let slot = cluster.spawn(Mode::Elastic, NodeId(0), "idle", 64).unwrap();
         let reports = cluster.run_concurrent(vec![(slot, Trace::default())]);
         assert_eq!(reports.len(), 1);
         assert_eq!(reports[0].ops, 0);

@@ -24,6 +24,7 @@
 
 use crate::mem::addr::{NodeId, MAX_NODES};
 use crate::os::kernel::{verify_cluster, ClusterConfig, Engine, NodeKernel, ProcSpec, ProcessCtx};
+use crate::os::membership::{DrainReport, MembershipError};
 use crate::os::metrics::RunReport;
 use crate::os::policy::{JumpPolicy, ThresholdPolicy};
 use crate::sim::{CostModel, SimClock};
@@ -168,6 +169,11 @@ impl ElasticSystem {
         self.kernel.node_count()
     }
 
+    /// Is this node currently a live cluster member?
+    pub fn is_live(&self, node: NodeId) -> bool {
+        self.kernel.is_live(node)
+    }
+
     pub fn resident_at(&self, node: NodeId) -> u32 {
         self.procs[0].resident_at(node)
     }
@@ -211,6 +217,25 @@ impl ElasticSystem {
     /// messages, ship the jump checkpoint, flip the running node.
     pub fn jump_to(&mut self, target: NodeId) {
         self.engine().jump_to(target)
+    }
+
+    // ----- membership (the control plane's single-process view) -----------
+
+    /// Admit a node mid-run (see [`crate::os::membership`]): its frames
+    /// are stretchable immediately, and the manager monitoring pass run
+    /// right after may stretch this process onto the newcomer if it is
+    /// under pressure.
+    pub fn admit_node(&mut self, node: NodeId, frames: u32) -> Result<NodeId, MembershipError> {
+        let admitted = self.engine().admit_node(node, frames)?;
+        self.engine().maybe_stretch();
+        Ok(admitted)
+    }
+
+    /// Retire a node mid-run via the drain protocol: if this process
+    /// executes there it jumps away first; resident pages migrate to
+    /// survivors or are declared lost and re-faulted on next touch.
+    pub fn retire_node(&mut self, node: NodeId) -> Result<DrainReport, MembershipError> {
+        self.engine().retire_node(node)
     }
 
     // ----- driving workloads -----------------------------------------------

@@ -88,6 +88,10 @@ fn quicksort<M: ElasticMem + ?Sized>(mem: &mut M, arr: U64Array, lo: u64, hi: u6
 }
 
 impl Workload for BlockSort {
+    fn set_seed(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
     fn name(&self) -> &'static str {
         "block_sort"
     }

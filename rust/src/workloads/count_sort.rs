@@ -31,6 +31,10 @@ impl CountSort {
 }
 
 impl Workload for CountSort {
+    fn set_seed(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
     fn name(&self) -> &'static str {
         "count_sort"
     }

@@ -114,6 +114,10 @@ impl Dfs {
 }
 
 impl Workload for Dfs {
+    fn set_seed(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
     fn name(&self) -> &'static str {
         "dfs"
     }

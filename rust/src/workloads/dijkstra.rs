@@ -34,6 +34,10 @@ impl Dijkstra {
 }
 
 impl Workload for Dijkstra {
+    fn set_seed(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
     fn name(&self) -> &'static str {
         "dijkstra"
     }

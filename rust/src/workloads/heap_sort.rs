@@ -49,6 +49,10 @@ fn sift_down<M: ElasticMem + ?Sized>(mem: &mut M, arr: U64Array, mut root: u64, 
 }
 
 impl Workload for HeapSort {
+    fn set_seed(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
     fn name(&self) -> &'static str {
         "heap_sort"
     }

@@ -35,6 +35,10 @@ impl LinearSearch {
 }
 
 impl Workload for LinearSearch {
+    fn set_seed(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
     fn name(&self) -> &'static str {
         "linear"
     }

@@ -60,6 +60,10 @@ impl TableScan {
 }
 
 impl Workload for TableScan {
+    fn set_seed(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
     fn name(&self) -> &'static str {
         "table_scan"
     }

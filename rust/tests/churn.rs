@@ -1,0 +1,243 @@
+//! Membership control-plane integration tests: live node join/leave
+//! with page-migration-on-churn, lost-page refault, announce-driven
+//! placement, and scheduler-applied churn schedules.
+//!
+//! Acceptance (ISSUE 2): a run with >= 1 mid-run join and >= 1 mid-run
+//! leave where every surviving process's final memory digest equals its
+//! DirectMem ground truth.
+
+use elastic_os::mem::{NodeId, PAGE_SIZE};
+use elastic_os::os::kernel::ClusterConfig;
+use elastic_os::os::membership::{ChurnEvent, ChurnOp, ChurnSchedule, MembershipError};
+use elastic_os::os::sched::{record_ground_truth, ElasticCluster};
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::workloads::trace::Trace;
+use elastic_os::workloads::{by_name, ElasticMem, Scale};
+
+fn tenant(wl: &str, pages: u64) -> (Trace, u64) {
+    let mut w = by_name(wl, Scale::Bytes(pages * PAGE_SIZE as u64)).unwrap();
+    record_ground_truth(w.as_mut())
+}
+
+// ----- direct (facade-level) churn ----------------------------------------
+
+#[test]
+fn facade_retire_drains_pages_then_rejoin_restores_capacity() {
+    // One process spills onto node 1, then node 1 retires: its pages
+    // must be evacuated to node 0 up to capacity and the rest declared
+    // lost; after node 2 joins, every page must read back exactly —
+    // lost ones via ground-truth refault.
+    let cfg = SystemConfig { node_frames: vec![64, 64], ..SystemConfig::default() };
+    let mut sys = ElasticSystem::new(cfg, u64::MAX); // never jump: stay on node 0
+    let pages = 80u64;
+    let a = sys.mmap(pages * PAGE_SIZE as u64, elastic_os::mem::addr::AreaKind::Heap, "data");
+    for p in 0..pages {
+        sys.write_u64(a + p * PAGE_SIZE as u64, p * 3 + 1);
+    }
+    let on_node1 = sys.resident_at(NodeId(1));
+    assert!(on_node1 > 0, "80 pages on a 64-frame home must spill to node 1");
+
+    let report = sys.retire_node(NodeId(1)).expect("retire node 1");
+    assert!(!sys.is_live(NodeId(1)));
+    assert_eq!(
+        report.evacuated + report.lost,
+        on_node1,
+        "every resident page is either evacuated or declared lost"
+    );
+    assert!(report.lost > 0, "node 0 alone cannot hold all 80 pages");
+    assert_eq!(report.forced_jumps, 0, "execution was never on node 1");
+    assert_eq!(sys.resident_at(NodeId(1)), 0, "departed node holds nothing");
+    sys.verify().expect("invariants after drain");
+
+    // Retiring again (or the last node) must fail loudly.
+    assert_eq!(sys.retire_node(NodeId(1)), Err(MembershipError::NodeDeparted(NodeId(1))));
+    assert_eq!(sys.retire_node(NodeId(0)), Err(MembershipError::LastLiveNode(NodeId(0))));
+
+    // Capacity returns: a fresh node joins and the manager stretches
+    // the pressured process onto it immediately.
+    sys.admit_node(NodeId(2), 64).expect("admit node 2");
+    assert!(sys.is_live(NodeId(2)));
+
+    // Every page reads back bit-exact; lost pages refault from the
+    // owner's ground truth.
+    for p in 0..pages {
+        assert_eq!(sys.read_u64(a + p * PAGE_SIZE as u64), p * 3 + 1, "page {p}");
+    }
+    assert_eq!(sys.metrics.refaults, report.lost as u64, "every lost page refaulted once");
+    assert!(sys.metrics.pages_evacuated >= report.evacuated as u64);
+    sys.verify().expect("invariants after refault");
+}
+
+#[test]
+fn facade_retire_forces_execution_off_departing_node() {
+    let cfg = SystemConfig { node_frames: vec![64, 64], ..SystemConfig::default() };
+    let mut sys = ElasticSystem::new(cfg, u64::MAX);
+    let a = sys.mmap(8 * PAGE_SIZE as u64, elastic_os::mem::addr::AreaKind::Heap, "d");
+    sys.write_u64(a, 7);
+    sys.stretch_to(NodeId(1));
+    sys.jump_to(NodeId(1));
+    assert_eq!(sys.running_on(), NodeId(1));
+
+    let report = sys.retire_node(NodeId(1)).expect("retire the executing node");
+    assert_eq!(report.forced_jumps, 1, "the process must jump away first");
+    assert_eq!(sys.running_on(), NodeId(0));
+    assert_eq!(sys.metrics.forced_jumps, 1);
+    assert_eq!(sys.read_u64(a), 7, "data survives the forced migration");
+    sys.verify().unwrap();
+}
+
+#[test]
+fn facade_rejoin_reuses_the_slot_with_new_resources() {
+    let cfg = SystemConfig { node_frames: vec![64, 64], ..SystemConfig::default() };
+    let mut sys = ElasticSystem::new(cfg, u64::MAX);
+    sys.retire_node(NodeId(1)).unwrap();
+    // Rejoin keeps the node id but may announce different resources.
+    sys.admit_node(NodeId(1), 128).expect("rejoin node 1");
+    assert!(sys.is_live(NodeId(1)));
+    assert_eq!(sys.free_frames(NodeId(1)), 128, "rejoin re-arms the pool at the new size");
+    assert_eq!(sys.node_count(), 2, "rejoin must not grow the slot space");
+    // Invalid admissions are named errors, not panics.
+    assert_eq!(sys.admit_node(NodeId(1), 64), Err(MembershipError::AlreadyLive(NodeId(1))));
+    assert_eq!(
+        sys.admit_node(NodeId(5), 64),
+        Err(MembershipError::NonContiguousId { node: NodeId(5), next: 2 })
+    );
+    // a join too small to host the watermark reserves is refused, not
+    // a mid-run panic
+    sys.retire_node(NodeId(1)).unwrap();
+    assert_eq!(
+        sys.admit_node(NodeId(1), 4),
+        Err(MembershipError::TooFewFrames { node: NodeId(1), frames: 4, min: 8 })
+    );
+}
+
+// ----- cluster-level scheduled churn --------------------------------------
+
+/// Build the standard churn cluster: 2x96-frame boot nodes, three
+/// tenants placed by the default least-loaded policy.
+fn spawn_three(
+    cluster: &mut ElasticCluster,
+    mode: Mode,
+    tenants: &[(&'static str, Trace, u64)],
+) -> Vec<(usize, Trace)> {
+    let mut jobs = Vec::new();
+    for (wl, trace, _) in tenants {
+        let slot = cluster.spawn_placed(mode, wl, 64).expect("placement");
+        jobs.push((slot, trace.clone()));
+    }
+    jobs
+}
+
+fn three_tenants() -> Vec<(&'static str, Trace, u64)> {
+    ["linear", "count_sort", "table_scan"]
+        .iter()
+        .map(|wl| {
+            let (t, d) = tenant(wl, 40);
+            (*wl, t, d)
+        })
+        .collect()
+}
+
+#[test]
+fn scheduled_join_and_leave_keep_every_digest_ground_true() {
+    let tenants = three_tenants();
+    let cfg = || ClusterConfig { node_frames: vec![96, 96], ..ClusterConfig::default() };
+
+    // Calibration run (no churn) fixes the schedule deterministically.
+    let mut cal = ElasticCluster::new(cfg());
+    cal.quantum_ns = 100_000;
+    let jobs = spawn_three(&mut cal, Mode::Elastic, &tenants);
+    cal.run_concurrent(jobs);
+    let makespan = cal.clock.now().max(1);
+
+    for mode in [Mode::Elastic, Mode::Nswap] {
+        let mut cluster = ElasticCluster::new(cfg());
+        cluster.quantum_ns = 100_000;
+        cluster.set_churn(ChurnSchedule::new(vec![
+            ChurnEvent { at_ns: makespan / 5, op: ChurnOp::Join { node: 2, frames: 96 } },
+            ChurnEvent { at_ns: makespan * 2 / 5, op: ChurnOp::Leave { node: 1 } },
+        ]));
+        let jobs = spawn_three(&mut cluster, mode, &tenants);
+        let reports = cluster.run_concurrent(jobs);
+
+        // >= 1 mid-run join and >= 1 mid-run leave actually applied
+        let joins = cluster
+            .churn_log
+            .iter()
+            .filter(|a| matches!(a.op, ChurnOp::Join { .. }))
+            .count();
+        let leaves = cluster
+            .churn_log
+            .iter()
+            .filter(|a| matches!(a.op, ChurnOp::Leave { .. }))
+            .count();
+        assert!(joins >= 1, "{mode:?}: join never applied (makespan {makespan})");
+        assert!(leaves >= 1, "{mode:?}: leave never applied (makespan {makespan})");
+
+        // every surviving process's digest equals its DirectMem truth
+        for (r, (wl, _, truth)) in reports.iter().zip(tenants.iter()) {
+            assert_eq!(r.digest, *truth, "{mode:?}: {wl} diverged across churn");
+        }
+        assert_eq!(cluster.node_count(), 3, "join added a slot");
+        assert!(cluster.is_live(NodeId(2)));
+        assert!(!cluster.is_live(NodeId(1)), "leave retired node 1");
+        cluster.verify().expect("cluster invariants after churn");
+
+        // churn time is control-plane time: with it accounted, the
+        // per-process slices still partition the shared clock
+        let cpu: u64 = reports.iter().map(|r| r.cpu_ns).sum();
+        assert_eq!(
+            cpu + cluster.churn_ns,
+            cluster.clock.now(),
+            "{mode:?}: cpu slices + churn must partition the clock"
+        );
+    }
+}
+
+#[test]
+fn join_offers_capacity_that_contended_tenants_use() {
+    // Three tenants overcommit a single tiny home node; a much larger
+    // node joins mid-run and the manager's monitoring pass re-homes
+    // (stretches) pressured processes onto it.
+    let tenants = three_tenants();
+    let cfg = ClusterConfig { node_frames: vec![96, 32], ..ClusterConfig::default() };
+    let mut cluster = ElasticCluster::new(cfg);
+    cluster.quantum_ns = 100_000;
+    cluster.set_churn(ChurnSchedule::new(vec![ChurnEvent {
+        at_ns: 1, // due at the first slice boundary
+        op: ChurnOp::Join { node: 2, frames: 256 },
+    }]));
+    let jobs = spawn_three(&mut cluster, Mode::Elastic, &tenants);
+    let reports = cluster.run_concurrent(jobs);
+    for (r, (wl, _, truth)) in reports.iter().zip(tenants.iter()) {
+        assert_eq!(r.digest, *truth, "{wl} diverged after join");
+    }
+    assert!(cluster.is_live(NodeId(2)));
+    let resident_on_newcomer: u32 =
+        (0..cluster.proc_count()).map(|s| cluster.proc(s).resident_at(NodeId(2))).sum();
+    assert!(
+        resident_on_newcomer > 0,
+        "newcomer frames must become usable immediately (got {resident_on_newcomer})"
+    );
+    cluster.verify().unwrap();
+}
+
+#[test]
+fn churn_spec_string_drives_the_scheduler() {
+    // The CLI path: a parsed --churn spec behaves like a hand-built
+    // schedule.
+    let tenants = three_tenants();
+    let cfg = ClusterConfig { node_frames: vec![96, 96], ..ClusterConfig::default() };
+    let mut cluster = ElasticCluster::new(cfg);
+    cluster.quantum_ns = 100_000;
+    let spec = ChurnSchedule::parse("+2@1us", 96).expect("valid spec");
+    cluster.set_churn(spec);
+    let jobs = spawn_three(&mut cluster, Mode::Elastic, &tenants);
+    let reports = cluster.run_concurrent(jobs);
+    assert_eq!(cluster.churn_log.len(), 1, "the scripted join applied");
+    assert_eq!(cluster.node_count(), 3);
+    for (r, (wl, _, truth)) in reports.iter().zip(tenants.iter()) {
+        assert_eq!(r.digest, *truth, "{wl}");
+    }
+    cluster.verify().unwrap();
+}

@@ -45,7 +45,7 @@ fn run_four(mode: Mode, threshold: u64) -> (ElasticCluster, Vec<elastic_os::os::
     for (wl, trace, _) in four_tenants() {
         // All four tenants start on node 0 — the overloaded machine;
         // node 1 is the free one they elasticize onto.
-        let slot = cluster.spawn(mode, NodeId(0), wl, threshold);
+        let slot = cluster.spawn(mode, NodeId(0), wl, threshold).unwrap();
         jobs.push((slot, trace));
     }
     let reports = cluster.run_concurrent(jobs);
@@ -127,7 +127,7 @@ fn single_process_cluster_is_bit_identical_to_facade() {
     assert_eq!(facade.digest, truth);
 
     let mut cluster = ElasticCluster::new(cluster_cfg());
-    let slot = cluster.spawn(Mode::Elastic, NodeId(0), "count_sort", 64);
+    let slot = cluster.spawn(Mode::Elastic, NodeId(0), "count_sort", 64).unwrap();
     let reports = cluster.run_concurrent(vec![(slot, trace)]);
     assert_eq!(reports[0].digest, truth, "cluster path diverged from facade digest");
     let (fm, cm) = (&facade.metrics, &reports[0].metrics);
@@ -152,8 +152,8 @@ fn eviction_may_cross_process_boundaries_safely() {
     let (hog_trace, hog_truth) = tenant("linear", 80);
     let (small_trace, small_truth) = tenant("count_sort", 30);
     let mut cluster = ElasticCluster::new(cluster_cfg());
-    let hog = cluster.spawn(Mode::Elastic, NodeId(0), "hog", 64);
-    let small = cluster.spawn(Mode::Elastic, NodeId(0), "small", 64);
+    let hog = cluster.spawn(Mode::Elastic, NodeId(0), "hog", 64).unwrap();
+    let small = cluster.spawn(Mode::Elastic, NodeId(0), "small", 64).unwrap();
     let reports = cluster.run_concurrent(vec![(hog, hog_trace), (small, small_trace)]);
     assert_eq!(reports[0].digest, hog_truth);
     assert_eq!(reports[1].digest, small_truth);
