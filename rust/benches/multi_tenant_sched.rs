@@ -8,25 +8,53 @@ mod bench_util;
 use bench_util::bench;
 use elastic_os::mem::NodeId;
 use elastic_os::os::kernel::ClusterConfig;
-use elastic_os::os::sched::{record_ground_truth, ElasticCluster};
+use elastic_os::os::sched::{direct_ground_truth, record_ground_truth, ElasticCluster};
 use elastic_os::os::system::Mode;
 use elastic_os::workloads::trace::Trace;
-use elastic_os::workloads::{by_name, Scale};
+use elastic_os::workloads::{by_name, Scale, Workload};
 
 const NODE_FRAMES: u32 = 512;
 const PROCS: usize = 4;
+const WLS: [&str; 4] = ["linear", "count_sort", "table_scan", "linear"];
+
+fn per_fp() -> u64 {
+    // 1.6x home-node overcommit across 4 tenants, fitting cluster RAM.
+    (NODE_FRAMES as u64 * 4096) * 16 / 10 / PROCS as u64
+}
 
 fn tenants() -> Vec<(&'static str, Trace, u64)> {
-    // 1.6x home-node overcommit across 4 tenants, fitting cluster RAM.
-    let per_fp = (NODE_FRAMES as u64 * 4096) * 16 / 10 / PROCS as u64;
-    ["linear", "count_sort", "table_scan", "linear"]
-        .iter()
+    WLS.iter()
         .map(|wl| {
-            let mut w = by_name(wl, Scale::Bytes(per_fp)).unwrap();
+            let mut w = by_name(wl, Scale::Bytes(per_fp())).unwrap();
             let (t, d) = record_ground_truth(w.as_mut());
             (*wl, t, d)
         })
         .collect()
+}
+
+fn live_truths() -> Vec<(&'static str, u64)> {
+    WLS.iter()
+        .map(|wl| {
+            let mut w = by_name(wl, Scale::Bytes(per_fp())).unwrap();
+            (*wl, direct_ground_truth(w.as_mut()))
+        })
+        .collect()
+}
+
+fn run_once_live(truths: &[(&'static str, u64)], mode: Mode, quantum_ns: u64) -> u64 {
+    let cfg = ClusterConfig { node_frames: vec![NODE_FRAMES; 2], ..ClusterConfig::default() };
+    let mut cluster = ElasticCluster::new(cfg);
+    cluster.quantum_ns = quantum_ns;
+    let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+    for (wl, _) in truths {
+        let slot = cluster.spawn(mode, NodeId(0), wl, 512).unwrap();
+        jobs.push((slot, by_name(wl, Scale::Bytes(per_fp())).unwrap()));
+    }
+    let reports = cluster.run_live(jobs);
+    for (r, (wl, truth)) in reports.iter().zip(truths.iter()) {
+        assert_eq!(r.digest, *truth, "{wl} diverged (live)");
+    }
+    cluster.clock.now()
 }
 
 fn run_once(tenants: &[(&'static str, Trace, u64)], mode: Mode, quantum_ns: u64) -> u64 {
@@ -58,6 +86,17 @@ fn main() {
                 std::hint::black_box(run_once(&ts, mode, quantum));
             });
         }
+    }
+
+    // Live stepping: the same contention with no recording pass and no
+    // O(ops) replay buffers — the per-run cost includes building the
+    // tenants' inputs through the pager instead of replaying them.
+    let lt = live_truths();
+    for (label, mode) in [("eos", Mode::Elastic), ("nswap", Mode::Nswap)] {
+        let name = format!("4-proc contention live [{label}] quantum=2000us");
+        bench(&name, 1, 5, || {
+            std::hint::black_box(run_once_live(&lt, mode, 2_000_000));
+        });
     }
 
     // Scheduler overhead reference: the same total work as one process

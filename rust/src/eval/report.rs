@@ -10,6 +10,9 @@ pub struct Table {
     pub title: String,
     pub headers: Vec<String>,
     pub rows: Vec<Vec<String>>,
+    /// Free-form footer lines (summary facts that do not fit the
+    /// column grid, e.g. recorded-vs-live savings).
+    pub notes: Vec<String>,
 }
 
 impl Table {
@@ -18,12 +21,18 @@ impl Table {
             title: title.to_string(),
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            notes: Vec::new(),
         }
     }
 
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
+    }
+
+    /// Append a footer line, rendered after the rows.
+    pub fn note(&mut self, line: String) {
+        self.notes.push(line);
     }
 
     /// Render with aligned columns.
@@ -50,6 +59,9 @@ impl Table {
         let _ = writeln!(out, "{}", "-".repeat(line));
         for row in &self.rows {
             emit(row, &mut out);
+        }
+        for note in &self.notes {
+            let _ = writeln!(out, "note: {note}");
         }
         out
     }
@@ -81,6 +93,16 @@ mod tests {
         assert!(r.contains("== demo =="));
         assert!(r.contains("name | value") || r.contains("  name | value"));
         assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    fn notes_render_after_rows() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()]);
+        t.note("footer fact".into());
+        let r = t.render();
+        assert!(r.contains("note: footer fact"));
+        assert!(r.find("1").unwrap() < r.find("note:").unwrap());
     }
 
     #[test]

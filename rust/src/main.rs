@@ -42,6 +42,11 @@ USAGE:
   elasticos run --workload <name[,name...]> [--mode eos|nswap] [--threshold N]
                 [--frames F] [--footprint BYTES] [--nodes N] [--procs N]
                 [--seed N] [--policy threshold|ewma|burst|model]
+                [--live]                         (with --procs N: step the live
+                                                  algorithms under preemption
+                                                  instead of replaying recorded
+                                                  traces — no O(ops) recording
+                                                  pass, so Full-scale tenants fit)
                 [--spread | --home N]            (multi-proc placement; default:
                                                   least-loaded from live registry)
                 [--churn SPEC]                   (membership schedule, e.g.
@@ -76,8 +81,10 @@ fn cmd_run(args: &Args) -> i32 {
         return cmd_run_multi(args, mode, threshold, frames, footprint, procs);
     }
     // Cluster-scheduler flags only make sense with the multi-process
-    // scheduler; refuse rather than silently ignore the schedule.
-    for flag in ["churn", "spread", "home"] {
+    // scheduler; refuse rather than silently ignore them (a single
+    // process is always driven live through the facade, so --live
+    // would be a silent no-op here).
+    for flag in ["churn", "spread", "home", "live"] {
         if args.has(flag) {
             eprintln!("--{flag} requires --procs > 1 (the cluster scheduler)");
             return 2;
@@ -141,10 +148,10 @@ fn cmd_run(args: &Args) -> i32 {
     0
 }
 
-/// `run --procs N`: N elasticized processes, each replaying one of the
-/// requested workloads, time-sliced on a shared cluster and contending
-/// for its frames. Digests are verified against each process's
-/// single-process DirectMem ground truth.
+/// `run --procs N`: N elasticized processes — live steppers with
+/// `--live`, recorded-trace replays otherwise — time-sliced on a
+/// shared cluster and contending for its frames. Digests are verified
+/// against each process's single-process DirectMem ground truth.
 fn cmd_run_multi(
     args: &Args,
     mode: Mode,
@@ -154,8 +161,13 @@ fn cmd_run_multi(
     procs: usize,
 ) -> i32 {
     use elastic_os::os::kernel::ClusterConfig;
-    use elastic_os::os::sched::{record_ground_truth, ElasticCluster};
+    use elastic_os::os::sched::{
+        direct_ground_truth, record_ground_truth, ElasticCluster, TenantJob,
+    };
+    use elastic_os::workloads::trace::Trace;
+    use elastic_os::workloads::Workload;
 
+    let live = args.has("live");
     let nodes: usize = args.flag_parse("nodes").unwrap_or(2);
     let workloads = args
         .flag_list("workload")
@@ -172,9 +184,16 @@ fn cmd_run_multi(
     let per_fp = (footprint / procs as u64).max(16 * 4096);
     let seed = args.flag_parse::<u64>("seed");
 
-    // Record each tenant's trace + ground truth (per-tenant seeds are
-    // decorrelated from --seed so the whole family reproduces).
-    let mut tenants = Vec::new();
+    // Per-tenant ground truth (per-tenant seeds are decorrelated from
+    // --seed so the whole family reproduces). Live mode needs only one
+    // flat DirectMem run per tenant and keeps the workload itself for
+    // the scheduler; trace mode records the O(ops) op stream, which is
+    // *moved* into the scheduler below — never cloned.
+    let mut tenants: Vec<(String, u64)> = Vec::new();
+    let mut live_workloads: Vec<Box<dyn Workload>> = Vec::new();
+    let mut traces: Vec<Trace> = Vec::new();
+    let mut record_bytes = 0u64;
+    let record_t0 = std::time::Instant::now();
     for i in 0..procs {
         let wl = &workloads[i % workloads.len()];
         let tseed = elastic_os::workloads::tenant_seed(seed, i);
@@ -182,9 +201,18 @@ fn cmd_run_multi(
             eprintln!("unknown workload '{wl}'");
             return 2;
         };
-        let (trace, truth) = record_ground_truth(w.as_mut());
-        tenants.push((wl.clone(), trace, truth));
+        if live {
+            let truth = direct_ground_truth(w.as_mut());
+            live_workloads.push(w);
+            tenants.push((wl.clone(), truth));
+        } else {
+            let (trace, truth) = record_ground_truth(w.as_mut());
+            record_bytes += trace.ops_bytes();
+            traces.push(trace);
+            tenants.push((wl.clone(), truth));
+        }
     }
+    let record_wall_ns = record_t0.elapsed().as_nanos() as u64;
 
     let cfg = ClusterConfig { node_frames: vec![frames; nodes], ..ClusterConfig::default() };
     let mut cluster = ElasticCluster::new(cfg);
@@ -209,8 +237,10 @@ fn cmd_run_multi(
         }
     }
 
-    let mut jobs = Vec::new();
-    for (wl, trace, _) in tenants.iter() {
+    let mut jobs: Vec<(usize, TenantJob)> = Vec::new();
+    let mut live_iter = live_workloads.into_iter();
+    let mut trace_iter = traces.into_iter();
+    for (wl, _) in tenants.iter() {
         let spawned = match policy.as_deref() {
             Some("ewma") => cluster.spawn_placed_with_policy(
                 mode,
@@ -231,9 +261,14 @@ fn cmd_run_multi(
                 return 2;
             }
         };
-        jobs.push((slot, trace.clone()));
+        let job = if live {
+            TenantJob::Live(live_iter.next().expect("one workload per tenant"))
+        } else {
+            TenantJob::Trace(trace_iter.next().expect("one trace per tenant"))
+        };
+        jobs.push((slot, job));
     }
-    let reports = cluster.run_concurrent(jobs);
+    let reports = cluster.run_jobs(jobs);
 
     if cluster.churn_pending() > 0 {
         eprintln!(
@@ -261,7 +296,7 @@ fn cmd_run_multi(
     }
 
     let mut ok = true;
-    for (report, (wl, _, truth)) in reports.iter().zip(tenants.iter()) {
+    for (report, (wl, truth)) in reports.iter().zip(tenants.iter()) {
         let verdict = if report.digest == *truth { "ok" } else { "MISMATCH" };
         if report.digest != *truth {
             ok = false;
@@ -288,6 +323,16 @@ fn cmd_run_multi(
         frames,
         elastic_os::util::stats::fmt_ns(cluster.clock.now() as f64),
     );
+    if live {
+        println!("tenancy: live steppers (no recording pass; 0 B of O(ops) replay buffers)");
+    } else {
+        println!(
+            "tenancy: recorded traces ({} of op buffers, recorded in {} wall time; \
+             --live avoids both)",
+            elastic_os::util::stats::fmt_bytes(record_bytes as f64),
+            elastic_os::util::stats::fmt_ns(record_wall_ns as f64),
+        );
+    }
     if let Err(e) = cluster.verify() {
         eprintln!("cluster invariants violated: {e}");
         return 1;

@@ -1118,3 +1118,61 @@ impl Engine<'_> {
         }
     }
 }
+
+/// The [`ElasticMem`] surface of one process's engine view: what a live
+/// workload (its `setup` and its stepper) executes against under the
+/// multi-process scheduler. The single-process facade binds the same
+/// engine in [`crate::os::pager`], so live steppers exercise exactly
+/// the fault paths traces do.
+pub(crate) struct EngineMem<'a> {
+    pub eng: Engine<'a>,
+}
+
+impl crate::workloads::mem::ElasticMem for EngineMem<'_> {
+    fn mmap(&mut self, len: u64, kind: AreaKind, name: &str) -> u64 {
+        self.eng.mmap(len, kind, name)
+    }
+
+    #[inline]
+    fn read_u8(&mut self, addr: u64) -> u8 {
+        self.eng.read_u8(addr)
+    }
+
+    #[inline]
+    fn read_u32(&mut self, addr: u64) -> u32 {
+        self.eng.read_u32(addr)
+    }
+
+    #[inline]
+    fn read_u64(&mut self, addr: u64) -> u64 {
+        self.eng.read_u64(addr)
+    }
+
+    #[inline]
+    fn write_u8(&mut self, addr: u64, v: u8) {
+        self.eng.write_u8(addr, v)
+    }
+
+    #[inline]
+    fn write_u32(&mut self, addr: u64, v: u32) {
+        self.eng.write_u32(addr, v)
+    }
+
+    #[inline]
+    fn write_u64(&mut self, addr: u64, v: u64) {
+        self.eng.write_u64(addr, v)
+    }
+
+    fn regs_mut(&mut self) -> &mut [u64; 16] {
+        let cur = self.eng.cur;
+        &mut self.eng.procs[cur].regs.gpr
+    }
+
+    /// The shared simulated clock — what scheduler [`Fuel`] deadlines
+    /// preempt against.
+    ///
+    /// [`Fuel`]: crate::workloads::Fuel
+    fn now_ns(&self) -> u64 {
+        self.eng.clock.now()
+    }
+}

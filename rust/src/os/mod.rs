@@ -21,5 +21,7 @@ pub use membership::{
 };
 pub use metrics::{Metrics, RunReport};
 pub use policy::{BurstPolicy, Decision, EwmaPolicy, JumpPolicy, NeverJump, ThresholdPolicy};
-pub use sched::{ElasticCluster, ProcRunReport};
+pub use sched::{
+    direct_ground_truth, record_ground_truth, ElasticCluster, ProcRunReport, TenantJob,
+};
 pub use system::{ElasticSystem, Mode, SystemConfig};

@@ -72,6 +72,12 @@ impl ElasticMem for ElasticSystem {
     fn regs_mut(&mut self) -> &mut [u64; 16] {
         &mut self.procs[0].regs.gpr
     }
+
+    /// The facade's simulated clock, so stepped (fuel-bounded) runs
+    /// against the single-process system honor time deadlines too.
+    fn now_ns(&self) -> u64 {
+        self.clock.now()
+    }
 }
 
 #[cfg(test)]

@@ -7,7 +7,7 @@
 //! jumps/sec).
 
 use super::mem::{ElasticMem, U64Array};
-use super::{fnv1a, Scale, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::util::Rng;
 
 /// Elements per block (64 KiB of u64s).
@@ -27,8 +27,10 @@ impl BlockSort {
     }
 }
 
-/// In-place insertion sort of arr[lo..hi) — used per block, where the
-/// block is small and (after the first touch) page-local.
+/// In-place insertion sort of arr[lo..hi) — the reference form of the
+/// small-range path [`BlockSortExec`] steps through (cross-checked in
+/// tests).
+#[cfg(test)]
 fn insertion_sort<M: ElasticMem + ?Sized>(mem: &mut M, arr: U64Array, lo: u64, hi: u64) {
     let mut i = lo + 1;
     while i < hi {
@@ -48,7 +50,10 @@ fn insertion_sort<M: ElasticMem + ?Sized>(mem: &mut M, arr: U64Array, lo: u64, h
 }
 
 /// Iterative in-place quicksort (explicit interval stack, small-range
-/// insertion fallback) over arr[lo..hi).
+/// insertion fallback) over arr[lo..hi) — the reference form of the
+/// per-block sort [`BlockSortExec`] steps through (cross-checked in
+/// tests).
+#[cfg(test)]
 fn quicksort<M: ElasticMem + ?Sized>(mem: &mut M, arr: U64Array, lo: u64, hi: u64) {
     let mut stack = vec![(lo, hi)];
     while let Some((lo, hi)) = stack.pop() {
@@ -111,70 +116,319 @@ impl Workload for BlockSort {
         self.scratch = Some(scratch);
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let mut src = self.arr.unwrap();
-        let mut dst = self.scratch.unwrap();
-        let n = self.n;
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(BlockSortExec {
+            src: self.arr.expect("setup not called"),
+            dst: self.scratch.unwrap(),
+            n: self.n,
+            phase: BsPhase::Blocks,
+            block: 0,
+            qstack: Vec::new(),
+            lo: 0,
+            hi: 0,
+            ii: 0,
+            ij: 0,
+            iv: 0,
+            pivot: 0,
+            pi: 0,
+            pj: 0,
+            width: BLOCK,
+            mlo: 0,
+            mmid: 0,
+            mhi: 0,
+            mi: 0,
+            mj: 0,
+            mk: 0,
+            di: 0,
+            dprev: 0,
+            dsorted: 1,
+            digest: FNV_SEED,
+        })
+    }
+}
 
-        // Phase 1: sort each block in place.
-        let mut b = 0;
-        while b < n {
-            let hi = (b + BLOCK).min(n);
-            quicksort(mem, src, b, hi);
-            b += BLOCK;
-        }
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BsPhase {
+    /// Phase 1 driver: queue the next block for its in-place sort.
+    Blocks,
+    /// Pop the next quicksort interval off the explicit stack.
+    QsPop,
+    /// Insertion sort (small intervals): pick the next element.
+    InsOuter,
+    /// Insertion sort: shift greater elements right, place the held one.
+    InsInner,
+    /// Read the median-of-three pivot samples.
+    QsPivot,
+    /// Partition: advance `i` over elements below the pivot.
+    ScanI,
+    /// Partition: retreat `j` over elements above the pivot.
+    ScanJ,
+    /// Partition: swap the out-of-place pair and continue (or split).
+    PartSwap,
+    /// Phase 2 driver: next doubling of the merge width.
+    MergeOuter,
+    /// Set up the next pair merge at the current width.
+    MergePair,
+    /// Merge both runs while neither is exhausted.
+    MergeMain,
+    /// Drain the left run.
+    MergeTailI,
+    /// Drain the right run.
+    MergeTailJ,
+    /// Sortedness-sensitive hash over the final array.
+    Digest,
+}
 
-        // Phase 2: bottom-up merge passes, ping-ponging src <-> dst.
-        let mut width = BLOCK;
-        while width < n {
-            let mut lo = 0;
-            while lo < n {
-                let mid = (lo + width).min(n);
-                let hi = (lo + 2 * width).min(n);
-                // merge src[lo..mid] and src[mid..hi] into dst[lo..hi]
-                let (mut i, mut j, mut k) = (lo, mid, lo);
-                while i < mid && j < hi {
-                    let (a, b) = (src.get(mem, i), src.get(mem, j));
-                    if a <= b {
-                        dst.set(mem, k, a);
-                        i += 1;
-                    } else {
-                        dst.set(mem, k, b);
-                        j += 1;
+/// Resumable block-merge-sort state: the quicksort interval stack, the
+/// in-flight insertion/partition cursors and the merge cursors all
+/// hoisted out of the call stack, one fuel unit per comparison-ish
+/// inner-loop iteration. `src`/`dst` ping-pong across merge passes
+/// exactly as the reference implementation's locals did.
+struct BlockSortExec {
+    src: U64Array,
+    dst: U64Array,
+    n: u64,
+    phase: BsPhase,
+    /// Phase-1 cursor: start of the next unsorted block.
+    block: u64,
+    /// Quicksort's explicit interval stack (host scratch, as in the
+    /// reference implementation).
+    qstack: Vec<(u64, u64)>,
+    lo: u64,
+    hi: u64,
+    /// Insertion sort cursors + held value.
+    ii: u64,
+    ij: u64,
+    iv: u64,
+    /// Partition state.
+    pivot: u64,
+    pi: u64,
+    pj: u64,
+    /// Merge state.
+    width: u64,
+    mlo: u64,
+    mmid: u64,
+    mhi: u64,
+    mi: u64,
+    mj: u64,
+    mk: u64,
+    /// Digest state.
+    di: u64,
+    dprev: u64,
+    dsorted: u64,
+    digest: u64,
+}
+
+impl WorkloadExec for BlockSortExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        loop {
+            match self.phase {
+                BsPhase::Blocks => {
+                    if self.block >= self.n {
+                        self.phase = BsPhase::MergeOuter;
+                        continue;
                     }
-                    k += 1;
+                    let hi = (self.block + BLOCK).min(self.n);
+                    self.qstack.push((self.block, hi));
+                    self.block += BLOCK;
+                    self.phase = BsPhase::QsPop;
                 }
-                while i < mid {
-                    let v = src.get(mem, i);
-                    dst.set(mem, k, v);
-                    i += 1;
-                    k += 1;
+                BsPhase::QsPop => match self.qstack.pop() {
+                    None => self.phase = BsPhase::Blocks,
+                    Some((lo, hi)) => {
+                        self.lo = lo;
+                        self.hi = hi;
+                        if hi - lo <= 24 {
+                            self.ii = lo + 1;
+                            self.phase = BsPhase::InsOuter;
+                        } else {
+                            self.phase = BsPhase::QsPivot;
+                        }
+                    }
+                },
+                BsPhase::InsOuter => {
+                    if self.ii >= self.hi {
+                        self.phase = BsPhase::QsPop;
+                        continue;
+                    }
+                    if !fuel.spend(&*mem) {
+                        return StepOutcome::Running;
+                    }
+                    self.iv = self.src.get(mem, self.ii);
+                    self.ij = self.ii;
+                    self.phase = BsPhase::InsInner;
                 }
-                while j < hi {
-                    let v = src.get(mem, j);
-                    dst.set(mem, k, v);
-                    j += 1;
-                    k += 1;
+                BsPhase::InsInner => {
+                    loop {
+                        if self.ij <= self.lo {
+                            break;
+                        }
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let u = self.src.get(mem, self.ij - 1);
+                        if u <= self.iv {
+                            break;
+                        }
+                        self.src.set(mem, self.ij, u);
+                        self.ij -= 1;
+                    }
+                    self.src.set(mem, self.ij, self.iv);
+                    self.ii += 1;
+                    self.phase = BsPhase::InsOuter;
                 }
-                lo = hi;
+                BsPhase::QsPivot => {
+                    if !fuel.spend(&*mem) {
+                        return StepOutcome::Running;
+                    }
+                    let mid = self.lo + (self.hi - self.lo) / 2;
+                    let (a, b, c) = (
+                        self.src.get(mem, self.lo),
+                        self.src.get(mem, mid),
+                        self.src.get(mem, self.hi - 1),
+                    );
+                    self.pivot = a.max(b).min(a.min(b).max(c)); // median
+                    self.pi = self.lo;
+                    self.pj = self.hi - 1;
+                    self.phase = BsPhase::ScanI;
+                }
+                BsPhase::ScanI => {
+                    loop {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        if self.src.get(mem, self.pi) < self.pivot {
+                            self.pi += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    self.phase = BsPhase::ScanJ;
+                }
+                BsPhase::ScanJ => {
+                    loop {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        if self.src.get(mem, self.pj) > self.pivot {
+                            self.pj -= 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    if self.pi >= self.pj {
+                        self.split_interval();
+                    } else {
+                        self.phase = BsPhase::PartSwap;
+                    }
+                }
+                BsPhase::PartSwap => {
+                    if !fuel.spend(&*mem) {
+                        return StepOutcome::Running;
+                    }
+                    let (x, y) = (self.src.get(mem, self.pi), self.src.get(mem, self.pj));
+                    self.src.set(mem, self.pi, y);
+                    self.src.set(mem, self.pj, x);
+                    self.pi += 1;
+                    if self.pj == 0 {
+                        self.split_interval();
+                    } else {
+                        self.pj -= 1;
+                        self.phase = BsPhase::ScanI;
+                    }
+                }
+                BsPhase::MergeOuter => {
+                    if self.width >= self.n {
+                        self.phase = BsPhase::Digest;
+                        continue;
+                    }
+                    self.mlo = 0;
+                    self.phase = BsPhase::MergePair;
+                }
+                BsPhase::MergePair => {
+                    if self.mlo >= self.n {
+                        std::mem::swap(&mut self.src, &mut self.dst);
+                        self.width *= 2;
+                        self.phase = BsPhase::MergeOuter;
+                        continue;
+                    }
+                    self.mmid = (self.mlo + self.width).min(self.n);
+                    self.mhi = (self.mlo + 2 * self.width).min(self.n);
+                    self.mi = self.mlo;
+                    self.mj = self.mmid;
+                    self.mk = self.mlo;
+                    self.phase = BsPhase::MergeMain;
+                }
+                BsPhase::MergeMain => {
+                    while self.mi < self.mmid && self.mj < self.mhi {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let (a, b) = (self.src.get(mem, self.mi), self.src.get(mem, self.mj));
+                        if a <= b {
+                            self.dst.set(mem, self.mk, a);
+                            self.mi += 1;
+                        } else {
+                            self.dst.set(mem, self.mk, b);
+                            self.mj += 1;
+                        }
+                        self.mk += 1;
+                    }
+                    self.phase = BsPhase::MergeTailI;
+                }
+                BsPhase::MergeTailI => {
+                    while self.mi < self.mmid {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let v = self.src.get(mem, self.mi);
+                        self.dst.set(mem, self.mk, v);
+                        self.mi += 1;
+                        self.mk += 1;
+                    }
+                    self.phase = BsPhase::MergeTailJ;
+                }
+                BsPhase::MergeTailJ => {
+                    while self.mj < self.mhi {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let v = self.src.get(mem, self.mj);
+                        self.dst.set(mem, self.mk, v);
+                        self.mj += 1;
+                        self.mk += 1;
+                    }
+                    self.mlo = self.mhi;
+                    self.phase = BsPhase::MergePair;
+                }
+                BsPhase::Digest => {
+                    while self.di < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let v = self.src.get(mem, self.di);
+                        if v < self.dprev {
+                            self.dsorted = 0;
+                        }
+                        self.dprev = v;
+                        self.digest = fnv1a(self.digest, v);
+                        self.di += 7;
+                    }
+                    return StepOutcome::Done(fnv1a(self.digest, self.dsorted));
+                }
             }
-            std::mem::swap(&mut src, &mut dst);
-            width *= 2;
         }
+    }
+}
 
-        // Digest: sortedness-sensitive hash over the final array.
-        let mut digest = FNV_SEED;
-        let mut prev = 0u64;
-        let mut sorted = 1u64;
-        for i in (0..n).step_by(7) {
-            let v = src.get(mem, i);
-            if v < prev {
-                sorted = 0;
-            }
-            prev = v;
-            digest = fnv1a(digest, v);
-        }
-        fnv1a(digest, sorted)
+impl BlockSortExec {
+    /// End the current partition: push both halves and return to the
+    /// interval stack.
+    fn split_interval(&mut self) {
+        let split = self.pi.max(self.lo + 1);
+        self.qstack.push((self.lo, split));
+        self.qstack.push((split, self.hi));
+        self.phase = BsPhase::QsPop;
     }
 }
 

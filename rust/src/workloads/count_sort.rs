@@ -9,7 +9,7 @@
 //! large best-threshold of 4096 with only ~198 jumps).
 
 use super::mem::{ElasticMem, U32Array, U64Array};
-use super::{fnv1a, Scale, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::util::Rng;
 
 /// Number of buckets (value range).
@@ -59,48 +59,113 @@ impl Workload for CountSort {
         self.counts = Some(counts);
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let input = self.input.unwrap();
-        let output = self.output.unwrap();
-        let counts = self.counts.unwrap();
-        let n = self.n;
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(CountSortExec {
+            input: self.input.expect("setup not called"),
+            output: self.output.unwrap(),
+            counts: self.counts.unwrap(),
+            n: self.n,
+            phase: CsPhase::Hist,
+            i: 0,
+            b: 0,
+            acc: 0,
+            dprev: 0,
+            dordered: 1,
+            digest: FNV_SEED,
+        })
+    }
+}
 
-        // Phase 1: histogram (sequential input scan; hot counts).
-        for i in 0..n {
-            let b = (input.get(mem, i) >> 16) as u64;
-            let c = counts.get(mem, b);
-            counts.set(mem, b, c + 1);
-        }
-        // Phase 2: exclusive prefix sum over the (tiny) histogram.
-        let mut acc = 0u64;
-        for b in 0..BUCKETS {
-            let c = counts.get(mem, b);
-            counts.set(mem, b, acc);
-            acc += c;
-        }
-        // Phase 3: scatter into output at each bucket's cursor.
-        for i in 0..n {
-            let v = input.get(mem, i);
-            let b = (v >> 16) as u64;
-            let pos = counts.get(mem, b);
-            output.set(mem, pos, v);
-            counts.set(mem, b, pos + 1);
-        }
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CsPhase {
+    /// Phase 1: histogram (sequential input scan; hot counts).
+    Hist,
+    /// Phase 2: exclusive prefix sum over the (tiny) histogram.
+    Prefix,
+    /// Phase 3: scatter into output at each bucket's cursor.
+    Scatter,
+    /// Bucket-ordering-sensitive hash.
+    Digest,
+}
 
-        // Digest: bucket-ordering-sensitive hash.
-        let mut digest = FNV_SEED;
-        let mut prev_bucket = 0u32;
-        let mut ordered = 1u64;
-        for i in (0..n).step_by(5) {
-            let v = output.get(mem, i);
-            let b = v >> 16;
-            if b < prev_bucket {
-                ordered = 0;
+/// Resumable count-sort state: one fuel unit per element (or per
+/// bucket, in the prefix phase).
+struct CountSortExec {
+    input: U32Array,
+    output: U32Array,
+    counts: U64Array,
+    n: u64,
+    phase: CsPhase,
+    i: u64,
+    b: u64,
+    acc: u64,
+    dprev: u32,
+    dordered: u64,
+    digest: u64,
+}
+
+impl WorkloadExec for CountSortExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        loop {
+            match self.phase {
+                CsPhase::Hist => {
+                    while self.i < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let b = (self.input.get(mem, self.i) >> 16) as u64;
+                        let c = self.counts.get(mem, b);
+                        self.counts.set(mem, b, c + 1);
+                        self.i += 1;
+                    }
+                    self.phase = CsPhase::Prefix;
+                }
+                CsPhase::Prefix => {
+                    while self.b < BUCKETS {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let c = self.counts.get(mem, self.b);
+                        self.counts.set(mem, self.b, self.acc);
+                        self.acc += c;
+                        self.b += 1;
+                    }
+                    self.phase = CsPhase::Scatter;
+                    self.i = 0;
+                }
+                CsPhase::Scatter => {
+                    while self.i < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let v = self.input.get(mem, self.i);
+                        let b = (v >> 16) as u64;
+                        let pos = self.counts.get(mem, b);
+                        self.output.set(mem, pos, v);
+                        self.counts.set(mem, b, pos + 1);
+                        self.i += 1;
+                    }
+                    self.phase = CsPhase::Digest;
+                    self.i = 0;
+                }
+                CsPhase::Digest => {
+                    while self.i < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let v = self.output.get(mem, self.i);
+                        let b = v >> 16;
+                        if b < self.dprev {
+                            self.dordered = 0;
+                        }
+                        self.dprev = b;
+                        self.digest = fnv1a(self.digest, v as u64);
+                        self.i += 5;
+                    }
+                    return StepOutcome::Done(fnv1a(self.digest, self.dordered));
+                }
             }
-            prev_bucket = b;
-            digest = fnv1a(digest, v as u64);
         }
-        fnv1a(digest, ordered)
     }
 }
 

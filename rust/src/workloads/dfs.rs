@@ -24,9 +24,10 @@
 //! elastic Stack area whose top pages ship with jump checkpoints.
 
 use super::mem::{ElasticMem, U32Array};
-use super::{fnv1a, Scale, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::mem::addr::AreaKind;
 use crate::util::Rng;
+use std::rc::Rc;
 
 /// u32 words per node record (32 B/node, 128 records per 4 KiB page).
 const REC: u64 = 8;
@@ -43,8 +44,8 @@ pub struct Dfs {
     seed: u64,
     nodes: Option<U32Array>,
     /// id -> memory slot (host-side metadata, like the C pointers of
-    /// the original implementation).
-    perm: Vec<u32>,
+    /// the original implementation; shared with in-flight execs).
+    perm: Rc<Vec<u32>>,
     stack_base: u64,
     stack_cap: u64,
 }
@@ -57,7 +58,7 @@ impl Dfs {
             shuffle: 0.25,
             seed: 0xDF5,
             nodes: None,
-            perm: Vec::new(),
+            perm: Rc::new(Vec::new()),
             stack_base: 0,
             stack_cap: 0,
         };
@@ -104,9 +105,10 @@ impl Dfs {
 
     /// slot of (branch b, position j): branches are grouped W at a
     /// time; a group occupies `W*depth` consecutive slots = `depth`
-    /// pages, one row of W records per page.
+    /// pages, one row of W records per page. (The layout rule the
+    /// exec's `slot_of` mirrors.)
     #[inline]
-    fn slot(&self, b: u64, j: u64) -> u64 {
+    pub fn slot(&self, b: u64, j: u64) -> u64 {
         let group = b / W;
         let col = b % W;
         group * (W * self.depth) + j * W + col
@@ -154,39 +156,90 @@ impl Workload for Dfs {
         self.stack_cap = self.depth + 8;
         self.stack_base = mem.mmap(self.stack_cap * 8, AreaKind::Stack, "dfs.stack");
         self.nodes = Some(nodes);
-        self.perm = perm;
+        self.perm = Rc::new(perm);
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let nodes = self.nodes.unwrap();
-        let stack_base = self.stack_base;
-        let depth = self.depth;
-        let branches = self.branches();
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(DfsExec {
+            nodes: self.nodes.expect("setup not called"),
+            perm: Rc::clone(&self.perm),
+            stack_base: self.stack_base,
+            depth: self.depth,
+            branches: self.branches(),
+            b: 0,
+            j: 0,
+            sp: 0,
+            unwinding: false,
+            digest: FNV_SEED,
+            visits: 0,
+        })
+    }
+}
 
-        let mut digest = FNV_SEED;
-        let mut visit_count = 0u64;
-        for b in 0..branches {
-            // descend the branch, maintaining the real path stack
-            let mut sp = 0u64;
-            for j in 0..depth {
-                let slot = self.perm[self.slot(b, j) as usize] as u64;
-                let base = slot * REC;
-                if nodes.get(mem, base) == 0 {
-                    nodes.set(mem, base, 1);
-                    let val = nodes.get(mem, base + 1);
-                    digest = fnv1a(digest, val as u64);
-                    visit_count += 1;
+/// Resumable traversal state: one fuel unit per branch step (descend)
+/// or per stack pop (unwind). The real path stack lives in elastic
+/// memory; only its cursor is host state.
+struct DfsExec {
+    nodes: U32Array,
+    perm: Rc<Vec<u32>>,
+    stack_base: u64,
+    depth: u64,
+    branches: u64,
+    b: u64,
+    j: u64,
+    sp: u64,
+    unwinding: bool,
+    digest: u64,
+    visits: u64,
+}
+
+impl DfsExec {
+    /// Same layout rule as [`Dfs::slot`], over the exec's own copy of
+    /// the shape parameters.
+    #[inline]
+    fn slot_of(&self, b: u64, j: u64) -> u64 {
+        let group = b / W;
+        let col = b % W;
+        group * (W * self.depth) + j * W + col
+    }
+}
+
+impl WorkloadExec for DfsExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        while self.b < self.branches {
+            if !self.unwinding {
+                // descend the branch, maintaining the real path stack
+                while self.j < self.depth {
+                    if !fuel.spend(&*mem) {
+                        return StepOutcome::Running;
+                    }
+                    let slot = self.perm[self.slot_of(self.b, self.j) as usize] as u64;
+                    let base = slot * REC;
+                    if self.nodes.get(mem, base) == 0 {
+                        self.nodes.set(mem, base, 1);
+                        let val = self.nodes.get(mem, base + 1);
+                        self.digest = fnv1a(self.digest, val as u64);
+                        self.visits += 1;
+                    }
+                    mem.write_u64(self.stack_base + self.sp * 8, slot);
+                    self.sp += 1;
+                    self.j += 1;
                 }
-                mem.write_u64(stack_base + sp * 8, slot);
-                sp += 1;
+                self.unwinding = true;
             }
             // unwind (pops touch the stack pages top-down)
-            while sp > 0 {
-                sp -= 1;
-                let _ = mem.read_u64(stack_base + sp * 8);
+            while self.sp > 0 {
+                if !fuel.spend(&*mem) {
+                    return StepOutcome::Running;
+                }
+                self.sp -= 1;
+                let _ = mem.read_u64(self.stack_base + self.sp * 8);
             }
+            self.unwinding = false;
+            self.j = 0;
+            self.b += 1;
         }
-        fnv1a(digest, visit_count)
+        StepOutcome::Done(fnv1a(self.digest, self.visits))
     }
 }
 

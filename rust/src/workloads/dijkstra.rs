@@ -11,7 +11,7 @@
 //! edge), classic O(n²) Dijkstra.
 
 use super::mem::{ElasticMem, U32Array, U64Array};
-use super::{fnv1a, Scale, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::util::Rng;
 
 const INF: u64 = u64::MAX / 2;
@@ -78,48 +78,126 @@ impl Workload for Dijkstra {
         self.visited = Some(visited);
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let matrix = self.matrix.unwrap();
-        let dist = self.dist.unwrap();
-        let visited = self.visited.unwrap();
-        let n = self.n;
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(DijkstraExec {
+            matrix: self.matrix.expect("setup not called"),
+            dist: self.dist.unwrap(),
+            visited: self.visited.unwrap(),
+            n: self.n,
+            phase: DijPhase::Init,
+            v: 0,
+            iter: 0,
+            best: INF,
+            u: self.n,
+            digest: FNV_SEED,
+        })
+    }
+}
 
-        dist.set(mem, 0, 0);
-        for _ in 0..n {
-            // extract-min over the (hot, local) distance array
-            let mut best = INF;
-            let mut u = n;
-            for v in 0..n {
-                if visited.get(mem, v) == 0 {
-                    let d = dist.get(mem, v);
-                    if d < best {
-                        best = d;
-                        u = v;
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DijPhase {
+    /// Seed `dist[0] = 0`.
+    Init,
+    /// Extract-min over the (hot, local) distance array.
+    Extract,
+    /// Relax: one full row of the (cold, huge) matrix.
+    Relax,
+    /// Fold the distance array into the digest.
+    Digest,
+}
+
+/// Resumable Dijkstra state: one fuel unit per scanned vertex in
+/// whichever phase is in flight.
+struct DijkstraExec {
+    matrix: U32Array,
+    dist: U64Array,
+    visited: U32Array,
+    n: u64,
+    phase: DijPhase,
+    /// Inner-loop vertex cursor of the current phase.
+    v: u64,
+    /// Completed extract+relax rounds (the outer `for _ in 0..n`).
+    iter: u64,
+    best: u64,
+    u: u64,
+    digest: u64,
+}
+
+impl WorkloadExec for DijkstraExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        loop {
+            match self.phase {
+                DijPhase::Init => {
+                    if !fuel.spend(&*mem) {
+                        return StepOutcome::Running;
+                    }
+                    self.dist.set(mem, 0, 0);
+                    self.phase = DijPhase::Extract;
+                    self.v = 0;
+                    self.best = INF;
+                    self.u = self.n;
+                }
+                DijPhase::Extract => {
+                    while self.v < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        if self.visited.get(mem, self.v) == 0 {
+                            let d = self.dist.get(mem, self.v);
+                            if d < self.best {
+                                self.best = d;
+                                self.u = self.v;
+                            }
+                        }
+                        self.v += 1;
+                    }
+                    if self.u == self.n {
+                        // disconnected remainder
+                        self.phase = DijPhase::Digest;
+                        self.v = 0;
+                    } else {
+                        self.visited.set(mem, self.u, 1);
+                        self.phase = DijPhase::Relax;
+                        self.v = 0;
                     }
                 }
-            }
-            if u == n {
-                break; // disconnected remainder
-            }
-            visited.set(mem, u, 1);
-            // relax: one full row of the (cold, huge) matrix
-            let row = u * n;
-            for v in 0..n {
-                let w = matrix.get(mem, row + v) as u64;
-                if w != 0 && visited.get(mem, v) == 0 {
-                    let nd = best + w;
-                    if nd < dist.get(mem, v) {
-                        dist.set(mem, v, nd);
+                DijPhase::Relax => {
+                    let row = self.u * self.n;
+                    while self.v < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let w = self.matrix.get(mem, row + self.v) as u64;
+                        if w != 0 && self.visited.get(mem, self.v) == 0 {
+                            let nd = self.best + w;
+                            if nd < self.dist.get(mem, self.v) {
+                                self.dist.set(mem, self.v, nd);
+                            }
+                        }
+                        self.v += 1;
                     }
+                    self.iter += 1;
+                    if self.iter >= self.n {
+                        self.phase = DijPhase::Digest;
+                    } else {
+                        self.phase = DijPhase::Extract;
+                        self.best = INF;
+                        self.u = self.n;
+                    }
+                    self.v = 0;
+                }
+                DijPhase::Digest => {
+                    while self.v < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        self.digest = fnv1a(self.digest, self.dist.get(mem, self.v));
+                        self.v += 1;
+                    }
+                    return StepOutcome::Done(self.digest);
                 }
             }
         }
-
-        let mut digest = FNV_SEED;
-        for v in 0..n {
-            digest = fnv1a(digest, dist.get(mem, v));
-        }
-        digest
     }
 }
 

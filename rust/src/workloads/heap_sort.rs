@@ -8,7 +8,7 @@
 //! best with ~12 jumps/sec.
 
 use super::mem::{ElasticMem, U64Array};
-use super::{fnv1a, Scale, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::util::Rng;
 
 pub struct HeapSort {
@@ -21,31 +21,6 @@ impl HeapSort {
     pub fn new(scale: Scale) -> Self {
         HeapSort { n: (scale.bytes() / 8).max(8), seed: 0x4EA9, arr: None }
     }
-}
-
-#[inline]
-fn sift_down<M: ElasticMem + ?Sized>(mem: &mut M, arr: U64Array, mut root: u64, end: u64) {
-    let v = arr.get(mem, root);
-    loop {
-        let mut child = 2 * root + 1;
-        if child >= end {
-            break;
-        }
-        let mut cv = arr.get(mem, child);
-        if child + 1 < end {
-            let rv = arr.get(mem, child + 1);
-            if rv > cv {
-                child += 1;
-                cv = rv;
-            }
-        }
-        if cv <= v {
-            break;
-        }
-        arr.set(mem, root, cv);
-        root = child;
-    }
-    arr.set(mem, root, v);
 }
 
 impl Workload for HeapSort {
@@ -70,40 +45,154 @@ impl Workload for HeapSort {
         self.arr = Some(arr);
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let arr = self.arr.unwrap();
-        let n = self.n;
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(HeapSortExec {
+            arr: self.arr.expect("setup not called"),
+            n: self.n,
+            phase: HeapPhase::Heapify,
+            i: self.n / 2,
+            end: self.n,
+            sift_root: 0,
+            sift_end: 0,
+            sift_v: 0,
+            di: 0,
+            dprev: 0,
+            dsorted: 1,
+            digest: FNV_SEED,
+        })
+    }
+}
 
-        // heapify
-        let mut i = n / 2;
-        while i > 0 {
-            i -= 1;
-            sift_down(mem, arr, i, n);
-        }
-        // extract max repeatedly
-        let mut end = n;
-        while end > 1 {
-            end -= 1;
-            let top = arr.get(mem, 0);
-            let last = arr.get(mem, end);
-            arr.set(mem, 0, last);
-            arr.set(mem, end, top);
-            sift_down(mem, arr, 0, end);
-        }
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HeapPhase {
+    /// Pick the next heapify root (`i` counts down to 0).
+    Heapify,
+    /// A heapify sift-down is in flight.
+    HeapifySift,
+    /// Swap the max out and shrink the heap (`end` counts down to 1).
+    Extract,
+    /// An extract sift-down is in flight.
+    ExtractSift,
+    /// Sortedness-sensitive sample hash over the result.
+    Digest,
+}
 
-        // Digest: sortedness-sensitive sample hash.
-        let mut digest = FNV_SEED;
-        let mut prev = 0u64;
-        let mut sorted = 1u64;
-        for i in (0..n).step_by(11) {
-            let v = arr.get(mem, i);
-            if v < prev {
-                sorted = 0;
+/// Resumable heap-sort state: one fuel unit per sift-down level (the
+/// root-to-leaf descent the paper's locality discussion centers on),
+/// per extract swap, and per digest sample.
+struct HeapSortExec {
+    arr: U64Array,
+    n: u64,
+    phase: HeapPhase,
+    i: u64,
+    end: u64,
+    /// In-flight sift-down: current hole, heap boundary, held value.
+    sift_root: u64,
+    sift_end: u64,
+    sift_v: u64,
+    di: u64,
+    dprev: u64,
+    dsorted: u64,
+    digest: u64,
+}
+
+impl HeapSortExec {
+    /// Resume the in-flight sift-down; `false` = fuel ran out mid-sift
+    /// (state keeps the hole position and held value).
+    fn sift(&mut self, mem: &mut dyn ElasticMem, fuel: &mut Fuel) -> bool {
+        loop {
+            let mut child = 2 * self.sift_root + 1;
+            if child >= self.sift_end {
+                break;
             }
-            prev = v;
-            digest = fnv1a(digest, v);
+            if !fuel.spend(&*mem) {
+                return false;
+            }
+            let mut cv = self.arr.get(mem, child);
+            if child + 1 < self.sift_end {
+                let rv = self.arr.get(mem, child + 1);
+                if rv > cv {
+                    child += 1;
+                    cv = rv;
+                }
+            }
+            if cv <= self.sift_v {
+                break;
+            }
+            self.arr.set(mem, self.sift_root, cv);
+            self.sift_root = child;
         }
-        fnv1a(digest, sorted)
+        self.arr.set(mem, self.sift_root, self.sift_v);
+        true
+    }
+}
+
+impl WorkloadExec for HeapSortExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        loop {
+            match self.phase {
+                HeapPhase::Heapify => {
+                    if self.i == 0 {
+                        self.end = self.n;
+                        self.phase = HeapPhase::Extract;
+                        continue;
+                    }
+                    if !fuel.spend(&*mem) {
+                        return StepOutcome::Running;
+                    }
+                    self.i -= 1;
+                    self.sift_root = self.i;
+                    self.sift_end = self.n;
+                    self.sift_v = self.arr.get(mem, self.i);
+                    self.phase = HeapPhase::HeapifySift;
+                }
+                HeapPhase::HeapifySift => {
+                    if !self.sift(mem, &mut fuel) {
+                        return StepOutcome::Running;
+                    }
+                    self.phase = HeapPhase::Heapify;
+                }
+                HeapPhase::Extract => {
+                    if self.end <= 1 {
+                        self.phase = HeapPhase::Digest;
+                        continue;
+                    }
+                    if !fuel.spend(&*mem) {
+                        return StepOutcome::Running;
+                    }
+                    self.end -= 1;
+                    let top = self.arr.get(mem, 0);
+                    let last = self.arr.get(mem, self.end);
+                    self.arr.set(mem, 0, last);
+                    self.arr.set(mem, self.end, top);
+                    self.sift_root = 0;
+                    self.sift_end = self.end;
+                    self.sift_v = self.arr.get(mem, 0);
+                    self.phase = HeapPhase::ExtractSift;
+                }
+                HeapPhase::ExtractSift => {
+                    if !self.sift(mem, &mut fuel) {
+                        return StepOutcome::Running;
+                    }
+                    self.phase = HeapPhase::Extract;
+                }
+                HeapPhase::Digest => {
+                    while self.di < self.n {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let v = self.arr.get(mem, self.di);
+                        if v < self.dprev {
+                            self.dsorted = 0;
+                        }
+                        self.dprev = v;
+                        self.digest = fnv1a(self.digest, v);
+                        self.di += 11;
+                    }
+                    return StepOutcome::Done(fnv1a(self.digest, self.dsorted));
+                }
+            }
+        }
     }
 }
 

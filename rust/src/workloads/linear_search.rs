@@ -8,7 +8,7 @@
 //! thresholds (Fig 10).
 
 use super::mem::{ElasticMem, U64Array};
-use super::{fnv1a, Scale, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::util::Rng;
 
 pub struct LinearSearch {
@@ -66,26 +66,55 @@ impl Workload for LinearSearch {
         self.arr = Some(arr);
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let arr = self.arr.expect("setup not called");
-        let mut digest = FNV_SEED;
-        for pass in 0..self.passes {
-            // Each pass scans the entire array, tracking the positions
-            // of all planted targets and a running population count.
-            let mut found = 0u64;
-            let mut hits = 0u64;
-            for i in 0..arr.len {
-                let v = arr.get(mem, i);
-                if v >> 63 == 1 {
-                    found = fnv1a(found, i);
-                    hits += 1;
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(LinearSearchExec {
+            arr: self.arr.expect("setup not called"),
+            passes: self.passes,
+            pass: 0,
+            i: 0,
+            found: 0,
+            hits: 0,
+            digest: FNV_SEED,
+        })
+    }
+}
+
+/// Resumable scan state: one fuel unit per scanned element. Each pass
+/// scans the entire array, tracking the positions of all planted
+/// targets and a running population count.
+struct LinearSearchExec {
+    arr: U64Array,
+    passes: u32,
+    pass: u32,
+    i: u64,
+    found: u64,
+    hits: u64,
+    digest: u64,
+}
+
+impl WorkloadExec for LinearSearchExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        while self.pass < self.passes {
+            while self.i < self.arr.len {
+                if !fuel.spend(&*mem) {
+                    return StepOutcome::Running;
                 }
+                let v = self.arr.get(mem, self.i);
+                if v >> 63 == 1 {
+                    self.found = fnv1a(self.found, self.i);
+                    self.hits += 1;
+                }
+                self.i += 1;
             }
-            digest = fnv1a(digest, found);
-            digest = fnv1a(digest, hits);
-            digest = fnv1a(digest, pass as u64);
+            self.digest = fnv1a(self.digest, self.found);
+            self.digest = fnv1a(self.digest, self.hits);
+            self.digest = fnv1a(self.digest, self.pass as u64);
+            self.pass += 1;
+            self.i = 0;
+            self.found = 0;
+            self.hits = 0;
         }
-        digest
+        StepOutcome::Done(self.digest)
     }
 }
 

@@ -26,6 +26,14 @@ pub trait ElasticMem {
     /// Scalar "register" state carried in jump checkpoints. Workloads
     /// may stash loop counters here; purely additive fidelity.
     fn regs_mut(&mut self) -> &mut [u64; 16];
+
+    /// Current simulated time in nanoseconds — what
+    /// [`Fuel`](super::Fuel) deadlines are checked against. Memories
+    /// without a clock (this flat [`DirectMem`]) report 0, so only
+    /// iteration budgets preempt there.
+    fn now_ns(&self) -> u64 {
+        0
+    }
 }
 
 /// Typed view of a mapped u64 array.

@@ -1,11 +1,21 @@
 //! The paper's evaluation workloads (Table 1): six algorithms with
 //! large memory footprints, each implemented against [`ElasticMem`] so
-//! every load/store goes through the elastic pager.  Footprints are
-//! scaled from the paper's 13–15 GB to tens of MiB at the same
-//! footprint/RAM overcommit ratio (DESIGN.md §1).
+//! every load/store goes through the elastic pager, plus extensions
+//! (paper §6 future work).  Footprints are scaled from the paper's
+//! 13–15 GB to tens of MiB at the same footprint/RAM overcommit ratio
+//! (DESIGN.md §1).
 //!
 //! Every workload computes a digest; `DirectMem` runs provide ground
 //! truth that all elastic/nswap runs must reproduce exactly.
+//!
+//! Execution is *resumable*: [`Workload::start`] returns a
+//! [`WorkloadExec`] — the algorithm's loop indices, cursors and
+//! partition state hoisted into an explicit struct — whose
+//! [`step`](WorkloadExec::step) runs until a [`Fuel`] budget expires.
+//! The multi-tenant scheduler preempts live algorithms between loop
+//! iterations this way, with no trace recording; [`Workload::run`] is
+//! the thin start-plus-step-to-completion wrapper, so single-process
+//! digests are unchanged.
 
 pub mod block_sort;
 pub mod count_sort;
@@ -19,6 +29,88 @@ pub mod trace;
 
 pub use mem::{DirectMem, ElasticMem, U32Array, U64Array};
 
+/// Preemption budget for one [`WorkloadExec::step`] call: an iteration
+/// allowance plus an optional simulated-time deadline, checked at
+/// loop-iteration granularity (every check sits between two memory
+/// operations, so the scheduler can slice anywhere in an algorithm).
+///
+/// A step with remaining budget at entry always makes at least one
+/// iteration of progress, so fuel-driven loops cannot livelock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fuel {
+    iters: u64,
+    deadline_ns: Option<u64>,
+}
+
+impl Fuel {
+    /// No budget: run to completion in one step.
+    pub fn unlimited() -> Fuel {
+        Fuel { iters: u64::MAX, deadline_ns: None }
+    }
+
+    /// At most `n` loop iterations (min 1, so progress is guaranteed).
+    pub fn iters(n: u64) -> Fuel {
+        Fuel { iters: n.max(1), deadline_ns: None }
+    }
+
+    /// Run until the memory's simulated clock reaches `deadline_ns`
+    /// (the scheduler's quantum form; see [`ElasticMem::now_ns`]).
+    pub fn until_ns(deadline_ns: u64) -> Fuel {
+        Fuel { iters: u64::MAX, deadline_ns: Some(deadline_ns) }
+    }
+
+    /// Spend one loop iteration. `false` means the budget is exhausted
+    /// and the stepper must return [`StepOutcome::Running`] *before*
+    /// issuing the iteration's memory operations (so a resume re-issues
+    /// nothing). The clock is consulted only when a deadline is set, so
+    /// unlimited/iteration budgets add just two branches to the loop.
+    #[inline]
+    pub fn spend(&mut self, mem: &dyn ElasticMem) -> bool {
+        let now = match self.deadline_ns {
+            Some(_) => mem.now_ns(),
+            None => 0,
+        };
+        self.spend_at(now)
+    }
+
+    /// [`Self::spend`] with an explicit clock reading (custom drivers
+    /// and tests).
+    #[inline]
+    pub fn spend_at(&mut self, now_ns: u64) -> bool {
+        if self.iters == 0 {
+            return false;
+        }
+        if let Some(d) = self.deadline_ns {
+            if now_ns >= d {
+                return false;
+            }
+        }
+        self.iters -= 1;
+        true
+    }
+}
+
+/// What one [`WorkloadExec::step`] call accomplished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Fuel ran out with work remaining; call `step` again to resume.
+    Running,
+    /// The algorithm completed; the digest of its result.
+    Done(u64),
+}
+
+/// A resumable, in-flight execution of a workload: all loop indices,
+/// heap/stack cursors and partition state live in the exec struct, so
+/// the scheduler can preempt between any two memory operations and
+/// resume later — even across cluster membership churn (the exec holds
+/// only virtual addresses and scalars, which jumps and drains never
+/// invalidate). Calling `step` again after `Done` returns the same
+/// digest.
+pub trait WorkloadExec {
+    /// Advance the algorithm until `fuel` expires or it completes.
+    fn step(&mut self, mem: &mut dyn ElasticMem, fuel: Fuel) -> StepOutcome;
+}
+
 /// A runnable benchmark algorithm.
 pub trait Workload {
     /// Short identifier ("linear", "dfs", …).
@@ -29,8 +121,22 @@ pub trait Workload {
     /// the stretch).
     fn setup(&mut self, mem: &mut dyn ElasticMem);
 
-    /// Execute the algorithm; returns a digest of the result.
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64;
+    /// Begin a resumable execution (after [`Self::setup`]). The
+    /// returned exec is self-contained: `start` may be called again
+    /// for a fresh execution of the same input.
+    fn start(&mut self) -> Box<dyn WorkloadExec>;
+
+    /// Execute the algorithm to completion; returns a digest of the
+    /// result. This is a thin `start` + step-to-completion wrapper, so
+    /// stepped and unstepped runs are bit-identical by construction.
+    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
+        let mut exec = self.start();
+        loop {
+            if let StepOutcome::Done(digest) = exec.step(mem, Fuel::unlimited()) {
+                return digest;
+            }
+        }
+    }
 
     /// Mapped footprint in bytes (for Table 1).
     fn footprint_bytes(&self) -> u64;
@@ -44,7 +150,8 @@ pub trait Workload {
     fn set_seed(&mut self, _seed: u64) {}
 }
 
-/// The six paper workloads at a given scale, by name.
+/// Any of the seven workloads — the paper's six (Table 1) plus the
+/// `table_scan` extension — at a given scale, by name.
 pub fn by_name(name: &str, scale: Scale) -> Option<Box<dyn Workload>> {
     by_name_seeded(name, scale, None)
 }
@@ -69,8 +176,15 @@ pub fn by_name_seeded(name: &str, scale: Scale, seed: Option<u64>) -> Option<Box
     Some(w)
 }
 
-/// All six, in the paper's Table 1 order.
+/// The paper's six, in Table 1 order.
 pub const ALL: [&str; 6] = ["dfs", "linear", "dijkstra", "block_sort", "heap_sort", "count_sort"];
+
+/// The canonical full sweep set: the paper's six plus the extension
+/// workloads (`table_scan`). Tests and eval sweeps that should cover
+/// *everything* [`by_name`] can build enumerate this, not ad-hoc
+/// chains.
+pub const ALL_EXT: [&str; 7] =
+    ["dfs", "linear", "dijkstra", "block_sort", "heap_sort", "count_sort", "table_scan"];
 
 /// Workload scale knob. `Full` reproduces the paper's overcommit ratio
 /// against the default 2x32 MiB cluster; `Tiny` keeps unit tests fast.
@@ -137,11 +251,39 @@ mod tests {
 
     #[test]
     fn every_named_workload_accepts_a_seed() {
-        for wl in ALL.iter().chain(["table_scan"].iter()) {
+        for wl in ALL_EXT {
             let mut w = by_name_seeded(wl, Scale::Bytes(64 * 1024), Some(7)).unwrap();
             // must not panic, and the workload still reports a footprint
             w.set_seed(9);
             assert!(w.footprint_bytes() > 0, "{wl}");
         }
+    }
+
+    #[test]
+    fn all_ext_is_all_plus_extensions_and_every_name_resolves() {
+        assert_eq!(&ALL_EXT[..ALL.len()], &ALL[..], "ALL_EXT must begin with the paper six");
+        for wl in ALL_EXT {
+            assert!(by_name(wl, Scale::Tiny).is_some(), "{wl} must resolve");
+        }
+    }
+
+    #[test]
+    fn fuel_budgets_spend_down_and_respect_deadlines() {
+        let mut f = Fuel::iters(2);
+        assert!(f.spend_at(0), "first iteration granted");
+        assert!(f.spend_at(0), "second iteration granted");
+        assert!(!f.spend_at(0), "third must be refused");
+        let mut f = Fuel::until_ns(100);
+        assert!(f.spend_at(99), "before the deadline");
+        assert!(!f.spend_at(100), "at the deadline");
+        let mut f = Fuel::iters(0);
+        assert!(f.spend_at(0), "iters(0) still guarantees one iteration of progress");
+        assert!(!f.spend_at(0));
+        // the mem-borrowing form reads the clock only under a deadline
+        let mem = DirectMem::new();
+        let mut f = Fuel::unlimited();
+        assert!(f.spend(&mem), "unlimited fuel always grants");
+        let mut f = Fuel::until_ns(1);
+        assert!(f.spend(&mem), "DirectMem reports t=0, before the deadline");
     }
 }

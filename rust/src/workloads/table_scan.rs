@@ -19,7 +19,7 @@
 //! jumping should pay off moderately.
 
 use super::mem::{ElasticMem, U32Array, U64Array};
-use super::{fnv1a, Scale, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::util::Rng;
 
 const REGIONS: u64 = 16;
@@ -94,38 +94,96 @@ impl Workload for TableScan {
         self.groups = Some(groups);
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let customers = self.customers.unwrap();
-        let orders = self.orders.unwrap();
-        let qualifies = self.qualifies.unwrap();
-        let groups = self.groups.unwrap();
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(TableScanExec {
+            customers: self.customers.expect("setup not called"),
+            orders: self.orders.unwrap(),
+            qualifies: self.qualifies.unwrap(),
+            groups: self.groups.unwrap(),
+            n_customers: self.n_customers,
+            n_orders: self.n_orders,
+            min_score: self.min_score,
+            phase: TsPhase::Filter,
+            i: 0,
+            digest: FNV_SEED,
+        })
+    }
+}
 
-        // Phase 1: dimension scan + filter -> qualifying bitmap.
-        for c in 0..self.n_customers {
-            let q = (customers.get(mem, c) >= self.min_score) as u32;
-            qualifies.set(mem, c, q);
-        }
-        // Phase 2: fact scan + semi-join probe + group-by aggregate.
-        for o in 0..self.n_orders {
-            let base = o * ORDER_W;
-            let cust = orders.get(mem, base) as u64;
-            if qualifies.get(mem, cust) != 0 {
-                let region = orders.get(mem, base + 1) as u64;
-                let amount = orders.get(mem, base + 2) as u64;
-                let g = region * 2;
-                let cnt = groups.get(mem, g);
-                groups.set(mem, g, cnt + 1);
-                let sum = groups.get(mem, g + 1);
-                groups.set(mem, g + 1, sum + amount);
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TsPhase {
+    /// Phase 1: dimension scan + filter -> qualifying bitmap.
+    Filter,
+    /// Phase 2: fact scan + semi-join probe + group-by aggregate.
+    Scan,
+    /// Digest over the result set.
+    Digest,
+}
+
+/// Resumable query state: one fuel unit per scanned row.
+struct TableScanExec {
+    customers: U32Array,
+    orders: U32Array,
+    qualifies: U32Array,
+    groups: U64Array,
+    n_customers: u64,
+    n_orders: u64,
+    min_score: u32,
+    phase: TsPhase,
+    i: u64,
+    digest: u64,
+}
+
+impl WorkloadExec for TableScanExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        loop {
+            match self.phase {
+                TsPhase::Filter => {
+                    while self.i < self.n_customers {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let q = (self.customers.get(mem, self.i) >= self.min_score) as u32;
+                        self.qualifies.set(mem, self.i, q);
+                        self.i += 1;
+                    }
+                    self.phase = TsPhase::Scan;
+                    self.i = 0;
+                }
+                TsPhase::Scan => {
+                    while self.i < self.n_orders {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        let base = self.i * ORDER_W;
+                        let cust = self.orders.get(mem, base) as u64;
+                        if self.qualifies.get(mem, cust) != 0 {
+                            let region = self.orders.get(mem, base + 1) as u64;
+                            let amount = self.orders.get(mem, base + 2) as u64;
+                            let g = region * 2;
+                            let cnt = self.groups.get(mem, g);
+                            self.groups.set(mem, g, cnt + 1);
+                            let sum = self.groups.get(mem, g + 1);
+                            self.groups.set(mem, g + 1, sum + amount);
+                        }
+                        self.i += 1;
+                    }
+                    self.phase = TsPhase::Digest;
+                    self.i = 0;
+                }
+                TsPhase::Digest => {
+                    while self.i < REGIONS {
+                        if !fuel.spend(&*mem) {
+                            return StepOutcome::Running;
+                        }
+                        self.digest = fnv1a(self.digest, self.groups.get(mem, self.i * 2));
+                        self.digest = fnv1a(self.digest, self.groups.get(mem, self.i * 2 + 1));
+                        self.i += 1;
+                    }
+                    return StepOutcome::Done(self.digest);
+                }
             }
         }
-        // Digest over the result set.
-        let mut digest = FNV_SEED;
-        for r in 0..REGIONS {
-            digest = fnv1a(digest, groups.get(mem, r * 2));
-            digest = fnv1a(digest, groups.get(mem, r * 2 + 1));
-        }
-        digest
     }
 }
 

@@ -11,8 +11,9 @@
 //! the policy decides.
 
 use super::mem::ElasticMem;
-use super::{fnv1a, Workload, FNV_SEED};
+use super::{fnv1a, Fuel, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::mem::addr::AreaKind;
+use std::rc::Rc;
 
 /// One recorded access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,6 +54,12 @@ impl Trace {
     pub fn resolve(starts: &[u64], rel: u64) -> u64 {
         let region = (rel >> 48) as usize;
         starts[region] + (rel & 0xFFFF_FFFF_FFFF)
+    }
+
+    /// Heap bytes needed to hold the op stream — the O(ops) recording
+    /// high-water that live steppers avoid entirely.
+    pub fn ops_bytes(&self) -> u64 {
+        (self.ops.len() * std::mem::size_of::<Op>()) as u64
     }
 }
 
@@ -131,6 +138,10 @@ impl<M: ElasticMem + ?Sized> ElasticMem for TracingMem<'_, M> {
     fn regs_mut(&mut self) -> &mut [u64; 16] {
         self.inner.regs_mut()
     }
+
+    fn now_ns(&self) -> u64 {
+        self.inner.now_ns()
+    }
 }
 
 /// Record a full workload run into a trace (driven against any memory).
@@ -141,19 +152,17 @@ pub fn record<M: ElasticMem + ?Sized>(w: &mut dyn Workload, mem: &mut M) -> (Tra
     (t.trace, digest)
 }
 
-/// A workload that replays a recorded trace.
+/// A workload that replays a recorded trace. The trace is `Rc`-shared
+/// with its in-flight [`TraceExec`] cursors, so starting a replay never
+/// copies the O(ops) op stream.
 pub struct TraceReplay {
-    pub trace: Trace,
+    pub trace: Rc<Trace>,
     starts: Vec<u64>,
 }
 
 impl TraceReplay {
     pub fn new(trace: Trace) -> Self {
-        TraceReplay { trace, starts: Vec::new() }
-    }
-
-    fn abs(&self, rel: u64) -> u64 {
-        Trace::resolve(&self.starts, rel)
+        TraceReplay { trace: Rc::new(trace), starts: Vec::new() }
     }
 }
 
@@ -174,38 +183,62 @@ impl Workload for TraceReplay {
         }
     }
 
-    fn run(&mut self, mem: &mut dyn ElasticMem) -> u64 {
-        let mut digest = FNV_SEED;
-        for i in 0..self.trace.ops.len() {
-            let op = self.trace.ops[i];
+    fn start(&mut self) -> Box<dyn WorkloadExec> {
+        Box::new(TraceExec {
+            trace: Rc::clone(&self.trace),
+            starts: self.starts.clone(),
+            pos: 0,
+            digest: FNV_SEED,
+        })
+    }
+}
+
+/// A resumable cursor over a recorded trace: one fuel unit per op, so
+/// the scheduler preempts frozen access patterns exactly as it
+/// preempts live algorithms.
+pub struct TraceExec {
+    trace: Rc<Trace>,
+    starts: Vec<u64>,
+    pos: usize,
+    digest: u64,
+}
+
+impl WorkloadExec for TraceExec {
+    fn step(&mut self, mem: &mut dyn ElasticMem, mut fuel: Fuel) -> StepOutcome {
+        while self.pos < self.trace.ops.len() {
+            if !fuel.spend(&*mem) {
+                return StepOutcome::Running;
+            }
+            let op = self.trace.ops[self.pos];
             match op {
                 Op::R8(r) => {
-                    let a = self.abs(r);
-                    digest = fnv1a(digest, mem.read_u8(a) as u64);
+                    let a = Trace::resolve(&self.starts, r);
+                    self.digest = fnv1a(self.digest, mem.read_u8(a) as u64);
                 }
                 Op::R32(r) => {
-                    let a = self.abs(r);
-                    digest = fnv1a(digest, mem.read_u32(a) as u64);
+                    let a = Trace::resolve(&self.starts, r);
+                    self.digest = fnv1a(self.digest, mem.read_u32(a) as u64);
                 }
                 Op::R64(r) => {
-                    let a = self.abs(r);
-                    digest = fnv1a(digest, mem.read_u64(a));
+                    let a = Trace::resolve(&self.starts, r);
+                    self.digest = fnv1a(self.digest, mem.read_u64(a));
                 }
                 Op::W8(r, v) => {
-                    let a = self.abs(r);
+                    let a = Trace::resolve(&self.starts, r);
                     mem.write_u8(a, v);
                 }
                 Op::W32(r, v) => {
-                    let a = self.abs(r);
+                    let a = Trace::resolve(&self.starts, r);
                     mem.write_u32(a, v);
                 }
                 Op::W64(r, v) => {
-                    let a = self.abs(r);
+                    let a = Trace::resolve(&self.starts, r);
                     mem.write_u64(a, v);
                 }
             }
+            self.pos += 1;
         }
-        digest
+        StepOutcome::Done(self.digest)
     }
 }
 

@@ -6,7 +6,7 @@ use elastic_os::mem::addr::AreaKind;
 use elastic_os::mem::NodeId;
 use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
 use elastic_os::os::EwmaPolicy;
-use elastic_os::workloads::{by_name, DirectMem, ElasticMem, Scale, Workload, ALL};
+use elastic_os::workloads::{by_name, DirectMem, ElasticMem, Scale, Workload, ALL, ALL_EXT};
 
 /// Small but pressure-inducing testbed: 2 nodes x 384 KiB, ~1.3x
 /// overcommitted footprints.
@@ -203,8 +203,9 @@ fn workload_table1_footprints_are_close_to_target() {
 
 #[test]
 fn extension_workloads_match_ground_truth() {
-    // paper §6 future-work extensions run through the same machinery
-    for wl in ["table_scan"] {
+    // paper §6 future-work extensions (ALL_EXT minus the paper six)
+    // run through the same machinery
+    for wl in ALL_EXT.iter().copied().filter(|wl| !ALL.contains(wl)) {
         let expect = ground_truth(wl);
         let mut w = by_name(wl, Scale::Bytes(footprint())).unwrap();
         let mut sys = ElasticSystem::new(test_cfg(Mode::Elastic), 256);
