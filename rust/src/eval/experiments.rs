@@ -419,6 +419,8 @@ pub fn multi_tenant(cfg: &EvalConfig) -> Table {
     let run = |mode: Mode| -> Vec<crate::os::sched::ProcRunReport> {
         let ccfg = ClusterConfig {
             node_frames: vec![cfg.node_frames; 2],
+            push_batch: cfg.push_batch,
+            prefetch: cfg.prefetch,
             ..ClusterConfig::default()
         };
         let mut cluster = ElasticCluster::new(ccfg);
@@ -502,9 +504,15 @@ pub fn churn(cfg: &EvalConfig) -> Table {
         (0..wls.len()).map(|i| direct_ground_truth(make(i).as_mut())).collect();
 
     let run = |mode: Mode,
-               schedule: Option<ChurnSchedule>|
+               schedule: Option<ChurnSchedule>,
+               push_batch: u32|
      -> (ElasticCluster, Vec<ProcRunReport>) {
-        let ccfg = ClusterConfig { node_frames: vec![frames; 2], ..ClusterConfig::default() };
+        let ccfg = ClusterConfig {
+            node_frames: vec![frames; 2],
+            push_batch,
+            prefetch: cfg.prefetch,
+            ..ClusterConfig::default()
+        };
         let mut cluster = ElasticCluster::new(ccfg);
         if let Some(s) = schedule {
             cluster.set_churn(s);
@@ -521,12 +529,13 @@ pub fn churn(cfg: &EvalConfig) -> Table {
         (cluster, reports)
     };
 
-    // Calibrate the schedule per mode off an undisturbed run: join
-    // node2 at ~15% of that mode's makespan and retire node1 at ~30%.
-    // Up to the first event the churn run replays the calibration run
-    // bit-for-bit, so both events are guaranteed to land mid-run.
-    let churned = |mode: Mode| -> (ElasticCluster, Vec<ProcRunReport>) {
-        let (cal, _) = run(mode, None);
+    // Calibrate the schedule per configuration off an undisturbed run:
+    // join node2 at ~15% of that configuration's makespan and retire
+    // node1 at ~30%. Up to the first event the churn run replays the
+    // calibration run bit-for-bit, so both events are guaranteed to
+    // land mid-run.
+    let churned = |mode: Mode, push_batch: u32| -> (ElasticCluster, Vec<ProcRunReport>) {
+        let (cal, _) = run(mode, None, push_batch);
         let makespan = cal.clock.now().max(1);
         run(
             mode,
@@ -534,10 +543,11 @@ pub fn churn(cfg: &EvalConfig) -> Table {
                 ChurnEvent { at_ns: makespan * 15 / 100, op: ChurnOp::Join { node: 2, frames } },
                 ChurnEvent { at_ns: makespan * 30 / 100, op: ChurnOp::Leave { node: 1 } },
             ])),
+            push_batch,
         )
     };
-    let (eos_cluster, eos) = churned(Mode::Elastic);
-    let (nswap_cluster, nswap) = churned(Mode::Nswap);
+    let (eos_cluster, eos) = churned(Mode::Elastic, cfg.push_batch);
+    let (nswap_cluster, nswap) = churned(Mode::Nswap, cfg.push_batch);
     for (cl, label) in [(&eos_cluster, "eos"), (&nswap_cluster, "nswap")] {
         let joins =
             cl.churn_log.iter().filter(|a| matches!(a.op, ChurnOp::Join { .. })).count();
@@ -597,7 +607,174 @@ pub fn churn(cfg: &EvalConfig) -> Table {
         "-".into(),
         "-".into(),
     ]);
+
+    // Batched-vs-unbatched drain comparison (ISSUE 4): the same eos
+    // churn with PushBatch evacuation vs per-page pushes — the drain
+    // evacuates the identical page set, but the batched one pays one
+    // wire latency per message instead of per page.
+    let batched_n = if cfg.push_batch > 1 { cfg.push_batch } else { 8 };
+    let drain_saved = |c: &ElasticCluster| -> u64 {
+        c.churn_log.iter().filter_map(|a| a.drain).map(|d| d.wire_ns_saved).sum()
+    };
+    let (unbatched_ns, batched_ns, wire_saved) = if cfg.push_batch > 1 {
+        // the headline eos run above was already batched; compare it
+        // against a fresh per-page run
+        let (uc, _) = churned(Mode::Elastic, 1);
+        (uc.churn_ns, eos_cluster.churn_ns, drain_saved(&eos_cluster))
+    } else {
+        let (bc, _) = churned(Mode::Elastic, batched_n);
+        (eos_cluster.churn_ns, bc.churn_ns, drain_saved(&bc))
+    };
+    t.note(format!(
+        "drain batching (--batch {batched_n}): control-plane churn time {} batched vs {} \
+         unbatched; the batched drain amortized {} of wire latency across its PushBatch \
+         messages",
+        fmt_ns(batched_ns as f64),
+        fmt_ns(unbatched_ns as f64),
+        fmt_ns(wire_saved as f64),
+    ));
     t
+}
+
+/// Prefetch sweep (ISSUE 4): pull-batching window vs remote faults and
+/// execution time on the *sequential* workloads — linear search and
+/// table scan sweep ascending addresses, so a spatial window pulled
+/// alongside each fault is exactly the pages the scan touches next.
+/// Expected shape: remote faults drop ~(window+1)-fold, sim time drops
+/// with them (each prefetched page trades a full pull round-trip for
+/// marginal bandwidth on an already-paid message), and hits track
+/// pulls closely (few wasted guesses on sequential sweeps).
+pub fn prefetch_sweep(cfg: &EvalConfig) -> Table {
+    let mut t = Table::new(
+        "Prefetch sweep: batched pulls on sequential workloads (eos, threshold 512)",
+        &["algorithm", "prefetch", "sim time", "speedup", "pulls", "prefetched", "hits", "bytes"],
+    );
+    for wl in ["linear", "table_scan"] {
+        let mut base_ns = 1u64;
+        for pf in [0u32, 4, 8, 16] {
+            let mut c = cfg.clone();
+            c.prefetch = pf;
+            let r = run_once(&c, wl, Mode::Elastic, 512);
+            if pf == 0 {
+                base_ns = r.sim_ns.max(1);
+            }
+            t.row(vec![
+                wl.to_string(),
+                pf.to_string(),
+                fmt_ns(r.sim_ns as f64),
+                fmt_x(base_ns as f64 / r.sim_ns.max(1) as f64),
+                r.metrics.remote_faults.to_string(),
+                r.metrics.prefetch_pulled.to_string(),
+                r.metrics.prefetch_hits.to_string(),
+                fmt_bytes(r.metrics.total_bytes() as f64),
+            ]);
+        }
+    }
+    t.note(
+        "prefetch=0 is the bit-exact legacy pull path; each row above it batches the fault \
+         plus its spatial window into one PullBatchReq/PullBatchData round-trip"
+            .to_string(),
+    );
+    t
+}
+
+/// `eval bench-json`: write BENCH_migration.json — a machine-readable
+/// perf snapshot of the migration paths (sequential-scan sim time and
+/// fault counts with prefetch off/on, drain time batched/unbatched,
+/// and the recorded-vs-live op-buffer bytes), so CI can accumulate a
+/// perf trajectory as an artifact.
+pub fn bench_json(cfg: &EvalConfig) {
+    use crate::os::sched::{direct_ground_truth, ElasticCluster};
+    let mut scenarios: Vec<String> = Vec::new();
+
+    // Fault path: sequential workloads, prefetch off vs on.
+    for wl in ["linear", "table_scan"] {
+        for pf in [0u32, 8] {
+            let mut c = cfg.clone();
+            c.prefetch = pf;
+            let r = run_once(&c, wl, Mode::Elastic, 512);
+            scenarios.push(format!(
+                "{{\"name\":\"{wl}/prefetch{pf}\",\"sim_ns\":{},\"remote_faults\":{},\
+                 \"prefetch_pulled\":{},\"prefetch_hits\":{},\"net_bytes\":{}}}",
+                r.sim_ns,
+                r.metrics.remote_faults,
+                r.metrics.prefetch_pulled,
+                r.metrics.prefetch_hits,
+                r.metrics.total_bytes(),
+            ));
+        }
+    }
+
+    // Drain path: retire a populated node, per-page vs batched.
+    for batch in [1u32, 8] {
+        let mut sc = cfg.system_config(Mode::Elastic);
+        sc.push_batch = batch;
+        sc.node_frames = vec![cfg.node_frames; 3];
+        let mut sys = ElasticSystem::new(sc, 512);
+        let mut w = by_name_seeded("linear", Scale::Bytes(cfg.footprint), cfg.seed)
+            .expect("linear workload exists");
+        sys.run_workload(w.as_mut());
+        // Retire whichever spare node holds the most of the process's
+        // pages, so the drain actually has something to evacuate.
+        let victim = [1u8, 2]
+            .into_iter()
+            .map(crate::mem::NodeId)
+            .max_by_key(|n| sys.resident_at(*n))
+            .expect("two spare nodes");
+        let t0 = sys.clock.now();
+        let (drain_ns, rep) = match sys.retire_node(victim) {
+            Ok(rep) => (sys.clock.now() - t0, rep),
+            Err(e) => panic!("bench-json drain scenario: {e}"),
+        };
+        scenarios.push(format!(
+            "{{\"name\":\"drain/batch{batch}\",\"drain_ns\":{drain_ns},\"evacuated\":{},\
+             \"lost\":{},\"wire_ns_saved\":{}}}",
+            rep.evacuated, rep.lost, rep.wire_ns_saved,
+        ));
+    }
+
+    // Recorded-vs-live op-buffer bytes: what trace mode would have
+    // held for a 2-tenant live run (live tenants hold 0).
+    let per_fp = (cfg.node_frames as u64 * 4096 * 13) / 10 / 2;
+    let mut cluster = ElasticCluster::new(crate::os::kernel::ClusterConfig {
+        node_frames: vec![cfg.node_frames; 2],
+        push_batch: cfg.push_batch,
+        prefetch: cfg.prefetch,
+        ..Default::default()
+    });
+    let mut jobs = Vec::new();
+    let mut truths = Vec::new();
+    for (i, wl) in ["linear", "table_scan"].iter().enumerate() {
+        let seed = crate::workloads::tenant_seed(cfg.seed, i);
+        let mut w = by_name_seeded(wl, Scale::Bytes(per_fp), seed).unwrap();
+        truths.push(direct_ground_truth(w.as_mut()));
+        let slot = cluster
+            .spawn_placed(Mode::Elastic, wl, 512)
+            .expect("live cluster placement");
+        jobs.push((slot, w));
+    }
+    let reports = cluster.run_live(jobs);
+    for (r, truth) in reports.iter().zip(&truths) {
+        assert_eq!(r.digest, *truth, "bench-json live tenant diverged");
+    }
+    let trace_bytes: u64 = reports
+        .iter()
+        .map(|r| r.ops * std::mem::size_of::<crate::workloads::trace::Op>() as u64)
+        .sum();
+
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"node_frames\": {},\n  \"footprint_bytes\": {},\n  \
+         \"scenarios\": [\n    {}\n  ],\n  \"recorded_vs_live\": {{\"trace_op_bytes\": {}, \
+         \"live_op_bytes\": 0, \"batch_wire_saved_ns\": {}}}\n}}\n",
+        cfg.node_frames,
+        cfg.footprint,
+        scenarios.join(",\n    "),
+        trace_bytes,
+        cluster.batch_saved_ns(),
+    );
+    std::fs::write("BENCH_migration.json", &json).expect("write BENCH_migration.json");
+    println!("wrote BENCH_migration.json ({} scenarios)", scenarios.len());
+    print!("{json}");
 }
 
 /// Run everything, in paper order.
@@ -616,6 +793,7 @@ pub fn run_all(cfg: &EvalConfig) {
     multinode(cfg).emit("multinode.txt");
     multi_tenant(cfg).emit("multi_tenant.txt");
     churn(cfg).emit("churn.txt");
+    prefetch_sweep(cfg).emit("prefetch.txt");
 }
 
 /// Dispatch by experiment name (CLI).
@@ -635,6 +813,8 @@ pub fn run_named(cfg: &EvalConfig, name: &str) -> bool {
         "multinode" => multinode(cfg).emit("multinode.txt"),
         "multi-tenant" | "multi_tenant" => multi_tenant(cfg).emit("multi_tenant.txt"),
         "churn" => churn(cfg).emit("churn.txt"),
+        "prefetch" => prefetch_sweep(cfg).emit("prefetch.txt"),
+        "bench-json" | "bench_json" => bench_json(cfg),
         "all" => run_all(cfg),
         _ => return false,
     }

@@ -32,6 +32,11 @@ pub struct EvalConfig {
     /// `Some(s)` reseeds input generation for reproducible variation
     /// (multi-tenant and churn runs derive per-tenant seeds from it).
     pub seed: Option<u64>,
+    /// Pages per batched push message (CLI `--batch`; 1 = off, the
+    /// historical per-page behavior).
+    pub push_batch: u32,
+    /// Remote-fault pull prefetch window (CLI `--prefetch`; 0 = off).
+    pub prefetch: u32,
 }
 
 impl Default for EvalConfig {
@@ -44,6 +49,8 @@ impl Default for EvalConfig {
             thresholds: vec![32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 32768],
             model_policy: false,
             seed: None,
+            push_batch: 1,
+            prefetch: 0,
         }
     }
 }
@@ -64,6 +71,8 @@ impl EvalConfig {
         SystemConfig {
             node_frames: vec![self.node_frames; self.nodes],
             mode,
+            push_batch: self.push_batch,
+            prefetch: self.prefetch,
             ..SystemConfig::default()
         }
     }

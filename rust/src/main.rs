@@ -42,6 +42,15 @@ USAGE:
   elasticos run --workload <name[,name...]> [--mode eos|nswap] [--threshold N]
                 [--frames F] [--footprint BYTES] [--nodes N] [--procs N]
                 [--seed N] [--policy threshold|ewma|burst|model]
+                [--batch N]                      (pages per push message: kswapd,
+                                                  direct reclaim, balance and the
+                                                  drain protocol ship N-page
+                                                  PushBatches paying ONE wire
+                                                  latency; default 1 = off)
+                [--prefetch N]                   (pull batching: each remote fault
+                                                  pulls up to N spatially-adjacent
+                                                  same-owner pages in the same
+                                                  message; default 0 = off)
                 [--live]                         (with --procs N: step the live
                                                   algorithms under preemption
                                                   instead of replaying recorded
@@ -58,9 +67,10 @@ USAGE:
                  workload list — on one cluster, contending for its frames;
                  --footprint is then the TOTAL across processes)
   elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
-                  ablation-policy|ablation-balance|multinode|multi-tenant|churn|all>
-                 [--fast] [--seed N]
-  elasticos cluster [--pages N] [--threshold N]
+                  ablation-policy|ablation-balance|multinode|multi-tenant|churn|
+                  prefetch|bench-json|all>
+                 [--fast] [--seed N] [--batch N] [--prefetch N]
+  elasticos cluster [--pages N] [--threshold N] [--prefetch N]
   elasticos info
 
 Workloads: dfs linear dijkstra block_sort heap_sort count_sort table_scan";
@@ -75,6 +85,12 @@ fn cmd_run(args: &Args) -> i32 {
     let frames: u32 = args.flag_parse("frames").unwrap_or(2048);
     let footprint: u64 =
         args.flag_parse("footprint").unwrap_or(frames as u64 * 4096 * 13 / 10);
+    let push_batch: u32 = args.flag_parse("batch").unwrap_or(1);
+    let prefetch: u32 = args.flag_parse("prefetch").unwrap_or(0);
+    if push_batch == 0 {
+        eprintln!("--batch must be >= 1 (1 = batching off)");
+        return 2;
+    }
 
     let procs: usize = args.flag_parse("procs").unwrap_or(1);
     if procs > 1 {
@@ -101,6 +117,8 @@ fn cmd_run(args: &Args) -> i32 {
     let mut sc = elastic_os::os::system::SystemConfig {
         node_frames: vec![frames, frames],
         mode,
+        push_batch,
+        prefetch,
         ..Default::default()
     };
     if let Some(n) = args.flag_parse::<usize>("nodes") {
@@ -145,6 +163,15 @@ fn cmd_run(args: &Args) -> i32 {
         report.metrics.sync_events,
         elastic_os::util::stats::fmt_ns(report.wall_ns as f64),
     );
+    if push_batch > 1 || prefetch > 0 {
+        println!(
+            "  batching: batch={push_batch} prefetch={prefetch} prefetch_pulled={} \
+             prefetch_hits={} wire_saved={}",
+            report.metrics.prefetch_pulled,
+            report.metrics.prefetch_hits,
+            elastic_os::util::stats::fmt_ns(sys.batch_saved_ns() as f64),
+        );
+    }
     0
 }
 
@@ -183,6 +210,8 @@ fn cmd_run_multi(
     }
     let per_fp = (footprint / procs as u64).max(16 * 4096);
     let seed = args.flag_parse::<u64>("seed");
+    let push_batch: u32 = args.flag_parse("batch").unwrap_or(1);
+    let prefetch: u32 = args.flag_parse("prefetch").unwrap_or(0);
 
     // Per-tenant ground truth (per-tenant seeds are decorrelated from
     // --seed so the whole family reproduces). Live mode needs only one
@@ -214,7 +243,12 @@ fn cmd_run_multi(
     }
     let record_wall_ns = record_t0.elapsed().as_nanos() as u64;
 
-    let cfg = ClusterConfig { node_frames: vec![frames; nodes], ..ClusterConfig::default() };
+    let cfg = ClusterConfig {
+        node_frames: vec![frames; nodes],
+        push_batch,
+        prefetch,
+        ..ClusterConfig::default()
+    };
     let mut cluster = ElasticCluster::new(cfg);
 
     // Placement: least-loaded from the live registry by default
@@ -323,6 +357,18 @@ fn cmd_run_multi(
         frames,
         elastic_os::util::stats::fmt_ns(cluster.clock.now() as f64),
     );
+    if push_batch > 1 || prefetch > 0 {
+        let (pulled, hits): (u64, u64) = reports
+            .iter()
+            .fold((0, 0), |(p, h), r| {
+                (p + r.metrics.prefetch_pulled, h + r.metrics.prefetch_hits)
+            });
+        println!(
+            "batching: batch={push_batch} prefetch={prefetch} prefetch_pulled={pulled} \
+             prefetch_hits={hits} wire_saved={}",
+            elastic_os::util::stats::fmt_ns(cluster.batch_saved_ns() as f64),
+        );
+    }
     if live {
         println!("tenancy: live steppers (no recording pass; 0 B of O(ops) replay buffers)");
     } else {
@@ -355,6 +401,16 @@ fn cmd_eval(args: &Args) -> i32 {
     if let Some(r) = args.flag_parse::<u32>("repeats") {
         cfg.repeats = r;
     }
+    if let Some(b) = args.flag_parse::<u32>("batch") {
+        if b == 0 {
+            eprintln!("--batch must be >= 1 (1 = batching off)");
+            return 2;
+        }
+        cfg.push_batch = b;
+    }
+    if let Some(p) = args.flag_parse::<u32>("prefetch") {
+        cfg.prefetch = p;
+    }
     cfg.seed = args.flag_parse::<u64>("seed");
     if experiments::run_named(&cfg, &name) {
         0
@@ -367,7 +423,8 @@ fn cmd_eval(args: &Args) -> i32 {
 fn cmd_cluster(args: &Args) -> i32 {
     let pages: u32 = args.flag_parse("pages").unwrap_or(2048);
     let threshold: u32 = args.flag_parse("threshold").unwrap_or(32);
-    match elastic_os::net::peer::run_local_pair(pages, threshold) {
+    let prefetch: u32 = args.flag_parse("prefetch").unwrap_or(0);
+    match elastic_os::net::peer::run_local_pair_opts(pages, threshold, prefetch) {
         Ok((leader, worker)) => {
             let expect = elastic_os::net::peer::expected_digest(pages);
             println!("leader: node={} digest={:#x}", leader.node, leader.digest);
@@ -386,6 +443,12 @@ fn cmd_cluster(args: &Args) -> i32 {
                 worker.stats.jumps_received,
                 worker.stats.bytes_sent
             );
+            if prefetch > 0 {
+                println!(
+                    "prefetch: window={} leader_prefetched={} worker_prefetched={}",
+                    prefetch, leader.stats.prefetched, worker.stats.prefetched
+                );
+            }
             if leader.digest == expect && worker.digest == expect {
                 println!("digest OK ({expect:#x})");
                 0

@@ -24,6 +24,8 @@ use super::addr::{FrameId, NodeId, Vpn, MAX_NODES};
 /// bit  2      referenced (PG_ACCESSED analogue)
 /// bit  3      dirty
 /// bit  4      pinned     (never evicted/pushed)
+/// bit  5      prefetched (pulled speculatively; cleared on first
+///             touch — the prefetch-hit signal — and on relocation)
 /// bits 8..12  owner node (0..MAX_NODES)
 /// bits 32..64 frame id within the owner's pool
 /// ```
@@ -36,6 +38,7 @@ const ST_RESIDENT: u64 = 1;
 const FL_REF: u64 = 1 << 2;
 const FL_DIRTY: u64 = 1 << 3;
 const FL_PIN: u64 = 1 << 4;
+const FL_PREFETCHED: u64 = 1 << 5;
 const NODE_SHIFT: u64 = 8;
 const NODE_MASK: u64 = 0xF << NODE_SHIFT;
 const FRAME_SHIFT: u64 = 32;
@@ -107,6 +110,20 @@ impl Pte {
             self.0 |= FL_PIN;
         } else {
             self.0 &= !FL_PIN;
+        }
+    }
+
+    #[inline]
+    pub fn prefetched(self) -> bool {
+        self.0 & FL_PREFETCHED != 0
+    }
+
+    #[inline]
+    pub fn set_prefetched(&mut self, v: bool) {
+        if v {
+            self.0 |= FL_PREFETCHED;
+        } else {
+            self.0 &= !FL_PREFETCHED;
         }
     }
 }
@@ -181,7 +198,8 @@ impl ElasticPageTable {
 
     /// Move a resident page to a new (node, frame) — the push/pull
     /// primitive's table update. Flags (dirty/pinned) are preserved;
-    /// referenced is cleared (it is a per-residence signal).
+    /// referenced and prefetched are cleared (both are per-residence
+    /// signals — a prefetched page that moved again was never hit).
     pub fn relocate(&mut self, idx: PageIdx, node: NodeId, frame: FrameId) {
         let pte = &mut self.ptes[idx as usize];
         debug_assert!(pte.is_resident(), "relocating a non-resident page {idx}");
@@ -288,17 +306,32 @@ mod tests {
     }
 
     #[test]
+    fn pte_prefetched_flag_round_trips() {
+        let mut p = Pte::resident(n(1), FrameId(4));
+        assert!(!p.prefetched());
+        p.set_prefetched(true);
+        assert!(p.prefetched());
+        assert_eq!(p.node(), n(1));
+        assert_eq!(p.frame(), FrameId(4));
+        assert!(!p.referenced() && !p.dirty() && !p.pinned());
+        p.set_prefetched(false);
+        assert!(!p.prefetched());
+    }
+
+    #[test]
     fn relocate_moves_counters_and_keeps_flags() {
         let mut t = ElasticPageTable::new(0, 10);
         t.map(3, n(0), FrameId(7));
         t.get_mut(3).set_dirty(true);
         t.get_mut(3).set_referenced(true);
+        t.get_mut(3).set_prefetched(true);
         t.relocate(3, n(1), FrameId(2));
         let p = t.get(3);
         assert_eq!(p.node(), n(1));
         assert_eq!(p.frame(), FrameId(2));
         assert!(p.dirty(), "dirty must survive relocation");
         assert!(!p.referenced(), "referenced must reset on relocation");
+        assert!(!p.prefetched(), "prefetched must reset on relocation");
         assert_eq!(t.resident_at(n(0)), 0);
         assert_eq!(t.resident_at(n(1)), 1);
         t.verify().unwrap();

@@ -76,13 +76,9 @@ impl ClusterLru {
         self.slot_of.get(&key).map(|&s| NodeId(self.links[s as usize].on as u8))
     }
 
-    /// Insert at the hot (MRU) end.
-    pub fn push_hot(&mut self, node: NodeId, key: PageKey) {
-        debug_assert!(!self.slot_of.contains_key(&key), "page {key:?} already on a list");
-        let n = node.0 as usize;
-        let old_tail = self.tail[n];
-        let link = Link { key, prev: old_tail, next: NIL, on: node.0 as u32 };
-        let slot = match self.free.pop() {
+    /// Take a link arena slot (reusing freed slots first).
+    fn alloc_slot(&mut self, link: Link) -> u32 {
+        match self.free.pop() {
             Some(s) => {
                 self.links[s as usize] = link;
                 s
@@ -91,13 +87,39 @@ impl ClusterLru {
                 self.links.push(link);
                 (self.links.len() - 1) as u32
             }
-        };
+        }
+    }
+
+    /// Insert at the hot (MRU) end.
+    pub fn push_hot(&mut self, node: NodeId, key: PageKey) {
+        debug_assert!(!self.slot_of.contains_key(&key), "page {key:?} already on a list");
+        let n = node.0 as usize;
+        let old_tail = self.tail[n];
+        let slot = self.alloc_slot(Link { key, prev: old_tail, next: NIL, on: node.0 as u32 });
         if old_tail == NIL {
             self.head[n] = slot;
         } else {
             self.links[old_tail as usize].next = slot;
         }
         self.tail[n] = slot;
+        self.len[n] += 1;
+        self.slot_of.insert(key, slot);
+    }
+
+    /// Insert at the cold (LRU) end — how speculatively pulled
+    /// (prefetched) pages enter a node's list, so a wrong guess is the
+    /// first thing the reclaim scanner evicts.
+    pub fn push_cold(&mut self, node: NodeId, key: PageKey) {
+        debug_assert!(!self.slot_of.contains_key(&key), "page {key:?} already on a list");
+        let n = node.0 as usize;
+        let old_head = self.head[n];
+        let slot = self.alloc_slot(Link { key, prev: NIL, next: old_head, on: node.0 as u32 });
+        if old_head == NIL {
+            self.tail[n] = slot;
+        } else {
+            self.links[old_head as usize].prev = slot;
+        }
+        self.head[n] = slot;
         self.len[n] += 1;
         self.slot_of.insert(key, slot);
     }
@@ -163,6 +185,16 @@ impl ClusterLru {
             self.remove(*key);
         }
         keys
+    }
+
+    /// Peek the up-to-`n` coldest entries on `node`'s list in cold →
+    /// hot order, leaving the list untouched — the victim window
+    /// batched reclaim (kswapd / direct reclaim / balance / drain)
+    /// filters and ships as one `PushBatch`. A pure read: unlike the
+    /// second-chance scan it never rotates or clears referenced bits,
+    /// so peeking costs nothing when the batch is abandoned.
+    pub fn harvest_cold(&self, node: NodeId, n: u32) -> Vec<PageKey> {
+        self.iter(node).take(n as usize).collect()
     }
 
     /// Iterate cold → hot over one node's list.
@@ -344,6 +376,39 @@ mod tests {
         // drained keys can re-enter on a surviving node (migration)
         l.push_hot(n(0), k(0, 2));
         assert_eq!(l.list_of(k(0, 2)), Some(n(0)));
+        l.verify(n(0)).unwrap();
+    }
+
+    #[test]
+    fn push_cold_lands_at_the_lru_end() {
+        let mut l = ClusterLru::new();
+        l.push_hot(n(0), k(0, 1));
+        l.push_hot(n(0), k(0, 2));
+        l.push_cold(n(0), k(0, 3)); // a prefetched page: coldest
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![k(0, 3), k(0, 1), k(0, 2)]);
+        assert_eq!(l.coldest(n(0)), Some(k(0, 3)));
+        // a touch promotes it like any resident page
+        l.touch(k(0, 3));
+        assert_eq!(l.iter(n(0)).collect::<Vec<_>>(), vec![k(0, 1), k(0, 2), k(0, 3)]);
+        l.verify(n(0)).unwrap();
+        // cold insert into an empty list sets both ends
+        l.push_cold(n(1), k(1, 9));
+        assert_eq!(l.coldest(n(1)), Some(k(1, 9)));
+        l.verify(n(1)).unwrap();
+    }
+
+    #[test]
+    fn harvest_cold_peeks_without_mutating() {
+        let mut l = ClusterLru::new();
+        for i in 1..=5 {
+            l.push_hot(n(0), k(0, i));
+        }
+        assert_eq!(l.harvest_cold(n(0), 3), vec![k(0, 1), k(0, 2), k(0, 3)]);
+        // asking for more than exists truncates; the list is unchanged
+        assert_eq!(l.harvest_cold(n(0), 99).len(), 5);
+        assert_eq!(l.len(n(0)), 5);
+        assert_eq!(l.coldest(n(0)), Some(k(0, 1)));
+        assert!(l.harvest_cold(n(1), 4).is_empty());
         l.verify(n(0)).unwrap();
     }
 

@@ -73,6 +73,9 @@ pub struct PeerStats {
     pub jumps_sent: u64,
     pub jumps_received: u64,
     pub bytes_sent: u64,
+    /// Pages that rode along with a faulting pull in a batched reply
+    /// (one round-trip and one wire latency for the whole window).
+    pub prefetched: u64,
 }
 
 /// Outcome of a peer session.
@@ -114,6 +117,10 @@ pub struct Peer {
     stats: PeerStats,
     /// Jump threshold: consecutive remote pulls before jumping.
     threshold: u32,
+    /// Pull-prefetch window: with n > 0 a remote fault asks for the
+    /// faulting page plus up to n spatially-following pages in one
+    /// `PullBatchReq` (0 = per-page pulls).
+    prefetch: u32,
     shell: Option<ProcessMeta>,
 }
 
@@ -137,8 +144,18 @@ impl Peer {
             store: HashMap::new(),
             stats: PeerStats::default(),
             threshold,
+            prefetch: 0,
             shell: None,
         }
+    }
+
+    /// Enable pull batching: each remote fault requests up to `n`
+    /// spatially-following pages alongside the faulting one. Clamped
+    /// so the window (faulting page included) never exceeds the
+    /// codec's [`MAX_BATCH`](super::proto::MAX_BATCH) — an oversized
+    /// request would be rejected by the serving peer's decoder.
+    pub fn set_prefetch(&mut self, n: u32) {
+        self.prefetch = n.min(super::proto::MAX_BATCH as u32 - 1);
     }
 
     /// Seed this peer's store with pages [lo, hi).
@@ -222,6 +239,25 @@ impl Peer {
                     self.stats.pushes_received += 1;
                     self.store.insert(idx, data);
                 }
+                Msg::PullBatchReq { idxs } => {
+                    // Serve in request order; pages this peer does not
+                    // own are skipped (the requester's prefetch window
+                    // may overrun our holdings).
+                    let mut pages = Vec::with_capacity(idxs.len());
+                    for idx in idxs {
+                        if let Some(data) = self.store.remove(&idx) {
+                            self.stats.pulls_served += 1;
+                            pages.push((idx, data));
+                        }
+                    }
+                    self.conn.send(&Msg::PullBatchData { pages }, &mut self.stats)?;
+                }
+                Msg::PushBatch { pages } => {
+                    self.stats.pushes_received += pages.len() as u64;
+                    for (idx, data) in pages {
+                        self.store.insert(idx, data);
+                    }
+                }
                 Msg::Jump { ckpt } => {
                     self.stats.jumps_received += 1;
                     let ckpt = JumpCheckpoint::decode(&ckpt)?;
@@ -269,6 +305,32 @@ impl Peer {
                 self.conn.send(&Msg::Jump { ckpt: ckpt.encode() }, &mut self.stats)?;
                 return Ok(None);
             }
+            if self.prefetch > 0 {
+                // Batched pull: the faulting page plus its spatial
+                // window in one round-trip. Pages already local are
+                // filtered out of the request.
+                let idxs: Vec<u32> = (p..task.n_pages.min(p + 1 + self.prefetch))
+                    .filter(|i| *i == p || !self.store.contains_key(i))
+                    .collect();
+                self.conn.send(&Msg::PullBatchReq { idxs }, &mut self.stats)?;
+                match self.conn.recv()? {
+                    Msg::PullBatchData { pages } => {
+                        anyhow::ensure!(
+                            pages.first().map(|(i, _)| *i) == Some(p),
+                            "batched pull reply missing the faulting page {p}"
+                        );
+                        self.stats.pulls += 1;
+                        self.stats.prefetched += pages.len() as u64 - 1;
+                        for (i, data) in pages {
+                            self.store.insert(i, data);
+                        }
+                        // p is local now; the loop re-reads it (and the
+                        // window behind it) from the store
+                    }
+                    m => bail!("expected PullBatchData, got {m:?}"),
+                }
+                continue;
+            }
             self.conn.send(&Msg::PullReq { idx: p }, &mut self.stats)?;
             match self.conn.recv()? {
                 Msg::PullData { idx, data } => {
@@ -289,12 +351,23 @@ impl Peer {
 /// Convenience: run a full two-peer session over localhost, worker in
 /// a thread. Returns (leader report, worker report).
 pub fn run_local_pair(n_pages: u32, threshold: u32) -> Result<(PeerReport, PeerReport)> {
+    run_local_pair_opts(n_pages, threshold, 0)
+}
+
+/// [`run_local_pair`] with a pull-prefetch window: both sides request
+/// batched pulls of up to `prefetch` extra pages per remote fault.
+pub fn run_local_pair_opts(
+    n_pages: u32,
+    threshold: u32,
+    prefetch: u32,
+) -> Result<(PeerReport, PeerReport)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let split = n_pages / 2;
 
     let worker = std::thread::spawn(move || -> Result<PeerReport> {
         let mut peer = Peer::accept(NodeId(1), &listener, threshold)?;
+        peer.set_prefetch(prefetch);
         peer.seed_pages(split, n_pages);
         peer.worker_handshake()?;
         let digest = peer.run_passive()?;
@@ -302,6 +375,7 @@ pub fn run_local_pair(n_pages: u32, threshold: u32) -> Result<(PeerReport, PeerR
     });
 
     let mut leader = Peer::connect(NodeId(0), &addr.to_string(), threshold)?;
+    leader.set_prefetch(prefetch);
     leader.seed_pages(0, split);
     let meta = ProcessMeta::minimal(42, "scan");
     leader.leader_handshake(&meta)?;

@@ -22,6 +22,14 @@ const MAX_PAGE: usize = 8192;
 /// Checkpoint payload limit (stretch checkpoints are ~9 KB; allow slack
 /// for big vm-area lists).
 const MAX_CKPT: usize = 1 << 20;
+/// Pages per batched page message (`PushBatch` / `PullBatchReq` /
+/// `PullBatchData`). Caps both the decoder (oversized counts are a
+/// `DecodeError`, never an allocation bomb) and the kernel's
+/// `--batch`/`--prefetch` windows.
+pub const MAX_BATCH: usize = 256;
+/// Largest legal stream frame: a full page batch at the slack-padded
+/// per-page limit, or a checkpoint — whichever is bigger — plus slack.
+const MAX_FRAME: usize = MAX_BATCH * (MAX_PAGE + 8) + 64;
 
 /// A protocol message.
 #[derive(Debug, Clone, PartialEq)]
@@ -60,6 +68,37 @@ pub enum Msg {
     /// resident pages still await evacuation. `remaining == 0` means
     /// the node is empty and its `Leave` follows.
     Drain { node: NodeId, remaining: u32 },
+    /// Batched page push: up to [`MAX_BATCH`] (idx, page) pairs in ONE
+    /// message, so the whole transfer pays a single wire latency (the
+    /// batching/prefetching latency-hiding lever the disaggregation
+    /// literature prescribes). Shipped by kswapd, direct reclaim,
+    /// post-stretch balancing, and the drain protocol when `--batch`
+    /// is above 1.
+    PushBatch { pages: Vec<(PageIdx, Vec<u8>)> },
+    /// Batched pull request: the faulting page plus its spatial
+    /// prefetch window, in scan order.
+    PullBatchReq { idxs: Vec<PageIdx> },
+    /// Batched pull reply. The serving peer answers in request order,
+    /// silently dropping pages it does not own (the requester's window
+    /// may overrun the peer's holdings); same wire layout as
+    /// [`Msg::PushBatch`].
+    PullBatchData { pages: Vec<(PageIdx, Vec<u8>)> },
+}
+
+/// Decode the shared (count, then idx + page per entry) layout of
+/// `PushBatch`/`PullBatchData`.
+fn decode_page_batch(d: &mut Dec<'_>) -> Result<Vec<(PageIdx, Vec<u8>)>, DecodeError> {
+    let n = d.u32()? as usize;
+    if n > MAX_BATCH {
+        return Err(DecodeError::TooLong { len: n, limit: MAX_BATCH });
+    }
+    let mut pages = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = d.u32()?;
+        let data = d.bytes(MAX_PAGE)?.to_vec();
+        pages.push((idx, data));
+    }
+    Ok(pages)
 }
 
 impl Msg {
@@ -78,6 +117,9 @@ impl Msg {
             Msg::Join { .. } => 10,
             Msg::Leave { .. } => 11,
             Msg::Drain { .. } => 12,
+            Msg::PushBatch { .. } => 13,
+            Msg::PullBatchReq { .. } => 14,
+            Msg::PullBatchData { .. } => 15,
         }
     }
 
@@ -113,6 +155,19 @@ impl Msg {
                 e.u8(node.0);
                 e.u32(*remaining);
             }
+            Msg::PushBatch { pages } | Msg::PullBatchData { pages } => {
+                e.u32(pages.len() as u32);
+                for (idx, data) in pages {
+                    e.u32(*idx);
+                    e.bytes(data);
+                }
+            }
+            Msg::PullBatchReq { idxs } => {
+                e.u32(idxs.len() as u32);
+                for idx in idxs {
+                    e.u32(*idx);
+                }
+            }
         }
         e.into_vec()
     }
@@ -135,6 +190,19 @@ impl Msg {
             10 => Msg::Join { announce: d.bytes(MAX_CKPT)?.to_vec() },
             11 => Msg::Leave { node: NodeId(d.u8()?) },
             12 => Msg::Drain { node: NodeId(d.u8()?), remaining: d.u32()? },
+            13 => Msg::PushBatch { pages: decode_page_batch(&mut d)? },
+            14 => {
+                let n = d.u32()? as usize;
+                if n > MAX_BATCH {
+                    return Err(DecodeError::TooLong { len: n, limit: MAX_BATCH });
+                }
+                let mut idxs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    idxs.push(d.u32()?);
+                }
+                Msg::PullBatchReq { idxs }
+            }
+            15 => Msg::PullBatchData { pages: decode_page_batch(&mut d)? },
             tag => return Err(DecodeError::BadTag { tag, what: "Msg" }),
         };
         Ok(msg)
@@ -160,7 +228,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> std::io::Result<Msg> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len > MAX_CKPT + 64 {
+    if len > MAX_FRAME {
         return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("frame too large: {len}")));
     }
     let mut body = vec![0u8; len];
@@ -238,6 +306,79 @@ mod tests {
         e.u32(1);
         e.bytes(&vec![0u8; MAX_PAGE + 1]);
         assert!(Msg::decode(e.as_slice()).is_err());
+    }
+
+    #[test]
+    fn batch_variants_round_trip() {
+        let pages: Vec<(PageIdx, Vec<u8>)> =
+            (0..3).map(|i| (i * 7, vec![i as u8; 4096])).collect();
+        round_trip(Msg::PushBatch { pages: pages.clone() });
+        round_trip(Msg::PullBatchData { pages });
+        round_trip(Msg::PullBatchReq { idxs: vec![9, 10, 11, 12] });
+        // empty batches are legal (a serving peer may own none of the
+        // requested window)
+        round_trip(Msg::PushBatch { pages: vec![] });
+        round_trip(Msg::PullBatchReq { idxs: vec![] });
+        round_trip(Msg::PullBatchData { pages: vec![] });
+        // a full-size batch survives the stream framing (frames above
+        // MAX_CKPT used to be rejected outright)
+        let big: Vec<(PageIdx, Vec<u8>)> =
+            (0..MAX_BATCH as u32).map(|i| (i, vec![0xA5; 4096])).collect();
+        let msg = Msg::PushBatch { pages: big };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_msg(&mut cur).unwrap(), msg);
+    }
+
+    #[test]
+    fn batch_wire_size_is_base_plus_per_page() {
+        // One header + count, then (u32 idx + u32 len + data) per page:
+        // the exact geometry the kernel's byte accounting precomputes.
+        for n in [0usize, 1, 5] {
+            let pages: Vec<(PageIdx, Vec<u8>)> =
+                (0..n as u32).map(|i| (i, vec![0; 4096])).collect();
+            let push = Msg::PushBatch { pages: pages.clone() }.wire_size();
+            let data = Msg::PullBatchData { pages }.wire_size();
+            assert_eq!(push, 4 + 1 + 4 + n as u64 * (4 + 4 + 4096), "n={n}");
+            assert_eq!(push, data, "push and pull-data batches share a layout");
+            let req = Msg::PullBatchReq { idxs: (0..n as u32).collect() }.wire_size();
+            assert_eq!(req, 4 + 1 + 4 + n as u64 * 4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn oversized_batch_count_rejected_not_allocated() {
+        for tag in [13u8, 14, 15] {
+            let mut e = Enc::new();
+            e.u8(tag);
+            e.u32(MAX_BATCH as u32 + 1);
+            assert!(
+                matches!(Msg::decode(e.as_slice()), Err(DecodeError::TooLong { .. })),
+                "tag {tag} must reject an oversized batch count"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_batches_error_instead_of_panicking() {
+        let msg = Msg::PushBatch {
+            pages: vec![(1, vec![7; 4096]), (2, vec![8; 4096])],
+        };
+        let enc = msg.encode();
+        // every possible truncation point must produce a DecodeError
+        for cut in [1usize, 5, 9, 12, 100, enc.len() - 1] {
+            assert!(Msg::decode(&enc[..cut]).is_err(), "cut at {cut} must error");
+        }
+        let req = Msg::PullBatchReq { idxs: vec![1, 2, 3] }.encode();
+        assert!(Msg::decode(&req[..req.len() - 2]).is_err());
+        // an oversized per-page payload inside a batch is rejected too
+        let mut e = Enc::new();
+        e.u8(13);
+        e.u32(1);
+        e.u32(0);
+        e.bytes(&vec![0u8; MAX_PAGE + 1]);
+        assert!(matches!(Msg::decode(e.as_slice()), Err(DecodeError::TooLong { .. })));
     }
 
     #[test]

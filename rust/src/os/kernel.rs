@@ -33,7 +33,7 @@ use crate::mem::page_table::{ElasticPageTable, PageIdx};
 use crate::mem::proc_lru::{ClusterLru, PageKey};
 use crate::mem::tlb::Tlb;
 use crate::net::cluster::{Announce, Registry};
-use crate::net::proto::Msg;
+use crate::net::proto::{Msg, MAX_BATCH};
 use crate::os::manager::{EosManager, ManagerAction, NodeInfo, ProcCounters};
 use crate::os::metrics::Metrics;
 use crate::os::policy::{Decision, JumpPolicy, NeverJump};
@@ -58,6 +58,18 @@ pub struct ClusterConfig {
     pub stretch_data_segment: usize,
     /// Direct-reclaim batch: victims pushed per allocation stall.
     pub reclaim_batch: u32,
+    /// Pages per batched push *message* (`--batch`): kswapd, direct
+    /// reclaim, post-stretch balancing, and the drain protocol ship up
+    /// to this many same-target victims as one [`Msg::PushBatch`],
+    /// paying a single wire latency. 1 = legacy per-page pushes
+    /// (bit-identical costs and digests to the unbatched engine).
+    /// Clamped to [`crate::net::proto::MAX_BATCH`].
+    pub push_batch: u32,
+    /// Remote-fault pull prefetch window (`--prefetch`): on each
+    /// remote fault, up to this many spatially-adjacent pages owned by
+    /// the *same* remote node ride along in one batched pull. 0 = off
+    /// (legacy single-page pulls, bit-identical).
+    pub prefetch: u32,
 }
 
 impl Default for ClusterConfig {
@@ -69,6 +81,8 @@ impl Default for ClusterConfig {
             pin_stack: true,
             stretch_data_segment: 8 * 1024,
             reclaim_batch: 32,
+            push_batch: 1,
+            prefetch: 0,
         }
     }
 }
@@ -103,9 +117,28 @@ pub struct NodeKernel {
     pub(crate) pin_stack: bool,
     pub(crate) stretch_data_segment: usize,
     pub(crate) reclaim_batch: u32,
+    /// Pages per batched push message (1 = legacy per-page pushes).
+    pub(crate) push_batch: u32,
+    /// Remote-fault pull prefetch window (0 = off).
+    pub(crate) prefetch: u32,
     /// Precomputed wire sizes (constant per message shape).
     pub(crate) pull_req_bytes: u64,
     pub(crate) page_msg_bytes: u64,
+    /// Batched-message wire geometry derived from the codec at
+    /// construction: an n-page `PushBatch`/`PullBatchData` is
+    /// `batch_data_base + n * batch_data_per_page` bytes on the wire,
+    /// an n-index `PullBatchReq` is `batch_req_base + n *
+    /// batch_req_per_idx` — so hot-path byte accounting never encodes
+    /// page payloads just to measure them.
+    pub(crate) batch_data_base: u64,
+    pub(crate) batch_data_per_page: u64,
+    pub(crate) batch_req_base: u64,
+    pub(crate) batch_req_per_idx: u64,
+    /// Simulated wire time the batch/prefetch paths saved versus
+    /// shipping every page as its own message (the latency charges
+    /// that never happened) — the drain report and `eval` notes read
+    /// this.
+    pub(crate) batch_wire_saved_ns: u64,
 }
 
 impl NodeKernel {
@@ -125,6 +158,15 @@ impl NodeKernel {
                 0,
             );
         }
+        // Derive the batched-message wire geometry from the codec
+        // itself (1- and 2-entry probes), so the arithmetic accounting
+        // below can never drift from what would cross a real wire.
+        let page = vec![0u8; PAGE_SIZE];
+        let d1 = Msg::PullBatchData { pages: vec![(0, page.clone())] }.wire_size();
+        let d2 =
+            Msg::PullBatchData { pages: vec![(0, page.clone()), (1, page)] }.wire_size();
+        let r1 = Msg::PullBatchReq { idxs: vec![0] }.wire_size();
+        let r2 = Msg::PullBatchReq { idxs: vec![0, 1] }.wire_size();
         NodeKernel {
             live: vec![true; pools.len()],
             pools,
@@ -137,9 +179,28 @@ impl NodeKernel {
             pin_stack: cfg.pin_stack,
             stretch_data_segment: cfg.stretch_data_segment,
             reclaim_batch: cfg.reclaim_batch,
+            push_batch: cfg.push_batch.clamp(1, MAX_BATCH as u32),
+            prefetch: cfg.prefetch.min(MAX_BATCH as u32 - 1),
             pull_req_bytes: Msg::PullReq { idx: 0 }.wire_size(),
             page_msg_bytes: Msg::Push { idx: 0, data: vec![0; PAGE_SIZE] }.wire_size(),
+            batch_data_base: 2 * d1 - d2,
+            batch_data_per_page: d2 - d1,
+            batch_req_base: 2 * r1 - r2,
+            batch_req_per_idx: r2 - r1,
+            batch_wire_saved_ns: 0,
         }
+    }
+
+    /// Wire bytes of an n-page `PushBatch`/`PullBatchData` message.
+    #[inline]
+    pub(crate) fn batch_data_bytes(&self, n: u64) -> u64 {
+        self.batch_data_base + n * self.batch_data_per_page
+    }
+
+    /// Wire bytes of an n-index `PullBatchReq` message.
+    #[inline]
+    pub(crate) fn batch_req_bytes(&self, n: u64) -> u64 {
+        self.batch_req_base + n * self.batch_req_per_idx
     }
 
     /// Number of node *slots* (live and departed; node ids are dense
@@ -541,6 +602,14 @@ impl Engine<'_> {
             if write {
                 p.set_dirty(true);
             }
+            // First touch of a speculatively pulled page: the guess
+            // paid off — a remote fault that never happened. The flag
+            // is per-residence (relocation clears it), so a page that
+            // moved again before its first touch never counts.
+            if p.prefetched() {
+                p.set_prefetched(false);
+                self.procs[cur].metrics.prefetch_hits += 1;
+            }
         }
         self.kernel.lru.touch(PageKey { proc: cur as u32, idx });
         let pte = self.procs[cur].pt.get(idx);
@@ -628,12 +697,35 @@ impl Engine<'_> {
         // cluster is completely full — see pull_page).
         self.pull_page(idx);
 
+        // Locality-aware prefetch: pull the spatial window around the
+        // fault from the same owner in the same message. 0 pages
+        // prefetched (window empty, or prefetch off) keeps the legacy
+        // single-page accounting below, so sparse access patterns cost
+        // exactly what they always did.
+        let prefetched =
+            if self.kernel.prefetch > 0 { self.prefetch_adjacent(idx, owner_node) } else { 0 };
+
         // Costs + counters: a pull is a request message out and a page
-        // message back, synchronous for the faulting process.
+        // message back — batched into one request + one multi-page
+        // reply when the prefetcher found neighbors — synchronous for
+        // the faulting process either way.
         let (pull_req, page_msg) = (self.kernel.pull_req_bytes, self.kernel.page_msg_bytes);
         self.procs[cur].metrics.remote_faults += 1;
-        self.procs[cur].metrics.bytes_pull += pull_req + page_msg;
-        self.clock.advance(self.kernel.costs.pull_ns(page_msg));
+        if prefetched == 0 {
+            self.procs[cur].metrics.bytes_pull += pull_req + page_msg;
+            self.clock.advance(self.kernel.costs.pull_ns(page_msg));
+        } else {
+            let n = 1 + prefetched as u64;
+            let bytes = self.kernel.batch_req_bytes(n) + self.kernel.batch_data_bytes(n);
+            let batched_ns = self.kernel.costs.pull_batch_ns(n, self.kernel.batch_data_bytes(n));
+            self.procs[cur].metrics.prefetch_pulled += prefetched as u64;
+            self.procs[cur].metrics.bytes_pull += bytes;
+            self.clock.advance(batched_ns);
+            // What n separate demand pulls would have cost in wire
+            // latency — the batching win the evaluation reports.
+            let unbatched_ns = n * self.kernel.costs.pull_ns(page_msg);
+            self.kernel.batch_wire_saved_ns += unbatched_ns.saturating_sub(batched_ns);
+        }
 
         // Restore watermark headroom in the background.
         self.kswapd(node);
@@ -647,6 +739,11 @@ impl Engine<'_> {
         }
         let now = self.clock.now();
         let running = self.procs[cur].running;
+        if prefetched > 0 {
+            // PolicyHook: let the policy see the batched-fault signal
+            // before it rules on the demand fault itself.
+            self.procs[cur].policy.on_batch_fault(running, owner_node, prefetched, now);
+        }
         let decision = self.procs[cur].policy.on_remote_fault(running, owner_node, now);
         if self.procs[cur].mode == Mode::Elastic {
             if let Decision::JumpTo(target) = decision {
@@ -655,6 +752,48 @@ impl Engine<'_> {
                 }
             }
         }
+    }
+
+    /// Pull up to `kernel.prefetch` pages spatially adjacent to the
+    /// faulting page `idx` (ascending page order — the direction
+    /// sequential scans move) that are resident on the same `owner`
+    /// node, piggybacking on the fault's batched message. Pinned,
+    /// absent, and other-node pages inside the window are skipped
+    /// without widening it. The scan only consumes free headroom
+    /// *above* the kswapd sleep (`high`) watermark: a speculative pull
+    /// must never trigger reclaim, because reclaim evicts from the
+    /// cold end — exactly where unread prefetched pages sit — and
+    /// would throw the window away before the scan reaches it (pull
+    /// the pages, evict them, fault again: batching would run slower
+    /// than no batching). Installed pages enter the LRU *cold* and are
+    /// flagged, so wrong guesses evict first and right guesses count
+    /// as [`Metrics::prefetch_hits`] on first touch. Returns how many
+    /// pages rode along.
+    fn prefetch_adjacent(&mut self, idx: PageIdx, owner: NodeId) -> u32 {
+        let cur = self.cur;
+        let run = self.procs[cur].running;
+        debug_assert_ne!(owner, run);
+        let limit = self.procs[cur].pt.len() as u64;
+        let mut pulled = 0u32;
+        for off in 1..=self.kernel.prefetch as u64 {
+            let i2 = idx as u64 + off;
+            if i2 >= limit {
+                break;
+            }
+            let pool = &self.kernel.pools[run.0 as usize];
+            if pool.free_frames() <= pool.watermarks.high {
+                break;
+            }
+            let i2 = i2 as PageIdx;
+            let pte = self.procs[cur].pt.get(i2);
+            if !pte.is_resident() || pte.node() != owner || pte.pinned() {
+                continue;
+            }
+            self.move_page(cur, i2, run, false);
+            self.procs[cur].pt.get_mut(i2).set_prefetched(true);
+            pulled += 1;
+        }
+        pulled
     }
 
     // ----- stretch ---------------------------------------------------------
@@ -699,9 +838,23 @@ impl Engine<'_> {
         let from = self.procs[cur].running;
         let n = (self.procs[cur].pt.resident_at(from) / 2)
             .min(self.kernel.pools[target.0 as usize].free_frames());
-        for _ in 0..n {
-            if !self.push_one_to(from, target) {
-                break;
+        let batch = self.kernel.push_batch;
+        if batch > 1 {
+            // Bulk balance is the batching best case: one cold stream
+            // to one known target, `--batch` pages per message.
+            let mut left = n;
+            while left > 0 {
+                let pushed = self.push_many(from, batch.min(left), Some(target));
+                if pushed == 0 {
+                    break;
+                }
+                left -= pushed.min(left);
+            }
+        } else {
+            for _ in 0..n {
+                if !self.push_one_to(from, target) {
+                    break;
+                }
             }
         }
     }
@@ -799,6 +952,79 @@ impl Engine<'_> {
         p.metrics.pushes += 1;
         p.metrics.bytes_push += bytes;
         self.clock.advance(self.kernel.costs.push_ns(bytes));
+    }
+
+    /// Evict up to `max_n` pages from `from` as ONE `PushBatch`
+    /// message: the first victim comes from the ordinary second-chance
+    /// scan (so batch=on changes *grouping*, not victim policy) and
+    /// fixes the batch's target; the rest are harvested cold-first
+    /// from the same list, filtered to unpinned, unreferenced pages
+    /// whose owner can reach that target, capped by the target's free
+    /// frames. Returns the number of pages shipped (0 = no victim or
+    /// no target, exactly like [`Self::push_one`]).
+    pub(crate) fn push_many(
+        &mut self,
+        from: NodeId,
+        max_n: u32,
+        forced_target: Option<NodeId>,
+    ) -> u32 {
+        debug_assert!(max_n >= 1);
+        let Some((owner0, idx0, target)) = self.select_push(from, forced_target) else {
+            return 0;
+        };
+        // select_push only succeeds with >= 1 free frame at the target;
+        // one message never exceeds the codec's batch limit.
+        let room = self.kernel.pools[target.0 as usize].free_frames();
+        let cap = max_n.min(room).min(MAX_BATCH as u32);
+        let mut victims: Vec<(usize, PageIdx)> = vec![(owner0, idx0)];
+        if cap > 1 {
+            // Peek a 2x window so skipped (hot/pinned/unreachable)
+            // pages don't starve the batch; the harvest scan itself
+            // never mutates second-chance state.
+            for key in self.kernel.lru.harvest_cold(from, 2 * cap) {
+                if victims.len() as u32 >= cap {
+                    break;
+                }
+                let owner = key.proc as usize;
+                if owner == owner0 && key.idx == idx0 {
+                    continue;
+                }
+                let pte = self.procs[owner].pt.get(key.idx);
+                if pte.pinned() || pte.referenced() {
+                    continue;
+                }
+                if !self.procs[owner].stretched[target.0 as usize] {
+                    continue;
+                }
+                victims.push((owner, key.idx));
+            }
+        }
+        self.do_push_batch(&victims, target);
+        victims.len() as u32
+    }
+
+    /// Move + charge one batched push: every victim lands on `target`,
+    /// the whole batch pays one (overlap-discounted) wire charge, and
+    /// message bytes are attributed per victim (remainder to the
+    /// first), so per-process traffic still sums to the wire total.
+    pub(crate) fn do_push_batch(&mut self, victims: &[(usize, PageIdx)], target: NodeId) {
+        debug_assert!(!victims.is_empty());
+        for &(owner, idx) in victims {
+            self.move_page(owner, idx, target, true);
+        }
+        let n = victims.len() as u64;
+        let bytes = self.kernel.batch_data_bytes(n);
+        let per = bytes / n;
+        let rem = bytes % n;
+        for (i, &(owner, _)) in victims.iter().enumerate() {
+            let p = &mut self.procs[owner];
+            p.metrics.pushes += 1;
+            p.metrics.bytes_push += per + if i == 0 { rem } else { 0 };
+        }
+        let batched_ns = self.kernel.costs.push_batch_ns(n, bytes);
+        self.clock.advance(batched_ns);
+        let unbatched_ns = n * self.kernel.costs.push_ns(self.kernel.page_msg_bytes);
+        self.kernel.batch_wire_saved_ns += unbatched_ns.saturating_sub(batched_ns);
     }
 
     /// Does any process on the cluster have a viable push target other
@@ -918,7 +1144,11 @@ impl Engine<'_> {
 
     /// Move one resident page of process `owner` to (target, fresh
     /// frame): copies bytes, updates pool/table/LRU, invalidates the
-    /// owner's TLB entry.
+    /// owner's TLB entry. `make_hot` picks which end of the target's
+    /// LRU the page lands on: hot for demand movement (pulls, pushes,
+    /// checkpoint deliveries), cold for speculative prefetches — so a
+    /// wrong prefetch guess is the first victim the reclaim scanner
+    /// sees.
     pub(crate) fn move_page(&mut self, owner: usize, idx: PageIdx, target: NodeId, make_hot: bool) {
         let pte = self.procs[owner].pt.get(idx);
         debug_assert!(pte.is_resident());
@@ -946,8 +1176,12 @@ impl Engine<'_> {
             unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
         }
         self.procs[owner].pt.relocate(idx, target, frame);
-        let _ = make_hot;
-        self.kernel.lru.push_hot(target, PageKey { proc: owner as u32, idx });
+        let key = PageKey { proc: owner as u32, idx };
+        if make_hot {
+            self.kernel.lru.push_hot(target, key);
+        } else {
+            self.kernel.lru.push_cold(target, key);
+        }
         let vpn = self.procs[owner].pt.vpn(idx);
         self.procs[owner].tlb.invalidate(vpn);
     }
@@ -996,22 +1230,45 @@ impl Engine<'_> {
     }
 
     /// kswapd: when `node` is below the low watermark, push pages out
-    /// until the high watermark is restored (paper §3.2 + §4).
+    /// until the high watermark is restored (paper §3.2 + §4). With
+    /// `--batch` above 1 each round ships up to a batch of same-target
+    /// victims as one `PushBatch`, capped at the frames still needed —
+    /// one wire latency per message instead of per page.
     pub(crate) fn kswapd(&mut self, node: NodeId) {
         if !self.kernel.pools[node.0 as usize].below_low() {
             return;
         }
         self.maybe_stretch();
+        let batch = self.kernel.push_batch;
         while !self.kernel.pools[node.0 as usize].at_high() {
-            if !self.push_one(node) {
+            if batch > 1 {
+                let pool = &self.kernel.pools[node.0 as usize];
+                let need = pool.watermarks.high.saturating_sub(pool.free_frames()).max(1);
+                if self.push_many(node, batch.min(need), None) == 0 {
+                    break;
+                }
+            } else if !self.push_one(node) {
                 break;
             }
         }
     }
 
-    /// Direct reclaim: free at least one frame on `node` right now.
+    /// Direct reclaim: free at least one frame on `node` right now
+    /// (up to `reclaim_batch` victims; shipped as `PushBatch` messages
+    /// when `--batch` is above 1).
     pub(crate) fn direct_reclaim(&mut self, node: NodeId) -> bool {
         self.maybe_stretch();
+        if self.kernel.push_batch > 1 {
+            let mut freed = 0u32;
+            while freed < self.kernel.reclaim_batch {
+                let n = self.push_many(node, self.kernel.reclaim_batch - freed, None);
+                if n == 0 {
+                    break;
+                }
+                freed += n;
+            }
+            return freed > 0;
+        }
         let mut freed = false;
         for _ in 0..self.kernel.reclaim_batch {
             if !self.push_one(node) {

@@ -338,6 +338,11 @@ pub struct DrainReport {
     pub forced_jumps: u32,
     /// Stretches the drain issued to widen an owner's survivor set.
     pub forced_stretches: u32,
+    /// Simulated wire time the batched drain saved versus pushing each
+    /// page as its own message (`--batch` > 1: consecutive same-target
+    /// victims share one `PushBatch` and its single wire latency).
+    /// 0 when batching is off.
+    pub wire_ns_saved: u64,
 }
 
 /// A churn event the scheduler actually applied (with its outcome).
@@ -445,51 +450,31 @@ impl Engine<'_> {
         // have evicted them). Each victim goes to the best live node in
         // its owner's stretch set with room; owners with no such
         // survivor are stretched wider; pages with nowhere to go are
-        // declared lost against the owner's ground truth.
+        // declared lost against the owner's ground truth. With
+        // `--batch` above 1 consecutive same-target victims ship as
+        // one `PushBatch` (a single wire latency for the whole run of
+        // pages); the wire time that batching saved is reported in
+        // [`DrainReport::wire_ns_saved`].
+        let saved0 = self.kernel.batch_wire_saved_ns;
+        let batch = self.kernel.push_batch;
         let mut since_progress_msg = 0u32;
-        while let Some(key) = self.kernel.lru.coldest(node) {
-            let owner = key.proc as usize;
-            let target = match self.push_target_for(owner, node) {
-                Some(t) => Some(t),
-                None => match self.widen_target(owner, node) {
+        if batch > 1 {
+            self.drain_pages_batched(node, batch, &mut report, &mut since_progress_msg);
+        } else {
+            while let Some(key) = self.kernel.lru.coldest(node) {
+                let owner = key.proc as usize;
+                match self.drain_target(owner, node, &mut report) {
                     Some(t) => {
-                        self.cur = owner;
-                        self.stretch_to(t);
-                        report.forced_stretches += 1;
-                        Some(t)
+                        self.do_push(owner, key.idx, t);
+                        self.procs[owner].metrics.pages_evacuated += 1;
+                        report.evacuated += 1;
                     }
-                    None => None,
-                },
-            };
-            match target {
-                Some(t) => {
-                    self.do_push(owner, key.idx, t);
-                    self.procs[owner].metrics.pages_evacuated += 1;
-                    report.evacuated += 1;
+                    None => self.drain_lose(key, node, &mut report),
                 }
-                None => {
-                    let pte = self.procs[owner].pt.get(key.idx);
-                    let data = self.kernel.pools[slot].frame(pte.frame()).to_vec();
-                    self.kernel.pools[slot].dealloc(pte.frame());
-                    self.kernel.lru.remove(key);
-                    self.procs[owner].pt.unmap(key.idx);
-                    let vpn = self.procs[owner].pt.vpn(key.idx);
-                    self.procs[owner].tlb.invalidate(vpn);
-                    self.procs[owner].lost_pages.insert(key.idx, data);
-                    self.procs[owner].metrics.pages_lost += 1;
-                    report.lost += 1;
-                }
-            }
-            // Drain progress announces every 64 pages (control traffic
-            // so survivors can track the retirement).
-            since_progress_msg += 1;
-            if since_progress_msg == 64 {
-                since_progress_msg = 0;
-                let remaining = self.kernel.lru.len(node);
-                let bytes = Msg::Drain { node, remaining }.wire_size();
-                self.clock.advance(self.kernel.costs.wire_ns(bytes));
+                self.drain_progress(node, &mut since_progress_msg);
             }
         }
+        report.wire_ns_saved = self.kernel.batch_wire_saved_ns - saved0;
 
         // 3. Membership teardown: no process may keep a foothold on the
         // departed node, and the goodbye announce reaches all survivors.
@@ -508,6 +493,154 @@ impl Engine<'_> {
             report.forced_jumps
         );
         Ok(report)
+    }
+
+    /// Resolve one drain victim's destination: the best survivor in
+    /// its owner's stretch set, else a forced stretch to the widest
+    /// live node with room, else `None` (the page will be declared
+    /// lost). Shared verbatim by the per-page and batched drains.
+    fn drain_target(
+        &mut self,
+        owner: usize,
+        node: NodeId,
+        report: &mut DrainReport,
+    ) -> Option<NodeId> {
+        match self.push_target_for(owner, node) {
+            Some(t) => Some(t),
+            None => match self.widen_target(owner, node) {
+                Some(t) => {
+                    self.cur = owner;
+                    self.stretch_to(t);
+                    report.forced_stretches += 1;
+                    Some(t)
+                }
+                None => None,
+            },
+        }
+    }
+
+    /// Declare one drain victim lost: stash its bytes against the
+    /// owner's ground truth and unmap it (re-faulted at pull cost on
+    /// next touch).
+    fn drain_lose(
+        &mut self,
+        key: crate::mem::proc_lru::PageKey,
+        node: NodeId,
+        report: &mut DrainReport,
+    ) {
+        let slot = node.0 as usize;
+        let owner = key.proc as usize;
+        let pte = self.procs[owner].pt.get(key.idx);
+        let data = self.kernel.pools[slot].frame(pte.frame()).to_vec();
+        self.kernel.pools[slot].dealloc(pte.frame());
+        self.kernel.lru.remove(key);
+        self.procs[owner].pt.unmap(key.idx);
+        let vpn = self.procs[owner].pt.vpn(key.idx);
+        self.procs[owner].tlb.invalidate(vpn);
+        self.procs[owner].lost_pages.insert(key.idx, data);
+        self.procs[owner].metrics.pages_lost += 1;
+        report.lost += 1;
+    }
+
+    /// Drain progress announces every 64 pages (control traffic so
+    /// survivors can track the retirement).
+    fn drain_progress(&mut self, node: NodeId, since_progress_msg: &mut u32) {
+        *since_progress_msg += 1;
+        if *since_progress_msg == 64 {
+            *since_progress_msg = 0;
+            let remaining = self.kernel.lru.len(node);
+            let bytes = Msg::Drain { node, remaining }.wire_size();
+            self.clock.advance(self.kernel.costs.wire_ns(bytes));
+        }
+    }
+
+    /// The batched page drain: peek a cold window, resolve each
+    /// victim's target exactly as the per-page drain would, and flush
+    /// runs of consecutive same-target victims as single `PushBatch`
+    /// messages. A run is flushed when the target changes, the batch
+    /// is full, the target's free frames (snapshotted at run start)
+    /// are used up, or a forced stretch is about to mutate the
+    /// cluster's free-frame picture — so a pending run can never
+    /// overfill its target.
+    fn drain_pages_batched(
+        &mut self,
+        node: NodeId,
+        batch: u32,
+        report: &mut DrainReport,
+        since_progress_msg: &mut u32,
+    ) {
+        while self.kernel.lru.len(node) > 0 {
+            let window = self.kernel.lru.harvest_cold(node, batch);
+            let mut run: Vec<(usize, crate::mem::page_table::PageIdx)> = Vec::new();
+            let mut run_target: Option<NodeId> = None;
+            let mut run_room = 0u32;
+            for key in window {
+                if let Some(t) = run_target {
+                    if run.len() as u32 >= batch.min(run_room) {
+                        self.drain_flush(&run, t, report);
+                        run.clear();
+                        run_target = None;
+                    }
+                }
+                let owner = key.proc as usize;
+                // Side-effect-free placement first; widening stretches
+                // (and may bulk-balance pages onto the new node), so
+                // the pending run is flushed before the free-frame
+                // picture can change under it.
+                let target = match self.push_target_for(owner, node) {
+                    Some(t) => Some(t),
+                    None => {
+                        if let Some(t) = run_target.take() {
+                            self.drain_flush(&run, t, report);
+                            run.clear();
+                        }
+                        match self.widen_target(owner, node) {
+                            Some(t) => {
+                                self.cur = owner;
+                                self.stretch_to(t);
+                                report.forced_stretches += 1;
+                                Some(t)
+                            }
+                            None => None,
+                        }
+                    }
+                };
+                match target {
+                    Some(t) => {
+                        if run_target.is_some() && run_target != Some(t) {
+                            self.drain_flush(&run, run_target.unwrap(), report);
+                            run.clear();
+                            run_target = None;
+                        }
+                        if run_target.is_none() {
+                            run_target = Some(t);
+                            run_room = self.kernel.pools[t.0 as usize].free_frames();
+                        }
+                        run.push((owner, key.idx));
+                    }
+                    None => self.drain_lose(key, node, report),
+                }
+                self.drain_progress(node, since_progress_msg);
+            }
+            if let Some(t) = run_target {
+                self.drain_flush(&run, t, report);
+            }
+        }
+    }
+
+    /// Ship one drain run as a batched push and account the evacuation.
+    fn drain_flush(
+        &mut self,
+        victims: &[(usize, crate::mem::page_table::PageIdx)],
+        target: NodeId,
+        report: &mut DrainReport,
+    ) {
+        debug_assert!(!victims.is_empty());
+        self.do_push_batch(victims, target);
+        for &(owner, _) in victims {
+            self.procs[owner].metrics.pages_evacuated += 1;
+        }
+        report.evacuated += victims.len() as u32;
     }
 
     /// Best live stretched node (excluding `avoid`) for process `slot`

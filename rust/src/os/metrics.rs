@@ -16,7 +16,10 @@ pub struct JumpRecord {
 }
 
 /// Counters + timeline for one run.
-#[derive(Debug, Clone, Default)]
+///
+/// (`PartialEq` so the batching-off equivalence tests can assert the
+/// whole counter set is bit-identical in one comparison.)
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Metrics {
     // fault counters
     pub minor_faults: u64,
@@ -28,6 +31,15 @@ pub struct Metrics {
     pub stretches: u64,
     pub sync_events: u64,
     pub policy_evals: u64,
+
+    // pull-prefetch counters (batched remote faults; `--prefetch`)
+    /// Pages pulled speculatively alongside a faulting page (same
+    /// owner node, spatially adjacent, shipped in the same batched
+    /// message). Not counted in [`Self::remote_faults`].
+    pub prefetch_pulled: u64,
+    /// Prefetched pages whose first touch found them already local —
+    /// a remote fault (and its wire latency) that never happened.
+    pub prefetch_hits: u64,
 
     // churn counters (membership control plane)
     /// Pages of this process evacuated off a retiring node by the

@@ -34,6 +34,17 @@ pub trait JumpPolicy {
     /// while execution runs at `running`. `now_ns` is simulated time.
     fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision;
 
+    /// PolicyHook for batched faults: the remote fault just serviced at
+    /// `owner` pulled `prefetched` extra spatially-adjacent pages in
+    /// the same message (`--prefetch` > 0). Fired *before* the
+    /// [`Self::on_remote_fault`] decision for the same fault, so a
+    /// policy can weigh the batch as locality evidence the bare fault
+    /// counter cannot see. Default: ignore (counter policies keep the
+    /// paper's exact semantics).
+    fn on_batch_fault(&mut self, running: NodeId, owner: NodeId, prefetched: u32, now_ns: u64) {
+        let _ = (running, owner, prefetched, now_ns);
+    }
+
     /// Execution jumped (by our decision or not). Policies reset here.
     fn on_jump(&mut self, to: NodeId, now_ns: u64);
 
@@ -184,6 +195,15 @@ impl EwmaPolicy {
 }
 
 impl JumpPolicy for EwmaPolicy {
+    /// Batched-fault signal: prefetched pages are proactive pulls, so
+    /// they weigh less than demand faults — but a node that keeps
+    /// supplying whole windows of spatially-local pages is exactly the
+    /// locality island EWMA exists to detect.
+    fn on_batch_fault(&mut self, _running: NodeId, owner: NodeId, prefetched: u32, now_ns: u64) {
+        self.decay_to(now_ns);
+        self.mass[owner.0 as usize] += prefetched as f64 * 0.25;
+    }
+
     fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision {
         self.decay_to(now_ns);
         self.mass[owner.0 as usize] += 1.0;
@@ -430,6 +450,40 @@ mod tests {
             assert_eq!(p.on_remote_fault(n(1), n(0), t), Decision::Stay);
             t += 100;
         }
+    }
+
+    #[test]
+    fn batch_fault_hook_defaults_to_noop_and_feeds_ewma() {
+        // Counter policies ignore the hook entirely: same decision
+        // sequence with or without batch signals.
+        let mut p = ThresholdPolicy::new(4);
+        p.on_batch_fault(n(0), n(1), 16, 0);
+        for i in 1..4 {
+            assert_eq!(p.on_remote_fault(n(0), n(1), i), Decision::Stay);
+        }
+        assert_eq!(p.on_remote_fault(n(0), n(1), 4), Decision::JumpTo(n(1)));
+
+        // EWMA accrues (discounted) mass from prefetched pages, so a
+        // batched window reaches the jump threshold in fewer demand
+        // faults than unbatched faulting would.
+        let mut with_batch = EwmaPolicy::new(0.9, 1_000_000, 5.0, 10.0);
+        let mut without = EwmaPolicy::new(0.9, 1_000_000, 5.0, 10.0);
+        let mut jumped_at = (None, None);
+        for i in 0..100u64 {
+            with_batch.on_batch_fault(n(0), n(1), 8, i * 10);
+            if jumped_at.0.is_none() {
+                if let Decision::JumpTo(_) = with_batch.on_remote_fault(n(0), n(1), i * 10) {
+                    jumped_at.0 = Some(i);
+                }
+            }
+            if jumped_at.1.is_none() {
+                if let Decision::JumpTo(_) = without.on_remote_fault(n(0), n(1), i * 10) {
+                    jumped_at.1 = Some(i);
+                }
+            }
+        }
+        let (a, b) = (jumped_at.0.expect("batched EWMA jumps"), jumped_at.1.expect("EWMA jumps"));
+        assert!(a <= b, "batch evidence must not slow the jump ({a} vs {b})");
     }
 
     #[test]

@@ -215,6 +215,12 @@ impl ElasticCluster {
         verify_cluster(&self.kernel, &self.procs)
     }
 
+    /// Simulated wire time the batch/prefetch paths have saved so far
+    /// versus per-page messages (0 with batching off).
+    pub fn batch_saved_ns(&self) -> u64 {
+        self.kernel.batch_wire_saved_ns
+    }
+
     #[inline]
     fn engine(&mut self, cur: usize) -> Engine<'_> {
         Engine {

@@ -67,6 +67,11 @@ pub struct SystemConfig {
     pub stretch_data_segment: usize,
     /// Direct-reclaim batch: victims pushed per allocation stall.
     pub reclaim_batch: u32,
+    /// Pages per batched push message (`--batch`; 1 = legacy
+    /// per-page pushes, bit-identical to the unbatched engine).
+    pub push_batch: u32,
+    /// Remote-fault pull prefetch window (`--prefetch`; 0 = off).
+    pub prefetch: u32,
     /// Node the process starts on.
     pub home: NodeId,
 }
@@ -81,6 +86,8 @@ impl Default for SystemConfig {
             pin_stack: true,
             stretch_data_segment: 8 * 1024,
             reclaim_batch: 32,
+            push_batch: 1,
+            prefetch: 0,
             home: NodeId(0),
         }
     }
@@ -96,6 +103,8 @@ impl SystemConfig {
             pin_stack: self.pin_stack,
             stretch_data_segment: self.stretch_data_segment,
             reclaim_batch: self.reclaim_batch,
+            push_batch: self.push_batch,
+            prefetch: self.prefetch,
         }
     }
 }
@@ -196,6 +205,12 @@ impl ElasticSystem {
     /// LRU lists all agree.
     pub fn verify(&self) -> Result<(), String> {
         verify_cluster(&self.kernel, &self.procs)
+    }
+
+    /// Simulated wire time the batch/prefetch paths have saved so far
+    /// versus per-page messages (0 with batching off).
+    pub fn batch_saved_ns(&self) -> u64 {
+        self.kernel.batch_wire_saved_ns
     }
 
     // ----- primitives ------------------------------------------------------

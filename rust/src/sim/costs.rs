@@ -77,6 +77,18 @@ impl CostModel {
         self.wire_latency_ns + bytes * 8 * 1_000_000_000 / self.bandwidth_bps
     }
 
+    /// Wire time for a *batched* transfer: `n_pages` pages shipped as
+    /// ONE message of `bytes` total, so the whole batch pays a single
+    /// `wire_latency_ns` plus the aggregate serialization time. A batch
+    /// of 1 costs exactly [`Self::wire_ns`] of the same bytes — the
+    /// savings over per-page messages are the `n_pages - 1` latency
+    /// charges (and per-message header bytes) that never happen.
+    #[inline]
+    pub fn wire_batch_ns(&self, n_pages: u64, bytes: u64) -> u64 {
+        debug_assert!(n_pages >= 1, "a batch ships at least one page");
+        self.wire_ns(bytes)
+    }
+
     /// Foreground cost of a pull of `bytes` (synchronous: the process
     /// is stopped in the fault handler until the page arrives).
     #[inline]
@@ -84,10 +96,39 @@ impl CostModel {
         self.remote_fault_cpu_ns + self.wire_ns(bytes)
     }
 
+    /// Foreground cost of a batched pull: one fault trap, one request,
+    /// one multi-page reply. `pull_batch_ns(1, b) == pull_ns(b)`.
+    #[inline]
+    pub fn pull_batch_ns(&self, n_pages: u64, bytes: u64) -> u64 {
+        self.remote_fault_cpu_ns + self.wire_batch_ns(n_pages, bytes)
+    }
+
     /// Foreground cost of a push of `bytes` (mostly asynchronous).
+    ///
+    /// `push_overlap` is validated at decode time (finite, 0..=1), so
+    /// the float product below is of two finite non-negatives; the
+    /// `as u64` truncation is then well-defined (a hostile or NaN
+    /// overlap can no longer silently collapse every push to 0 ns).
     #[inline]
     pub fn push_ns(&self, bytes: u64) -> u64 {
+        debug_assert!(
+            self.push_overlap.is_finite() && (0.0..=1.0).contains(&self.push_overlap),
+            "push_overlap out of range: {}",
+            self.push_overlap
+        );
         (self.wire_ns(bytes) as f64 * self.push_overlap) as u64
+    }
+
+    /// Foreground cost of a batched push (one message, same overlap
+    /// discount). `push_batch_ns(1, b) == push_ns(b)`.
+    #[inline]
+    pub fn push_batch_ns(&self, n_pages: u64, bytes: u64) -> u64 {
+        debug_assert!(
+            self.push_overlap.is_finite() && (0.0..=1.0).contains(&self.push_overlap),
+            "push_overlap out of range: {}",
+            self.push_overlap
+        );
+        (self.wire_batch_ns(n_pages, bytes) as f64 * self.push_overlap) as u64
     }
 
     /// Foreground cost of a jump shipping `bytes` of checkpoint.
@@ -118,14 +159,26 @@ impl CostModel {
     }
 
     pub fn decode(d: &mut Dec) -> Result<Self, DecodeError> {
+        let local_access_num = d.u64()?;
+        let local_access_den = d.u64()?;
+        let minor_fault_ns = d.u64()?;
+        let wire_latency_ns = d.u64()?;
+        let bandwidth_bps = d.u64()?;
+        let remote_fault_cpu_ns = d.u64()?;
+        let push_overlap = d.f64()?;
+        // A shipped overlap outside [0, 1] (or NaN) would make every
+        // push cost garbage via the f64->u64 cast; reject it here.
+        if !push_overlap.is_finite() || !(0.0..=1.0).contains(&push_overlap) {
+            return Err(DecodeError::BadValue { what: "CostModel.push_overlap" });
+        }
         Ok(CostModel {
-            local_access_num: d.u64()?,
-            local_access_den: d.u64()?,
-            minor_fault_ns: d.u64()?,
-            wire_latency_ns: d.u64()?,
-            bandwidth_bps: d.u64()?,
-            remote_fault_cpu_ns: d.u64()?,
-            push_overlap: d.f64()?,
+            local_access_num,
+            local_access_den,
+            minor_fault_ns,
+            wire_latency_ns,
+            bandwidth_bps,
+            remote_fault_cpu_ns,
+            push_overlap,
             jump_cpu_ns: d.u64()?,
             stretch_cpu_ns: d.u64()?,
             policy_eval_ns: d.u64()?,
@@ -183,5 +236,57 @@ mod tests {
         let v = e.into_vec();
         let mut d = Dec::new(&v);
         assert_eq!(CostModel::decode(&mut d).unwrap(), c);
+    }
+
+    #[test]
+    fn batch_of_one_costs_exactly_the_single_page_primitives() {
+        // The ISSUE-4 equivalence anchor: n=1 batches must charge
+        // bit-identically to the legacy per-page formulas.
+        let c = CostModel::default();
+        for bytes in [64u64, PAGE_SIZE as u64, 4 * PAGE_SIZE as u64] {
+            assert_eq!(c.wire_batch_ns(1, bytes), c.wire_ns(bytes));
+            assert_eq!(c.pull_batch_ns(1, bytes), c.pull_ns(bytes));
+            assert_eq!(c.push_batch_ns(1, bytes), c.push_ns(bytes));
+        }
+    }
+
+    #[test]
+    fn batching_saves_exactly_the_extra_latency_charges() {
+        // 8 pages in one message vs 8 messages: with the default GbE
+        // model the serialization time is byte-linear, so the whole
+        // difference is 7 saved wire latencies.
+        let c = CostModel::default();
+        let page = PAGE_SIZE as u64;
+        let unbatched = 8 * c.wire_ns(page);
+        let batched = c.wire_batch_ns(8, 8 * page);
+        assert_eq!(unbatched - batched, 7 * c.wire_latency_ns);
+    }
+
+    #[test]
+    fn decode_rejects_bad_push_overlap() {
+        use crate::util::DecodeError;
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.1, 1.5] {
+            let mut c = CostModel::default();
+            c.push_overlap = bad;
+            let mut e = Enc::new();
+            c.encode(&mut e);
+            let v = e.into_vec();
+            let mut d = Dec::new(&v);
+            assert_eq!(
+                CostModel::decode(&mut d),
+                Err(DecodeError::BadValue { what: "CostModel.push_overlap" }),
+                "overlap {bad} must be rejected"
+            );
+        }
+        // boundary values are legal
+        for ok in [0.0, 1.0, 0.3] {
+            let mut c = CostModel::default();
+            c.push_overlap = ok;
+            let mut e = Enc::new();
+            c.encode(&mut e);
+            let v = e.into_vec();
+            let mut d = Dec::new(&v);
+            assert!(CostModel::decode(&mut d).is_ok(), "overlap {ok} must decode");
+        }
     }
 }

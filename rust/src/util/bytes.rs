@@ -16,6 +16,11 @@ pub enum DecodeError {
     BadTag { tag: u8, what: &'static str },
     TooLong { len: usize, limit: usize },
     BadUtf8,
+    /// A field decoded structurally but its value is outside the legal
+    /// domain (e.g. a NaN or out-of-range `push_overlap` in a shipped
+    /// cost model) — rejected here instead of silently producing
+    /// garbage downstream.
+    BadValue { what: &'static str },
 }
 
 impl std::fmt::Display for DecodeError {
@@ -29,6 +34,7 @@ impl std::fmt::Display for DecodeError {
                 write!(f, "length {len} exceeds limit {limit}")
             }
             DecodeError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
+            DecodeError::BadValue { what } => write!(f, "value out of range for {what}"),
         }
     }
 }

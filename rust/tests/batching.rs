@@ -1,0 +1,251 @@
+//! ISSUE 4 acceptance: batched page migration + locality-aware pull
+//! prefetch.
+//!
+//! * With batching OFF (batch=1, prefetch=0) every run is bit-identical
+//!   to the default configuration — digests, per-proc metrics, and
+//!   simulated time — for all seven workloads.
+//! * With batching ON digests still match DirectMem ground truth
+//!   everywhere (single-proc, multi-tenant, and across churn drains),
+//!   sequential workloads fault less and finish sooner, and the drain
+//!   protocol reports the wire time its PushBatches amortized.
+
+use elastic_os::mem::NodeId;
+use elastic_os::os::kernel::ClusterConfig;
+use elastic_os::os::membership::{ChurnEvent, ChurnOp, ChurnSchedule};
+use elastic_os::os::sched::{direct_ground_truth, ElasticCluster};
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::os::RunReport;
+use elastic_os::workloads::{by_name, Scale, Workload, ALL_EXT};
+
+// 1.3x the 96-frame home node, so every run stretches, pushes, and
+// remote-faults — the paths batching changes.
+const SCALE_BYTES: u64 = (96 * 4096 * 13) / 10;
+
+fn run_configured(wl: &str, mode: Mode, push_batch: u32, prefetch: u32) -> (RunReport, u64) {
+    let cfg = SystemConfig {
+        node_frames: vec![96, 96],
+        mode,
+        push_batch,
+        prefetch,
+        ..SystemConfig::default()
+    };
+    let mut sys = ElasticSystem::new(cfg, 64);
+    let mut w = by_name(wl, Scale::Bytes(SCALE_BYTES)).unwrap();
+    let report = sys.run_workload(w.as_mut());
+    sys.verify().expect("cluster invariants");
+    (report, sys.batch_saved_ns())
+}
+
+fn run_default(wl: &str, mode: Mode) -> RunReport {
+    let cfg = SystemConfig { node_frames: vec![96, 96], mode, ..SystemConfig::default() };
+    let mut sys = ElasticSystem::new(cfg, 64);
+    let mut w = by_name(wl, Scale::Bytes(SCALE_BYTES)).unwrap();
+    let report = sys.run_workload(w.as_mut());
+    sys.verify().expect("cluster invariants");
+    report
+}
+
+#[test]
+fn batching_off_is_bit_identical_to_defaults_for_all_workloads() {
+    // batch=1 / prefetch=0 must take the legacy code paths exactly:
+    // same digest, same simulated time, same access count, and the
+    // whole Metrics counter set equal — for every workload, both modes.
+    for wl in ALL_EXT {
+        for mode in [Mode::Elastic, Mode::Nswap] {
+            let (explicit, saved) = run_configured(wl, mode, 1, 0);
+            let default = run_default(wl, mode);
+            assert_eq!(explicit.digest, default.digest, "{wl}/{mode:?}: digest");
+            assert_eq!(explicit.sim_ns, default.sim_ns, "{wl}/{mode:?}: sim time");
+            assert_eq!(explicit.accesses, default.accesses, "{wl}/{mode:?}: accesses");
+            assert_eq!(explicit.metrics, default.metrics, "{wl}/{mode:?}: metrics");
+            assert_eq!(saved, 0, "{wl}/{mode:?}: nothing may be 'saved' with batching off");
+            assert_eq!(explicit.metrics.prefetch_pulled, 0, "{wl}/{mode:?}");
+            assert_eq!(explicit.metrics.prefetch_hits, 0, "{wl}/{mode:?}");
+        }
+    }
+}
+
+#[test]
+fn prefetch_wins_on_sequential_workloads() {
+    // The sequential sweeps are the prefetcher's home turf: a window
+    // of 8 must cut remote faults severalfold and lower simulated
+    // time, without perturbing the computed result. Nswap mode
+    // isolates the pull path (no jumps), so the comparison is pure
+    // batching win; Elastic-mode correctness is covered below.
+    for wl in ["linear", "table_scan"] {
+        let (base, _) = run_configured(wl, Mode::Nswap, 1, 0);
+        let (pf, saved) = run_configured(wl, Mode::Nswap, 1, 8);
+        assert_eq!(pf.digest, base.digest, "{wl}: prefetch changed the answer");
+        assert!(
+            pf.metrics.remote_faults * 2 < base.metrics.remote_faults,
+            "{wl}: prefetch must cut remote faults at least 2x ({} vs {})",
+            pf.metrics.remote_faults,
+            base.metrics.remote_faults
+        );
+        assert!(
+            pf.sim_ns < base.sim_ns,
+            "{wl}: prefetch must lower sim time ({} vs {})",
+            pf.sim_ns,
+            base.sim_ns
+        );
+        assert!(pf.metrics.prefetch_pulled > 0, "{wl}: window never filled");
+        assert!(pf.metrics.prefetch_hits > 0, "{wl}: no prefetched page was ever touched");
+        assert!(
+            pf.metrics.prefetch_hits <= pf.metrics.prefetch_pulled,
+            "{wl}: hits cannot exceed pulls"
+        );
+        assert!(saved > 0, "{wl}: batched pulls must amortize wire latency");
+        // Elastic mode may additionally jump; the answer must still be
+        // exact with the prefetcher on.
+        let (eos_base, _) = run_configured(wl, Mode::Elastic, 1, 0);
+        let (eos_pf, _) = run_configured(wl, Mode::Elastic, 1, 8);
+        assert_eq!(eos_pf.digest, eos_base.digest, "{wl}: elastic prefetch changed the answer");
+    }
+}
+
+#[test]
+fn batched_pushes_preserve_results_under_overcommit() {
+    // Overcommitted runs lean on kswapd/direct reclaim; with batch=8
+    // those paths ship PushBatches. Results and invariants must hold,
+    // and the batch accounting must actually engage.
+    for wl in ["linear", "count_sort", "dfs", "heap_sort"] {
+        let (base, _) = run_configured(wl, Mode::Elastic, 1, 0);
+        let (batched, saved) = run_configured(wl, Mode::Elastic, 8, 0);
+        assert_eq!(batched.digest, base.digest, "{wl}: batching changed the answer");
+        assert!(batched.metrics.pushes > 0, "{wl}: overcommit must push");
+        assert!(saved > 0, "{wl}: batched pushes must amortize wire latency");
+    }
+}
+
+#[test]
+fn batch_and_prefetch_compose_in_a_live_cluster() {
+    // Two live tenants on an overcommitted node with both knobs on:
+    // digests must match their DirectMem ground truths and the shared
+    // kernel's invariants must hold.
+    let wls = ["linear", "table_scan"];
+    let scale = Scale::Bytes(40 * 4096);
+    let truths: Vec<u64> = wls
+        .iter()
+        .map(|wl| direct_ground_truth(by_name(wl, scale).unwrap().as_mut()))
+        .collect();
+    let cfg = ClusterConfig {
+        node_frames: vec![96, 96],
+        push_batch: 8,
+        prefetch: 4,
+        ..ClusterConfig::default()
+    };
+    let mut cluster = ElasticCluster::new(cfg);
+    cluster.quantum_ns = 100_000;
+    let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+    for wl in wls {
+        let slot = cluster.spawn(Mode::Elastic, NodeId(0), wl, 64).unwrap();
+        jobs.push((slot, by_name(wl, scale).unwrap()));
+    }
+    let reports = cluster.run_live(jobs);
+    for (r, truth) in reports.iter().zip(&truths) {
+        assert_eq!(r.digest, *truth, "pid{} ({}) diverged with batching on", r.pid, r.comm);
+    }
+    cluster.verify().unwrap();
+    assert!(
+        reports.iter().any(|r| r.metrics.prefetch_pulled > 0),
+        "contended sequential tenants must prefetch"
+    );
+}
+
+#[test]
+fn cluster_defaults_equal_explicit_batching_off() {
+    // The scheduler path has its own config plumbing; assert the same
+    // bit-equivalence there: default ClusterConfig == batch=1/prefetch=0.
+    let wls = ["linear", "count_sort"];
+    let scale = Scale::Bytes(40 * 4096);
+    let run = |cfg: ClusterConfig| {
+        let mut cluster = ElasticCluster::new(cfg);
+        cluster.quantum_ns = 100_000;
+        let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+        for wl in wls {
+            let slot = cluster.spawn(Mode::Elastic, NodeId(0), wl, 64).unwrap();
+            jobs.push((slot, by_name(wl, scale).unwrap()));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().unwrap();
+        let makespan = cluster.clock.now();
+        (reports, makespan)
+    };
+    let (def_reports, def_makespan) =
+        run(ClusterConfig { node_frames: vec![96, 96], ..ClusterConfig::default() });
+    let (off_reports, off_makespan) = run(ClusterConfig {
+        node_frames: vec![96, 96],
+        push_batch: 1,
+        prefetch: 0,
+        ..ClusterConfig::default()
+    });
+    assert_eq!(def_makespan, off_makespan, "makespans must be bit-identical");
+    for (a, b) in def_reports.iter().zip(&off_reports) {
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.cpu_ns, b.cpu_ns);
+        assert_eq!(a.metrics, b.metrics);
+    }
+}
+
+#[test]
+fn batched_drain_is_digest_exact_and_amortizes_wire_latency() {
+    // Churn with batching on: node 2 joins, node 1 leaves mid-run; the
+    // drain evacuates in PushBatches. Digests must match ground truth,
+    // invariants must hold, and the drain must report saved wire time.
+    let wls = ["linear", "count_sort", "table_scan"];
+    let frames = 96u32;
+    let per_fp = (frames as u64 * 4096 * 13) / 10 / wls.len() as u64;
+    let truths: Vec<u64> = wls
+        .iter()
+        .map(|wl| direct_ground_truth(by_name(wl, Scale::Bytes(per_fp)).unwrap().as_mut()))
+        .collect();
+
+    let run = |push_batch: u32, schedule: Option<ChurnSchedule>| {
+        let cfg = ClusterConfig {
+            node_frames: vec![frames; 2],
+            push_batch,
+            prefetch: 4,
+            ..ClusterConfig::default()
+        };
+        let mut cluster = ElasticCluster::new(cfg);
+        if let Some(s) = schedule {
+            cluster.set_churn(s);
+        }
+        let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+        for wl in wls {
+            let slot = cluster
+                .spawn_placed(Mode::Elastic, wl, 512)
+                .expect("live cluster placement");
+            jobs.push((slot, by_name(wl, Scale::Bytes(per_fp)).unwrap()));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().expect("cluster invariants across batched churn");
+        (cluster, reports)
+    };
+
+    // Calibrate the schedule off an undisturbed batched run so both
+    // events land mid-run, then replay with churn.
+    let (cal, _) = run(8, None);
+    let makespan = cal.clock.now().max(1);
+    let schedule = ChurnSchedule::new(vec![
+        ChurnEvent { at_ns: makespan * 15 / 100, op: ChurnOp::Join { node: 2, frames } },
+        ChurnEvent { at_ns: makespan * 30 / 100, op: ChurnOp::Leave { node: 1 } },
+    ]);
+    let (cluster, reports) = run(8, Some(schedule));
+
+    let joins = cluster.churn_log.iter().filter(|a| matches!(a.op, ChurnOp::Join { .. })).count();
+    let leaves =
+        cluster.churn_log.iter().filter(|a| matches!(a.op, ChurnOp::Leave { .. })).count();
+    assert!(joins >= 1, "no mid-run join applied");
+    assert!(leaves >= 1, "no mid-run leave applied");
+    for ((r, truth), wl) in reports.iter().zip(&truths).zip(wls.iter()) {
+        assert_eq!(r.digest, *truth, "{wl}: digest diverged across a batched drain");
+    }
+    let drains: Vec<_> = cluster.churn_log.iter().filter_map(|a| a.drain).collect();
+    assert!(!drains.is_empty(), "leave must produce a drain report");
+    let evacuated: u32 = drains.iter().map(|d| d.evacuated).sum();
+    let saved: u64 = drains.iter().map(|d| d.wire_ns_saved).sum();
+    if evacuated > 1 {
+        assert!(saved > 0, "a multi-page batched drain must amortize wire latency");
+    }
+}

@@ -3,7 +3,7 @@
 //! Proves the evaluation's message formats and execution-transfer
 //! semantics do not depend on the in-process simulation shortcut.
 
-use elastic_os::net::peer::{expected_digest, run_local_pair};
+use elastic_os::net::peer::{expected_digest, run_local_pair, run_local_pair_opts};
 
 #[test]
 fn scan_completes_over_tcp_with_jumps() {
@@ -43,6 +43,27 @@ fn tcp_traffic_is_page_dominated() {
     let served_bytes = worker.stats.pulls_served * 4096;
     assert!(worker.stats.bytes_sent >= served_bytes);
     let _ = leader;
+}
+
+#[test]
+fn batched_pulls_over_tcp_cut_round_trips() {
+    // Same scan, pull batching on: each remote fault ships the page
+    // plus a window of followers in ONE PullBatchReq/PullBatchData
+    // round-trip. The digest is unchanged; the request count drops
+    // ~(window+1)-fold versus the unbatched run above.
+    let n_pages = 64;
+    let threshold = 10_000; // never jump: isolate the pull path
+    let (plain, _) = run_local_pair(n_pages, threshold).expect("plain pair");
+    let (leader, worker) = run_local_pair_opts(n_pages, threshold, 7).expect("batched pair");
+    let expect = expected_digest(n_pages);
+    assert_eq!(leader.digest, expect);
+    assert_eq!(worker.digest, expect);
+    // every worker-owned page still crosses the wire exactly once...
+    assert_eq!(worker.stats.pulls_served, (n_pages / 2) as u64);
+    // ...but in an eighth of the requests (32 pages / windows of 8)
+    assert_eq!(leader.stats.pulls, 4);
+    assert_eq!(leader.stats.prefetched, 28);
+    assert!(leader.stats.pulls < plain.stats.pulls);
 }
 
 #[test]
