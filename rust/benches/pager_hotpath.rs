@@ -75,6 +75,58 @@ fn main() {
         });
     }
 
+    // paged bulk fast path: the same sequential sweeps issued as
+    // page-granular bulk calls (ISSUE 5's headline: >= 4x over the
+    // scalar paged loop above, bit-identical simulation)
+    {
+        let (mut sys, a) = system_fitting();
+        let elems = 1u64 << 20;
+        let mut buf = vec![0u64; 512];
+        let scalar_write = bench_throughput("paged: scalar seq u64 writes (ratio base)", || {
+            for i in 0..N {
+                sys.write_u64(a + (i % elems) * 8, i);
+            }
+            N
+        });
+        let bulk_write = bench_throughput("paged: bulk sequential u64 writes", || {
+            let mut i = 0u64;
+            while i < N {
+                for (k, v) in buf.iter_mut().enumerate() {
+                    *v = i + k as u64;
+                }
+                sys.write_u64s(a + ((i % elems) * 8), &buf);
+                i += 512;
+            }
+            N
+        });
+        let scalar_read = bench_throughput("paged: scalar seq u64 reads (ratio base)", || {
+            let mut acc = 0u64;
+            for i in 0..N {
+                acc = acc.wrapping_add(sys.read_u64(a + (i % elems) * 8));
+            }
+            std::hint::black_box(acc);
+            N
+        });
+        let bulk_read = bench_throughput("paged: bulk sequential u64 reads", || {
+            let mut acc = 0u64;
+            let mut i = 0u64;
+            while i < N {
+                sys.read_u64s(a + ((i % elems) * 8), &mut buf);
+                for &v in buf.iter() {
+                    acc = acc.wrapping_add(v);
+                }
+                i += 512;
+            }
+            std::hint::black_box(acc);
+            N
+        });
+        println!(
+            "   bulk speedup: writes {:.2}x, reads {:.2}x (target: >= 4x)",
+            bulk_write / scalar_write,
+            bulk_read / scalar_read
+        );
+    }
+
     // fault path: overcommitted sequential scan (pull/push churn)
     {
         let cfg = SystemConfig {

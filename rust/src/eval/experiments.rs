@@ -775,6 +775,57 @@ pub fn bench_json(cfg: &EvalConfig) {
     std::fs::write("BENCH_migration.json", &json).expect("write BENCH_migration.json");
     println!("wrote BENCH_migration.json ({} scenarios)", scenarios.len());
     print!("{json}");
+
+    // Hot path: wall-clock throughput of the pager's scalar vs bulk
+    // sequential u64 access (the ISSUE 5 tentpole), its own artifact
+    // so CI accumulates the emulator's raw-speed trajectory alongside
+    // the migration numbers.
+    let hotpath_json = {
+        use std::time::Instant;
+        let mut sys = ElasticSystem::new(
+            SystemConfig { node_frames: vec![2048, 2048], ..SystemConfig::default() },
+            u64::MAX,
+        );
+        let a = sys.mmap(4 << 20, AreaKind::Heap, "hot");
+        let elems = (4u64 << 20) / 8;
+        let n = 2_000_000u64;
+        let mut buf = vec![0u64; 512];
+        // warm: touch every page so both timed passes run on TLB hits
+        let mut i = 0u64;
+        while i < elems {
+            sys.write_u64s(a + i * 8, &buf);
+            i += 512;
+        }
+        let t0 = Instant::now();
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc = acc.wrapping_add(sys.read_u64(a + (i % elems) * 8));
+        }
+        let scalar_ns = t0.elapsed().as_nanos().max(1) as u64;
+        let t0 = Instant::now();
+        let mut i = 0u64;
+        while i < n {
+            sys.read_u64s(a + (i % elems) * 8, &mut buf);
+            for &v in buf.iter() {
+                acc = acc.wrapping_add(v);
+            }
+            i += 512;
+        }
+        let bulk_ns = t0.elapsed().as_nanos().max(1) as u64;
+        std::hint::black_box(acc);
+        let scalar_mops = n as f64 * 1e3 / scalar_ns as f64;
+        let bulk_mops = n as f64 * 1e3 / bulk_ns as f64;
+        format!(
+            "{{\n  \"schema\": 1,\n  \"accesses\": {n},\n  \
+             \"scalar_seq_u64_mops\": {scalar_mops:.2},\n  \
+             \"bulk_seq_u64_mops\": {bulk_mops:.2},\n  \
+             \"bulk_speedup\": {:.2}\n}}\n",
+            bulk_mops / scalar_mops,
+        )
+    };
+    std::fs::write("BENCH_hotpath.json", &hotpath_json).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
+    print!("{hotpath_json}");
 }
 
 /// Run everything, in paper order.

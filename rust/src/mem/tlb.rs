@@ -69,6 +69,19 @@ impl Tlb {
         }
     }
 
+    /// Probe for `vpn` with an explicit intent: `write` demands
+    /// `write_ok` exactly like [`Self::lookup_write`]. The bulk fast
+    /// path (os/kernel.rs) resolves each covered page once through this
+    /// single entry point instead of probing per element.
+    #[inline(always)]
+    pub fn lookup(&self, vpn: u64, write: bool) -> Option<*mut u8> {
+        if write {
+            self.lookup_write(vpn)
+        } else {
+            self.lookup_read(vpn)
+        }
+    }
+
     /// Install a mapping (replacing whatever shared the slot).
     #[inline]
     pub fn install(&mut self, vpn: u64, ptr: *mut u8, write_ok: bool) {

@@ -32,6 +32,13 @@ pub struct Metrics {
     pub sync_events: u64,
     pub policy_evals: u64,
 
+    /// Software-TLB misses: every trip through the pager's slow path
+    /// (`resolve_slow`), whether it ends in a minor fault, a remote
+    /// fault, or a plain local install. Hits are derivable as
+    /// `accesses - tlb_misses` (every paged access either hits the TLB
+    /// or takes the slow path exactly once).
+    pub tlb_misses: u64,
+
     // pull-prefetch counters (batched remote faults; `--prefetch`)
     /// Pages pulled speculatively alongside a faulting page (same
     /// owner node, spatially adjacent, shipped in the same batched
@@ -72,6 +79,12 @@ impl Metrics {
     /// Total bytes moved over the fabric (Fig 9's metric).
     pub fn total_bytes(&self) -> u64 {
         self.bytes_pull + self.bytes_push + self.bytes_jump + self.bytes_stretch + self.bytes_sync
+    }
+
+    /// TLB hits for a run that performed `accesses` paged accesses
+    /// (every access either hits or takes the slow path once).
+    pub fn tlb_hits(&self, accesses: u64) -> u64 {
+        accesses.saturating_sub(self.tlb_misses)
     }
 
     pub fn record_jump(&mut self, at_ns: u64, from: NodeId, to: NodeId, bytes: u64) {

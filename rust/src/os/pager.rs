@@ -69,6 +69,47 @@ impl ElasticMem for ElasticSystem {
         self.engine().write_u64(addr, v)
     }
 
+    // Bulk fast paths: one page-table/TLB resolution per covered page
+    // instead of one per element (see `Engine::read_bulk` and friends
+    // in os/kernel.rs), bit-identical to the scalar loop in simulated
+    // time, fault order, metrics, and bytes.
+
+    fn read_bytes(&mut self, addr: u64, dst: &mut [u8]) {
+        self.engine().read_bulk::<1>(addr, dst)
+    }
+
+    fn write_bytes(&mut self, addr: u64, src: &[u8]) {
+        self.engine().write_bulk::<1>(addr, src)
+    }
+
+    fn read_u32s(&mut self, addr: u64, dst: &mut [u32]) {
+        self.engine().read_u32s(addr, dst)
+    }
+
+    fn write_u32s(&mut self, addr: u64, src: &[u32]) {
+        self.engine().write_u32s(addr, src)
+    }
+
+    fn read_u64s(&mut self, addr: u64, dst: &mut [u64]) {
+        self.engine().read_u64s(addr, dst)
+    }
+
+    fn write_u64s(&mut self, addr: u64, src: &[u64]) {
+        self.engine().write_u64s(addr, src)
+    }
+
+    fn fill_u64(&mut self, addr: u64, n: u64, v: u64) {
+        self.engine().fill_u64_bulk(addr, n, v)
+    }
+
+    fn copy_u64s(&mut self, dst: u64, src: u64, n: u64) {
+        self.engine().copy_bulk::<8>(dst, src, n * 8)
+    }
+
+    fn copy(&mut self, dst: u64, src: u64, len: u64) {
+        self.engine().copy_bulk::<1>(dst, src, len)
+    }
+
     fn regs_mut(&mut self) -> &mut [u64; 16] {
         &mut self.procs[0].regs.gpr
     }
@@ -193,6 +234,90 @@ mod tests {
             }
         }
         sys.verify().unwrap();
+    }
+
+    #[test]
+    fn bulk_ops_match_scalar_loops_across_page_boundaries() {
+        // one system driven with bulk calls, a twin with the scalar
+        // loops the defaults document: same faults, time, and data
+        let mut a = tiny_system(Mode::Elastic);
+        let mut b = tiny_system(Mode::Elastic);
+        let ra = a.mmap(6 * 4096, AreaKind::Heap, "x");
+        let rb = b.mmap(6 * 4096, AreaKind::Heap, "x");
+        assert_eq!(ra, rb);
+        let vals: Vec<u64> = (0..1500).map(|i| i * 0x9E37 + 1).collect();
+        let addr = ra + 1000; // straddles pages, 8-aligned? 1000 % 8 == 0
+        a.write_u64s(addr, &vals);
+        for (i, &v) in vals.iter().enumerate() {
+            b.write_u64(addr + i as u64 * 8, v);
+        }
+        assert_eq!(a.clock.now(), b.clock.now(), "write time");
+        assert_eq!(a.metrics, b.metrics, "write metrics");
+        let mut out = vec![0u64; 1500];
+        a.read_u64s(addr, &mut out);
+        assert_eq!(out, vals, "bulk readback");
+        let scalar: Vec<u64> = (0..1500).map(|i| b.read_u64(addr + i * 8)).collect();
+        assert_eq!(scalar, vals, "scalar readback");
+        assert_eq!(a.clock.now(), b.clock.now(), "read time");
+        // fill + copy, then cross-verify contents with scalar reads
+        a.fill_u64(ra, 512, 7);
+        for i in 0..512u64 {
+            b.write_u64(rb + i * 8, 7);
+        }
+        a.copy_u64s(ra + 5 * 4096, ra, 512);
+        for i in 0..512u64 {
+            let v = b.read_u64(rb + i * 8);
+            b.write_u64(rb + 5 * 4096 + i * 8, v);
+        }
+        assert_eq!(a.clock.now(), b.clock.now(), "fill/copy time");
+        assert_eq!(a.metrics, b.metrics, "fill/copy metrics");
+        assert_eq!(a.read_u64(ra + 5 * 4096 + 8), 7);
+        a.verify().unwrap();
+        b.verify().unwrap();
+    }
+
+    #[test]
+    fn bulk_ops_survive_overcommit_faults_mid_span() {
+        // span larger than one node: remote faults land mid-bulk and
+        // the scalar twin must agree exactly
+        let mut a = tiny_system(Mode::Nswap);
+        let mut b = tiny_system(Mode::Nswap);
+        let pages = 96u64;
+        let ra = a.mmap(pages * 4096, AreaKind::Heap, "big");
+        let rb = b.mmap(pages * 4096, AreaKind::Heap, "big");
+        assert_eq!(ra, rb);
+        let n = (pages * 512) as usize;
+        let vals: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(0xABCD_EF01)).collect();
+        a.write_u64s(ra, &vals);
+        for (i, &v) in vals.iter().enumerate() {
+            b.write_u64(rb + i as u64 * 8, v);
+        }
+        let mut out = vec![0u64; n];
+        a.read_u64s(ra, &mut out);
+        assert_eq!(out, vals);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(b.read_u64(rb + i as u64 * 8), v);
+        }
+        assert_eq!(a.clock.now(), b.clock.now(), "sim time under pressure");
+        assert_eq!(a.clock.accesses(), b.clock.accesses(), "access counts");
+        assert_eq!(a.metrics, b.metrics, "metrics under pressure");
+        assert!(a.metrics.pushes > 0, "overcommit must evict");
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn tlb_counters_track_slow_path_once_per_page() {
+        let mut sys = tiny_system(Mode::Elastic);
+        let a = sys.mmap(2 * 4096, AreaKind::Heap, "t");
+        let mut out = vec![0u64; 1024]; // 2 pages of u64s
+        sys.read_u64s(a, &mut out);
+        // each page: one slow-path trip (the minor fault), rest hits
+        assert_eq!(sys.metrics.minor_faults, 2);
+        assert_eq!(sys.metrics.tlb_misses, 2);
+        assert_eq!(sys.metrics.tlb_hits(sys.clock.accesses()), 1024 - 2);
+        // a write to a read-installed page upgrades via one more miss
+        sys.write_u64(a, 5);
+        assert_eq!(sys.metrics.tlb_misses, 3);
     }
 
     #[test]

@@ -182,7 +182,22 @@ impl JumpCheckpoint {
 
     /// Wire size of the encoded checkpoint.
     pub fn size(&self) -> u64 {
-        self.encode().len() as u64
+        self.encoded_size()
+    }
+
+    /// Encoded size in bytes, computed arithmetically — no allocation,
+    /// no encoding pass. The jump hot path charges wire costs by size
+    /// alone, so it never needs the actual ~9 KB byte image; kept in
+    /// lockstep with [`Self::encode`] (asserted in tests and by a
+    /// debug assertion on the jump path).
+    pub fn encoded_size(&self) -> u64 {
+        const REGS: u64 = 16 * 8 + 8 + 8 + 64; // gpr + rip + rflags + fpu
+        const AUDIT: u64 = 4 * 8;
+        let pending = 4 + self.pending.len() as u64 * 17;
+        let io = 4 + self.io_offsets.len() as u64 * 12;
+        let stack: u64 = self.stack_pages.iter().map(|(_, d)| 8 + 4 + d.len() as u64).sum();
+        let engine = 4 + self.engine_state.len() as u64;
+        REGS + pending + AUDIT + io + 4 + stack + engine
     }
 }
 
@@ -234,6 +249,22 @@ mod tests {
     fn jump_without_stack_is_sub_kilobyte() {
         let ckpt = JumpCheckpoint::new(RegisterFile::default());
         assert!(ckpt.size() < 1024);
+    }
+
+    #[test]
+    fn encoded_size_matches_encode_exactly() {
+        // the arithmetic sizing the jump hot path uses must never
+        // drift from the real encoder
+        let mut ckpt = JumpCheckpoint::new(RegisterFile::default());
+        assert_eq!(ckpt.encoded_size(), ckpt.encode().len() as u64, "empty");
+        ckpt.pending.push(PendingSignal { signo: 10, code: -1, value: 5 });
+        ckpt.pending.push(PendingSignal { signo: 2, code: 7, value: 0 });
+        ckpt.audit = [9, 8, 7, 6];
+        ckpt.io_offsets.push((3, 8192));
+        ckpt.stack_pages.push((Vpn(100), vec![1; PAGE_SIZE]));
+        ckpt.stack_pages.push((Vpn(101), vec![2; 100]));
+        ckpt.engine_state = vec![5; 333];
+        assert_eq!(ckpt.encoded_size(), ckpt.encode().len() as u64, "populated");
     }
 
     #[test]

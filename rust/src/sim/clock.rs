@@ -46,9 +46,22 @@ impl SimClock {
     }
 
     /// Current simulated time in nanoseconds.
+    ///
+    /// `accesses * ns_per_access_num` can exceed u64 on huge runs
+    /// (e.g. billions of accesses at a multi-ns rational cost), so the
+    /// product is taken through u128; the common small case stays a
+    /// single u64 multiply. A result beyond u64 saturates rather than
+    /// wrapping (a clock must never run backwards).
     #[inline]
     pub fn now(&self) -> u64 {
-        self.event_ns + self.accesses * self.ns_per_access_num / self.ns_per_access_den
+        let access_ns = match self.accesses.checked_mul(self.ns_per_access_num) {
+            Some(p) => p / self.ns_per_access_den,
+            None => {
+                let p = self.accesses as u128 * self.ns_per_access_num as u128;
+                u64::try_from(p / self.ns_per_access_den as u128).unwrap_or(u64::MAX)
+            }
+        };
+        self.event_ns.saturating_add(access_ns)
     }
 
     /// Total bulk accesses recorded so far.
@@ -95,6 +108,26 @@ mod tests {
         c.advance(32_000);
         c.tick_accesses(10);
         assert_eq!(c.now(), 32_010);
+    }
+
+    #[test]
+    fn huge_access_counts_do_not_overflow() {
+        // accesses * num overflows u64 here, but the true time fits:
+        // (2^63) * 3 / 2 = 3 * 2^62.
+        let mut c = SimClock::new(3, 2);
+        c.tick_accesses(1u64 << 63);
+        assert_eq!(c.now(), 3u64 << 62);
+        // event component still adds on top of the wide product
+        c.advance(7);
+        assert_eq!(c.now(), (3u64 << 62) + 7);
+    }
+
+    #[test]
+    fn now_saturates_at_u64_max() {
+        let mut c = SimClock::new(u64::MAX, 1);
+        c.tick_accesses(u64::MAX);
+        c.advance(u64::MAX);
+        assert_eq!(c.now(), u64::MAX, "beyond-u64 times clamp, never wrap");
     }
 
     #[test]

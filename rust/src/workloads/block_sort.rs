@@ -109,8 +109,17 @@ impl Workload for BlockSort {
         let arr = U64Array::map(mem, self.n, "bsort.arr");
         let scratch = U64Array::map(mem, self.n, "bsort.scratch");
         let mut rng = Rng::new(self.seed);
-        for i in 0..self.n {
-            arr.set(mem, i, rng.next_u64());
+        // Page-chunked bulk build; value stream identical to the old
+        // per-element store loop.
+        let mut buf = vec![0u64; crate::mem::PAGE_SIZE / 8];
+        let mut i = 0;
+        while i < self.n {
+            let run = arr.chunk_at(i) as usize;
+            for v in &mut buf[..run] {
+                *v = rng.next_u64();
+            }
+            arr.set_many(mem, i, &buf[..run]);
+            i += run as u64;
         }
         self.arr = Some(arr);
         self.scratch = Some(scratch);
@@ -377,14 +386,19 @@ impl WorkloadExec for BlockSortExec {
                     self.phase = BsPhase::MergeTailI;
                 }
                 BsPhase::MergeTailI => {
+                    // Run drain = a straight copy: page-granular bulk
+                    // chunks (read+write interleave per element inside
+                    // the engine, so access counts and fault order
+                    // match the old per-element loop), one fuel unit
+                    // per chunk.
                     while self.mi < self.mmid {
                         if !fuel.spend(&*mem) {
                             return StepOutcome::Running;
                         }
-                        let v = self.src.get(mem, self.mi);
-                        self.dst.set(mem, self.mk, v);
-                        self.mi += 1;
-                        self.mk += 1;
+                        let run = self.src.chunk_at(self.mi).min(self.mmid - self.mi);
+                        mem.copy_u64s(self.dst.base + self.mk * 8, self.src.base + self.mi * 8, run);
+                        self.mi += run;
+                        self.mk += run;
                     }
                     self.phase = BsPhase::MergeTailJ;
                 }
@@ -393,10 +407,10 @@ impl WorkloadExec for BlockSortExec {
                         if !fuel.spend(&*mem) {
                             return StepOutcome::Running;
                         }
-                        let v = self.src.get(mem, self.mj);
-                        self.dst.set(mem, self.mk, v);
-                        self.mj += 1;
-                        self.mk += 1;
+                        let run = self.src.chunk_at(self.mj).min(self.mhi - self.mj);
+                        mem.copy_u64s(self.dst.base + self.mk * 8, self.src.base + self.mj * 8, run);
+                        self.mj += run;
+                        self.mk += run;
                     }
                     self.mlo = self.mhi;
                     self.phase = BsPhase::MergePair;

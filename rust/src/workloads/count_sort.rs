@@ -48,11 +48,20 @@ impl Workload for CountSort {
         let output = U32Array::map(mem, self.n, "csort.out");
         let counts = U64Array::map(mem, BUCKETS, "csort.counts");
         let mut rng = Rng::new(self.seed);
-        for i in 0..self.n {
-            // value = bucket id in the low bits + payload above, so the
-            // sort is stable-checkable
-            let b = rng.below(BUCKETS) as u32;
-            input.set(mem, i, (b << 16) | (rng.next_u32() & 0xFFFF));
+        // value = bucket id in the low bits + payload above, so the
+        // sort is stable-checkable; generated page-chunk-at-a-time and
+        // stored with one bulk write per chunk (same value stream and
+        // access count as per-element stores).
+        let mut buf = vec![0u32; crate::mem::PAGE_SIZE / 4];
+        let mut i = 0;
+        while i < self.n {
+            let run = input.chunk_at(i) as usize;
+            for v in &mut buf[..run] {
+                let b = rng.below(BUCKETS) as u32;
+                *v = (b << 16) | (rng.next_u32() & 0xFFFF);
+            }
+            input.set_many(mem, i, &buf[..run]);
+            i += run as u64;
         }
         self.input = Some(input);
         self.output = Some(output);
@@ -72,6 +81,7 @@ impl Workload for CountSort {
             dprev: 0,
             dordered: 1,
             digest: FNV_SEED,
+            buf: vec![0; crate::mem::PAGE_SIZE / 4],
         })
     }
 }
@@ -88,8 +98,11 @@ enum CsPhase {
     Digest,
 }
 
-/// Resumable count-sort state: one fuel unit per element (or per
-/// bucket, in the prefix phase).
+/// Resumable count-sort state: one fuel unit per page-granular input
+/// chunk in the sequential histogram/scatter phases (the input is
+/// bulk-read; counts and the scattered output keep their per-element
+/// accesses, so total access counts and fault order are unchanged),
+/// per bucket in the prefix phase, and per sample in the digest.
 struct CountSortExec {
     input: U32Array,
     output: U32Array,
@@ -102,6 +115,8 @@ struct CountSortExec {
     dprev: u32,
     dordered: u64,
     digest: u64,
+    /// Host-side chunk buffer for the sequential input scans.
+    buf: Vec<u32>,
 }
 
 impl WorkloadExec for CountSortExec {
@@ -113,10 +128,14 @@ impl WorkloadExec for CountSortExec {
                         if !fuel.spend(&*mem) {
                             return StepOutcome::Running;
                         }
-                        let b = (self.input.get(mem, self.i) >> 16) as u64;
-                        let c = self.counts.get(mem, b);
-                        self.counts.set(mem, b, c + 1);
-                        self.i += 1;
+                        let run = self.input.chunk_at(self.i) as usize;
+                        self.input.get_many(mem, self.i, &mut self.buf[..run]);
+                        for &x in &self.buf[..run] {
+                            let b = (x >> 16) as u64;
+                            let c = self.counts.get(mem, b);
+                            self.counts.set(mem, b, c + 1);
+                        }
+                        self.i += run as u64;
                     }
                     self.phase = CsPhase::Prefix;
                 }
@@ -138,12 +157,15 @@ impl WorkloadExec for CountSortExec {
                         if !fuel.spend(&*mem) {
                             return StepOutcome::Running;
                         }
-                        let v = self.input.get(mem, self.i);
-                        let b = (v >> 16) as u64;
-                        let pos = self.counts.get(mem, b);
-                        self.output.set(mem, pos, v);
-                        self.counts.set(mem, b, pos + 1);
-                        self.i += 1;
+                        let run = self.input.chunk_at(self.i) as usize;
+                        self.input.get_many(mem, self.i, &mut self.buf[..run]);
+                        for &v in &self.buf[..run] {
+                            let b = (v >> 16) as u64;
+                            let pos = self.counts.get(mem, b);
+                            self.output.set(mem, pos, v);
+                            self.counts.set(mem, b, pos + 1);
+                        }
+                        self.i += run as u64;
                     }
                     self.phase = CsPhase::Digest;
                     self.i = 0;

@@ -143,12 +143,23 @@ impl Workload for Dfs {
             perm.swap(a, b);
         }
 
-        // Allocation sweep: write records in slot order.
+        // Allocation sweep: write whole records in slot order as
+        // page-chunked bulk stores (visited flag, payload, zeroed pad
+        // words — the calloc+init a real program would perform). One
+        // rng call per slot, same stream as before; REC divides the
+        // per-page element count, so chunks hold whole records.
         let nodes = U32Array::map(mem, n * REC, "dfs.nodes");
-        for slot in 0..n {
-            let base = slot * REC;
-            nodes.set(mem, base, 0); // visited flag
-            nodes.set(mem, base + 1, rng.next_u32()); // payload
+        let mut buf = vec![0u32; crate::mem::PAGE_SIZE / 4];
+        let mut e = 0;
+        while e < n * REC {
+            let run = nodes.chunk_at(e) as usize;
+            debug_assert_eq!(run as u64 % REC, 0);
+            for rec in buf[..run].chunks_exact_mut(REC as usize) {
+                rec.fill(0);
+                rec[1] = rng.next_u32(); // payload; rec[0] = visited = 0
+            }
+            nodes.set_many(mem, e, &buf[..run]);
+            e += run as u64;
         }
 
         // Explicit DFS stack (VM_GROWSDOWN analogue): holds the path

@@ -57,22 +57,31 @@ impl Workload for Dijkstra {
         // graph is connected and paths are long) plus ~4 random edges
         // per vertex. Row-major writes — sequential, like building the
         // dataset in the paper's C programs.
-        for u in 0..n {
-            let ring = (u + 1) % n;
-            for v in 0..n {
-                let w = if v == ring {
+        // Row-major page-chunked bulk stores; the per-element rng
+        // stream is unchanged (element u*n+v decides its own edge
+        // weight in order), so the generated graph is identical to the
+        // old per-element build.
+        let mut buf = vec![0u32; crate::mem::PAGE_SIZE / 4];
+        let total = n * n;
+        let mut e = 0;
+        while e < total {
+            let run = matrix.chunk_at(e) as usize;
+            for (k, w) in buf[..run].iter_mut().enumerate() {
+                let idx = e + k as u64;
+                let (u, v) = (idx / n, idx % n);
+                let ring = (u + 1) % n;
+                *w = if v == ring {
                     1 + (rng.next_u32() % 64)
                 } else if rng.below(n) < 4 {
                     64 + (rng.next_u32() % 1024)
                 } else {
                     0
                 };
-                matrix.set(mem, u * n + v, w);
             }
+            matrix.set_many(mem, e, &buf[..run]);
+            e += run as u64;
         }
-        for v in 0..n {
-            dist.set(mem, v, INF);
-        }
+        mem.fill_u64(dist.base, n, INF);
         self.matrix = Some(matrix);
         self.dist = Some(dist);
         self.visited = Some(visited);

@@ -39,8 +39,17 @@ impl Workload for HeapSort {
     fn setup(&mut self, mem: &mut dyn ElasticMem) {
         let arr = U64Array::map(mem, self.n, "hsort.arr");
         let mut rng = Rng::new(self.seed);
-        for i in 0..self.n {
-            arr.set(mem, i, rng.next_u64());
+        // Page-chunked bulk build; value stream identical to the old
+        // per-element store loop.
+        let mut buf = vec![0u64; crate::mem::PAGE_SIZE / 8];
+        let mut i = 0;
+        while i < self.n {
+            let run = arr.chunk_at(i) as usize;
+            for v in &mut buf[..run] {
+                *v = rng.next_u64();
+            }
+            arr.set_many(mem, i, &buf[..run]);
+            i += run as u64;
         }
         self.arr = Some(arr);
     }

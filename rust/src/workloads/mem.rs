@@ -23,6 +23,87 @@ pub trait ElasticMem {
     fn write_u32(&mut self, addr: u64, v: u32);
     fn write_u64(&mut self, addr: u64, v: u64);
 
+    // ----- bulk operations -------------------------------------------------
+    //
+    // Each bulk op is *semantically identical* to the scalar loop its
+    // default implementation spells out: same element count, same
+    // access order, same faults, same simulated time. Implementors may
+    // override with page-granular fast paths (one translation per
+    // covered page instead of one per element — see `Engine` in
+    // os/kernel.rs and `DirectMem` below) but must preserve that
+    // equivalence bit-for-bit; the win is wall-clock only.
+
+    /// Read `dst.len()` bytes starting at `addr` (one access per byte).
+    fn read_bytes(&mut self, addr: u64, dst: &mut [u8]) {
+        for (i, b) in dst.iter_mut().enumerate() {
+            *b = self.read_u8(addr + i as u64);
+        }
+    }
+
+    /// Write `src.len()` bytes starting at `addr` (one access per byte).
+    fn write_bytes(&mut self, addr: u64, src: &[u8]) {
+        for (i, &b) in src.iter().enumerate() {
+            self.write_u8(addr + i as u64, b);
+        }
+    }
+
+    /// Read `dst.len()` u32s starting at `addr` (one access per element).
+    fn read_u32s(&mut self, addr: u64, dst: &mut [u32]) {
+        for (i, v) in dst.iter_mut().enumerate() {
+            *v = self.read_u32(addr + i as u64 * 4);
+        }
+    }
+
+    /// Write `src.len()` u32s starting at `addr` (one access per element).
+    fn write_u32s(&mut self, addr: u64, src: &[u32]) {
+        for (i, &v) in src.iter().enumerate() {
+            self.write_u32(addr + i as u64 * 4, v);
+        }
+    }
+
+    /// Read `dst.len()` u64s starting at `addr` (one access per element).
+    fn read_u64s(&mut self, addr: u64, dst: &mut [u64]) {
+        for (i, v) in dst.iter_mut().enumerate() {
+            *v = self.read_u64(addr + i as u64 * 8);
+        }
+    }
+
+    /// Write `src.len()` u64s starting at `addr` (one access per element).
+    fn write_u64s(&mut self, addr: u64, src: &[u64]) {
+        for (i, &v) in src.iter().enumerate() {
+            self.write_u64(addr + i as u64 * 8, v);
+        }
+    }
+
+    /// Store `v` into `n` consecutive u64 slots starting at `addr`
+    /// (one access per element).
+    fn fill_u64(&mut self, addr: u64, n: u64, v: u64) {
+        for i in 0..n {
+            self.write_u64(addr + i * 8, v);
+        }
+    }
+
+    /// Copy `n` u64 elements from `src` to `dst`, exactly as the loop
+    /// `for i { write_u64(dst+8i, read_u64(src+8i)) }` would — reads
+    /// and writes interleave per element, two accesses per element.
+    /// The ranges must not overlap.
+    fn copy_u64s(&mut self, dst: u64, src: u64, n: u64) {
+        for i in 0..n {
+            let v = self.read_u64(src + i * 8);
+            self.write_u64(dst + i * 8, v);
+        }
+    }
+
+    /// Byte-granular copy of `len` bytes from `src` to `dst`,
+    /// equivalent to `len` interleaved `read_u8`/`write_u8` pairs.
+    /// The ranges must not overlap.
+    fn copy(&mut self, dst: u64, src: u64, len: u64) {
+        for i in 0..len {
+            let v = self.read_u8(src + i);
+            self.write_u8(dst + i, v);
+        }
+    }
+
     /// Scalar "register" state carried in jump checkpoints. Workloads
     /// may stash loop counters here; purely additive fidelity.
     fn regs_mut(&mut self) -> &mut [u64; 16];
@@ -60,6 +141,30 @@ impl U64Array {
         debug_assert!(i < self.len);
         mem.write_u64(self.base + i * 8, v)
     }
+
+    /// Bulk read of `out.len()` elements starting at index `i`.
+    #[inline]
+    pub fn get_many<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64, out: &mut [u64]) {
+        debug_assert!(i + out.len() as u64 <= self.len);
+        mem.read_u64s(self.base + i * 8, out);
+    }
+
+    /// Bulk write of `vals.len()` elements starting at index `i`.
+    #[inline]
+    pub fn set_many<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64, vals: &[u64]) {
+        debug_assert!(i + vals.len() as u64 <= self.len);
+        mem.write_u64s(self.base + i * 8, vals);
+    }
+
+    /// Elements from index `i` (exclusive of `i + returned`) up to the
+    /// next page boundary — the natural bulk-chunk length that keeps
+    /// fuel-preemption points at page granularity. The base is
+    /// page-aligned by `mmap`, so this is a pure index computation.
+    #[inline]
+    pub fn chunk_at(&self, i: u64) -> u64 {
+        const PER_PAGE: u64 = crate::mem::PAGE_SIZE as u64 / 8;
+        (PER_PAGE - (i % PER_PAGE)).min(self.len - i)
+    }
 }
 
 /// Typed view of a mapped u32 array.
@@ -85,6 +190,28 @@ impl U32Array {
     pub fn set<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64, v: u32) {
         debug_assert!(i < self.len);
         mem.write_u32(self.base + i * 4, v)
+    }
+
+    /// Bulk read of `out.len()` elements starting at index `i`.
+    #[inline]
+    pub fn get_many<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64, out: &mut [u32]) {
+        debug_assert!(i + out.len() as u64 <= self.len);
+        mem.read_u32s(self.base + i * 4, out);
+    }
+
+    /// Bulk write of `vals.len()` elements starting at index `i`.
+    #[inline]
+    pub fn set_many<M: ElasticMem + ?Sized>(&self, mem: &mut M, i: u64, vals: &[u32]) {
+        debug_assert!(i + vals.len() as u64 <= self.len);
+        mem.write_u32s(self.base + i * 4, vals);
+    }
+
+    /// Elements from index `i` up to the next page boundary (see
+    /// [`U64Array::chunk_at`]).
+    #[inline]
+    pub fn chunk_at(&self, i: u64) -> u64 {
+        const PER_PAGE: u64 = crate::mem::PAGE_SIZE as u64 / 4;
+        (PER_PAGE - (i % PER_PAGE)).min(self.len - i)
     }
 }
 
@@ -168,6 +295,70 @@ impl ElasticMem for DirectMem {
     fn regs_mut(&mut self) -> &mut [u64; 16] {
         &mut self.regs
     }
+
+    // Bulk fast paths: straight slice memcpy over the flat buffer.
+    // DirectMem has no clock or faults, so byte-for-byte value
+    // equivalence with the scalar defaults is all that must hold.
+
+    fn read_bytes(&mut self, addr: u64, dst: &mut [u8]) {
+        let o = self.off(addr, dst.len());
+        dst.copy_from_slice(&self.data[o..o + dst.len()]);
+    }
+
+    fn write_bytes(&mut self, addr: u64, src: &[u8]) {
+        let o = self.off(addr, src.len());
+        self.data[o..o + src.len()].copy_from_slice(src);
+    }
+
+    fn read_u32s(&mut self, addr: u64, dst: &mut [u32]) {
+        let o = self.off(addr, dst.len() * 4);
+        for (i, v) in dst.iter_mut().enumerate() {
+            *v = u32::from_le_bytes(self.data[o + i * 4..o + i * 4 + 4].try_into().unwrap());
+        }
+    }
+
+    fn write_u32s(&mut self, addr: u64, src: &[u32]) {
+        let o = self.off(addr, src.len() * 4);
+        for (i, &v) in src.iter().enumerate() {
+            self.data[o + i * 4..o + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn read_u64s(&mut self, addr: u64, dst: &mut [u64]) {
+        let o = self.off(addr, dst.len() * 8);
+        for (i, v) in dst.iter_mut().enumerate() {
+            *v = u64::from_le_bytes(self.data[o + i * 8..o + i * 8 + 8].try_into().unwrap());
+        }
+    }
+
+    fn write_u64s(&mut self, addr: u64, src: &[u64]) {
+        let o = self.off(addr, src.len() * 8);
+        for (i, &v) in src.iter().enumerate() {
+            self.data[o + i * 8..o + i * 8 + 8].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn fill_u64(&mut self, addr: u64, n: u64, v: u64) {
+        let o = self.off(addr, n as usize * 8);
+        let bytes = v.to_le_bytes();
+        for chunk in self.data[o..o + n as usize * 8].chunks_exact_mut(8) {
+            chunk.copy_from_slice(&bytes);
+        }
+    }
+
+    fn copy_u64s(&mut self, dst: u64, src: u64, n: u64) {
+        self.copy(dst, src, n * 8);
+    }
+
+    fn copy(&mut self, dst: u64, src: u64, len: u64) {
+        debug_assert!(
+            dst + len <= src || src + len <= dst,
+            "copy ranges overlap: dst={dst:#x} src={src:#x} len={len}"
+        );
+        let so = self.off(src, len as usize);
+        let dofs = self.off(dst, len as usize);
+        self.data.copy_within(so..so + len as usize, dofs);
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +390,56 @@ mod tests {
         let arr32 = U32Array::map(&mut m, 10, "arr32");
         arr32.set(&mut m, 3, 42);
         assert_eq!(arr32.get(&mut m, 3), 42);
+    }
+
+    #[test]
+    fn bulk_ops_round_trip_and_match_scalar_on_direct_mem() {
+        let mut m = DirectMem::new();
+        let a = m.mmap(8 * 4096, AreaKind::Heap, "bulk");
+        // u64 span crossing a page boundary at an odd (8-aligned) start
+        let vals: Vec<u64> = (0..700).map(|i| i * 31 + 7).collect();
+        m.write_u64s(a + 400 * 8, &vals);
+        let mut out = vec![0u64; 700];
+        m.read_u64s(a + 400 * 8, &mut out);
+        assert_eq!(out, vals);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(m.read_u64(a + (400 + i as u64) * 8), v, "scalar view of bulk write");
+        }
+        // u32 and byte variants
+        let w32: Vec<u32> = (0..1500).map(|i| i as u32 ^ 0xABCD).collect();
+        m.write_u32s(a + 4 * 4096, &w32);
+        let mut o32 = vec![0u32; 1500];
+        m.read_u32s(a + 4 * 4096, &mut o32);
+        assert_eq!(o32, w32);
+        assert_eq!(m.read_u32(a + 4 * 4096 + 4), w32[1]);
+        let bytes: Vec<u8> = (0..5000).map(|i| (i % 251) as u8).collect();
+        m.write_bytes(a + 100, &bytes);
+        let mut ob = vec![0u8; 5000];
+        m.read_bytes(a + 100, &mut ob);
+        assert_eq!(ob, bytes);
+        assert_eq!(m.read_u8(a + 100 + 4999), bytes[4999]);
+        // fill + non-overlapping copy
+        m.fill_u64(a, 300, 0xFEED);
+        assert_eq!(m.read_u64(a + 299 * 8), 0xFEED);
+        m.copy_u64s(a + 6 * 4096, a, 300);
+        assert_eq!(m.read_u64(a + 6 * 4096 + 299 * 8), 0xFEED);
+        // offset 4000 still holds bytes[3900..] (untouched by the fill)
+        m.copy(a + 7 * 4096, a + 4000, 64);
+        assert_eq!(m.read_u8(a + 7 * 4096 + 63), bytes[3963]);
+    }
+
+    #[test]
+    fn array_chunk_at_stops_at_page_boundaries() {
+        let mut m = DirectMem::new();
+        let arr = U64Array::map(&mut m, 1000, "c"); // < 2 pages of u64s
+        assert_eq!(arr.chunk_at(0), 512);
+        assert_eq!(arr.chunk_at(5), 507);
+        assert_eq!(arr.chunk_at(512), 488, "tail chunk is bounded by len");
+        assert_eq!(arr.chunk_at(999), 1);
+        let arr32 = U32Array::map(&mut m, 3000, "c32");
+        assert_eq!(arr32.chunk_at(0), 1024);
+        assert_eq!(arr32.chunk_at(1030), 1018);
+        assert_eq!(arr32.chunk_at(2048), 952);
     }
 
     #[test]

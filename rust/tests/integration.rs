@@ -34,6 +34,18 @@ fn all_workloads_match_ground_truth_under_eos() {
         let r = sys.run_workload(w.as_mut());
         assert_eq!(r.digest, expect, "{wl}: elastic digest != ground truth");
         sys.verify().unwrap_or_else(|e| panic!("{wl}: {e}"));
+        // TLB counter sanity: every access either hits or takes the
+        // slow path exactly once, and every fault rode a slow path.
+        let m = &r.metrics;
+        assert!(m.tlb_misses <= r.accesses, "{wl}: more TLB misses than accesses");
+        assert!(
+            m.tlb_misses >= m.minor_faults + m.remote_faults,
+            "{wl}: every fault must have come through the slow path"
+        );
+        assert!(
+            m.tlb_hits(r.accesses) > m.tlb_misses,
+            "{wl}: sequential phases must be TLB-hit dominated"
+        );
     }
 }
 

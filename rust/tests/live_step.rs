@@ -55,14 +55,49 @@ fn live_stepped_equals_trace_replayed_equals_direct_ground_truth() {
 fn fuel_one_preempts_at_every_boundary_and_converges() {
     // The property form: with fuel=1 the stepper is interrupted at
     // *every* loop-iteration boundary; the digest must be unchanged.
+    // (Since the bulk-memory conversion, sequential phases spend one
+    // fuel unit per page-granular chunk rather than per element, so
+    // the floor is "many chunks", not "many elements".)
     for wl in ALL_EXT {
         let truth = direct_truth(wl);
         let (live_digest, steps) = stepped_digest(wl, 1);
         assert_eq!(live_digest, truth, "{wl}: fuel=1 stepping diverged");
         assert!(
-            steps > 100,
-            "{wl}: fuel=1 must take one iteration per step (got only {steps} steps)"
+            steps > 16,
+            "{wl}: fuel=1 must take one loop iteration per step (got only {steps} steps)"
         );
+    }
+}
+
+#[test]
+fn fuel_one_bulk_stepping_is_bit_identical_to_unstepped_engine_run() {
+    // ISSUE 5 acceptance: preempting a bulk-converted stepper at every
+    // chunk boundary on a *pressured elastic system* must leave digest,
+    // simulated time, access count, and the full metrics block exactly
+    // equal to the unstepped run — chunking changes the preemption
+    // grain, never the simulation.
+    use elastic_os::os::system::{ElasticSystem, SystemConfig};
+    let scale = Scale::Bytes(96 * 4096 * 13 / 10); // ~1.3x one node
+    let cfg = || SystemConfig { node_frames: vec![96, 96], ..SystemConfig::default() };
+    for wl in ALL_EXT {
+        let mut w1 = by_name(wl, scale).unwrap();
+        let mut sys1 = ElasticSystem::new(cfg(), 64);
+        let r = sys1.run_workload(w1.as_mut());
+
+        let mut w2 = by_name(wl, scale).unwrap();
+        let mut sys2 = ElasticSystem::new(cfg(), 64);
+        w2.setup(&mut sys2);
+        let mut exec = w2.start();
+        let digest = loop {
+            if let StepOutcome::Done(d) = exec.step(&mut sys2, Fuel::iters(1)) {
+                break d;
+            }
+        };
+        assert_eq!(digest, r.digest, "{wl}: digest diverged under fuel=1");
+        assert_eq!(sys2.clock.now(), r.sim_ns, "{wl}: simulated time diverged under fuel=1");
+        assert_eq!(sys2.clock.accesses(), r.accesses, "{wl}: access count diverged");
+        assert_eq!(sys2.metrics, r.metrics, "{wl}: metrics diverged under fuel=1");
+        sys2.verify().unwrap_or_else(|e| panic!("{wl}: {e}"));
     }
 }
 

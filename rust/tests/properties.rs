@@ -132,6 +132,193 @@ fn prop_traffic_accounting_consistent() {
     });
 }
 
+/// One randomly generated memory operation, applied to mirrored
+/// memories through the bulk API on one and the equivalent scalar loop
+/// on the other (the loop each bulk default impl documents).
+enum MemOp {
+    /// (addr, element width in bytes, per-element values)
+    Write(u64, u64, Vec<u64>),
+    /// (addr, element width, element count)
+    Read(u64, u64, u64),
+    /// (addr, element count, value)
+    Fill(u64, u64, u64),
+    /// (dst, src, element width, element count) — ranges disjoint
+    Copy(u64, u64, u64, u64),
+}
+
+fn apply_bulk(mem: &mut dyn ElasticMem, op: &MemOp, out: &mut Vec<u64>) {
+    out.clear();
+    match op {
+        MemOp::Write(addr, 1, vals) => {
+            let bytes: Vec<u8> = vals.iter().map(|&v| v as u8).collect();
+            mem.write_bytes(*addr, &bytes);
+        }
+        MemOp::Write(addr, 4, vals) => {
+            let words: Vec<u32> = vals.iter().map(|&v| v as u32).collect();
+            mem.write_u32s(*addr, &words);
+        }
+        MemOp::Write(addr, _, vals) => mem.write_u64s(*addr, vals),
+        MemOp::Read(addr, 1, n) => {
+            let mut bytes = vec![0u8; *n as usize];
+            mem.read_bytes(*addr, &mut bytes);
+            out.extend(bytes.iter().map(|&b| b as u64));
+        }
+        MemOp::Read(addr, 4, n) => {
+            let mut words = vec![0u32; *n as usize];
+            mem.read_u32s(*addr, &mut words);
+            out.extend(words.iter().map(|&w| w as u64));
+        }
+        MemOp::Read(addr, _, n) => {
+            let mut words = vec![0u64; *n as usize];
+            mem.read_u64s(*addr, &mut words);
+            out.extend_from_slice(&words);
+        }
+        MemOp::Fill(addr, n, v) => mem.fill_u64(*addr, *n, *v),
+        MemOp::Copy(dst, src, 1, n) => mem.copy(*dst, *src, *n),
+        MemOp::Copy(dst, src, _, n) => mem.copy_u64s(*dst, *src, *n),
+    }
+}
+
+fn apply_scalar(mem: &mut dyn ElasticMem, op: &MemOp, out: &mut Vec<u64>) {
+    out.clear();
+    match op {
+        MemOp::Write(addr, 1, vals) => {
+            for (i, &v) in vals.iter().enumerate() {
+                mem.write_u8(addr + i as u64, v as u8);
+            }
+        }
+        MemOp::Write(addr, 4, vals) => {
+            for (i, &v) in vals.iter().enumerate() {
+                mem.write_u32(addr + i as u64 * 4, v as u32);
+            }
+        }
+        MemOp::Write(addr, _, vals) => {
+            for (i, &v) in vals.iter().enumerate() {
+                mem.write_u64(addr + i as u64 * 8, v);
+            }
+        }
+        MemOp::Read(addr, 1, n) => out.extend((0..*n).map(|i| mem.read_u8(addr + i) as u64)),
+        MemOp::Read(addr, 4, n) => {
+            out.extend((0..*n).map(|i| mem.read_u32(addr + i * 4) as u64))
+        }
+        MemOp::Read(addr, _, n) => out.extend((0..*n).map(|i| mem.read_u64(addr + i * 8))),
+        MemOp::Fill(addr, n, v) => {
+            for i in 0..*n {
+                mem.write_u64(addr + i * 8, *v);
+            }
+        }
+        MemOp::Copy(dst, src, 1, n) => {
+            for i in 0..*n {
+                let v = mem.read_u8(src + i);
+                mem.write_u8(dst + i, v);
+            }
+        }
+        MemOp::Copy(dst, src, _, n) => {
+            for i in 0..*n {
+                let v = mem.read_u64(src + 8 * i);
+                mem.write_u64(dst + 8 * i, v);
+            }
+        }
+    }
+}
+
+/// Generate one op over a region of `bytes` bytes at `base`: random
+/// width, random span (regularly crossing page boundaries), copies
+/// confined to disjoint halves.
+fn gen_op(rng: &mut Rng, base: u64, bytes: u64) -> MemOp {
+    let elem = [1u64, 4, 8][rng.below_usize(3)];
+    // spans up to ~3 pages, always leaving room inside the region
+    let max_n = (3 * 4096 / elem).min(bytes / (2 * elem) - 1);
+    let n = 1 + rng.below(max_n);
+    let span = n * elem;
+    match rng.below(4) {
+        0 => {
+            let vals: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let a = base + (rng.below(bytes - span) / elem) * elem;
+            MemOp::Write(a, elem, vals)
+        }
+        1 => {
+            let a = base + (rng.below(bytes - span) / elem) * elem;
+            MemOp::Read(a, elem, n)
+        }
+        2 => {
+            // fills are u64-wide regardless of the drawn width
+            let n = n.min(bytes / 16 - 1).max(1);
+            let a = base + (rng.below(bytes - n * 8) / 8) * 8;
+            MemOp::Fill(a, n, rng.next_u64())
+        }
+        _ => {
+            // byte- or u64-wide copies between disjoint halves
+            let celem = if elem == 4 { 8 } else { elem };
+            let n = 1 + rng.below((3 * 4096 / celem).min(bytes / (2 * celem) - 1));
+            let span = n * celem;
+            let half = bytes / 2;
+            let src = base + (rng.below(half - span) / celem) * celem;
+            let dst = base + half + (rng.below(half - span) / celem) * celem;
+            if rng.chance(0.5) {
+                MemOp::Copy(dst, src, celem, n)
+            } else {
+                MemOp::Copy(src, dst, celem, n)
+            }
+        }
+    }
+}
+
+/// ISSUE 5 acceptance: every bulk op is bit-identical to the scalar
+/// loop it replaces — on flat `DirectMem` and on a *pressured* elastic
+/// system where minor/remote faults land mid-span — for random
+/// (addr, len, width) spans crossing page boundaries. Simulated time
+/// is compared after every op; metrics, access counts, structural
+/// invariants, and full-region readback at the end.
+#[test]
+fn prop_bulk_equals_scalar_on_direct_and_pressured_elastic() {
+    Runner::new("bulk_scalar_equiv").with_cases(8).run(|rng: &mut Rng| {
+        let frames = 40 + rng.below(24) as u32;
+        let threshold = 8 + rng.below(64);
+        let mode = if rng.chance(0.3) { Mode::Nswap } else { Mode::Elastic };
+        let mut bulk_sys = sys_with(vec![frames, frames], mode, threshold);
+        let mut scal_sys = sys_with(vec![frames, frames], mode, threshold);
+        let mut bulk_dm = elastic_os::workloads::DirectMem::new();
+        let mut scal_dm = elastic_os::workloads::DirectMem::new();
+        // overcommit one node so faults land mid-bulk
+        let pages = frames as u64 * 3 / 2;
+        let bytes = pages * 4096;
+        let base = bulk_sys.mmap(bytes, AreaKind::Heap, "bulk");
+        assert_eq!(base, scal_sys.mmap(bytes, AreaKind::Heap, "bulk"));
+        assert_eq!(base, bulk_dm.mmap(bytes, AreaKind::Heap, "bulk"));
+        assert_eq!(base, scal_dm.mmap(bytes, AreaKind::Heap, "bulk"));
+
+        let (mut oa, mut ob, mut oc, mut od) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for step in 0..100 {
+            let op = gen_op(rng, base, bytes);
+            apply_bulk(&mut bulk_sys, &op, &mut oa);
+            apply_scalar(&mut scal_sys, &op, &mut ob);
+            apply_bulk(&mut bulk_dm, &op, &mut oc);
+            apply_scalar(&mut scal_dm, &op, &mut od);
+            assert_eq!(oa, ob, "elastic read values diverged at step {step}");
+            assert_eq!(oc, od, "direct read values diverged at step {step}");
+            assert_eq!(oa, oc, "elastic vs direct read values diverged at step {step}");
+            assert_eq!(
+                bulk_sys.clock.now(),
+                scal_sys.clock.now(),
+                "simulated time diverged at step {step}"
+            );
+        }
+        assert_eq!(bulk_sys.clock.accesses(), scal_sys.clock.accesses(), "access counts");
+        assert_eq!(bulk_sys.metrics, scal_sys.metrics, "metrics diverged");
+        bulk_sys.verify().expect("bulk system invariants");
+        scal_sys.verify().expect("scalar system invariants");
+        // full-region readback: all four memories agree word for word
+        for p in 0..pages {
+            let a = base + p * 4096;
+            let v = bulk_sys.read_u64(a);
+            assert_eq!(v, scal_sys.read_u64(a), "page {p}");
+            assert_eq!(v, bulk_dm.read_u64(a), "page {p}");
+            assert_eq!(v, scal_dm.read_u64(a), "page {p}");
+        }
+    });
+}
+
 /// State-sync replica convergence under random event sequences, and
 /// the flush-before-jump ordering invariant.
 #[test]
