@@ -8,7 +8,9 @@ mod bench_util;
 use bench_util::bench;
 use elastic_os::mem::NodeId;
 use elastic_os::os::kernel::ClusterConfig;
-use elastic_os::os::sched::{direct_ground_truth, record_ground_truth, ElasticCluster};
+use elastic_os::os::sched::{
+    direct_ground_truth, record_ground_truth, ElasticCluster, ShardedCluster,
+};
 use elastic_os::os::system::Mode;
 use elastic_os::workloads::trace::Trace;
 use elastic_os::workloads::{by_name, Scale, Workload};
@@ -57,6 +59,46 @@ fn run_once_live(truths: &[(&'static str, u64)], mode: Mode, quantum_ns: u64) ->
     cluster.clock.now()
 }
 
+/// The sharded engine on the same tenants: a fixed 4-shard partition
+/// over 8 half-size nodes (each shard owns a home node plus a spare to
+/// stretch onto), driven by `threads` workers. Digests stay checked
+/// against the same ground truths — the partition never changes, only
+/// the host parallelism, so threads=1 vs threads=4 is a pure
+/// engine-speedup measurement.
+const SHARDS: usize = 4;
+
+/// Per-tenant footprint for the sharded variant: 1.3x its home node
+/// (the half-size nodes below), so each tenant stretches onto its
+/// shard's spare node.
+fn sharded_fp() -> u64 {
+    (NODE_FRAMES as u64 / 2 * 4096) * 13 / 10
+}
+
+fn sharded_truths() -> Vec<(&'static str, u64)> {
+    WLS.iter()
+        .map(|wl| {
+            let mut w = by_name(wl, Scale::Bytes(sharded_fp())).unwrap();
+            (*wl, direct_ground_truth(w.as_mut()))
+        })
+        .collect()
+}
+
+fn run_once_sharded(truths: &[(&'static str, u64)], threads: usize) -> u64 {
+    let frames = NODE_FRAMES / 2;
+    let cfg = ClusterConfig { node_frames: vec![frames; 2 * SHARDS], ..ClusterConfig::default() };
+    let mut cluster = ShardedCluster::new(cfg, SHARDS, threads);
+    let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+    for (i, (wl, _)) in truths.iter().enumerate() {
+        let gid = cluster.spawn(Mode::Elastic, NodeId((i % SHARDS) as u8), wl, 512).unwrap();
+        jobs.push((gid, by_name(wl, Scale::Bytes(sharded_fp())).unwrap()));
+    }
+    let reports = cluster.run_live(jobs);
+    for (r, (wl, truth)) in reports.iter().zip(truths.iter()) {
+        assert_eq!(r.digest, *truth, "{wl} diverged (sharded, {threads} threads)");
+    }
+    cluster.sim_now()
+}
+
 fn run_once(tenants: &[(&'static str, Trace, u64)], mode: Mode, quantum_ns: u64) -> u64 {
     let cfg = ClusterConfig { node_frames: vec![NODE_FRAMES; 2], ..ClusterConfig::default() };
     let mut cluster = ElasticCluster::new(cfg);
@@ -96,6 +138,18 @@ fn main() {
         let name = format!("4-proc contention live [{label}] quantum=2000us");
         bench(&name, 1, 5, || {
             std::hint::black_box(run_once_live(&lt, mode, 2_000_000));
+        });
+    }
+
+    // Sharded engine: the same tenants, one per shard on a fixed
+    // 4-shard partition, at 1 vs 4 worker threads — the wall-time gap
+    // is the engine's parallel speedup (the partition, and therefore
+    // the simulation, is identical in both).
+    let st = sharded_truths();
+    for threads in [1usize, 4] {
+        let name = format!("4-proc sharded live [eos] shards={SHARDS} threads={threads}");
+        bench(&name, 1, 5, || {
+            std::hint::black_box(run_once_sharded(&st, threads));
         });
     }
 

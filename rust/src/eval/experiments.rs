@@ -678,6 +678,106 @@ pub fn prefetch_sweep(cfg: &EvalConfig) -> Table {
     t
 }
 
+/// Scale (sharded parallel engine): 1024 live tenants on a 64-node
+/// cluster cut into shards, stepped by the conservative window/barrier
+/// protocol on `--threads` worker threads. The tenants reuse 28
+/// distinct (workload, seed) input families, so every one of the 1024
+/// digests is checked against a `DirectMem` ground truth without
+/// paying 1024 flat re-runs. Homes are pinned to the first 32 nodes
+/// (overcommitting them so the pager actually stretches onto each
+/// shard's spare nodes) and the table reports per-shard host
+/// utilization: busy vs. barrier-wait wall time and windows crossed.
+pub fn scale(cfg: &EvalConfig) -> Table {
+    use crate::mem::NodeId;
+    use crate::os::kernel::ClusterConfig;
+    use crate::os::sched::{direct_ground_truth, ShardedCluster};
+    use crate::workloads::{tenant_seed, Workload, ALL_EXT};
+    use std::time::Instant;
+
+    const NODES: usize = 64;
+    const NODE_FRAMES: u32 = 384;
+    const TENANTS: usize = 1024;
+    const HOME_NODES: usize = 32;
+    const GROUPS: usize = 28;
+    // Each shard must own enough spare frames for its 64 tenants, so
+    // the partition stays in [1, 32] (>=2 nodes per shard).
+    let shards = if cfg.shards > 0 { cfg.shards.clamp(1, 32) } else { 16 };
+    let threads = cfg.threads.max(1);
+    let per_fp = 48 * 1024u64;
+
+    // ALL_EXT has 7 workloads and 7 divides GROUPS, so tenant i's
+    // (workload, seed) pair is determined by i % GROUPS alone.
+    let make = |i: usize| -> Box<dyn Workload> {
+        let seed = tenant_seed(cfg.seed, i % GROUPS);
+        by_name_seeded(ALL_EXT[i % ALL_EXT.len()], Scale::Bytes(per_fp), seed).unwrap()
+    };
+    let truths: Vec<u64> = (0..GROUPS).map(|g| direct_ground_truth(make(g).as_mut())).collect();
+
+    let ccfg = ClusterConfig {
+        node_frames: vec![NODE_FRAMES; NODES],
+        push_batch: cfg.push_batch,
+        prefetch: cfg.prefetch,
+        ..ClusterConfig::default()
+    };
+    let mut cluster = ShardedCluster::new(ccfg, shards, threads);
+    // Tiny tenants: shrink the quantum and window with them so the run
+    // still crosses many barriers instead of finishing in window one.
+    cluster.set_quantum(200_000);
+    cluster.set_window(800_000);
+    let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+    for i in 0..TENANTS {
+        let home = NodeId((i % HOME_NODES) as u8);
+        let gid = cluster
+            .spawn(Mode::Elastic, home, ALL_EXT[i % ALL_EXT.len()], 512)
+            .expect("scale spawn on a live home node");
+        jobs.push((gid, make(i)));
+    }
+    let t0 = Instant::now();
+    let reports = cluster.run_live(jobs);
+    let wall = t0.elapsed();
+    cluster.verify().expect("cluster invariants after the scale run");
+    assert_eq!(reports.len(), TENANTS, "every tenant must report");
+    for (i, r) in reports.iter().enumerate() {
+        assert_eq!(
+            r.digest,
+            truths[i % GROUPS],
+            "tenant {i} ({}) diverged from its DirectMem ground truth",
+            ALL_EXT[i % ALL_EXT.len()]
+        );
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Scale: {TENANTS} live tenants on {NODES}x{NODE_FRAMES}-frame nodes, {shards} \
+             shards x {threads} threads (homes overcommit nodes 0-{}; every digest checked \
+             against DirectMem ground truth)",
+            HOME_NODES - 1
+        ),
+        &["shard", "procs", "busy", "barrier wait", "busy %", "windows"],
+    );
+    for (s, st) in cluster.stats().iter().enumerate() {
+        t.row(vec![
+            s.to_string(),
+            cluster.procs_on_shard(s).to_string(),
+            fmt_ns(st.busy_ns as f64),
+            fmt_ns(st.barrier_wait_ns as f64),
+            format!("{:.0}%", st.busy_pct()),
+            st.windows.to_string(),
+        ]);
+    }
+    let total_ops: u64 = reports.iter().map(|r| r.ops).sum();
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    t.note(format!(
+        "all {TENANTS} digests verified ({GROUPS} input families); makespan {}, wall {:.2}s \
+         — {:.0} tenants stepped/sec, {:.1}M paged ops/sec",
+        fmt_ns(cluster.sim_now() as f64),
+        wall_s,
+        TENANTS as f64 / wall_s,
+        total_ops as f64 / wall_s / 1e6,
+    ));
+    t
+}
+
 /// `eval bench-json`: write BENCH_migration.json — a machine-readable
 /// perf snapshot of the migration paths (sequential-scan sim time and
 /// fault counts with prefetch off/on, drain time batched/unbatched,
@@ -826,6 +926,96 @@ pub fn bench_json(cfg: &EvalConfig) {
     std::fs::write("BENCH_hotpath.json", &hotpath_json).expect("write BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json");
     print!("{hotpath_json}");
+
+    // Sharded-engine scaling: the same 4-shard live contention run
+    // driven by 1, 2, and 4 worker threads — tenants-stepped/sec plus
+    // the parallel speedup over the single-threaded driver, so CI
+    // tracks the engine's scaling trajectory as an artifact. The
+    // partition is fixed (threads never change semantics), and every
+    // run's digests are asserted against DirectMem ground truth.
+    let scaling_json = {
+        use crate::mem::NodeId;
+        use crate::os::sched::ShardedCluster;
+        use crate::workloads::{tenant_seed, Workload, ALL_EXT};
+        use std::time::Instant;
+        const SHARDS: usize = 4;
+        const NODES: usize = 8;
+        const TENANTS: usize = 8;
+        let frames = (cfg.node_frames / 2).max(64);
+        // 1.3x home-node overcommit per tenant pair; each shard owns a
+        // spare node, so the pager stretches inside the shard.
+        let per_fp = (frames as u64 * 4096) * 13 / 10 / 2;
+        let make = |i: usize| -> Box<dyn Workload> {
+            let seed = tenant_seed(cfg.seed, i);
+            by_name_seeded(ALL_EXT[i % ALL_EXT.len()], Scale::Bytes(per_fp), seed).unwrap()
+        };
+        let truths: Vec<u64> =
+            (0..TENANTS).map(|i| direct_ground_truth(make(i).as_mut())).collect();
+        let run = |threads: usize| -> (u64, u64) {
+            let ccfg = crate::os::kernel::ClusterConfig {
+                node_frames: vec![frames; NODES],
+                push_batch: cfg.push_batch,
+                prefetch: cfg.prefetch,
+                ..Default::default()
+            };
+            let mut cluster = ShardedCluster::new(ccfg, SHARDS, threads);
+            let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+            for i in 0..TENANTS {
+                let gid = cluster
+                    .spawn(
+                        Mode::Elastic,
+                        NodeId((i % SHARDS) as u8),
+                        ALL_EXT[i % ALL_EXT.len()],
+                        512,
+                    )
+                    .expect("scaling bench spawn");
+                jobs.push((gid, make(i)));
+            }
+            let t0 = Instant::now();
+            let reports = cluster.run_live(jobs);
+            let wall = t0.elapsed().as_nanos().max(1) as u64;
+            cluster.verify().expect("scaling bench cluster invariants");
+            for (i, r) in reports.iter().enumerate() {
+                assert_eq!(
+                    r.digest, truths[i],
+                    "scaling bench tenant {i} diverged at {threads} threads"
+                );
+            }
+            (wall, reports.iter().map(|r| r.ops).sum())
+        };
+        run(1); // warm the allocator and page-cache before timing
+        let mut walls: Vec<(usize, u64)> = Vec::new();
+        let mut ops_per_run = 0u64;
+        for threads in [1usize, 2, 4] {
+            let (a, ops) = run(threads);
+            let (b, _) = run(threads);
+            walls.push((threads, a.min(b)));
+            ops_per_run = ops;
+        }
+        let base = walls[0].1;
+        let runs: Vec<String> = walls
+            .iter()
+            .map(|&(threads, wall)| {
+                format!(
+                    "{{\"threads\":{threads},\"wall_ns\":{wall},\"tenants_per_sec\":{:.2},\
+                     \"speedup\":{:.2}}}",
+                    TENANTS as f64 * 1e9 / wall as f64,
+                    base as f64 / wall as f64,
+                )
+            })
+            .collect();
+        let host_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        format!(
+            "{{\n  \"schema\": 1,\n  \"shards\": {SHARDS},\n  \"nodes\": {NODES},\n  \
+             \"node_frames\": {frames},\n  \"tenants\": {TENANTS},\n  \
+             \"host_cpus\": {host_cpus},\n  \"ops_per_run\": {ops_per_run},\n  \
+             \"runs\": [\n    {}\n  ]\n}}\n",
+            runs.join(",\n    ")
+        )
+    };
+    std::fs::write("BENCH_scaling.json", &scaling_json).expect("write BENCH_scaling.json");
+    println!("wrote BENCH_scaling.json");
+    print!("{scaling_json}");
 }
 
 /// Run everything, in paper order.
@@ -865,6 +1055,7 @@ pub fn run_named(cfg: &EvalConfig, name: &str) -> bool {
         "multi-tenant" | "multi_tenant" => multi_tenant(cfg).emit("multi_tenant.txt"),
         "churn" => churn(cfg).emit("churn.txt"),
         "prefetch" => prefetch_sweep(cfg).emit("prefetch.txt"),
+        "scale" => scale(cfg).emit("scale.txt"),
         "bench-json" | "bench_json" => bench_json(cfg),
         "all" => run_all(cfg),
         _ => return false,

@@ -37,6 +37,12 @@ pub struct EvalConfig {
     pub push_batch: u32,
     /// Remote-fault pull prefetch window (CLI `--prefetch`; 0 = off).
     pub prefetch: u32,
+    /// Worker threads for the sharded engine's experiments (CLI
+    /// `--threads`; 1 = sequential).
+    pub threads: usize,
+    /// Simulation partition for the sharded engine's experiments (CLI
+    /// `--shards`; 0 = follow `threads`).
+    pub shards: usize,
 }
 
 impl Default for EvalConfig {
@@ -51,6 +57,8 @@ impl Default for EvalConfig {
             seed: None,
             push_batch: 1,
             prefetch: 0,
+            threads: 1,
+            shards: 0,
         }
     }
 }

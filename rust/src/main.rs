@@ -63,13 +63,23 @@ USAGE:
                                                   at 5 ms sim time, node 1 leaves
                                                   at 20 ms; \"+3:1024@1s\" joins
                                                   node 3 with 1024 frames)
+                [--threads N]                    (worker threads for the sharded
+                                                  parallel engine; shards step
+                                                  independently inside conservative
+                                                  time windows and barrier on the
+                                                  shared clock; default 1)
+                [--shards S]                     (simulation partition: node n ->
+                                                  shard n % S; fixes the semantics
+                                                  independently of --threads;
+                                                  default = --threads; 1 = the
+                                                  unchanged legacy engine)
                 (--procs N > 1 time-slices N processes — cycling through the
                  workload list — on one cluster, contending for its frames;
                  --footprint is then the TOTAL across processes)
   elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
                   ablation-policy|ablation-balance|multinode|multi-tenant|churn|
-                  prefetch|bench-json|all>
-                 [--fast] [--seed N] [--batch N] [--prefetch N]
+                  prefetch|bench-json|scale|all>
+                 [--fast] [--seed N] [--batch N] [--prefetch N] [--threads N] [--shards S]
   elasticos cluster [--pages N] [--threshold N] [--prefetch N]
   elasticos info
 
@@ -100,7 +110,7 @@ fn cmd_run(args: &Args) -> i32 {
     // scheduler; refuse rather than silently ignore them (a single
     // process is always driven live through the facade, so --live
     // would be a silent no-op here).
-    for flag in ["churn", "spread", "home", "live"] {
+    for flag in ["churn", "spread", "home", "live", "threads", "shards"] {
         if args.has(flag) {
             eprintln!("--{flag} requires --procs > 1 (the cluster scheduler)");
             return 2;
@@ -191,13 +201,19 @@ fn cmd_run_multi(
 ) -> i32 {
     use elastic_os::os::kernel::ClusterConfig;
     use elastic_os::os::sched::{
-        direct_ground_truth, record_ground_truth, ElasticCluster, TenantJob,
+        direct_ground_truth, record_ground_truth, ShardedCluster, TenantJob,
     };
     use elastic_os::workloads::trace::Trace;
     use elastic_os::workloads::Workload;
 
     let live = args.has("live");
     let nodes: usize = args.flag_parse("nodes").unwrap_or(2);
+    let threads: usize = args.flag_parse("threads").unwrap_or(1).max(1);
+    let shards: usize = args.flag_parse("shards").unwrap_or(threads).max(1);
+    if shards > nodes {
+        eprintln!("--shards {shards} exceeds --nodes {nodes} (every shard needs a live node)");
+        return 2;
+    }
     let workloads = args
         .flag_list("workload")
         .unwrap_or_else(|| vec!["linear".to_string()]);
@@ -251,7 +267,9 @@ fn cmd_run_multi(
         prefetch,
         ..ClusterConfig::default()
     };
-    let mut cluster = ElasticCluster::new(cfg);
+    // shards=1 routes to the unchanged legacy engine inside the
+    // driver, so plain runs stay bit-identical to previous releases.
+    let mut cluster = ShardedCluster::new(cfg, shards, threads);
 
     // Placement: least-loaded from the live registry by default
     // (announce-driven, like the paper's startup protocol); --spread
@@ -310,7 +328,7 @@ fn cmd_run_multi(
         eprintln!(
             "warning: {} --churn event(s) never came due (scheduled past the {} makespan)",
             cluster.churn_pending(),
-            elastic_os::util::stats::fmt_ns(cluster.clock.now() as f64),
+            elastic_os::util::stats::fmt_ns(cluster.sim_now() as f64),
         );
     }
     for applied in &cluster.churn_log {
@@ -353,12 +371,21 @@ fn cmd_run_multi(
         );
     }
     println!(
-        "cluster: {} procs on {} nodes x {} frames, makespan {}",
+        "cluster: {} procs on {} nodes x {} frames, makespan {} (shards={} threads={})",
         procs,
         nodes,
         frames,
-        elastic_os::util::stats::fmt_ns(cluster.clock.now() as f64),
+        elastic_os::util::stats::fmt_ns(cluster.sim_now() as f64),
+        cluster.shard_count(),
+        threads,
     );
+    if cluster.shard_count() > 1 {
+        // Host-side utilization: how much wall time each shard's worker
+        // spent stepping vs. stalled at window barriers.
+        for (s, st) in cluster.stats().iter().enumerate() {
+            println!("  shard {s}: {} procs, {}", cluster.procs_on_shard(s), st.summary());
+        }
+    }
     if push_batch > 1 || prefetch > 0 {
         let (pulled, hits): (u64, u64) = reports
             .iter()
@@ -412,6 +439,12 @@ fn cmd_eval(args: &Args) -> i32 {
     }
     if let Some(p) = args.flag_parse::<u32>("prefetch") {
         cfg.prefetch = p;
+    }
+    if let Some(t) = args.flag_parse::<usize>("threads") {
+        cfg.threads = t.max(1);
+    }
+    if let Some(s) = args.flag_parse::<usize>("shards") {
+        cfg.shards = s;
     }
     cfg.seed = args.flag_parse::<u64>("seed");
     if experiments::run_named(&cfg, &name) {

@@ -13,8 +13,13 @@ use std::fmt;
 pub const PAGE_SHIFT: u64 = 12;
 pub const PAGE_SIZE: usize = 1 << PAGE_SHIFT;
 
-/// Maximum cluster nodes; must match `POLICY_N` in python/compile/model.py.
-pub const MAX_NODES: usize = 16;
+/// Maximum cluster nodes. Raised from 16 for the sharded engine's
+/// scale experiments (64 nodes); the PTE owner-node field is 8 bits
+/// (`mem/page_table.rs`), so this may grow to 256 without a layout
+/// change. The PJRT policy model keeps its own fixed width
+/// (`runtime/policy_model.rs::N`, matching `POLICY_N` in
+/// python/compile/model.py) and simply ignores nodes beyond it.
+pub const MAX_NODES: usize = 64;
 
 /// Identifier of a participating machine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -52,6 +52,19 @@ impl FramePool {
         }
     }
 
+    /// A zero-capacity placeholder pool: backs node slots a sharded
+    /// kernel does not own (and dead slots appended to keep global
+    /// node indexing dense). Never allocates — `alloc`/`alloc_reserve`
+    /// always return `None` — and holds no backing storage.
+    pub fn empty() -> FramePool {
+        FramePool {
+            data: Vec::new(),
+            free: Vec::new(),
+            capacity: 0,
+            watermarks: Watermarks { min: 0, low: 0, high: 0 },
+        }
+    }
+
     pub fn capacity(&self) -> u32 {
         self.capacity
     }
@@ -123,6 +136,17 @@ impl FramePool {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn empty_pool_never_allocates() {
+        let mut p = FramePool::empty();
+        assert_eq!(p.capacity(), 0);
+        assert_eq!(p.free_frames(), 0);
+        assert_eq!(p.used_frames(), 0);
+        assert!(p.alloc().is_none());
+        assert!(p.alloc_reserve().is_none());
+        assert!(p.at_high(), "zero watermarks: never asks for reclaim");
+    }
 
     #[test]
     fn watermark_ordering() {

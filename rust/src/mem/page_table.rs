@@ -26,7 +26,7 @@ use super::addr::{FrameId, NodeId, Vpn, MAX_NODES};
 /// bit  4      pinned     (never evicted/pushed)
 /// bit  5      prefetched (pulled speculatively; cleared on first
 ///             touch — the prefetch-hit signal — and on relocation)
-/// bits 8..12  owner node (0..MAX_NODES)
+/// bits 8..16  owner node (0..MAX_NODES; 8 bits, full `NodeId` range)
 /// bits 32..64 frame id within the owner's pool
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,7 +40,7 @@ const FL_DIRTY: u64 = 1 << 3;
 const FL_PIN: u64 = 1 << 4;
 const FL_PREFETCHED: u64 = 1 << 5;
 const NODE_SHIFT: u64 = 8;
-const NODE_MASK: u64 = 0xF << NODE_SHIFT;
+const NODE_MASK: u64 = 0xFF << NODE_SHIFT;
 const FRAME_SHIFT: u64 = 32;
 
 impl Pte {
@@ -292,6 +292,20 @@ mod tests {
         assert_eq!(p.frame(), FrameId(0xDEAD));
         p.set_referenced(false);
         assert!(!p.referenced() && p.dirty());
+    }
+
+    #[test]
+    fn pte_holds_high_node_ids() {
+        // the owner field is 8 bits: the whole MAX_NODES range (and the
+        // whole NodeId u8 range) must round-trip without clobbering
+        // neighbouring flag/frame bits
+        for id in [0u8, 15, 16, (MAX_NODES - 1) as u8, u8::MAX] {
+            let mut p = Pte::resident(NodeId(id), FrameId(0xBEEF));
+            p.set_dirty(true);
+            assert_eq!(p.node(), NodeId(id));
+            assert_eq!(p.frame(), FrameId(0xBEEF));
+            assert!(p.dirty() && p.is_resident());
+        }
     }
 
     #[test]

@@ -37,6 +37,16 @@ pub struct Tlb {
     slots: [Entry; TLB_SLOTS],
 }
 
+// SAFETY: the cached `*mut u8` entries point into the frame-pool heap
+// buffers (`FramePool.data`) of the kernel that owns this TLB's
+// process. A pool's backing `Vec<u8>` is allocated once at pool
+// construction and never resized, so those heap addresses are stable
+// even when the owning kernel/process structs themselves move between
+// threads (shard handoff). The TLB is only ever *used* by the single
+// thread currently driving its owning shard — it is Send (ownership
+// may move across threads), and deliberately not Sync.
+unsafe impl Send for Tlb {}
+
 impl Tlb {
     pub fn new() -> Box<Tlb> {
         Box::new(Tlb { slots: [INVALID; TLB_SLOTS] })

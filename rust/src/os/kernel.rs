@@ -191,6 +191,49 @@ impl NodeKernel {
         }
     }
 
+    /// Shard-local kernel for the parallel engine: node ids stay
+    /// *global* (the pools vec spans every cluster slot so `NodeId`
+    /// indexes it unchanged), but only the slots in `owned` are real —
+    /// foreign slots get a zero-capacity [`FramePool::empty`]
+    /// placeholder, are born dead (`live = false`), and never enter the
+    /// announce registry. Every placement / stretch / push / pull
+    /// decision is thereby confined to the shard's own nodes by the
+    /// same masking that already hides departed nodes, with no new
+    /// logic on any hot path.
+    pub fn new_sharded(cfg: ClusterConfig, owned: &[bool]) -> NodeKernel {
+        assert!(!cfg.node_frames.is_empty() && cfg.node_frames.len() <= MAX_NODES);
+        assert_eq!(owned.len(), cfg.node_frames.len(), "ownership mask must cover every slot");
+        assert!(owned.iter().any(|&o| o), "a shard must own at least one node");
+        let mut kernel = NodeKernel::new(ClusterConfig {
+            node_frames: owned
+                .iter()
+                .zip(&cfg.node_frames)
+                .map(|(&o, &f)| if o { f } else { 8 })
+                .collect(),
+            ..cfg
+        });
+        for (slot, &o) in owned.iter().enumerate() {
+            if !o {
+                kernel.pools[slot] = FramePool::empty();
+                kernel.node_frames[slot] = 0;
+                kernel.live[slot] = false;
+                kernel.registry.remove(NodeId(slot as u8));
+            }
+        }
+        kernel
+    }
+
+    /// Append a dead placeholder slot (a *join on another shard* grew
+    /// the cluster's global node width; every non-owning shard reserves
+    /// the id so dense `NodeId` indexing stays aligned across shards).
+    pub(crate) fn append_dead_slot(&mut self, slot: usize) {
+        debug_assert!(slot < MAX_NODES);
+        debug_assert_eq!(slot, self.pools.len(), "dead slots append in global id order");
+        self.pools.push(FramePool::empty());
+        self.node_frames.push(0);
+        self.live.push(false);
+    }
+
     /// Wire bytes of an n-page `PushBatch`/`PullBatchData` message.
     #[inline]
     pub(crate) fn batch_data_bytes(&self, n: u64) -> u64 {
@@ -312,6 +355,85 @@ impl std::fmt::Debug for NodeKernel {
                 &self.pools.iter().map(|p| p.free_frames()).collect::<Vec<_>>(),
             )
             .finish()
+    }
+}
+
+/// Control-plane message between shards of the parallel engine.
+///
+/// Data-plane traffic (pulls, pushes, jumps, stretches) never crosses
+/// shards — each shard's kernel masks foreign nodes dead, so the four
+/// primitives are confined by construction. What *does* cross shards
+/// is membership: a join or leave scripted on the global churn
+/// schedule must reach the owning shard, and a join that widens the
+/// cluster must reserve the new global node id on every other shard.
+/// These messages are queued during a window and delivered only at the
+/// window barrier, in canonical `(sender, seq)` order, so delivery is
+/// identical no matter how many worker threads drove the window.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardMsg {
+    /// Reserve global node slot `node` as a dead placeholder (a join
+    /// on the owning shard extended the cluster's node width).
+    SlotAppend { node: u8 },
+    /// Admit node `node` with `frames` frames (receiver owns it).
+    Join { node: u8, frames: u32 },
+    /// Retire node `node` (receiver owns it): drain + leave.
+    Leave { node: u8 },
+}
+
+/// A [`ShardMsg`] stamped with its canonical delivery key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEnvelope {
+    /// Sending shard (the barrier driver itself sends as `usize::MAX`,
+    /// sorting after every real shard).
+    pub from: usize,
+    /// Per-sender sequence number.
+    pub seq: u64,
+    /// Simulated time the event is due (the schedule's `at_ns` for
+    /// churn; the current floor for relays).
+    pub at_ns: u64,
+    pub msg: ShardMsg,
+}
+
+/// One shard's barrier mailbox: an outbox filled during the window and
+/// an inbox drained at the next barrier. The driver moves envelopes
+/// between mailboxes only while every worker is parked at the barrier,
+/// so no locking is needed anywhere.
+#[derive(Debug, Default)]
+pub struct ShardMailbox {
+    inbox: Vec<ShardEnvelope>,
+    outbox: Vec<ShardEnvelope>,
+    next_seq: u64,
+}
+
+impl ShardMailbox {
+    /// Queue `msg` for delivery at the next barrier.
+    pub fn send(&mut self, from: usize, at_ns: u64, msg: ShardMsg) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.outbox.push(ShardEnvelope { from, seq, at_ns, msg });
+    }
+
+    /// Take everything queued this window (driver side, at the barrier).
+    pub fn drain_outbox(&mut self) -> Vec<ShardEnvelope> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Deliver envelopes into the inbox (driver side, at the barrier).
+    pub fn deliver(&mut self, envelopes: impl IntoIterator<Item = ShardEnvelope>) {
+        self.inbox.extend(envelopes);
+    }
+
+    /// Drain the inbox in canonical `(sender, seq)` order — the order
+    /// every shard applies cross-shard events in, independent of the
+    /// thread schedule that produced them.
+    pub fn drain_inbox(&mut self) -> Vec<ShardEnvelope> {
+        let mut msgs = std::mem::take(&mut self.inbox);
+        msgs.sort_by_key(|e| (e.from, e.seq));
+        msgs
+    }
+
+    pub fn inbox_is_empty(&self) -> bool {
+        self.inbox.is_empty()
     }
 }
 

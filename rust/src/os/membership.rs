@@ -123,8 +123,10 @@ pub struct NodeCand {
 
 /// Where should a new process start? Implementations see only live
 /// members (the registry's view), so placement is announce-driven by
-/// construction.
-pub trait PlacementPolicy {
+/// construction. `Send` because each shard of the parallel engine owns
+/// a placement policy and whole shards move between worker threads at
+/// window boundaries (compile-time checked in rust/tests/sharding.rs).
+pub trait PlacementPolicy: Send {
     /// Pick a home node from the live candidates (ordered by node id).
     /// `None` means no candidate is acceptable.
     fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId>;

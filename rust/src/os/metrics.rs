@@ -129,6 +129,46 @@ impl Metrics {
     }
 }
 
+/// Host-side utilization of one shard of the parallel engine: how much
+/// wall-clock time its worker spent stepping tenants vs. stalled at
+/// window barriers waiting for slower shards.
+///
+/// Deliberately *not* part of [`Metrics`]: these are `Instant`-measured
+/// wall-clock numbers that vary run to run, while `Metrics` must stay
+/// bit-identical across worker-thread counts (the determinism suite
+/// compares whole `Metrics` blocks with `==`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardStats {
+    /// Wall-clock ns this shard's worker spent inside windows.
+    pub busy_ns: u64,
+    /// Wall-clock ns lost to barriers: window wall time minus this
+    /// shard's busy share, i.e. time spent waiting for slower shards.
+    pub barrier_wait_ns: u64,
+    /// Windows this shard participated in.
+    pub windows: u64,
+}
+
+impl ShardStats {
+    /// Busy fraction of total engaged wall time, in percent.
+    pub fn busy_pct(&self) -> f64 {
+        let total = self.busy_ns + self.barrier_wait_ns;
+        if total == 0 {
+            return 100.0;
+        }
+        self.busy_ns as f64 * 100.0 / total as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "busy={} barrier={} ({:.0}% busy, {} windows)",
+            crate::util::stats::fmt_ns(self.busy_ns as f64),
+            crate::util::stats::fmt_ns(self.barrier_wait_ns as f64),
+            self.busy_pct(),
+            self.windows,
+        )
+    }
+}
+
 /// Final report of one workload run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -200,6 +240,15 @@ mod tests {
         m.record_jump(2, n(1), n(0), 1);
         // 2 jumps in 0.5 simulated seconds = 4 jumps/sec
         assert!((m.jump_frequency(500_000_000) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_stats_busy_pct() {
+        let s = ShardStats { busy_ns: 750, barrier_wait_ns: 250, windows: 3 };
+        assert!((s.busy_pct() - 75.0).abs() < 1e-9);
+        assert!(s.summary().contains("windows"));
+        // an idle shard reads as fully busy rather than dividing by zero
+        assert!((ShardStats::default().busy_pct() - 100.0).abs() < 1e-9);
     }
 
     #[test]

@@ -14,14 +14,17 @@ pub mod policy;
 pub mod sched;
 pub mod system;
 
-pub use kernel::{ClusterConfig, NodeKernel, ProcSpec, ProcessCtx};
+pub use kernel::{
+    ClusterConfig, NodeKernel, ProcSpec, ProcessCtx, ShardEnvelope, ShardMailbox, ShardMsg,
+};
 pub use membership::{
     AppliedChurn, ChurnEvent, ChurnOp, ChurnSchedule, DrainReport, LeastLoaded, MembershipError,
     NodeCand, Pinned, PlacementPolicy, RoundRobin,
 };
-pub use metrics::{Metrics, RunReport};
+pub use metrics::{Metrics, RunReport, ShardStats};
 pub use policy::{BurstPolicy, Decision, EwmaPolicy, JumpPolicy, NeverJump, ThresholdPolicy};
 pub use sched::{
-    direct_ground_truth, record_ground_truth, ElasticCluster, ProcRunReport, TenantJob,
+    direct_ground_truth, record_ground_truth, ElasticCluster, ProcRunReport, ShardedCluster,
+    TenantJob,
 };
 pub use system::{ElasticSystem, Mode, SystemConfig};

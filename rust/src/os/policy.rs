@@ -29,7 +29,11 @@ pub enum Decision {
 }
 
 /// The flexible policy module interface.
-pub trait JumpPolicy {
+///
+/// `Send` because a policy rides inside its process's scheduler state,
+/// which a sharded run hands to whichever worker thread drives the
+/// owning shard this window.
+pub trait JumpPolicy: Send {
     /// A remote fault was serviced: the faulting page lived at `owner`
     /// while execution runs at `running`. `now_ns` is simulated time.
     fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision;

@@ -30,18 +30,37 @@
 //! Determinism: scheduling order is fixed round-robin over the spawn
 //! order, quanta are simulated-time bounds, and nothing consults host
 //! state, so multi-tenant runs are bit-reproducible.
+//!
+//! # The sharded parallel engine
+//!
+//! [`ShardedCluster`] runs the same simulation on several worker
+//! threads. The node slots are partitioned round-robin into `S` shards
+//! (`node n -> shard n % S`), each shard owning a full [`ElasticCluster`]
+//! whose kernel masks foreign slots as departed (empty pool, not live) —
+//! so every existing placement/stretch/push/pull path confines a shard's
+//! tenants to its own nodes with zero hot-path changes. Shards step
+//! their tenants independently inside conservative time windows
+//! (`[floor, floor + window)` on the shared [`WindowClock`]) and barrier
+//! at window boundaries; membership churn crosses shards as
+//! [`ShardMsg`] mail applied at barriers in canonical `(sender, seq)`
+//! order. The *shard count* fixes the simulation semantics; the
+//! *thread count* is pure host parallelism — for a fixed shard count,
+//! results are bit-identical at any `--threads`, and tenant digests are
+//! partition-independent (every digest must equal the tenant's
+//! `DirectMem` ground truth regardless of contention or partition).
 
-use crate::mem::addr::NodeId;
+use crate::mem::addr::{NodeId, MAX_NODES};
 use crate::os::kernel::{
     verify_cluster, ClusterConfig, Engine, EngineMem, NodeKernel, ProcSpec, ProcessCtx,
+    ShardEnvelope, ShardMailbox, ShardMsg,
 };
 use crate::os::membership::{
-    AppliedChurn, ChurnSchedule, LeastLoaded, MembershipError, PlacementPolicy,
+    AppliedChurn, ChurnOp, ChurnSchedule, LeastLoaded, MembershipError, NodeCand, PlacementPolicy,
 };
-use crate::os::metrics::Metrics;
+use crate::os::metrics::{Metrics, ShardStats};
 use crate::os::policy::{JumpPolicy, ThresholdPolicy};
 use crate::os::system::Mode;
-use crate::sim::SimClock;
+use crate::sim::{SimClock, WindowClock};
 use crate::workloads::trace::{Trace, TraceReplay};
 use crate::workloads::{DirectMem, Fuel, StepOutcome, Workload, WorkloadExec};
 
@@ -49,6 +68,12 @@ use crate::workloads::{DirectMem, Fuel, StepOutcome, Workload, WorkloadExec};
 /// remote faults' worth, so contention interleaves at fault granularity
 /// without drowning the run in context switches).
 pub const DEFAULT_QUANTUM_NS: u64 = 2_000_000;
+
+/// Default conservative time window of the sharded engine: four quanta,
+/// so a shard gets a few round-robin passes per barrier and the barrier
+/// overhead amortizes, while churn latency (applied at barriers) stays
+/// in the same order as the legacy engine's slice granularity.
+pub const DEFAULT_WINDOW_NS: u64 = 4 * DEFAULT_QUANTUM_NS;
 
 /// Per-process outcome of a multi-tenant run.
 #[derive(Debug, Clone)]
@@ -269,9 +294,18 @@ impl ElasticCluster {
     /// round-robin time slicing, and report per process. `tenants`
     /// pairs each process slot with its job.
     pub fn run_jobs(&mut self, tenants: Vec<(usize, TenantJob)>) -> Vec<ProcRunReport> {
-        // Setup phase, in spawn order at t≈0: each process maps its
-        // regions (and, live, builds its input data through the elastic
-        // pager), then hoists its execution state into a stepper.
+        let mut jobs = self.setup_jobs(tenants);
+        // Round-robin scheduling loop, uncapped: rounds repeat until
+        // every job is done.
+        while self.round(&mut jobs, None) {}
+        jobs.iter().map(|job| self.report_for(job)).collect()
+    }
+
+    /// Setup phase of a multi-tenant run, in spawn order at t≈0: each
+    /// process maps its regions (and, live, builds its input data
+    /// through the elastic pager), then hoists its execution state into
+    /// a stepper.
+    fn setup_jobs(&mut self, tenants: Vec<(usize, TenantJob)>) -> Vec<Job> {
         let mut jobs: Vec<Job> = Vec::with_capacity(tenants.len());
         for (slot, tenant) in tenants {
             let mut w = tenant.into_workload();
@@ -287,51 +321,65 @@ impl ElasticCluster {
             self.procs[slot].cpu_ns += now - t0;
             jobs.push(Job { slot, exec, ops: setup_ops, digest: None, finished_at_ns: 0 });
         }
+        jobs
+    }
 
-        // Round-robin scheduling loop.
+    /// One scheduler round: apply due churn, give every unfinished job
+    /// one quantum slice, then (if anything ran) one EOS-manager
+    /// monitoring pass. Returns whether any job executed.
+    ///
+    /// `window_end` is the sharded engine's conservative cap: each
+    /// slice's deadline is clamped to it and a job whose clock has
+    /// already reached the cap is skipped, so a shard can never run
+    /// past its window. `None` (the single-threaded engine) reproduces
+    /// the legacy uncapped loop exactly.
+    fn round(&mut self, jobs: &mut [Job], window_end: Option<u64>) -> bool {
+        // Membership churn first: scripted joins/leaves due at the
+        // current simulated time apply on the slice boundary, so a
+        // process never observes the cluster changing mid-access
+        // and churn runs stay bit-reproducible. Post-join manager
+        // passes monitor only still-live tenants (exited ones are
+        // neither monitored nor charged). A preempted stepper holds
+        // only virtual addresses and scalar cursors, so it resumes
+        // safely across drains and forced jumps.
+        let live: Vec<usize> = jobs.iter().filter(|j| j.digest.is_none()).map(|j| j.slot).collect();
+        self.apply_due_churn(&live);
         let quantum = self.quantum_ns.max(1);
-        loop {
-            // Membership churn first: scripted joins/leaves due at the
-            // current simulated time apply on the slice boundary, so a
-            // process never observes the cluster changing mid-access
-            // and churn runs stay bit-reproducible. Post-join manager
-            // passes monitor only still-live tenants (exited ones are
-            // neither monitored nor charged). A preempted stepper holds
-            // only virtual addresses and scalar cursors, so it resumes
-            // safely across drains and forced jumps.
-            let live: Vec<usize> =
-                jobs.iter().filter(|j| j.digest.is_none()).map(|j| j.slot).collect();
-            self.apply_due_churn(&live);
-            let mut ran_any = false;
-            for job in jobs.iter_mut() {
-                if job.digest.is_some() {
+        let mut ran_any = false;
+        for job in jobs.iter_mut() {
+            if job.digest.is_some() {
+                continue;
+            }
+            let slice_start = self.clock.now();
+            let mut deadline = slice_start + quantum;
+            if let Some(cap) = window_end {
+                if slice_start >= cap {
                     continue;
                 }
-                ran_any = true;
-                let slice_start = self.clock.now();
-                let a0 = self.clock.accesses();
-                let outcome = {
-                    let mut mem = EngineMem {
-                        eng: Engine {
-                            kernel: &mut self.kernel,
-                            clock: &mut self.clock,
-                            procs: &mut self.procs,
-                            cur: job.slot,
-                        },
-                    };
-                    job.exec.step(&mut mem, Fuel::until_ns(slice_start + quantum))
+                deadline = deadline.min(cap);
+            }
+            ran_any = true;
+            let a0 = self.clock.accesses();
+            let outcome = {
+                let mut mem = EngineMem {
+                    eng: Engine {
+                        kernel: &mut self.kernel,
+                        clock: &mut self.clock,
+                        procs: &mut self.procs,
+                        cur: job.slot,
+                    },
                 };
-                let now = self.clock.now();
-                job.ops += self.clock.accesses() - a0;
-                self.procs[job.slot].cpu_ns += now - slice_start;
-                if let StepOutcome::Done(digest) = outcome {
-                    job.digest = Some(digest);
-                    job.finished_at_ns = now;
-                }
+                job.exec.step(&mut mem, Fuel::until_ns(deadline))
+            };
+            let now = self.clock.now();
+            job.ops += self.clock.accesses() - a0;
+            self.procs[job.slot].cpu_ns += now - slice_start;
+            if let StepOutcome::Done(digest) = outcome {
+                job.digest = Some(digest);
+                job.finished_at_ns = now;
             }
-            if !ran_any {
-                break;
-            }
+        }
+        if ran_any {
             // The EOS manager's monitoring loop runs between slices,
             // watching the table of still-live processes (paper Fig 3);
             // exited tenants are neither monitored nor charged.
@@ -339,24 +387,23 @@ impl ElasticCluster {
                 jobs.iter().filter(|j| j.digest.is_none()).map(|j| j.slot).collect();
             self.manager_pass_for(&live);
         }
+        ran_any
+    }
 
-        jobs.iter()
-            .map(|job| {
-                let p = &self.procs[job.slot];
-                ProcRunReport {
-                    pid: p.pid,
-                    comm: p.meta.comm.clone(),
-                    mode: p.mode().as_str().to_string(),
-                    policy: p.policy_describe(),
-                    digest: job.digest.expect("scheduler loop runs every job to completion"),
-                    cpu_ns: p.cpu_ns,
-                    finished_at_ns: job.finished_at_ns,
-                    ops: job.ops,
-                    start_node: p.home(),
-                    metrics: p.metrics.clone(),
-                }
-            })
-            .collect()
+    fn report_for(&self, job: &Job) -> ProcRunReport {
+        let p = &self.procs[job.slot];
+        ProcRunReport {
+            pid: p.pid,
+            comm: p.meta.comm.clone(),
+            mode: p.mode().as_str().to_string(),
+            policy: p.policy_describe(),
+            digest: job.digest.expect("scheduler loop runs every job to completion"),
+            cpu_ns: p.cpu_ns,
+            finished_at_ns: job.finished_at_ns,
+            ops: job.ops,
+            start_node: p.home(),
+            metrics: p.metrics.clone(),
+        }
     }
 }
 
@@ -367,6 +414,553 @@ impl std::fmt::Debug for ElasticCluster {
             .field("procs", &self.procs.len())
             .field("sim_ns", &self.clock.now())
             .finish()
+    }
+}
+
+// ----- the sharded parallel engine ----------------------------------------
+
+/// One shard of a [`ShardedCluster`]: a full [`ElasticCluster`] whose
+/// kernel owns `node n where n % S == shard` (foreign slots are masked
+/// as departed), plus its in-flight jobs and barrier mail. Whole shards
+/// move between worker threads at window boundaries, which is why every
+/// piece of tenant state is `Send`.
+struct Shard {
+    cluster: ElasticCluster,
+    /// Tenants routed to this shard, awaiting the parallel setup phase.
+    pending: Vec<(usize, TenantJob)>,
+    /// In-flight jobs (local process-table slots), in setup order.
+    jobs: Vec<Job>,
+    /// Global process ids aligned with `jobs`.
+    gids: Vec<usize>,
+    mailbox: ShardMailbox,
+    stats: ShardStats,
+}
+
+impl Shard {
+    fn has_unfinished(&self) -> bool {
+        self.jobs.iter().any(|j| j.digest.is_none())
+    }
+
+    /// Local process-table slots of still-running tenants (the monitor
+    /// set for churn-triggered manager passes).
+    fn live_job_slots(&self) -> Vec<usize> {
+        self.jobs.iter().filter(|j| j.digest.is_none()).map(|j| j.slot).collect()
+    }
+
+    /// Step this shard's tenants up to `window_end` (the conservative
+    /// cap): repeated scheduler rounds whose slices clamp to the window,
+    /// until the local clock reaches the cap or every job is done.
+    fn run_window(&mut self, window_end: u64) {
+        if !self.has_unfinished() {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        while self.cluster.clock.now() < window_end {
+            if !self.cluster.round(&mut self.jobs, Some(window_end)) {
+                break;
+            }
+        }
+        self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.windows += 1;
+    }
+}
+
+/// The parallel simulation engine: the cluster's node slots are
+/// partitioned round-robin into shards (`node n -> shard n % S`), each
+/// shard stepping its resident tenants independently inside a
+/// conservative time window, with a barrier on the shared
+/// [`WindowClock`] at every window boundary.
+///
+/// Semantics vs. the single-threaded engine:
+///
+/// * **The shard count is the simulation's partition** — tenants place,
+///   stretch, push and pull only within their shard's nodes, so a
+///   sharded run is a legitimate (different) simulation of the same
+///   cluster, not an approximation of the unsharded one. With one
+///   shard the engine routes to [`ElasticCluster::run_jobs`] unchanged
+///   and is bit-identical to the legacy engine.
+/// * **The thread count is pure host parallelism** — for a fixed shard
+///   count, digests, finish times, and every [`Metrics`] counter are
+///   bit-identical at any `threads` value: shards only interact through
+///   barrier mail applied in canonical `(sender, seq)` order, never
+///   through the thread schedule.
+/// * **Digests are partition-independent** — every tenant's digest must
+///   equal its `DirectMem` ground truth at *any* shard count (the
+///   repo's core invariant), which is what the determinism suite
+///   checks across partitions.
+///
+/// Membership churn is global: the driver owns the [`ChurnSchedule`],
+/// converts events due at the committed floor into [`ShardMsg`] mail
+/// (a fresh node id is broadcast as a `SlotAppend` so every shard's
+/// global slot indexing stays aligned, then `Join`/`Leave` go to the
+/// owning shard), and applies inboxes at the barrier.
+pub struct ShardedCluster {
+    shards: Vec<Shard>,
+    /// Worker threads driving the shards (clamped to the shard count;
+    /// 1 = step shards sequentially on the caller's thread).
+    pub threads: usize,
+    /// The conservative window/barrier schedule.
+    pub window: WindowClock,
+    /// Placement policy for [`Self::spawn_placed`], consulted over the
+    /// merged live membership of all shards.
+    placement: Box<dyn PlacementPolicy>,
+    /// Global scripted membership changes (driver-owned; shards get
+    /// them as barrier mail).
+    churn: ChurnSchedule,
+    /// Membership changes actually applied, in application order.
+    pub churn_log: Vec<AppliedChurn>,
+    /// Global node-slot count (grows when churn appends a fresh slot).
+    global_nodes: usize,
+    /// Global process id -> (shard, local process-table slot).
+    proc_map: Vec<(usize, usize)>,
+    /// Control-plane mail sequence (the driver is sender `usize::MAX`).
+    ctl_seq: u64,
+}
+
+impl ShardedCluster {
+    /// Partition `cfg`'s nodes into `shards` shards driven by
+    /// `threads` worker threads. Every shard must own at least one
+    /// node, so `shards` may not exceed the node count.
+    pub fn new(cfg: ClusterConfig, shards: usize, threads: usize) -> ShardedCluster {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(
+            shards <= cfg.node_frames.len(),
+            "cannot cut {} nodes into {} shards (every shard needs a live node)",
+            cfg.node_frames.len(),
+            shards
+        );
+        let nodes = cfg.node_frames.len();
+        let shard_vec = (0..shards)
+            .map(|s| {
+                let owned: Vec<bool> = (0..nodes).map(|n| n % shards == s).collect();
+                Shard {
+                    cluster: shard_cluster(&cfg, &owned),
+                    pending: Vec::new(),
+                    jobs: Vec::new(),
+                    gids: Vec::new(),
+                    mailbox: ShardMailbox::default(),
+                    stats: ShardStats::default(),
+                }
+            })
+            .collect();
+        ShardedCluster {
+            shards: shard_vec,
+            threads: threads.max(1),
+            window: WindowClock::new(DEFAULT_WINDOW_NS),
+            placement: Box::new(LeastLoaded),
+            churn: ChurnSchedule::default(),
+            churn_log: Vec::new(),
+            global_nodes: nodes,
+            proc_map: Vec::new(),
+            ctl_seq: 0,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Global node-slot count (live and departed).
+    pub fn node_count(&self) -> usize {
+        self.global_nodes
+    }
+
+    /// Live members across all shards.
+    pub fn live_count(&self) -> usize {
+        self.shards.iter().map(|s| s.cluster.live_count()).sum()
+    }
+
+    pub fn proc_count(&self) -> usize {
+        self.proc_map.len()
+    }
+
+    /// The process behind a global process id.
+    pub fn proc(&self, gid: usize) -> &ProcessCtx {
+        let (s, local) = self.proc_map[gid];
+        &self.shards[s].cluster.procs[local]
+    }
+
+    /// The shard owning node `home` (and any process homed there).
+    pub fn shard_of(&self, home: NodeId) -> usize {
+        home.0 as usize % self.shards.len()
+    }
+
+    /// Processes resident on one shard.
+    pub fn procs_on_shard(&self, s: usize) -> usize {
+        self.proc_map.iter().filter(|&&(sh, _)| sh == s).count()
+    }
+
+    /// Set every shard's round-robin quantum.
+    pub fn set_quantum(&mut self, quantum_ns: u64) {
+        for shard in &mut self.shards {
+            shard.cluster.quantum_ns = quantum_ns;
+        }
+    }
+
+    /// Replace the barrier schedule (resets the floor; call before
+    /// running).
+    pub fn set_window(&mut self, window_ns: u64) {
+        self.window = WindowClock::new(window_ns);
+    }
+
+    /// Swap the placement policy consulted by [`Self::spawn_placed`].
+    pub fn set_placement(&mut self, policy: Box<dyn PlacementPolicy>) {
+        self.placement = policy;
+    }
+
+    /// Install a global churn schedule; events become barrier mail once
+    /// the committed floor passes their timestamps.
+    pub fn set_churn(&mut self, schedule: ChurnSchedule) {
+        self.churn = schedule;
+    }
+
+    /// Scripted churn events that never came due.
+    pub fn churn_pending(&self) -> usize {
+        self.churn.pending()
+    }
+
+    /// The simulation's makespan so far: the furthest shard clock
+    /// (every tenant's finish time is on its own shard's clock).
+    pub fn sim_now(&self) -> u64 {
+        self.shards.iter().map(|s| s.cluster.clock.now()).max().unwrap_or(0)
+    }
+
+    /// Simulated control-plane time across all shards.
+    pub fn churn_ns(&self) -> u64 {
+        self.shards.iter().map(|s| s.cluster.churn_ns).sum()
+    }
+
+    /// Simulated wire time saved by batching, across all shards.
+    pub fn batch_saved_ns(&self) -> u64 {
+        self.shards.iter().map(|s| s.cluster.batch_saved_ns()).sum()
+    }
+
+    /// Per-shard host utilization (busy vs. barrier wait), by shard id.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.shards.iter().map(|s| s.stats).collect()
+    }
+
+    /// Cluster-wide consistency check, shard by shard.
+    pub fn verify(&self) -> Result<(), String> {
+        for (s, shard) in self.shards.iter().enumerate() {
+            shard.cluster.verify().map_err(|e| format!("shard {s}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Spawn on an explicit home node (routed to the owning shard).
+    /// Returns the *global* process id.
+    pub fn spawn(
+        &mut self,
+        mode: Mode,
+        home: NodeId,
+        comm: &str,
+        threshold: u64,
+    ) -> Result<usize, MembershipError> {
+        self.spawn_with_policy(mode, home, comm, Box::new(ThresholdPolicy::new(threshold)))
+    }
+
+    /// [`Self::spawn`] with an explicit jumping policy.
+    pub fn spawn_with_policy(
+        &mut self,
+        mode: Mode,
+        home: NodeId,
+        comm: &str,
+        policy: Box<dyn JumpPolicy>,
+    ) -> Result<usize, MembershipError> {
+        let s = self.shard_of(home);
+        let local = self.shards[s].cluster.spawn_with_policy(mode, home, comm, policy)?;
+        let gid = self.proc_map.len();
+        // Rebrand the shard-local pid to the global process id, so
+        // reports and logs stay unambiguous across shards.
+        let pid = 1000 + gid as u32;
+        let p = &mut self.shards[s].cluster.procs[local];
+        p.pid = pid;
+        p.meta.pid = pid;
+        self.proc_map.push((s, local));
+        Ok(gid)
+    }
+
+    /// Spawn with the placement policy choosing the home node from the
+    /// merged live membership of all shards (paper §4: announce so
+    /// others can pick). Which shard hosts the process follows from the
+    /// picked home node.
+    pub fn spawn_placed(
+        &mut self,
+        mode: Mode,
+        comm: &str,
+        threshold: u64,
+    ) -> Result<usize, MembershipError> {
+        let mut cands: Vec<NodeCand> = Vec::new();
+        for shard in self.shards.iter_mut() {
+            cands.extend(shard.cluster.placement_candidates());
+        }
+        cands.sort_by_key(|c| c.id.0);
+        let home = self.placement.pick(&cands).ok_or(MembershipError::NoLiveNode)?;
+        self.spawn(mode, home, comm, threshold)
+    }
+
+    /// [`Self::spawn_placed`] with an explicit jumping policy.
+    pub fn spawn_placed_with_policy(
+        &mut self,
+        mode: Mode,
+        comm: &str,
+        policy: Box<dyn JumpPolicy>,
+    ) -> Result<usize, MembershipError> {
+        let mut cands: Vec<NodeCand> = Vec::new();
+        for shard in self.shards.iter_mut() {
+            cands.extend(shard.cluster.placement_candidates());
+        }
+        cands.sort_by_key(|c| c.id.0);
+        let home = self.placement.pick(&cands).ok_or(MembershipError::NoLiveNode)?;
+        self.spawn_with_policy(mode, home, comm, policy)
+    }
+
+    /// Run one live workload per (already-spawned) global process id.
+    pub fn run_live(&mut self, jobs: Vec<(usize, Box<dyn Workload>)>) -> Vec<ProcRunReport> {
+        self.run_jobs(jobs.into_iter().map(|(gid, w)| (gid, TenantJob::Live(w))).collect())
+    }
+
+    /// Run a mixed set of live and trace tenants to completion across
+    /// all shards; reports come back in global process-id order.
+    ///
+    /// With one shard this routes to the legacy
+    /// [`ElasticCluster::run_jobs`] (bit-identical to the
+    /// single-threaded engine); otherwise the shards run the
+    /// window/barrier protocol, on `threads` worker threads.
+    pub fn run_jobs(&mut self, tenants: Vec<(usize, TenantJob)>) -> Vec<ProcRunReport> {
+        if self.shards.len() == 1 {
+            // One shard owns everything: hand the global churn schedule
+            // to the inner cluster and run the unchanged legacy loop.
+            let shard = &mut self.shards[0];
+            shard.cluster.set_churn(std::mem::take(&mut self.churn));
+            let proc_map = &self.proc_map;
+            let local: Vec<(usize, TenantJob)> =
+                tenants.into_iter().map(|(gid, job)| (proc_map[gid].1, job)).collect();
+            let reports = shard.cluster.run_jobs(local);
+            // Reclaim the schedule (with its cursor) so churn_pending
+            // keeps reporting events that never came due.
+            self.churn = std::mem::take(&mut shard.cluster.churn);
+            self.churn_log.clone_from(&shard.cluster.churn_log);
+            return reports;
+        }
+
+        // Route each tenant to its process's shard (preserving relative
+        // order, so per-shard setup and scheduling order is the global
+        // spawn order restricted to the shard).
+        for (gid, job) in tenants {
+            let (s, local) = self.proc_map[gid];
+            self.shards[s].pending.push((local, job));
+            self.shards[s].gids.push(gid);
+        }
+
+        // Setup phase: per-shard sequential (deterministic), shards in
+        // parallel.
+        let threads = self.threads;
+        self.for_each_shard(threads, |shard| {
+            let pending = std::mem::take(&mut shard.pending);
+            shard.jobs = shard.cluster.setup_jobs(pending);
+        });
+
+        // The window/barrier loop.
+        loop {
+            let min_live = self
+                .shards
+                .iter()
+                .filter(|s| s.has_unfinished())
+                .map(|s| s.cluster.clock.now())
+                .min();
+            let Some(min_live) = min_live else { break };
+            let window_end = self.window.open_window(min_live);
+            // Churn due at the committed floor becomes barrier mail,
+            // applied before any shard steps into the window — every
+            // shard observes a membership change at the same boundary
+            // regardless of the thread schedule.
+            self.route_due_churn();
+            self.apply_barrier_messages();
+
+            let active: Vec<bool> = self.shards.iter().map(|s| s.has_unfinished()).collect();
+            let busy0: Vec<u64> = self.shards.iter().map(|s| s.stats.busy_ns).collect();
+            let t0 = std::time::Instant::now();
+            self.for_each_shard(threads, |shard| shard.run_window(window_end));
+            let wall = t0.elapsed().as_nanos() as u64;
+            for ((shard, b0), was_active) in self.shards.iter_mut().zip(busy0).zip(active) {
+                if was_active {
+                    let busy = shard.stats.busy_ns - b0;
+                    shard.stats.barrier_wait_ns += wall.saturating_sub(busy);
+                }
+            }
+        }
+
+        // Reports in global process-id order.
+        let mut tagged: Vec<(usize, ProcRunReport)> = Vec::new();
+        for shard in &self.shards {
+            for (j, job) in shard.jobs.iter().enumerate() {
+                tagged.push((shard.gids[j], shard.cluster.report_for(job)));
+            }
+        }
+        tagged.sort_by_key(|&(gid, _)| gid);
+        tagged.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Drive `f` over every shard: sequentially when one thread,
+    /// otherwise on scoped worker threads over contiguous shard chunks.
+    /// Each shard is owned by exactly one worker for the duration, so
+    /// there is nothing to lock (and no poison to unwrap).
+    fn for_each_shard<F>(&mut self, threads: usize, f: F)
+    where
+        F: Fn(&mut Shard) + Sync,
+    {
+        let threads = threads.clamp(1, self.shards.len());
+        if threads == 1 {
+            for shard in &mut self.shards {
+                f(shard);
+            }
+            return;
+        }
+        let chunk = (self.shards.len() + threads - 1) / threads;
+        let f = &f;
+        std::thread::scope(|scope| {
+            for shards in self.shards.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for shard in shards {
+                        f(shard);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Convert churn events due at the committed floor into barrier
+    /// mail. A join of the next fresh node id first broadcasts a
+    /// `SlotAppend` to every shard (global slot indexing stays aligned),
+    /// then the owning shard gets the `Join`; leaves go straight to the
+    /// owner. Structurally invalid events (id holes, overflow) are
+    /// logged and skipped here; per-shard validity (already live, last
+    /// live node) is judged by the owner at application time.
+    fn route_due_churn(&mut self) {
+        let floor = self.window.floor();
+        while let Some(ev) = self.churn.pop_due(floor) {
+            match ev.op {
+                ChurnOp::Join { node, frames } => {
+                    let slot = node as usize;
+                    if slot >= MAX_NODES {
+                        log::warn!(
+                            "churn join of node{node} skipped: cluster already has the \
+                             maximum of {MAX_NODES} node slots"
+                        );
+                        continue;
+                    }
+                    if slot > self.global_nodes {
+                        log::warn!(
+                            "churn join of node{node} skipped: would leave an id hole \
+                             (next fresh slot is {})",
+                            self.global_nodes
+                        );
+                        continue;
+                    }
+                    if slot == self.global_nodes {
+                        for to in 0..self.shards.len() {
+                            self.ctl_send(to, ev.at_ns, ShardMsg::SlotAppend { node });
+                        }
+                        self.global_nodes += 1;
+                    }
+                    let owner = slot % self.shards.len();
+                    self.ctl_send(owner, ev.at_ns, ShardMsg::Join { node, frames });
+                }
+                ChurnOp::Leave { node } => {
+                    let slot = node as usize;
+                    if slot >= self.global_nodes {
+                        log::warn!("churn leave of node{node} skipped: no such node");
+                        continue;
+                    }
+                    let owner = slot % self.shards.len();
+                    self.ctl_send(owner, ev.at_ns, ShardMsg::Leave { node });
+                }
+            }
+        }
+    }
+
+    /// Deliver one control-plane message (the driver is sender
+    /// `usize::MAX`, sequenced after every real shard).
+    fn ctl_send(&mut self, to: usize, at_ns: u64, msg: ShardMsg) {
+        let env = ShardEnvelope { from: usize::MAX, seq: self.ctl_seq, at_ns, msg };
+        self.ctl_seq += 1;
+        self.shards[to].mailbox.deliver([env]);
+    }
+
+    /// Apply every shard's inbox at the barrier, shards in id order and
+    /// each inbox in canonical `(sender, seq)` order — one fixed global
+    /// application order however many threads produced the messages.
+    fn apply_barrier_messages(&mut self) {
+        for s in 0..self.shards.len() {
+            if self.shards[s].mailbox.inbox_is_empty() {
+                continue;
+            }
+            for env in self.shards[s].mailbox.drain_inbox() {
+                self.apply_msg(s, env);
+            }
+        }
+    }
+
+    fn apply_msg(&mut self, s: usize, env: ShardEnvelope) {
+        let shard = &mut self.shards[s];
+        let now = shard.cluster.clock.now().max(env.at_ns);
+        match env.msg {
+            ShardMsg::SlotAppend { node } => {
+                // Idempotent: only append if this shard hasn't yet.
+                if (node as usize) == shard.cluster.kernel.node_count() {
+                    shard.cluster.kernel.append_dead_slot(node as usize);
+                }
+            }
+            ShardMsg::Join { node, frames } => {
+                let monitor = shard.live_job_slots();
+                match shard.cluster.admit_node_for(NodeId(node), frames, &monitor) {
+                    Ok(_) => self.churn_log.push(AppliedChurn {
+                        at_ns: now,
+                        op: ChurnOp::Join { node, frames },
+                        drain: None,
+                    }),
+                    Err(e) => log::warn!("churn join of node{node} skipped: {e}"),
+                }
+            }
+            ShardMsg::Leave { node } => match shard.cluster.retire_node(NodeId(node)) {
+                Ok(drain) => self.churn_log.push(AppliedChurn {
+                    at_ns: now,
+                    op: ChurnOp::Leave { node },
+                    drain: Some(drain),
+                }),
+                Err(e) => log::warn!("churn leave of node{node} skipped: {e}"),
+            },
+        }
+    }
+}
+
+impl std::fmt::Debug for ShardedCluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedCluster")
+            .field("shards", &self.shards.len())
+            .field("threads", &self.threads)
+            .field("nodes", &self.global_nodes)
+            .field("procs", &self.proc_map.len())
+            .field("sim_ns", &self.sim_now())
+            .finish()
+    }
+}
+
+/// Build one shard's [`ElasticCluster`]: the full global slot layout
+/// with only the owned slots armed (see [`NodeKernel::new_sharded`]).
+fn shard_cluster(cfg: &ClusterConfig, owned: &[bool]) -> ElasticCluster {
+    let clock = SimClock::new(cfg.costs.local_access_num, cfg.costs.local_access_den);
+    ElasticCluster {
+        clock,
+        kernel: NodeKernel::new_sharded(cfg.clone(), owned),
+        procs: Vec::new(),
+        quantum_ns: DEFAULT_QUANTUM_NS,
+        placement: Box::new(LeastLoaded),
+        churn: ChurnSchedule::default(),
+        churn_log: Vec::new(),
+        churn_ns: 0,
     }
 }
 
@@ -392,8 +986,8 @@ pub fn record_ground_truth(workload: &mut dyn Workload) -> (Trace, u64) {
     replay.setup(&mut flat);
     let digest = replay.run(&mut flat);
     // Reclaim the trace without copying its O(ops) op stream: the
-    // replay's exec cursors are gone, so the Rc is sole-owned again.
-    let trace = std::rc::Rc::try_unwrap(replay.trace)
+    // replay's exec cursors are gone, so the Arc is sole-owned again.
+    let trace = std::sync::Arc::try_unwrap(replay.trace)
         .expect("replay execs are dropped before the trace is reclaimed");
     (trace, digest)
 }
@@ -514,6 +1108,71 @@ mod tests {
         assert_eq!(reports[1].digest, db, "live tenant diverged");
         assert!(reports.iter().all(|r| r.ops > 0 && r.cpu_ns > 0));
         cluster.verify().unwrap();
+    }
+
+    #[test]
+    fn sharded_single_shard_is_bit_identical_to_legacy() {
+        // shards=1 must route to the unchanged legacy engine: same
+        // digests, same per-process times, same Metrics, same clock.
+        let (ta, da) = truth_and_trace("linear", 60 * 4096);
+        let (tb, db) = truth_and_trace("count_sort", 60 * 4096);
+        let cfg = || ClusterConfig { node_frames: vec![96, 96], ..ClusterConfig::default() };
+
+        let mut legacy = ElasticCluster::new(cfg());
+        legacy.quantum_ns = 100_000;
+        let a = legacy.spawn(Mode::Elastic, NodeId(0), "linear", 64).unwrap();
+        let b = legacy.spawn(Mode::Elastic, NodeId(1), "count_sort", 64).unwrap();
+        let lr = legacy
+            .run_jobs(vec![(a, TenantJob::Trace(ta.clone())), (b, TenantJob::Trace(tb.clone()))]);
+
+        let mut sharded = ShardedCluster::new(cfg(), 1, 1);
+        sharded.set_quantum(100_000);
+        let ga = sharded.spawn(Mode::Elastic, NodeId(0), "linear", 64).unwrap();
+        let gb = sharded.spawn(Mode::Elastic, NodeId(1), "count_sort", 64).unwrap();
+        let sr = sharded.run_jobs(vec![(ga, TenantJob::Trace(ta)), (gb, TenantJob::Trace(tb))]);
+
+        assert_eq!(lr.len(), sr.len());
+        for (l, s) in lr.iter().zip(&sr) {
+            assert_eq!(l.digest, s.digest);
+            assert_eq!(l.cpu_ns, s.cpu_ns);
+            assert_eq!(l.finished_at_ns, s.finished_at_ns);
+            assert_eq!(l.ops, s.ops);
+            assert_eq!(l.metrics, s.metrics);
+            assert_eq!(l.pid, s.pid);
+        }
+        assert_eq!(sharded.sim_now(), legacy.clock.now());
+        assert_eq!(sr[0].digest, da);
+        assert_eq!(sr[1].digest, db);
+        sharded.verify().unwrap();
+    }
+
+    #[test]
+    fn sharded_two_shards_partition_and_match_ground_truth() {
+        let (ta, da) = truth_and_trace("linear", 60 * 4096);
+        let (tb, db) = truth_and_trace("count_sort", 60 * 4096);
+        let cfg = ClusterConfig { node_frames: vec![96, 96], ..ClusterConfig::default() };
+        // two shards on two worker threads: exercises the scoped-thread
+        // window loop
+        let mut sharded = ShardedCluster::new(cfg, 2, 2);
+        sharded.set_quantum(100_000);
+        let ga = sharded.spawn(Mode::Elastic, NodeId(0), "linear", 64).unwrap();
+        let gb = sharded.spawn(Mode::Elastic, NodeId(1), "count_sort", 64).unwrap();
+        assert_eq!(sharded.shard_of(NodeId(0)), 0);
+        assert_eq!(sharded.shard_of(NodeId(1)), 1);
+        let reports =
+            sharded.run_jobs(vec![(ga, TenantJob::Trace(ta)), (gb, TenantJob::Trace(tb))]);
+        assert_eq!(reports[0].digest, da, "shard-0 tenant diverged from ground truth");
+        assert_eq!(reports[1].digest, db, "shard-1 tenant diverged from ground truth");
+        assert!(reports.iter().all(|r| r.cpu_ns > 0));
+        sharded.verify().unwrap();
+        // one tenant per shard: each shard's clock is exactly its
+        // tenant's execution time, so the makespan is the slowest one
+        assert_eq!(sharded.sim_now(), reports.iter().map(|r| r.cpu_ns).max().unwrap());
+        // global pids stay unambiguous across shard-local tables
+        assert_eq!(sharded.proc(ga).pid, 1000);
+        assert_eq!(sharded.proc(gb).pid, 1001);
+        let stats = sharded.stats();
+        assert!(stats.iter().all(|s| s.windows > 0));
     }
 
     #[test]

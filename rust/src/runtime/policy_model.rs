@@ -12,12 +12,16 @@
 //! jump/stay decision with hysteresis.
 
 use super::Model;
-use crate::mem::addr::{NodeId, MAX_NODES};
+use crate::mem::addr::NodeId;
 use crate::os::policy::{Decision, JumpPolicy};
 
-/// Must match python/compile/model.py (POLICY_W / POLICY_N).
+/// Must match python/compile/model.py (POLICY_W / POLICY_N). The model
+/// window is compiled at a fixed width, so it stays at 16 slots even
+/// though `MAX_NODES` is larger: faults attributed to nodes beyond the
+/// window are ignored, and the policy never proposes jumping to them
+/// (single-process model-policy runs use small clusters anyway).
 pub const W: usize = 64;
-pub const N: usize = MAX_NODES;
+pub const N: usize = 16;
 
 /// Tunables forwarded to the model as its params vector.
 #[derive(Debug, Clone, Copy)]
@@ -111,7 +115,9 @@ impl ModelJumpPolicy {
         self.evals += 1;
         let window = self.window();
         let mut onehot = [0f32; N];
-        onehot[running.0 as usize] = 1.0;
+        if (running.0 as usize) < N {
+            onehot[running.0 as usize] = 1.0;
+        }
         let params = [self.params.decay, self.params.hysteresis, self.params.min_mass, 0.0];
         let out = match self.model.run_f32(&[
             (&window, &[W as i64, N as i64]),
@@ -137,7 +143,9 @@ impl ModelJumpPolicy {
 impl JumpPolicy for ModelJumpPolicy {
     fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision {
         self.advance_to(now_ns);
-        self.ring[self.head][owner.0 as usize] += 1.0;
+        if (owner.0 as usize) < N {
+            self.ring[self.head][owner.0 as usize] += 1.0;
+        }
         self.faults_since_consult += 1;
         if self.faults_since_consult < self.params.consult_every {
             return Decision::Stay;

@@ -83,9 +83,75 @@ impl SimClock {
     }
 }
 
+/// Barrier schedule for the sharded engine: per-shard [`SimClock`]s
+/// advance independently inside conservative time windows, and this
+/// tracks the *committed global floor* — the simulated instant every
+/// live shard has provably reached, below which no shard will ever run
+/// again. Windows are `[floor, floor + window_ns)`; membership churn
+/// due at or before the floor is safe to apply at the barrier, because
+/// every shard observes it at the same window boundary regardless of
+/// how many worker threads drive the shards.
+#[derive(Debug, Clone)]
+pub struct WindowClock {
+    window_ns: u64,
+    floor_ns: u64,
+    windows: u64,
+}
+
+impl WindowClock {
+    pub fn new(window_ns: u64) -> Self {
+        assert!(window_ns > 0, "a time window must have positive width");
+        WindowClock { window_ns, floor_ns: 0, windows: 0 }
+    }
+
+    /// The committed global floor: no live shard is behind this.
+    #[inline]
+    pub fn floor(&self) -> u64 {
+        self.floor_ns
+    }
+
+    /// Windows opened so far (barrier count).
+    #[inline]
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    #[inline]
+    pub fn window_ns(&self) -> u64 {
+        self.window_ns
+    }
+
+    /// Open the next window given the minimum local clock across shards
+    /// that still have runnable work; returns the window's end. The
+    /// floor never moves backwards (a shard that overran a window by
+    /// finishing a quantum slice past the boundary keeps its progress).
+    pub fn open_window(&mut self, min_live_clock_ns: u64) -> u64 {
+        self.floor_ns = self.floor_ns.max(min_live_clock_ns);
+        self.windows += 1;
+        self.floor_ns.saturating_add(self.window_ns)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn window_floor_is_monotone() {
+        let mut w = WindowClock::new(1000);
+        assert_eq!(w.open_window(0), 1000);
+        assert_eq!(w.open_window(700), 1700);
+        // a stale (smaller) minimum cannot drag the floor backwards
+        assert_eq!(w.open_window(500), 1700);
+        assert_eq!(w.floor(), 700);
+        assert_eq!(w.windows(), 3);
+    }
+
+    #[test]
+    fn window_end_saturates() {
+        let mut w = WindowClock::new(u64::MAX);
+        assert_eq!(w.open_window(5), u64::MAX);
+    }
 
     #[test]
     fn accesses_convert_lazily() {

@@ -5,5 +5,5 @@
 pub mod clock;
 pub mod costs;
 
-pub use clock::SimClock;
+pub use clock::{SimClock, WindowClock};
 pub use costs::CostModel;

@@ -27,7 +27,7 @@ use super::mem::{ElasticMem, U32Array};
 use super::{fnv1a, Fuel, Scale, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::mem::addr::AreaKind;
 use crate::util::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// u32 words per node record (32 B/node, 128 records per 4 KiB page).
 const REC: u64 = 8;
@@ -45,7 +45,7 @@ pub struct Dfs {
     nodes: Option<U32Array>,
     /// id -> memory slot (host-side metadata, like the C pointers of
     /// the original implementation; shared with in-flight execs).
-    perm: Rc<Vec<u32>>,
+    perm: Arc<Vec<u32>>,
     stack_base: u64,
     stack_cap: u64,
 }
@@ -58,7 +58,7 @@ impl Dfs {
             shuffle: 0.25,
             seed: 0xDF5,
             nodes: None,
-            perm: Rc::new(Vec::new()),
+            perm: Arc::new(Vec::new()),
             stack_base: 0,
             stack_cap: 0,
         };
@@ -167,13 +167,13 @@ impl Workload for Dfs {
         self.stack_cap = self.depth + 8;
         self.stack_base = mem.mmap(self.stack_cap * 8, AreaKind::Stack, "dfs.stack");
         self.nodes = Some(nodes);
-        self.perm = Rc::new(perm);
+        self.perm = Arc::new(perm);
     }
 
     fn start(&mut self) -> Box<dyn WorkloadExec> {
         Box::new(DfsExec {
             nodes: self.nodes.expect("setup not called"),
-            perm: Rc::clone(&self.perm),
+            perm: Arc::clone(&self.perm),
             stack_base: self.stack_base,
             depth: self.depth,
             branches: self.branches(),
@@ -192,7 +192,7 @@ impl Workload for Dfs {
 /// memory; only its cursor is host state.
 struct DfsExec {
     nodes: U32Array,
-    perm: Rc<Vec<u32>>,
+    perm: Arc<Vec<u32>>,
     stack_base: u64,
     depth: u64,
     branches: u64,

@@ -106,13 +106,18 @@ pub enum StepOutcome {
 /// only virtual addresses and scalars, which jumps and drains never
 /// invalidate). Calling `step` again after `Done` returns the same
 /// digest.
-pub trait WorkloadExec {
+/// `Send` so shard threads can own in-flight tenants: every exec is
+/// loop cursors + scalars (plus `Arc`-shared immutable inputs), and the
+/// sharded scheduler moves whole shards between worker threads at
+/// window boundaries (compile-time checked in rust/tests/sharding.rs).
+pub trait WorkloadExec: Send {
     /// Advance the algorithm until `fuel` expires or it completes.
     fn step(&mut self, mem: &mut dyn ElasticMem, fuel: Fuel) -> StepOutcome;
 }
 
-/// A runnable benchmark algorithm.
-pub trait Workload {
+/// A runnable benchmark algorithm (`Send` for the same shard-ownership
+/// reason as [`WorkloadExec`]).
+pub trait Workload: Send {
     /// Short identifier ("linear", "dfs", …).
     fn name(&self) -> &'static str;
 

@@ -13,7 +13,7 @@
 use super::mem::ElasticMem;
 use super::{fnv1a, Fuel, StepOutcome, Workload, WorkloadExec, FNV_SEED};
 use crate::mem::addr::AreaKind;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// One recorded access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -152,17 +152,17 @@ pub fn record<M: ElasticMem + ?Sized>(w: &mut dyn Workload, mem: &mut M) -> (Tra
     (t.trace, digest)
 }
 
-/// A workload that replays a recorded trace. The trace is `Rc`-shared
+/// A workload that replays a recorded trace. The trace is `Arc`-shared
 /// with its in-flight [`TraceExec`] cursors, so starting a replay never
 /// copies the O(ops) op stream.
 pub struct TraceReplay {
-    pub trace: Rc<Trace>,
+    pub trace: Arc<Trace>,
     starts: Vec<u64>,
 }
 
 impl TraceReplay {
     pub fn new(trace: Trace) -> Self {
-        TraceReplay { trace: Rc::new(trace), starts: Vec::new() }
+        TraceReplay { trace: Arc::new(trace), starts: Vec::new() }
     }
 }
 
@@ -185,7 +185,7 @@ impl Workload for TraceReplay {
 
     fn start(&mut self) -> Box<dyn WorkloadExec> {
         Box::new(TraceExec {
-            trace: Rc::clone(&self.trace),
+            trace: Arc::clone(&self.trace),
             starts: self.starts.clone(),
             pos: 0,
             digest: FNV_SEED,
@@ -197,7 +197,7 @@ impl Workload for TraceReplay {
 /// the scheduler preempts frozen access patterns exactly as it
 /// preempts live algorithms.
 pub struct TraceExec {
-    trace: Rc<Trace>,
+    trace: Arc<Trace>,
     starts: Vec<u64>,
     pos: usize,
     digest: u64,

@@ -1,0 +1,231 @@
+//! Determinism suite for the sharded parallel engine (ISSUE 6).
+//!
+//! The contract under test: `--shards` fixes the simulation partition
+//! (a semantic knob), `--threads` is pure host parallelism. At a fixed
+//! partition the run must be *bit-identical* — digests, per-process
+//! cpu time, finish times, op counts, Metrics, and the final simulated
+//! clock — whether 1, 2, or 4 worker threads drove the shards, with
+//! and without a scripted churn schedule. Across different partitions
+//! only the digests are invariant (every tenant must match its
+//! `DirectMem` ground truth), and a single shard must reproduce the
+//! legacy sequential engine bit for bit.
+
+use elastic_os::mem::NodeId;
+use elastic_os::os::kernel::{ClusterConfig, ShardEnvelope, ShardMailbox, ShardMsg};
+use elastic_os::os::membership::{ChurnEvent, ChurnOp, ChurnSchedule, PlacementPolicy};
+use elastic_os::os::policy::JumpPolicy;
+use elastic_os::os::sched::{
+    direct_ground_truth, ElasticCluster, ProcRunReport, ShardedCluster, TenantJob,
+};
+use elastic_os::os::system::Mode;
+use elastic_os::workloads::trace::Trace;
+use elastic_os::workloads::{
+    by_name_seeded, tenant_seed, Scale, Workload, WorkloadExec, ALL_EXT,
+};
+
+/// 8 nodes x 96 frames; all seven workloads homed on nodes 0-3 (two
+/// tenants per home node overcommit it ~1.25x), nodes 4-7 spare. At
+/// 4 shards each shard owns one overcommitted home plus one spare, so
+/// the pager stretches *within* every shard.
+const NODES: usize = 8;
+const FRAMES: u32 = 96;
+const PAGES: u64 = 60;
+
+fn make(i: usize) -> Box<dyn Workload> {
+    let seed = tenant_seed(Some(42), i);
+    by_name_seeded(ALL_EXT[i % ALL_EXT.len()], Scale::Bytes(PAGES * 4096), seed).unwrap()
+}
+
+fn truths() -> Vec<u64> {
+    (0..ALL_EXT.len()).map(|i| direct_ground_truth(make(i).as_mut())).collect()
+}
+
+struct RunOutcome {
+    reports: Vec<ProcRunReport>,
+    sim_ns: u64,
+    churn_log: String,
+}
+
+fn run_sharded(shards: usize, threads: usize, churn: Option<ChurnSchedule>) -> RunOutcome {
+    let cfg = ClusterConfig { node_frames: vec![FRAMES; NODES], ..ClusterConfig::default() };
+    let mut cluster = ShardedCluster::new(cfg, shards, threads);
+    // Small quantum/window so the tiny tenants cross many barriers
+    // instead of finishing inside window one.
+    cluster.set_quantum(100_000);
+    cluster.set_window(400_000);
+    if let Some(s) = churn {
+        cluster.set_churn(s);
+    }
+    let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+    for (i, wl) in ALL_EXT.iter().enumerate() {
+        let gid = cluster.spawn(Mode::Elastic, NodeId((i % 4) as u8), wl, 512).unwrap();
+        jobs.push((gid, make(i)));
+    }
+    let reports = cluster.run_live(jobs);
+    cluster.verify().expect("cluster invariants after sharded run");
+    RunOutcome {
+        reports,
+        sim_ns: cluster.sim_now(),
+        churn_log: format!("{:?}", cluster.churn_log),
+    }
+}
+
+/// Batched churn mid-run: a fresh node slot joins (extending every
+/// shard's node width via `SlotAppend` barrier mail) and a populated
+/// spare leaves through the drain protocol.
+fn churn_schedule() -> ChurnSchedule {
+    ChurnSchedule::new(vec![
+        ChurnEvent { at_ns: 400_000, op: ChurnOp::Join { node: NODES as u8, frames: FRAMES } },
+        ChurnEvent { at_ns: 1_200_000, op: ChurnOp::Leave { node: 4 } },
+    ])
+}
+
+fn assert_reports_identical(a: &[ProcRunReport], b: &[ProcRunReport], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: report counts differ");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.pid, y.pid, "{label}: pid");
+        assert_eq!(x.digest, y.digest, "{label}: pid{} digest", x.pid);
+        assert_eq!(x.cpu_ns, y.cpu_ns, "{label}: pid{} cpu_ns", x.pid);
+        assert_eq!(x.finished_at_ns, y.finished_at_ns, "{label}: pid{} finish time", x.pid);
+        assert_eq!(x.ops, y.ops, "{label}: pid{} ops", x.pid);
+        assert_eq!(x.start_node, y.start_node, "{label}: pid{} start node", x.pid);
+        assert_eq!(x.metrics, y.metrics, "{label}: pid{} Metrics", x.pid);
+    }
+}
+
+/// Satellite 1: everything a worker thread carries across a window
+/// boundary is `Send`, checked at compile time.
+#[test]
+fn tenant_execution_state_is_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<TenantJob>();
+    assert_send::<Box<dyn Workload>>();
+    assert_send::<Box<dyn WorkloadExec>>();
+    assert_send::<Box<dyn JumpPolicy>>();
+    assert_send::<Box<dyn PlacementPolicy>>();
+    assert_send::<Trace>();
+    assert_send::<ElasticCluster>();
+    assert_send::<ShardedCluster>();
+}
+
+/// The headline determinism property: at a fixed 4-shard partition,
+/// 1 vs 2 vs 4 worker threads produce bit-identical results across
+/// all seven workloads.
+#[test]
+fn threads_never_change_results_at_a_fixed_partition() {
+    let truths = truths();
+    let base = run_sharded(4, 1, None);
+    for (i, r) in base.reports.iter().enumerate() {
+        assert_eq!(r.digest, truths[i], "{}: digest != ground truth", ALL_EXT[i]);
+    }
+    for threads in [2usize, 4] {
+        let run = run_sharded(4, threads, None);
+        assert_reports_identical(&base.reports, &run.reports, &format!("threads={threads}"));
+        assert_eq!(base.sim_ns, run.sim_ns, "threads={threads}: final simulated time");
+    }
+}
+
+/// Determinism holds under batched churn too: the join/leave schedule
+/// is routed as barrier mail and applied in canonical order, so the
+/// applied-churn log and every report stay bit-identical across
+/// thread counts.
+#[test]
+fn churn_is_deterministic_across_threads() {
+    let truths = truths();
+    let base = run_sharded(4, 1, Some(churn_schedule()));
+    assert!(base.churn_log.contains("Join"), "join was never applied: {}", base.churn_log);
+    assert!(base.churn_log.contains("Leave"), "leave was never applied: {}", base.churn_log);
+    for (i, r) in base.reports.iter().enumerate() {
+        assert_eq!(r.digest, truths[i], "{}: digest != ground truth under churn", ALL_EXT[i]);
+    }
+    for threads in [2usize, 4] {
+        let run = run_sharded(4, threads, Some(churn_schedule()));
+        assert_reports_identical(
+            &base.reports,
+            &run.reports,
+            &format!("churn threads={threads}"),
+        );
+        assert_eq!(base.sim_ns, run.sim_ns, "churn threads={threads}: final simulated time");
+        assert_eq!(
+            base.churn_log, run.churn_log,
+            "churn threads={threads}: applied-churn logs diverge"
+        );
+    }
+}
+
+/// A single shard routes through the legacy sequential loop: the
+/// sharded engine at `--shards 1` is bit-identical to `ElasticCluster`
+/// itself, whatever the thread count.
+#[test]
+fn single_shard_is_bit_identical_to_the_legacy_engine() {
+    let cfg = ClusterConfig { node_frames: vec![FRAMES; NODES], ..ClusterConfig::default() };
+    let mut legacy = ElasticCluster::new(cfg);
+    legacy.quantum_ns = 100_000;
+    let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+    for (i, wl) in ALL_EXT.iter().enumerate() {
+        let slot = legacy.spawn(Mode::Elastic, NodeId((i % 4) as u8), wl, 512).unwrap();
+        jobs.push((slot, make(i)));
+    }
+    let legacy_reports = legacy.run_live(jobs);
+    legacy.verify().expect("legacy cluster invariants");
+
+    for threads in [1usize, 4] {
+        let run = run_sharded(1, threads, None);
+        let label = format!("legacy threads={threads}");
+        assert_reports_identical(&legacy_reports, &run.reports, &label);
+        assert_eq!(legacy.clock.now(), run.sim_ns, "legacy vs sharded simulated time");
+    }
+}
+
+/// The partition is a semantic knob (different shard counts confine
+/// the pager differently), but correctness is partition-invariant:
+/// every tenant's digest equals its DirectMem ground truth at every
+/// shard count.
+#[test]
+fn digests_are_invariant_across_partitions() {
+    let truths = truths();
+    for shards in [1usize, 2, 4] {
+        let run = run_sharded(shards, 2, None);
+        for (i, r) in run.reports.iter().enumerate() {
+            assert_eq!(
+                r.digest, truths[i],
+                "{}: digest != ground truth at {shards} shards",
+                ALL_EXT[i]
+            );
+        }
+    }
+}
+
+/// The mailbox layer itself: envelopes drain in canonical
+/// `(sender, seq)` order regardless of arrival order, and the driver
+/// (sender `usize::MAX`) sorts after every real shard.
+#[test]
+fn mailbox_drains_in_canonical_order() {
+    let mut from_b = ShardMailbox::default();
+    from_b.send(1, 700, ShardMsg::Leave { node: 4 });
+    from_b.send(1, 100, ShardMsg::Join { node: 8, frames: 96 });
+    let mut from_a = ShardMailbox::default();
+    from_a.send(0, 900, ShardMsg::SlotAppend { node: 8 });
+
+    let mut inbox = ShardMailbox::default();
+    assert!(inbox.inbox_is_empty());
+    // Arrival order scrambled (b's mail lands first, plus late driver
+    // mail): canonical order must come back out anyway.
+    inbox.deliver(from_b.drain_outbox());
+    inbox.deliver(from_a.drain_outbox());
+    inbox.deliver([ShardEnvelope {
+        from: usize::MAX,
+        seq: 0,
+        at_ns: 0,
+        msg: ShardMsg::Leave { node: 2 },
+    }]);
+    assert!(!inbox.inbox_is_empty());
+
+    let drained = inbox.drain_inbox();
+    assert!(inbox.inbox_is_empty());
+    let keys: Vec<(usize, u64)> = drained.iter().map(|e| (e.from, e.seq)).collect();
+    assert_eq!(keys, vec![(0, 0), (1, 0), (1, 1), (usize::MAX, 0)]);
+    assert_eq!(drained[0].msg, ShardMsg::SlotAppend { node: 8 });
+    assert_eq!(drained[1].msg, ShardMsg::Leave { node: 4 });
+    assert_eq!(drained[2].msg, ShardMsg::Join { node: 8, frames: 96 });
+}
