@@ -54,6 +54,24 @@ impl Args {
                 .collect()
         })
     }
+
+    /// `COUNT[:SIZE]` flag ("--far-nodes 2:4096"): `Ok(None)` when
+    /// absent, `Ok(Some((count, size)))` when well-formed (`size` is
+    /// `None` if the `:SIZE` half was omitted), `Err` otherwise.
+    pub fn flag_count_size(&self, name: &str) -> Result<Option<(usize, Option<u32>)>, String> {
+        let Some(v) = self.flags.get(name) else { return Ok(None) };
+        let (n, s) = match v.split_once(':') {
+            Some((n, s)) => (n, Some(s)),
+            None => (v.as_str(), None),
+        };
+        let parsed = n.parse::<usize>().ok().and_then(|count| match s {
+            Some(s) => s.parse::<u32>().ok().map(|size| (count, Some(size))),
+            None => Some((count, None)),
+        });
+        parsed
+            .map(Some)
+            .ok_or_else(|| format!("bad --{name} '{v}' (want COUNT or COUNT:SIZE)"))
+    }
 }
 
 #[cfg(test)]
@@ -78,6 +96,20 @@ mod tests {
         let a = parse(&["eval", "fig8", "--fast"]);
         assert_eq!(a.positional, vec!["eval", "fig8"]);
         assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn count_size_flag_forms() {
+        let a = parse(&["run", "--far-nodes", "2:4096"]);
+        assert_eq!(a.flag_count_size("far-nodes"), Ok(Some((2, Some(4096)))));
+        let bare = parse(&["run", "--far-nodes", "3"]);
+        assert_eq!(bare.flag_count_size("far-nodes"), Ok(Some((3, None))));
+        let absent = parse(&["run"]);
+        assert_eq!(absent.flag_count_size("far-nodes"), Ok(None));
+        for bad in ["x", "2:", ":64", "2:big"] {
+            let a = parse(&["run", &format!("--far-nodes={bad}")]);
+            assert!(a.flag_count_size("far-nodes").is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

@@ -778,6 +778,76 @@ pub fn scale(cfg: &EvalConfig) -> Table {
     t
 }
 
+/// `eval far-memory`: capacity beyond the sum of the peers. Two peer
+/// nodes plus one memory server; the footprint sweeps from fitting in
+/// peer RAM to 2x it. Rows at >= 1.00x keep more resident data than
+/// every peer frame combined — they complete only because reclaim
+/// demotes cold pages to the far tier — and every run's digest is
+/// checked against the DirectMem ground truth.
+pub fn far_memory(cfg: &EvalConfig) -> Table {
+    use crate::os::sched::direct_ground_truth;
+    let peer_bytes = cfg.nodes as u64 * cfg.node_frames as u64 * 4096;
+    // Default server: one node with 6x a peer's frames, enough to hold
+    // the 2.00x row's overflow (plus workload scratch) with headroom.
+    let far = if cfg.far_nodes > 0 { cfg.far_frame_vec() } else { vec![cfg.node_frames * 6] };
+    let far_desc: Vec<String> = far.iter().map(|f| f.to_string()).collect();
+    let mut t = Table::new(
+        &format!(
+            "Far-memory tier: {}x{}-frame peers + {} memory server(s) [{} frames] (eos, threshold 512)",
+            cfg.nodes,
+            cfg.node_frames,
+            far.len(),
+            far_desc.join("+"),
+        ),
+        &[
+            "algorithm",
+            "footprint",
+            "vs peers",
+            "sim time",
+            "far faults",
+            "peer faults",
+            "demoted",
+            "promoted",
+            "far bytes",
+            "digest",
+        ],
+    );
+    for wl in ["linear", "count_sort"] {
+        for pct in [60u64, 100, 150, 200] {
+            let fp = peer_bytes * pct / 100;
+            let mut truth_w = by_name_seeded(wl, Scale::Bytes(fp), cfg.seed)
+                .unwrap_or_else(|| panic!("unknown workload {wl}"));
+            let truth = direct_ground_truth(truth_w.as_mut());
+            let mut w = by_name_seeded(wl, Scale::Bytes(fp), cfg.seed).unwrap();
+            let mut sc = cfg.system_config(Mode::Elastic);
+            sc.far_frames = far.clone();
+            let mut sys = ElasticSystem::new(sc, 512);
+            let r = sys.run_workload(w.as_mut());
+            sys.verify().expect("cluster invariants with a memory server");
+            assert_eq!(r.digest, truth, "{wl} at {pct}% of peer RAM: digest diverged");
+            let m = &r.metrics;
+            t.row(vec![
+                wl.to_string(),
+                fmt_bytes(fp as f64),
+                format!("{:.2}x", fp as f64 / peer_bytes as f64),
+                fmt_ns(r.sim_ns as f64),
+                m.far_faults.to_string(),
+                m.remote_faults.to_string(),
+                m.demotions.to_string(),
+                m.promotions.to_string(),
+                fmt_bytes((m.bytes_demote + m.bytes_promote) as f64),
+                "ok".into(),
+            ]);
+        }
+    }
+    t.note(format!(
+        "rows at >= 1.00x exceed the {} of total peer RAM and finish only because cold \
+         pages demote to the memory server; a far-less cluster has nowhere to evict them",
+        fmt_bytes(peer_bytes as f64),
+    ));
+    t
+}
+
 /// `eval bench-json`: write BENCH_migration.json — a machine-readable
 /// perf snapshot of the migration paths (sequential-scan sim time and
 /// fault counts with prefetch off/on, drain time batched/unbatched,
@@ -1016,6 +1086,54 @@ pub fn bench_json(cfg: &EvalConfig) {
     std::fs::write("BENCH_scaling.json", &scaling_json).expect("write BENCH_scaling.json");
     println!("wrote BENCH_scaling.json");
     print!("{scaling_json}");
+
+    // Far tier: a footprint at 1.5x the total peer RAM, so roughly a
+    // third of the data lives on the memory server. Records the
+    // far-fault vs peer-fault split (counts, bytes, and the cost
+    // model's per-page charge for each lane) so CI tracks how much of
+    // the paging traffic the third tier absorbs.
+    let far_json = {
+        let peer_bytes = 2 * cfg.node_frames as u64 * 4096;
+        let far_frames = cfg.node_frames * 6;
+        let fp = peer_bytes * 3 / 2;
+        let mut truth_w = by_name_seeded("linear", Scale::Bytes(fp), cfg.seed)
+            .expect("linear workload exists");
+        let truth = direct_ground_truth(truth_w.as_mut());
+        let mut w = by_name_seeded("linear", Scale::Bytes(fp), cfg.seed).unwrap();
+        let mut sc = cfg.system_config(Mode::Elastic);
+        sc.node_frames = vec![cfg.node_frames; 2];
+        sc.far_frames = vec![far_frames];
+        let mut sys = ElasticSystem::new(sc, 512);
+        let r = sys.run_workload(w.as_mut());
+        sys.verify().expect("bench-json far cluster invariants");
+        assert_eq!(r.digest, truth, "bench-json far tenant diverged");
+        let m = &r.metrics;
+        let costs = crate::sim::costs::CostModel::default();
+        format!(
+            "{{\n  \"schema\": 1,\n  \"peer_frames\": {},\n  \"far_frames\": {far_frames},\n  \
+             \"footprint_pages\": {},\n  \"pages_beyond_peers\": {},\n  \
+             \"sim_ns\": {},\n  \"far_faults\": {},\n  \"remote_faults\": {},\n  \
+             \"demotions\": {},\n  \"promotions\": {},\n  \
+             \"bytes_demote\": {},\n  \"bytes_promote\": {},\n  \
+             \"peer_pull_page_ns\": {},\n  \"far_promote_page_ns\": {},\n  \
+             \"digest_ok\": true\n}}\n",
+            2 * cfg.node_frames as u64,
+            fp / 4096,
+            (fp / 4096).saturating_sub(peer_bytes / 4096),
+            r.sim_ns,
+            m.far_faults,
+            m.remote_faults,
+            m.demotions,
+            m.promotions,
+            m.bytes_demote,
+            m.bytes_promote,
+            costs.pull_ns(4096),
+            costs.promote_ns(4096),
+        )
+    };
+    std::fs::write("BENCH_far.json", &far_json).expect("write BENCH_far.json");
+    println!("wrote BENCH_far.json");
+    print!("{far_json}");
 }
 
 /// Run everything, in paper order.
@@ -1035,6 +1153,7 @@ pub fn run_all(cfg: &EvalConfig) {
     multi_tenant(cfg).emit("multi_tenant.txt");
     churn(cfg).emit("churn.txt");
     prefetch_sweep(cfg).emit("prefetch.txt");
+    far_memory(cfg).emit("far_memory.txt");
 }
 
 /// Dispatch by experiment name (CLI).
@@ -1056,6 +1175,7 @@ pub fn run_named(cfg: &EvalConfig, name: &str) -> bool {
         "churn" => churn(cfg).emit("churn.txt"),
         "prefetch" => prefetch_sweep(cfg).emit("prefetch.txt"),
         "scale" => scale(cfg).emit("scale.txt"),
+        "far-memory" | "far_memory" => far_memory(cfg).emit("far_memory.txt"),
         "bench-json" | "bench_json" => bench_json(cfg),
         "all" => run_all(cfg),
         _ => return false,

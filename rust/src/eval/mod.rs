@@ -43,6 +43,10 @@ pub struct EvalConfig {
     /// Simulation partition for the sharded engine's experiments (CLI
     /// `--shards`; 0 = follow `threads`).
     pub shards: usize,
+    /// Far-memory servers (CLI `--far-nodes N[:F]`; 0 = no far tier).
+    pub far_nodes: usize,
+    /// Frames per far-memory server (0 = same as `node_frames`).
+    pub far_frames: u32,
 }
 
 impl Default for EvalConfig {
@@ -59,6 +63,8 @@ impl Default for EvalConfig {
             prefetch: 0,
             threads: 1,
             shards: 0,
+            far_nodes: 0,
+            far_frames: 0,
         }
     }
 }
@@ -75,9 +81,24 @@ impl EvalConfig {
         }
     }
 
+    /// Per-server far frame count (the `node_frames` default applied).
+    pub fn far_frame_size(&self) -> u32 {
+        if self.far_frames > 0 {
+            self.far_frames
+        } else {
+            self.node_frames
+        }
+    }
+
+    /// The far-tier frame vector for cluster/system configs.
+    pub fn far_frame_vec(&self) -> Vec<u32> {
+        vec![self.far_frame_size(); self.far_nodes]
+    }
+
     pub fn system_config(&self, mode: Mode) -> SystemConfig {
         SystemConfig {
             node_frames: vec![self.node_frames; self.nodes],
+            far_frames: self.far_frame_vec(),
             mode,
             push_batch: self.push_batch,
             prefetch: self.prefetch,

@@ -63,6 +63,14 @@ USAGE:
                                                   at 5 ms sim time, node 1 leaves
                                                   at 20 ms; \"+3:1024@1s\" joins
                                                   node 3 with 1024 frames)
+                [--far-nodes N[:F]]              (far-memory tier: N memory-server
+                                                  nodes of F frames each — frames
+                                                  only, no tenants, no execution;
+                                                  F defaults to --frames; reclaim
+                                                  demotes cold pages there before
+                                                  peer-pushing, far faults promote
+                                                  them back in prefetch-window
+                                                  batches; default 0 = off)
                 [--threads N]                    (worker threads for the sharded
                                                   parallel engine; shards step
                                                   independently inside conservative
@@ -78,9 +86,10 @@ USAGE:
                  --footprint is then the TOTAL across processes)
   elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
                   ablation-policy|ablation-balance|multinode|multi-tenant|churn|
-                  prefetch|bench-json|scale|all>
+                  prefetch|bench-json|scale|far-memory|all>
                  [--fast] [--seed N] [--batch N] [--prefetch N] [--threads N] [--shards S]
-  elasticos cluster [--pages N] [--threshold N] [--prefetch N]
+                 [--far-nodes N[:F]]
+  elasticos cluster [--pages N] [--threshold N] [--prefetch N] [--far-nodes 0|1]
   elasticos info
 
 Workloads: dfs linear dijkstra block_sort heap_sort count_sort table_scan";
@@ -101,10 +110,17 @@ fn cmd_run(args: &Args) -> i32 {
         eprintln!("--batch must be >= 1 (1 = batching off)");
         return 2;
     }
+    let far_frames = match parse_far_frames(args, frames) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
 
     let procs: usize = args.flag_parse("procs").unwrap_or(1);
     if procs > 1 {
-        return cmd_run_multi(args, mode, threshold, frames, footprint, procs);
+        return cmd_run_multi(args, mode, threshold, frames, footprint, procs, far_frames);
     }
     // Cluster-scheduler flags only make sense with the multi-process
     // scheduler; refuse rather than silently ignore them (a single
@@ -126,6 +142,7 @@ fn cmd_run(args: &Args) -> i32 {
     };
     let mut sc = elastic_os::os::system::SystemConfig {
         node_frames: vec![frames, frames],
+        far_frames: far_frames.clone(),
         mode,
         push_batch,
         prefetch,
@@ -184,7 +201,34 @@ fn cmd_run(args: &Args) -> i32 {
             elastic_os::util::stats::fmt_ns(sys.batch_saved_ns() as f64),
         );
     }
+    if !far_frames.is_empty() {
+        println!(
+            "  far: servers={} far_faults={} demotions={} promotions={} \
+             bytes_demote={} bytes_promote={}",
+            far_frames.len(),
+            report.metrics.far_faults,
+            report.metrics.demotions,
+            report.metrics.promotions,
+            elastic_os::util::stats::fmt_bytes(report.metrics.bytes_demote as f64),
+            elastic_os::util::stats::fmt_bytes(report.metrics.bytes_promote as f64),
+        );
+    }
     0
+}
+
+/// Parse `--far-nodes N[:F]` into the per-server frame vector
+/// (`F` defaults to the peer `--frames` value).
+fn parse_far_frames(args: &Args, default_frames: u32) -> Result<Vec<u32>, String> {
+    match args.flag_count_size("far-nodes")? {
+        None => Ok(vec![]),
+        Some((n, size)) => {
+            let f = size.unwrap_or(default_frames);
+            if n > 0 && f < 8 {
+                return Err(format!("--far-nodes frame size {f} is below the 8-frame minimum"));
+            }
+            Ok(vec![f; n])
+        }
+    }
 }
 
 /// `run --procs N`: N elasticized processes — live steppers with
@@ -198,6 +242,7 @@ fn cmd_run_multi(
     frames: u32,
     footprint: u64,
     procs: usize,
+    far_frames: Vec<u32>,
 ) -> i32 {
     use elastic_os::os::kernel::ClusterConfig;
     use elastic_os::os::sched::{
@@ -263,6 +308,7 @@ fn cmd_run_multi(
 
     let cfg = ClusterConfig {
         node_frames: vec![frames; nodes],
+        far_frames: far_frames.clone(),
         push_batch,
         prefetch,
         ..ClusterConfig::default()
@@ -398,6 +444,16 @@ fn cmd_run_multi(
             elastic_os::util::stats::fmt_ns(cluster.batch_saved_ns() as f64),
         );
     }
+    if !far_frames.is_empty() {
+        let (ff, dem, pro) = reports.iter().fold((0u64, 0u64, 0u64), |(f, d, p), r| {
+            (f + r.metrics.far_faults, d + r.metrics.demotions, p + r.metrics.promotions)
+        });
+        println!(
+            "far: servers={} x {} frames, far_faults={ff} demotions={dem} promotions={pro}",
+            far_frames.len(),
+            far_frames.first().copied().unwrap_or(0),
+        );
+    }
     if live {
         println!("tenancy: live steppers (no recording pass; 0 B of O(ops) replay buffers)");
     } else {
@@ -446,6 +502,17 @@ fn cmd_eval(args: &Args) -> i32 {
     if let Some(s) = args.flag_parse::<usize>("shards") {
         cfg.shards = s;
     }
+    match args.flag_count_size("far-nodes") {
+        Ok(Some((n, size))) => {
+            cfg.far_nodes = n;
+            cfg.far_frames = size.unwrap_or(0); // 0 = follow node_frames
+        }
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
     cfg.seed = args.flag_parse::<u64>("seed");
     if experiments::run_named(&cfg, &name) {
         0
@@ -459,6 +526,20 @@ fn cmd_cluster(args: &Args) -> i32 {
     let pages: u32 = args.flag_parse("pages").unwrap_or(2048);
     let threshold: u32 = args.flag_parse("threshold").unwrap_or(32);
     let prefetch: u32 = args.flag_parse("prefetch").unwrap_or(0);
+    let far_nodes = match args.flag_count_size("far-nodes") {
+        Ok(n) => n.map(|(count, _)| count).unwrap_or(0),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if far_nodes > 1 {
+        eprintln!("the TCP demo supports at most one memory server (--far-nodes 0|1)");
+        return 2;
+    }
+    if far_nodes == 1 {
+        return cmd_cluster_far(pages, threshold, prefetch);
+    }
     match elastic_os::net::peer::run_local_pair_opts(pages, threshold, prefetch) {
         Ok((leader, worker)) => {
             let expect = elastic_os::net::peer::expected_digest(pages);
@@ -484,6 +565,42 @@ fn cmd_cluster(args: &Args) -> i32 {
                     prefetch, leader.stats.prefetched, worker.stats.prefetched
                 );
             }
+            if leader.digest == expect && worker.digest == expect {
+                println!("digest OK ({expect:#x})");
+                0
+            } else {
+                eprintln!("DIGEST MISMATCH: expected {expect:#x}");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("cluster failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// `cluster --far-nodes 1`: the two-peer demo plus a real-TCP memory
+/// server — the leader demotes half its pages there up front and
+/// promotes them back on demand while the scan runs.
+fn cmd_cluster_far(pages: u32, threshold: u32, prefetch: u32) -> i32 {
+    match elastic_os::net::peer::run_local_far(pages, threshold, prefetch) {
+        Ok((leader, worker, server)) => {
+            let expect = elastic_os::net::peer::expected_digest(pages);
+            println!("leader: node={} digest={:#x}", leader.node, leader.digest);
+            println!(
+                "  pulls={} demoted={} promoted={} jumps_sent={} bytes={}",
+                leader.stats.pulls,
+                leader.stats.demoted,
+                leader.stats.promoted,
+                leader.stats.jumps_sent,
+                leader.stats.bytes_sent
+            );
+            println!("worker: node={} digest={:#x}", worker.node, worker.digest);
+            println!(
+                "server: node={} demotes_received={} promotes_served={} bytes={}",
+                server.node, server.stats.demoted, server.stats.promoted, server.stats.bytes_sent
+            );
             if leader.digest == expect && worker.digest == expect {
                 println!("digest OK ({expect:#x})");
                 0

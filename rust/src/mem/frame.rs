@@ -26,6 +26,35 @@ impl Watermarks {
         let min = (capacity / 64).max(2);
         Watermarks { min, low: min + min / 4 + 1, high: min + min / 2 + 2 }
     }
+
+    /// Below the kswapd wake-up level at `free` free frames?
+    #[inline]
+    pub fn below_low(&self, free: u32) -> bool {
+        free <= self.low
+    }
+
+    /// At or above the reclaim target at `free` free frames?
+    #[inline]
+    pub fn at_high(&self, free: u32) -> bool {
+        free >= self.high
+    }
+
+    /// Frames that must be reclaimed (or demoted) to reach `high` from
+    /// `free` free frames — never zero, so a reclaim round always asks
+    /// for at least one page. Shared by kswapd batch sizing and the
+    /// far-tier demotion trigger.
+    #[inline]
+    pub fn reclaim_need(&self, free: u32) -> u32 {
+        self.high.saturating_sub(free).max(1)
+    }
+
+    /// No speculative headroom left: pulling more pages at `free` free
+    /// frames would drop below the reclaim target and trigger reclaim.
+    /// The prefetch window and far-tier promotion windows stop here.
+    #[inline]
+    pub fn no_headroom(&self, free: u32) -> bool {
+        free <= self.high
+    }
 }
 
 /// A node's frame pool: flat backing storage plus a free list.
@@ -103,12 +132,12 @@ impl FramePool {
 
     /// Below the kswapd wake-up level?
     pub fn below_low(&self) -> bool {
-        self.free_frames() <= self.watermarks.low
+        self.watermarks.below_low(self.free_frames())
     }
 
     /// At or above the reclaim target?
     pub fn at_high(&self) -> bool {
-        self.free_frames() >= self.watermarks.high
+        self.watermarks.at_high(self.free_frames())
     }
 
     #[inline]
@@ -156,6 +185,24 @@ mod tests {
             assert!(w.low < w.high, "cap={cap}");
             assert!(w.high < cap, "cap={cap}");
         }
+    }
+
+    #[test]
+    fn watermark_helpers_agree_with_thresholds() {
+        let w = Watermarks::for_capacity(1024);
+        // below_low / at_high are inclusive at their respective levels
+        assert!(w.below_low(w.low));
+        assert!(!w.below_low(w.low + 1));
+        assert!(w.at_high(w.high));
+        assert!(!w.at_high(w.high - 1));
+        // reclaim_need: distance to high, floored at one page
+        assert_eq!(w.reclaim_need(0), w.high);
+        assert_eq!(w.reclaim_need(w.high - 3), 3);
+        assert_eq!(w.reclaim_need(w.high), 1);
+        assert_eq!(w.reclaim_need(w.high + 100), 1);
+        // no_headroom flips exactly where at_high stops holding + 1
+        assert!(w.no_headroom(w.high));
+        assert!(!w.no_headroom(w.high + 1));
     }
 
     #[test]

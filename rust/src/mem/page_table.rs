@@ -20,7 +20,7 @@ use super::addr::{FrameId, NodeId, Vpn, MAX_NODES};
 /// Packed page-table entry.
 ///
 /// ```text
-/// bits 0..2   state     (0 = unmapped, 1 = resident)
+/// bits 0..2   state     (0 = unmapped, 1 = resident, 2 = far)
 /// bit  2      referenced (PG_ACCESSED analogue)
 /// bit  3      dirty
 /// bit  4      pinned     (never evicted/pushed)
@@ -29,12 +29,19 @@ use super::addr::{FrameId, NodeId, Vpn, MAX_NODES};
 /// bits 8..16  owner node (0..MAX_NODES; 8 bits, full `NodeId` range)
 /// bits 32..64 frame id within the owner's pool
 /// ```
+///
+/// State 2 (`far`) marks a page demoted to a far-memory server: the
+/// node/frame fields point into the *memory server's* pool, the page is
+/// on no LRU list, and any access must promote it back to a peer frame
+/// first. `is_resident()` deliberately stays peer-only, so every
+/// existing reclaim/push/prefetch filter skips far pages for free.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Pte(u64);
 
 const ST_MASK: u64 = 0b11;
 const ST_UNMAPPED: u64 = 0;
 const ST_RESIDENT: u64 = 1;
+const ST_FAR: u64 = 2;
 const FL_REF: u64 = 1 << 2;
 const FL_DIRTY: u64 = 1 << 3;
 const FL_PIN: u64 = 1 << 4;
@@ -51,6 +58,12 @@ impl Pte {
         Pte(ST_RESIDENT | ((node.0 as u64) << NODE_SHIFT) | ((frame.0 as u64) << FRAME_SHIFT))
     }
 
+    /// A far-resident entry: (node, frame) address a memory server.
+    #[inline]
+    pub fn far(node: NodeId, frame: FrameId) -> Pte {
+        Pte(ST_FAR | ((node.0 as u64) << NODE_SHIFT) | ((frame.0 as u64) << FRAME_SHIFT))
+    }
+
     #[inline]
     pub fn is_unmapped(self) -> bool {
         self.0 & ST_MASK == ST_UNMAPPED
@@ -59,6 +72,12 @@ impl Pte {
     #[inline]
     pub fn is_resident(self) -> bool {
         self.0 & ST_MASK == ST_RESIDENT
+    }
+
+    /// Demoted to a far-memory server?
+    #[inline]
+    pub fn is_far(self) -> bool {
+        self.0 & ST_MASK == ST_FAR
     }
 
     #[inline]
@@ -138,6 +157,7 @@ pub struct ElasticPageTable {
     base_vpn: u64,
     ptes: Vec<Pte>,
     resident_per_node: [u32; MAX_NODES],
+    far_per_node: [u32; MAX_NODES],
 }
 
 impl ElasticPageTable {
@@ -147,6 +167,7 @@ impl ElasticPageTable {
             base_vpn,
             ptes: vec![Pte::UNMAPPED; n_pages as usize],
             resident_per_node: [0; MAX_NODES],
+            far_per_node: [0; MAX_NODES],
         }
     }
 
@@ -212,11 +233,42 @@ impl ElasticPageTable {
         self.resident_per_node[node.0 as usize] += 1;
     }
 
+    /// Demote a peer-resident page to a far-memory server's (node,
+    /// frame). Dirty/pinned survive (a pinned page should never get
+    /// here — asserted); referenced/prefetched are per-residence and
+    /// reset, exactly as in `relocate`.
+    pub fn demote(&mut self, idx: PageIdx, node: NodeId, frame: FrameId) {
+        let pte = &mut self.ptes[idx as usize];
+        debug_assert!(pte.is_resident(), "demoting a non-resident page {idx}");
+        debug_assert!(!pte.pinned(), "demoting a pinned page {idx}");
+        let old_node = pte.node();
+        let mut new = Pte::far(node, frame);
+        new.set_dirty(pte.dirty());
+        *pte = new;
+        self.resident_per_node[old_node.0 as usize] -= 1;
+        self.far_per_node[node.0 as usize] += 1;
+    }
+
+    /// Promote a far page back to a peer's (node, frame) — the inverse
+    /// of `demote`. Flags behave like `relocate`.
+    pub fn promote(&mut self, idx: PageIdx, node: NodeId, frame: FrameId) {
+        let pte = &mut self.ptes[idx as usize];
+        debug_assert!(pte.is_far(), "promoting a page {idx} that is not far-resident");
+        let old_node = pte.node();
+        let mut new = Pte::resident(node, frame);
+        new.set_dirty(pte.dirty());
+        *pte = new;
+        self.far_per_node[old_node.0 as usize] -= 1;
+        self.resident_per_node[node.0 as usize] += 1;
+    }
+
     /// Unmap a page entirely (used by tests and area teardown).
     pub fn unmap(&mut self, idx: PageIdx) {
         let pte = &mut self.ptes[idx as usize];
         if pte.is_resident() {
             self.resident_per_node[pte.node().0 as usize] -= 1;
+        } else if pte.is_far() {
+            self.far_per_node[pte.node().0 as usize] -= 1;
         }
         *pte = Pte::UNMAPPED;
     }
@@ -232,6 +284,17 @@ impl ElasticPageTable {
         self.resident_per_node.iter().sum()
     }
 
+    /// Number of pages demoted to far-memory server `node`.
+    #[inline]
+    pub fn far_at(&self, node: NodeId) -> u32 {
+        self.far_per_node[node.0 as usize]
+    }
+
+    /// Total far-resident pages across all memory servers.
+    pub fn total_far(&self) -> u32 {
+        self.far_per_node.iter().sum()
+    }
+
     /// Iterate (idx, pte) over all resident pages.
     pub fn iter_resident(&self) -> impl Iterator<Item = (PageIdx, Pte)> + '_ {
         self.ptes
@@ -241,15 +304,29 @@ impl ElasticPageTable {
             .map(|(i, p)| (i as PageIdx, *p))
     }
 
+    /// Iterate (idx, pte) over all far-resident pages.
+    pub fn iter_far(&self) -> impl Iterator<Item = (PageIdx, Pte)> + '_ {
+        self.ptes
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_far())
+            .map(|(i, p)| (i as PageIdx, *p))
+    }
+
     /// Full-table invariant check (O(n); tests only):
-    /// * per-node resident counters match the PTE contents,
-    /// * no two pages share a (node, frame) slot.
+    /// * per-node resident and far counters match the PTE contents,
+    /// * no two pages share a (node, frame) slot (resident or far).
     pub fn verify(&self) -> Result<(), String> {
         let mut counts = [0u32; MAX_NODES];
+        let mut far_counts = [0u32; MAX_NODES];
         let mut seen = std::collections::HashSet::new();
         for (i, p) in self.ptes.iter().enumerate() {
-            if p.is_resident() {
-                counts[p.node().0 as usize] += 1;
+            if p.is_resident() || p.is_far() {
+                if p.is_resident() {
+                    counts[p.node().0 as usize] += 1;
+                } else {
+                    far_counts[p.node().0 as usize] += 1;
+                }
                 if !seen.insert((p.node().0, p.frame().0)) {
                     return Err(format!(
                         "page {i} shares frame {:?} on {:?} with another page",
@@ -263,6 +340,12 @@ impl ElasticPageTable {
             return Err(format!(
                 "resident counters drifted: cached {:?} actual {:?}",
                 self.resident_per_node, counts
+            ));
+        }
+        if far_counts != self.far_per_node {
+            return Err(format!(
+                "far counters drifted: cached {:?} actual {:?}",
+                self.far_per_node, far_counts
             ));
         }
         Ok(())
@@ -359,6 +442,66 @@ mod tests {
         assert!(t.get(3).is_unmapped());
         assert_eq!(t.total_resident(), 0);
         t.verify().unwrap();
+    }
+
+    #[test]
+    fn far_state_round_trips_through_demote_and_promote() {
+        let mut t = ElasticPageTable::new(0, 16);
+        t.map(4, n(0), FrameId(9));
+        t.get_mut(4).set_dirty(true);
+        t.get_mut(4).set_referenced(true);
+        t.demote(4, n(2), FrameId(1));
+        let p = t.get(4);
+        assert!(p.is_far() && !p.is_resident() && !p.is_unmapped());
+        assert_eq!(p.node(), n(2));
+        assert_eq!(p.frame(), FrameId(1));
+        assert!(p.dirty(), "dirty must survive demotion");
+        assert!(!p.referenced(), "referenced must reset on demotion");
+        assert_eq!(t.resident_at(n(0)), 0);
+        assert_eq!(t.far_at(n(2)), 1);
+        assert_eq!(t.total_far(), 1);
+        t.verify().unwrap();
+
+        t.promote(4, n(1), FrameId(3));
+        let p = t.get(4);
+        assert!(p.is_resident() && !p.is_far());
+        assert_eq!(p.node(), n(1));
+        assert!(p.dirty());
+        assert_eq!(t.far_at(n(2)), 0);
+        assert_eq!(t.resident_at(n(1)), 1);
+        t.verify().unwrap();
+    }
+
+    #[test]
+    fn unmap_clears_far_pages() {
+        let mut t = ElasticPageTable::new(0, 16);
+        t.map(2, n(0), FrameId(5));
+        t.demote(2, n(3), FrameId(0));
+        t.unmap(2);
+        assert!(t.get(2).is_unmapped());
+        assert_eq!(t.total_far(), 0);
+        t.verify().unwrap();
+    }
+
+    #[test]
+    fn iter_far_finds_only_far_pages() {
+        let mut t = ElasticPageTable::new(0, 16);
+        t.map(1, n(0), FrameId(1));
+        t.map(2, n(0), FrameId(2));
+        t.demote(2, n(2), FrameId(0));
+        let far: Vec<PageIdx> = t.iter_far().map(|(i, _)| i).collect();
+        assert_eq!(far, vec![2]);
+        let res: Vec<PageIdx> = t.iter_resident().map(|(i, _)| i).collect();
+        assert_eq!(res, vec![1]);
+    }
+
+    #[test]
+    fn verify_catches_far_frame_aliasing() {
+        let mut t = ElasticPageTable::new(0, 10);
+        t.map(1, n(0), FrameId(7));
+        t.map(2, n(0), FrameId(3));
+        t.demote(2, n(0), FrameId(7)); // aliases page 1's (node, frame)
+        assert!(t.verify().is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! announce.
 
 use crate::mem::NodeId;
+use crate::os::membership::NodeRole;
 use crate::util::{Dec, DecodeError, Enc};
 
 /// A node's self-description.
@@ -25,6 +26,9 @@ pub struct Announce {
     pub port: u16,
     pub total_frames: u32,
     pub free_frames: u32,
+    /// What the node contributes: an elastic peer, or a far-memory
+    /// server announcing frames-only capacity.
+    pub role: NodeRole,
 }
 
 impl Announce {
@@ -35,6 +39,7 @@ impl Announce {
         e.u16(self.port);
         e.u32(self.total_frames);
         e.u32(self.free_frames);
+        e.u8(self.role.as_u8());
         e.into_vec()
     }
 
@@ -46,6 +51,8 @@ impl Announce {
             port: d.u16()?,
             total_frames: d.u32()?,
             free_frames: d.u32()?,
+            role: NodeRole::from_u8(d.u8()?)
+                .ok_or(DecodeError::BadValue { what: "Announce.role" })?,
         })
     }
 }
@@ -151,6 +158,7 @@ mod tests {
             port: 7000 + node as u16,
             total_frames: 8192,
             free_frames: free,
+            role: NodeRole::Peer,
         }
     }
 
@@ -198,13 +206,21 @@ mod tests {
     fn announce_codec_edge_values() {
         // Empty address, min/max numeric fields.
         for a in [
-            Announce { node: NodeId(0), addr: String::new(), port: 0, total_frames: 0, free_frames: 0 },
+            Announce {
+                node: NodeId(0),
+                addr: String::new(),
+                port: 0,
+                total_frames: 0,
+                free_frames: 0,
+                role: NodeRole::Peer,
+            },
             Announce {
                 node: NodeId(u8::MAX),
                 addr: "a".repeat(255),
                 port: u16::MAX,
                 total_frames: u32::MAX,
                 free_frames: u32::MAX,
+                role: NodeRole::MemoryServer,
             },
         ] {
             assert_eq!(Announce::decode(&a.encode()).unwrap(), a, "round trip for {a:?}");
@@ -214,6 +230,13 @@ mod tests {
         for cut in 0..enc.len() {
             assert!(Announce::decode(&enc[..cut]).is_err(), "cut at {cut}");
         }
+        // An unknown role byte is a decode error, not a default.
+        let mut bad = ann(1, 2).encode();
+        *bad.last_mut().unwrap() = 7;
+        assert!(matches!(
+            Announce::decode(&bad),
+            Err(DecodeError::BadValue { what: "Announce.role" })
+        ));
     }
 
     #[test]

@@ -76,6 +76,12 @@ pub struct PeerStats {
     /// Pages that rode along with a faulting pull in a batched reply
     /// (one round-trip and one wire latency for the whole window).
     pub prefetched: u64,
+    /// Far tier: pages shipped to a memory server in `DemoteBatch`es
+    /// (on the server report: pages deposited with it).
+    pub demoted: u64,
+    /// Far tier: pages brought back via `PromoteReq`/`PromoteData`
+    /// (on the server report: pages it served back).
+    pub promoted: u64,
 }
 
 /// Outcome of a peer session.
@@ -122,6 +128,12 @@ pub struct Peer {
     /// `PullBatchReq` (0 = per-page pulls).
     prefetch: u32,
     shell: Option<ProcessMeta>,
+    /// Connection to a far-memory server (frames only, no execution),
+    /// if one is attached.
+    far: Option<Conn>,
+    /// Pages this peer has demoted to the far server (the far half of
+    /// its page table: a miss here is a far fault, not a peer pull).
+    far_pages: std::collections::HashSet<u32>,
 }
 
 impl Peer {
@@ -146,6 +158,73 @@ impl Peer {
             threshold,
             prefetch: 0,
             shell: None,
+            far: None,
+            far_pages: std::collections::HashSet::new(),
+        }
+    }
+
+    /// Attach a far-memory server (leader side): pages demoted there
+    /// come back on demand as `PromoteReq`/`PromoteData` round-trips.
+    pub fn attach_far(&mut self, addr: &str) -> Result<()> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to far server {addr}"))?;
+        self.far = Some(Conn::new(stream)?);
+        Ok(())
+    }
+
+    /// Release the far server: send `Bye` so its serve loop exits.
+    pub fn detach_far(&mut self) -> Result<()> {
+        if let Some(mut far) = self.far.take() {
+            far.send(&Msg::Bye, &mut self.stats)?;
+        }
+        Ok(())
+    }
+
+    /// Demote locally-resident pages in `[lo, hi)` to the far server
+    /// in `MAX_BATCH`-bounded `DemoteBatch`es (memory pressure: the
+    /// frames are freed here, the bytes live on the server). Returns
+    /// how many pages moved.
+    pub fn demote_range(&mut self, lo: u32, hi: u32) -> Result<u32> {
+        let far = self.far.as_mut().context("no far server attached")?;
+        let idxs: Vec<u32> = (lo..hi).filter(|p| self.store.contains_key(p)).collect();
+        let mut moved = 0u32;
+        for chunk in idxs.chunks(super::proto::MAX_BATCH) {
+            let pages: Vec<(u32, Vec<u8>)> = chunk
+                .iter()
+                .map(|p| (*p, self.store.remove(p).expect("filtered to resident pages")))
+                .collect();
+            moved += pages.len() as u32;
+            for (p, _) in &pages {
+                self.far_pages.insert(*p);
+            }
+            far.send(&Msg::DemoteBatch { pages }, &mut self.stats)?;
+        }
+        self.stats.demoted += moved as u64;
+        Ok(moved)
+    }
+
+    /// Far fault: promote the faulting page plus up to the prefetch
+    /// window of spatially-following far pages in one round-trip.
+    fn promote_window(&mut self, p: u32) -> Result<()> {
+        let window = self.prefetch.min(super::proto::MAX_BATCH as u32 - 1);
+        let idxs: Vec<u32> =
+            (p..p + 1 + window).filter(|i| *i == p || self.far_pages.contains(i)).collect();
+        let far = self.far.as_mut().context("far fault with no far server attached")?;
+        far.send(&Msg::PromoteReq { idxs }, &mut self.stats)?;
+        match far.recv()? {
+            Msg::PromoteData { pages } => {
+                anyhow::ensure!(
+                    pages.first().map(|(i, _)| *i) == Some(p),
+                    "promote reply missing the faulting page {p}"
+                );
+                for (i, data) in pages {
+                    self.far_pages.remove(&i);
+                    self.stats.promoted += 1;
+                    self.store.insert(i, data);
+                }
+                Ok(())
+            }
+            m => bail!("expected PromoteData, got {m:?}"),
         }
     }
 
@@ -295,6 +374,14 @@ impl Peer {
                 task.pos += 1;
                 continue;
             }
+            if self.far_pages.contains(&p) {
+                // Far fault: the page lives on the memory server, not
+                // the peer — promote it (plus its window) back. Far
+                // faults never feed the jump counter: jumping to the
+                // peer would not dodge the far server's latency.
+                self.promote_window(p)?;
+                continue; // p is local now; the loop re-reads it
+            }
             // remote page: the paper's counter counts *pulls*, so a
             // page we just pulled must not reset the streak
             consecutive_remote += 1;
@@ -348,6 +435,66 @@ impl Peer {
     }
 }
 
+/// A far-memory endpoint: frames only, no execution. Accepts
+/// `DemoteBatch` deposits and serves `PromoteReq` withdrawals over the
+/// same codec the peers speak, until the client says `Bye`.
+pub struct MemoryServer {
+    pub node: NodeId,
+    conn: Conn,
+    store: HashMap<u32, Vec<u8>>,
+    stats: PeerStats,
+}
+
+impl MemoryServer {
+    /// Accept one client connection.
+    pub fn accept(node: NodeId, listener: &TcpListener) -> Result<MemoryServer> {
+        let (stream, _) = listener.accept().context("accept")?;
+        Ok(MemoryServer {
+            node,
+            conn: Conn::new(stream)?,
+            store: HashMap::new(),
+            stats: PeerStats::default(),
+        })
+    }
+
+    /// Serve demotes and promotes until the client sends `Bye`.
+    pub fn serve(&mut self) -> Result<()> {
+        loop {
+            match self.conn.recv()? {
+                Msg::DemoteBatch { pages } => {
+                    self.stats.demoted += pages.len() as u64;
+                    for (idx, data) in pages {
+                        self.store.insert(idx, data);
+                    }
+                }
+                Msg::PromoteReq { idxs } => {
+                    // Serve in request order; pages we do not hold are
+                    // skipped (the client's window may overrun).
+                    let mut pages = Vec::with_capacity(idxs.len());
+                    for idx in idxs {
+                        if let Some(data) = self.store.remove(&idx) {
+                            self.stats.promoted += 1;
+                            pages.push((idx, data));
+                        }
+                    }
+                    self.conn.send(&Msg::PromoteData { pages }, &mut self.stats)?;
+                }
+                Msg::Bye => return Ok(()),
+                m => bail!("unexpected message at memory server: {m:?}"),
+            }
+        }
+    }
+
+    pub fn stats(&self) -> &PeerStats {
+        &self.stats
+    }
+
+    /// Pages currently deposited with this server.
+    pub fn resident(&self) -> usize {
+        self.store.len()
+    }
+}
+
 /// Convenience: run a full two-peer session over localhost, worker in
 /// a thread. Returns (leader report, worker report).
 pub fn run_local_pair(n_pages: u32, threshold: u32) -> Result<(PeerReport, PeerReport)> {
@@ -386,6 +533,61 @@ pub fn run_local_pair_opts(
 
     let worker_report = worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
     Ok((leader_report, worker_report))
+}
+
+/// [`run_local_pair_opts`] plus one far-memory server: the leader
+/// demotes the upper half of its seeded pages to the server up front
+/// (memory pressure), then promotes them back on demand while the scan
+/// runs — `DemoteBatch`/`PromoteReq`/`PromoteData` over a real wire.
+/// Returns (leader, worker, server) reports; the server's digest field
+/// is 0 (it never executes).
+pub fn run_local_far(
+    n_pages: u32,
+    threshold: u32,
+    prefetch: u32,
+) -> Result<(PeerReport, PeerReport, PeerReport)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let far_listener = TcpListener::bind("127.0.0.1:0")?;
+    let far_addr = far_listener.local_addr()?;
+    let split = n_pages / 2;
+
+    let worker = std::thread::spawn(move || -> Result<PeerReport> {
+        let mut peer = Peer::accept(NodeId(1), &listener, threshold)?;
+        peer.set_prefetch(prefetch);
+        peer.seed_pages(split, n_pages);
+        peer.worker_handshake()?;
+        let digest = peer.run_passive()?;
+        Ok(PeerReport { node: NodeId(1), digest, stats: peer.stats().clone() })
+    });
+    let server = std::thread::spawn(move || -> Result<PeerReport> {
+        let mut srv = MemoryServer::accept(NodeId(2), &far_listener)?;
+        srv.serve()?;
+        anyhow::ensure!(
+            srv.resident() == 0,
+            "{} pages stranded on the memory server",
+            srv.resident()
+        );
+        Ok(PeerReport { node: NodeId(2), digest: 0, stats: srv.stats().clone() })
+    });
+
+    let mut leader = Peer::connect(NodeId(0), &addr.to_string(), threshold)?;
+    leader.set_prefetch(prefetch);
+    leader.seed_pages(0, split);
+    leader.attach_far(&far_addr.to_string())?;
+    // Memory pressure: the upper half of the leader's own pages go to
+    // the far tier; the sequential scan will far-fault them all back.
+    leader.demote_range(split / 2, split)?;
+    let meta = ProcessMeta::minimal(42, "scan");
+    leader.leader_handshake(&meta)?;
+    let task = ScanTask { n_pages, pos: 0, acc: 0 };
+    let digest = leader.run_active(task)?;
+    leader.detach_far()?;
+    let leader_report = PeerReport { node: NodeId(0), digest, stats: leader.stats().clone() };
+
+    let worker_report = worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    let server_report = server.join().map_err(|_| anyhow::anyhow!("server panicked"))??;
+    Ok((leader_report, worker_report, server_report))
 }
 
 #[cfg(test)]

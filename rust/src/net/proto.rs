@@ -83,6 +83,17 @@ pub enum Msg {
     /// may overrun the peer's holdings); same wire layout as
     /// [`Msg::PushBatch`].
     PullBatchData { pages: Vec<(PageIdx, Vec<u8>)> },
+    /// Far tier: demote up to [`MAX_BATCH`] cold pages to a memory
+    /// server in ONE message (reclaim's third-tier analogue of
+    /// [`Msg::PushBatch`]; same wire layout, same bounds).
+    DemoteBatch { pages: Vec<(PageIdx, Vec<u8>)> },
+    /// Far tier: ask a memory server to return the faulting page plus
+    /// its promotion window, in scan order (layout of
+    /// [`Msg::PullBatchReq`]).
+    PromoteReq { idxs: Vec<PageIdx> },
+    /// Far tier: promotion reply from the memory server (layout of
+    /// [`Msg::PullBatchData`]).
+    PromoteData { pages: Vec<(PageIdx, Vec<u8>)> },
 }
 
 /// Decode the shared (count, then idx + page per entry) layout of
@@ -99,6 +110,20 @@ fn decode_page_batch(d: &mut Dec<'_>) -> Result<Vec<(PageIdx, Vec<u8>)>, DecodeE
         pages.push((idx, data));
     }
     Ok(pages)
+}
+
+/// Decode the shared (count, then idx per entry) layout of
+/// `PullBatchReq`/`PromoteReq`.
+fn decode_idx_batch(d: &mut Dec<'_>) -> Result<Vec<PageIdx>, DecodeError> {
+    let n = d.u32()? as usize;
+    if n > MAX_BATCH {
+        return Err(DecodeError::TooLong { len: n, limit: MAX_BATCH });
+    }
+    let mut idxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        idxs.push(d.u32()?);
+    }
+    Ok(idxs)
 }
 
 impl Msg {
@@ -120,6 +145,9 @@ impl Msg {
             Msg::PushBatch { .. } => 13,
             Msg::PullBatchReq { .. } => 14,
             Msg::PullBatchData { .. } => 15,
+            Msg::DemoteBatch { .. } => 16,
+            Msg::PromoteReq { .. } => 17,
+            Msg::PromoteData { .. } => 18,
         }
     }
 
@@ -155,14 +183,17 @@ impl Msg {
                 e.u8(node.0);
                 e.u32(*remaining);
             }
-            Msg::PushBatch { pages } | Msg::PullBatchData { pages } => {
+            Msg::PushBatch { pages }
+            | Msg::PullBatchData { pages }
+            | Msg::DemoteBatch { pages }
+            | Msg::PromoteData { pages } => {
                 e.u32(pages.len() as u32);
                 for (idx, data) in pages {
                     e.u32(*idx);
                     e.bytes(data);
                 }
             }
-            Msg::PullBatchReq { idxs } => {
+            Msg::PullBatchReq { idxs } | Msg::PromoteReq { idxs } => {
                 e.u32(idxs.len() as u32);
                 for idx in idxs {
                     e.u32(*idx);
@@ -191,18 +222,11 @@ impl Msg {
             11 => Msg::Leave { node: NodeId(d.u8()?) },
             12 => Msg::Drain { node: NodeId(d.u8()?), remaining: d.u32()? },
             13 => Msg::PushBatch { pages: decode_page_batch(&mut d)? },
-            14 => {
-                let n = d.u32()? as usize;
-                if n > MAX_BATCH {
-                    return Err(DecodeError::TooLong { len: n, limit: MAX_BATCH });
-                }
-                let mut idxs = Vec::with_capacity(n);
-                for _ in 0..n {
-                    idxs.push(d.u32()?);
-                }
-                Msg::PullBatchReq { idxs }
-            }
+            14 => Msg::PullBatchReq { idxs: decode_idx_batch(&mut d)? },
             15 => Msg::PullBatchData { pages: decode_page_batch(&mut d)? },
+            16 => Msg::DemoteBatch { pages: decode_page_batch(&mut d)? },
+            17 => Msg::PromoteReq { idxs: decode_idx_batch(&mut d)? },
+            18 => Msg::PromoteData { pages: decode_page_batch(&mut d)? },
             tag => return Err(DecodeError::BadTag { tag, what: "Msg" }),
         };
         Ok(msg)
@@ -273,6 +297,7 @@ mod tests {
             port: 7005,
             total_frames: 2048,
             free_frames: 2048,
+            role: crate::os::membership::NodeRole::Peer,
         };
         let m = Msg::Join { announce: a.encode() };
         match Msg::decode(&m.encode()).unwrap() {
@@ -349,7 +374,7 @@ mod tests {
 
     #[test]
     fn oversized_batch_count_rejected_not_allocated() {
-        for tag in [13u8, 14, 15] {
+        for tag in [13u8, 14, 15, 16, 17, 18] {
             let mut e = Enc::new();
             e.u8(tag);
             e.u32(MAX_BATCH as u32 + 1);
@@ -358,6 +383,64 @@ mod tests {
                 "tag {tag} must reject an oversized batch count"
             );
         }
+    }
+
+    #[test]
+    fn far_tier_variants_round_trip() {
+        let pages: Vec<(PageIdx, Vec<u8>)> =
+            (0..3).map(|i| (i * 11, vec![i as u8 + 1; 4096])).collect();
+        round_trip(Msg::DemoteBatch { pages: pages.clone() });
+        round_trip(Msg::PromoteData { pages });
+        round_trip(Msg::PromoteReq { idxs: vec![3, 4, 5] });
+        round_trip(Msg::DemoteBatch { pages: vec![] });
+        round_trip(Msg::PromoteReq { idxs: vec![] });
+        round_trip(Msg::PromoteData { pages: vec![] });
+    }
+
+    #[test]
+    fn far_tier_batches_share_the_peer_batch_geometry() {
+        // The kernel reuses the PushBatch/PullBatch byte accounting for
+        // demote/promote traffic — the layouts must stay identical.
+        for n in [0usize, 1, 5] {
+            let pages: Vec<(PageIdx, Vec<u8>)> =
+                (0..n as u32).map(|i| (i, vec![0; 4096])).collect();
+            assert_eq!(
+                Msg::DemoteBatch { pages: pages.clone() }.wire_size(),
+                Msg::PushBatch { pages: pages.clone() }.wire_size(),
+                "n={n}"
+            );
+            assert_eq!(
+                Msg::PromoteData { pages: pages.clone() }.wire_size(),
+                Msg::PullBatchData { pages }.wire_size(),
+                "n={n}"
+            );
+            let idxs: Vec<PageIdx> = (0..n as u32).collect();
+            assert_eq!(
+                Msg::PromoteReq { idxs: idxs.clone() }.wire_size(),
+                Msg::PullBatchReq { idxs }.wire_size(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_far_batches_error_instead_of_panicking() {
+        let msg = Msg::DemoteBatch { pages: vec![(1, vec![7; 4096]), (2, vec![8; 4096])] };
+        let enc = msg.encode();
+        for cut in [1usize, 5, 9, 12, 100, enc.len() - 1] {
+            assert!(Msg::decode(&enc[..cut]).is_err(), "cut at {cut} must error");
+        }
+        let req = Msg::PromoteReq { idxs: vec![1, 2, 3] }.encode();
+        assert!(Msg::decode(&req[..req.len() - 2]).is_err());
+        let data = Msg::PromoteData { pages: vec![(9, vec![1; 4096])] }.encode();
+        assert!(Msg::decode(&data[..data.len() - 1]).is_err());
+        // oversized per-page payload inside a demote batch
+        let mut e = Enc::new();
+        e.u8(16);
+        e.u32(1);
+        e.u32(0);
+        e.bytes(&vec![0u8; MAX_PAGE + 1]);
+        assert!(matches!(Msg::decode(e.as_slice()), Err(DecodeError::TooLong { .. })));
     }
 
     #[test]

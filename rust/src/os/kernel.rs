@@ -35,6 +35,7 @@ use crate::mem::tlb::Tlb;
 use crate::net::cluster::{Announce, Registry};
 use crate::net::proto::{Msg, MAX_BATCH};
 use crate::os::manager::{EosManager, ManagerAction, NodeInfo, ProcCounters};
+use crate::os::membership::NodeRole;
 use crate::os::metrics::Metrics;
 use crate::os::policy::{Decision, JumpPolicy, NeverJump};
 use crate::os::system::Mode;
@@ -70,6 +71,13 @@ pub struct ClusterConfig {
     /// the *same* remote node ride along in one batched pull. 0 = off
     /// (legacy single-page pulls, bit-identical).
     pub prefetch: u32,
+    /// Far-memory tier (`--far-nodes`): frames contributed by each
+    /// memory-server node. Servers occupy the node-id slots *after*
+    /// every peer, hold only demoted pages (no tenants, no execution,
+    /// no stretch/jump targets), and are reached through the priced
+    /// demote/promote lane of the [`CostModel`]. Empty = no far tier
+    /// (bit-identical to the peer-only engine).
+    pub far_frames: Vec<u32>,
 }
 
 impl Default for ClusterConfig {
@@ -83,6 +91,7 @@ impl Default for ClusterConfig {
             reclaim_batch: 32,
             push_batch: 1,
             prefetch: 0,
+            far_frames: vec![],
         }
     }
 }
@@ -104,6 +113,11 @@ pub struct NodeKernel {
     /// slot and is masked out of every placement / stretch / push
     /// decision instead of shifting everyone else's id.
     pub(crate) live: Vec<bool>,
+    /// Role mask parallel to `pools`: peers run tenants and exchange
+    /// pages; memory servers only hold demoted far pages. Roles are
+    /// fixed at a slot for the life of the cluster (servers occupy the
+    /// trailing slots after every peer and never retire).
+    pub(crate) roles: Vec<NodeRole>,
     pub(crate) lru: ClusterLru,
     pub(crate) manager: EosManager,
     /// Cluster membership book from the announce protocol; refreshed
@@ -143,10 +157,19 @@ pub struct NodeKernel {
 
 impl NodeKernel {
     pub fn new(cfg: ClusterConfig) -> NodeKernel {
-        assert!(!cfg.node_frames.is_empty() && cfg.node_frames.len() <= MAX_NODES);
-        let pools: Vec<FramePool> = cfg.node_frames.iter().map(|&f| FramePool::new(f)).collect();
+        let n_peers = cfg.node_frames.len();
+        let total = n_peers + cfg.far_frames.len();
+        assert!(n_peers >= 1 && total <= MAX_NODES);
+        // Memory servers occupy the trailing node-id slots, so peer ids
+        // are identical with and without a far tier.
+        let mut node_frames = cfg.node_frames;
+        node_frames.extend_from_slice(&cfg.far_frames);
+        let roles: Vec<NodeRole> = (0..total)
+            .map(|i| if i < n_peers { NodeRole::Peer } else { NodeRole::MemoryServer })
+            .collect();
+        let pools: Vec<FramePool> = node_frames.iter().map(|&f| FramePool::new(f)).collect();
         let mut registry = Registry::new(u64::MAX);
-        for (i, &frames) in cfg.node_frames.iter().enumerate() {
+        for (i, &frames) in node_frames.iter().enumerate() {
             registry.observe(
                 Announce {
                     node: NodeId(i as u8),
@@ -154,6 +177,7 @@ impl NodeKernel {
                     port: 7000 + i as u16,
                     total_frames: frames,
                     free_frames: frames,
+                    role: roles[i],
                 },
                 0,
             );
@@ -169,12 +193,13 @@ impl NodeKernel {
         let r2 = Msg::PullBatchReq { idxs: vec![0, 1] }.wire_size();
         NodeKernel {
             live: vec![true; pools.len()],
+            roles,
             pools,
             lru: ClusterLru::new(),
             manager: EosManager::default(),
             registry,
             costs: cfg.costs,
-            node_frames: cfg.node_frames,
+            node_frames,
             balance_on_stretch: cfg.balance_on_stretch,
             pin_stack: cfg.pin_stack,
             stretch_data_segment: cfg.stretch_data_segment,
@@ -201,13 +226,20 @@ impl NodeKernel {
     /// same masking that already hides departed nodes, with no new
     /// logic on any hot path.
     pub fn new_sharded(cfg: ClusterConfig, owned: &[bool]) -> NodeKernel {
-        assert!(!cfg.node_frames.is_empty() && cfg.node_frames.len() <= MAX_NODES);
-        assert_eq!(owned.len(), cfg.node_frames.len(), "ownership mask must cover every slot");
-        assert!(owned.iter().any(|&o| o), "a shard must own at least one node");
+        let n_peers = cfg.node_frames.len();
+        let total = n_peers + cfg.far_frames.len();
+        assert!(n_peers >= 1 && total <= MAX_NODES);
+        assert_eq!(owned.len(), total, "ownership mask must cover every slot");
+        assert!(owned[..n_peers].iter().any(|&o| o), "a shard must own at least one peer");
         let mut kernel = NodeKernel::new(ClusterConfig {
-            node_frames: owned
+            node_frames: owned[..n_peers]
                 .iter()
                 .zip(&cfg.node_frames)
+                .map(|(&o, &f)| if o { f } else { 8 })
+                .collect(),
+            far_frames: owned[n_peers..]
+                .iter()
+                .zip(&cfg.far_frames)
                 .map(|(&o, &f)| if o { f } else { 8 })
                 .collect(),
             ..cfg
@@ -232,6 +264,8 @@ impl NodeKernel {
         self.pools.push(FramePool::empty());
         self.node_frames.push(0);
         self.live.push(false);
+        // Mid-run joins are always peers; servers exist from construction.
+        self.roles.push(NodeRole::Peer);
     }
 
     /// Wire bytes of an n-page `PushBatch`/`PullBatchData` message.
@@ -262,8 +296,47 @@ impl NodeKernel {
         self.live.iter().filter(|&&l| l).count()
     }
 
+    /// Number of live *peer* members (the nodes that can host tenants;
+    /// memory servers are excluded).
+    pub fn live_peer_count(&self) -> usize {
+        (0..self.pools.len())
+            .filter(|&i| self.live[i] && self.roles[i] == NodeRole::Peer)
+            .count()
+    }
+
     pub fn free_frames(&self, node: NodeId) -> u32 {
         self.pools[node.0 as usize].free_frames()
+    }
+
+    /// Role of a node slot.
+    pub fn role(&self, node: NodeId) -> NodeRole {
+        self.roles[node.0 as usize]
+    }
+
+    /// Is this slot a memory server (frames only; no tenants, no
+    /// execution, never a stretch/push/jump target)?
+    pub fn is_memory_server(&self, node: NodeId) -> bool {
+        self.roles.get(node.0 as usize).copied() == Some(NodeRole::MemoryServer)
+    }
+
+    /// Does this shard's kernel see a live far tier at all?
+    pub fn has_far_tier(&self) -> bool {
+        (0..self.pools.len()).any(|i| self.roles[i] == NodeRole::MemoryServer && self.live[i])
+    }
+
+    /// Demotion target: the lowest-id live memory server with at least
+    /// one free frame. Deterministic by construction (ids are dense and
+    /// stable), so sharded runs pick identically regardless of thread
+    /// schedule. `None` = no far tier / far tier full, and every caller
+    /// falls back to the peer-only behavior.
+    pub(crate) fn far_target(&self) -> Option<NodeId> {
+        (0..self.pools.len())
+            .find(|&i| {
+                self.roles[i] == NodeRole::MemoryServer
+                    && self.live[i]
+                    && self.pools[i].free_frames() > 0
+            })
+            .map(|i| NodeId(i as u8))
     }
 
     /// Frame-pool half of a node admission (the membership plane in
@@ -277,8 +350,10 @@ impl NodeKernel {
             self.pools.push(FramePool::new(frames));
             self.node_frames.push(frames);
             self.live.push(true);
+            self.roles.push(NodeRole::Peer);
         } else {
             debug_assert!(!self.live[slot], "admitting a node that is already live");
+            debug_assert_eq!(self.roles[slot], NodeRole::Peer, "memory-server slots never churn");
             debug_assert_eq!(self.pools[slot].used_frames(), 0, "rejoining slot still holds pages");
             self.pools[slot] = FramePool::new(frames);
             self.node_frames[slot] = frames;
@@ -317,12 +392,13 @@ impl NodeKernel {
     /// totals and free frames from the registry, plus that process's
     /// stretch mask. The view always has one entry per node *slot*
     /// (callers zip it positionally with per-node arrays); departed
-    /// slots advertise zero capacity, which every target picker
-    /// interprets as "never a candidate".
+    /// slots — and memory servers, which take no tenants — advertise
+    /// zero capacity, which every target picker interprets as "never a
+    /// candidate".
     pub(crate) fn view_for(&self, stretched: &[bool; MAX_NODES]) -> Vec<NodeInfo> {
         (0..self.pools.len())
             .map(|i| {
-                if !self.live[i] {
+                if !self.live[i] || self.roles[i] == NodeRole::MemoryServer {
                     return NodeInfo {
                         id: NodeId(i as u8),
                         total_frames: 0,
@@ -551,9 +627,15 @@ pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Resul
         if !kernel.live[p.running.0 as usize] {
             return Err(format!("pid{} executing on departed {}", p.pid, p.running));
         }
+        if kernel.roles[p.running.0 as usize] == NodeRole::MemoryServer {
+            return Err(format!("pid{} executing on memory server {}", p.pid, p.running));
+        }
         for (i, &s) in p.stretched.iter().enumerate().take(kernel.pools.len()) {
             if s && !kernel.live[i] {
                 return Err(format!("pid{} still stretched to departed node{i}", p.pid));
+            }
+            if s && kernel.roles[i] == NodeRole::MemoryServer {
+                return Err(format!("pid{} stretched to memory server node{i}", p.pid));
             }
         }
         for (idx, pte) in p.pt.iter_resident() {
@@ -582,18 +664,69 @@ pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Resul
                 ));
             }
         }
+        // Far pages: each lives on a live memory server, shares the
+        // frame-aliasing namespace with resident pages, and is on no
+        // reclaim LRU (servers hold frozen copies, not working sets).
+        for (idx, pte) in p.pt.iter_far() {
+            let n = pte.node().0 as usize;
+            if kernel.roles[n] != NodeRole::MemoryServer {
+                return Err(format!(
+                    "pid{} page {idx} demoted to non-server {}",
+                    p.pid,
+                    pte.node()
+                ));
+            }
+            if !kernel.live[n] {
+                return Err(format!(
+                    "pid{} page {idx} demoted to dead server {}",
+                    p.pid,
+                    pte.node()
+                ));
+            }
+            if !seen.insert((pte.node().0, pte.frame().0)) {
+                return Err(format!(
+                    "pid{} far page {idx} aliases frame {:?} on {}",
+                    p.pid,
+                    pte.frame(),
+                    pte.node()
+                ));
+            }
+            let key = PageKey { proc: slot as u32, idx };
+            if let Some(list) = kernel.lru.list_of(key) {
+                return Err(format!("pid{} far page {idx} on {list}'s LRU", p.pid));
+            }
+        }
     }
     for i in 0..kernel.pools.len() {
         let node = NodeId(i as u8);
         kernel.lru.verify(node)?;
         let resident: u32 = procs.iter().map(|p| p.pt.resident_at(node)).sum();
+        let far: u32 = procs.iter().map(|p| p.pt.far_at(node)).sum();
         let on_lru = kernel.lru.len(node);
-        if on_lru != resident {
-            return Err(format!("{node}: lru={on_lru} resident={resident}"));
-        }
         let used = kernel.pools[i].used_frames();
-        if used != resident {
-            return Err(format!("{node}: used_frames={used} resident={resident}"));
+        match kernel.roles[i] {
+            NodeRole::Peer => {
+                if far != 0 {
+                    return Err(format!("{node}: peer holds {far} far pages"));
+                }
+                if on_lru != resident {
+                    return Err(format!("{node}: lru={on_lru} resident={resident}"));
+                }
+                if used != resident {
+                    return Err(format!("{node}: used_frames={used} resident={resident}"));
+                }
+            }
+            NodeRole::MemoryServer => {
+                if resident != 0 {
+                    return Err(format!("{node}: server holds {resident} resident pages"));
+                }
+                if on_lru != 0 {
+                    return Err(format!("{node}: server has {on_lru} LRU entries"));
+                }
+                if used != far {
+                    return Err(format!("{node}: used_frames={used} far={far}"));
+                }
+            }
         }
     }
     Ok(())
@@ -968,8 +1101,15 @@ impl Engine<'_> {
         let idx = self.procs[cur].pt.idx(vpn);
         let mut pte = self.procs[cur].pt.get(idx);
 
+        // The far check must precede the node-mismatch check: a far
+        // pte's node is a memory server, which is never the executing
+        // node, but promotion — not a peer pull — is the only legal way
+        // back.
         if pte.is_unmapped() {
             self.minor_fault(idx);
+            pte = self.procs[cur].pt.get(idx);
+        } else if pte.is_far() {
+            self.far_fault(idx);
             pte = self.procs[cur].pt.get(idx);
         } else if pte.node() != self.procs[cur].running {
             self.remote_fault(idx);
@@ -1081,12 +1221,23 @@ impl Engine<'_> {
         self.pull_page(idx);
 
         // Locality-aware prefetch: pull the spatial window around the
-        // fault from the same owner in the same message. 0 pages
-        // prefetched (window empty, or prefetch off) keeps the legacy
+        // fault from the same owner in the same message — unless the
+        // jump policy vetoes the batch (a likely jump would strand the
+        // speculative pages on the node being left). 0 pages prefetched
+        // (window empty, prefetch off, or vetoed) keeps the legacy
         // single-page accounting below, so sparse access patterns cost
         // exactly what they always did.
-        let prefetched =
-            if self.kernel.prefetch > 0 { self.prefetch_adjacent(idx, owner_node) } else { 0 };
+        let prefetched = if self.kernel.prefetch > 0 {
+            let now = self.clock.now();
+            let window = self.kernel.prefetch;
+            if self.procs[cur].policy.on_batch_fault(node, owner_node, window, now) {
+                self.prefetch_adjacent(idx, owner_node)
+            } else {
+                0
+            }
+        } else {
+            0
+        };
 
         // Costs + counters: a pull is a request message out and a page
         // message back — batched into one request + one multi-page
@@ -1122,11 +1273,6 @@ impl Engine<'_> {
         }
         let now = self.clock.now();
         let running = self.procs[cur].running;
-        if prefetched > 0 {
-            // PolicyHook: let the policy see the batched-fault signal
-            // before it rules on the demand fault itself.
-            self.procs[cur].policy.on_batch_fault(running, owner_node, prefetched, now);
-        }
         let decision = self.procs[cur].policy.on_remote_fault(running, owner_node, now);
         if self.procs[cur].mode == Mode::Elastic {
             if let Decision::JumpTo(target) = decision {
@@ -1164,7 +1310,7 @@ impl Engine<'_> {
                 break;
             }
             let pool = &self.kernel.pools[run.0 as usize];
-            if pool.free_frames() <= pool.watermarks.high {
+            if pool.watermarks.no_headroom(pool.free_frames()) {
                 break;
             }
             let i2 = i2 as PageIdx;
@@ -1179,6 +1325,249 @@ impl Engine<'_> {
         pulled
     }
 
+    // ----- far tier (demote / promote) -------------------------------------
+
+    /// Far fault: the page was demoted to a memory server; promote it
+    /// back to the executing node, plus a speculative window of
+    /// adjacent far pages from the same server — the far-tier analogue
+    /// of [`Self::remote_fault`], priced on the [`CostModel`]'s far
+    /// lane. Memory servers are not jump targets, so the policy is only
+    /// consulted for its batch veto, never for a jump decision.
+    pub(crate) fn far_fault(&mut self, idx: PageIdx) {
+        let cur = self.cur;
+        let server = self.procs[cur].pt.get(idx).node();
+        let node = self.procs[cur].running;
+        debug_assert!(self.kernel.roles[server.0 as usize] == NodeRole::MemoryServer);
+
+        // Keep a sliver of headroom so the incoming page always fits
+        // (same rule as remote faults).
+        if self.kernel.pools[node.0 as usize].free_frames()
+            <= self.kernel.pools[node.0 as usize].watermarks.min
+        {
+            self.direct_reclaim(node);
+        }
+        self.promote_page(idx, true);
+
+        let window = if self.kernel.prefetch > 0 {
+            let now = self.clock.now();
+            let planned = self.kernel.prefetch;
+            if self.procs[cur].policy.on_batch_fault(node, server, planned, now) {
+                self.promote_adjacent(idx, server)
+            } else {
+                0
+            }
+        } else {
+            0
+        };
+
+        // Costs + counters: one PromoteReq out, one PromoteData back —
+        // same wire geometry as the peer pull batch (the codec tests
+        // prove the byte-level equality), priced on the far lane.
+        let n = 1 + window as u64;
+        let bytes = self.kernel.batch_req_bytes(n) + self.kernel.batch_data_bytes(n);
+        let batched_ns = self.kernel.costs.promote_batch_ns(n, self.kernel.batch_data_bytes(n));
+        let m = &mut self.procs[cur].metrics;
+        m.far_faults += 1;
+        m.promotions += n;
+        m.prefetch_pulled += window as u64;
+        m.bytes_promote += bytes;
+        self.clock.advance(batched_ns);
+        if window > 0 {
+            let unbatched_ns =
+                n * self.kernel.costs.promote_ns(self.kernel.batch_data_bytes(1));
+            self.kernel.batch_wire_saved_ns += unbatched_ns.saturating_sub(batched_ns);
+        }
+        self.kswapd(node);
+    }
+
+    /// Promote up to `kernel.prefetch` pages spatially adjacent to the
+    /// far-faulting page `idx` that live on the same `server`,
+    /// piggybacking on the fault's batched promote message. Same
+    /// headroom rule as [`Self::prefetch_adjacent`]: never dip below
+    /// the kswapd sleep watermark for a speculative page. Promoted
+    /// window pages enter the LRU cold and flagged, so wrong guesses
+    /// evict first and right guesses count as prefetch hits.
+    fn promote_adjacent(&mut self, idx: PageIdx, server: NodeId) -> u32 {
+        let cur = self.cur;
+        let run = self.procs[cur].running;
+        let limit = self.procs[cur].pt.len() as u64;
+        let mut pulled = 0u32;
+        for off in 1..=self.kernel.prefetch as u64 {
+            let i2 = idx as u64 + off;
+            if i2 >= limit {
+                break;
+            }
+            let pool = &self.kernel.pools[run.0 as usize];
+            if pool.watermarks.no_headroom(pool.free_frames()) {
+                break;
+            }
+            let i2 = i2 as PageIdx;
+            let pte = self.procs[cur].pt.get(i2);
+            if !pte.is_far() || pte.node() != server {
+                continue;
+            }
+            self.promote_page(i2, false);
+            self.procs[cur].pt.get_mut(i2).set_prefetched(true);
+            pulled += 1;
+        }
+        pulled
+    }
+
+    /// Move one far page of the current process back to its executing
+    /// node (data + table; no cost accounting — the caller charges the
+    /// whole promote batch once). When the executing node is completely
+    /// out of frames it performs a staged swap mirroring
+    /// [`Self::pull_page`]: copy the far page out, free its server
+    /// frame, demote a victim into that hole, then land the page.
+    pub(crate) fn promote_page(&mut self, idx: PageIdx, make_hot: bool) {
+        let cur = self.cur;
+        let run = self.procs[cur].running;
+        let pte = self.procs[cur].pt.get(idx);
+        debug_assert!(pte.is_far());
+        let server = pte.node();
+        let src_frame = pte.frame();
+        let key = PageKey { proc: cur as u32, idx };
+        if let Some(frame) = self.kernel.pools[run.0 as usize].alloc_reserve() {
+            {
+                let src_ptr =
+                    self.kernel.pools[server.0 as usize].frame_ptr(src_frame) as *const u8;
+                let dst_ptr = self.kernel.pools[run.0 as usize].frame_ptr(frame);
+                unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
+            }
+            self.kernel.pools[server.0 as usize].dealloc(src_frame);
+            self.procs[cur].pt.promote(idx, run, frame);
+            if make_hot {
+                self.kernel.lru.push_hot(run, key);
+            } else {
+                self.kernel.lru.push_cold(run, key);
+            }
+            let vpn = self.procs[cur].pt.vpn(idx);
+            self.procs[cur].tlb.invalidate(vpn);
+            return;
+        }
+        // Staged swap: the promote frees exactly one server frame, so a
+        // victim from the full executing node always has a place to go.
+        let mut buf = [0u8; PAGE_SIZE];
+        buf.copy_from_slice(self.kernel.pools[server.0 as usize].frame(src_frame));
+        self.kernel.pools[server.0 as usize].dealloc(src_frame);
+        // Coldest unpinned page on `run`, referenced or not — a forced
+        // swap, like pull_page's fallback.
+        let keys: Vec<PageKey> = self.kernel.lru.iter(run).collect();
+        let victim = keys
+            .into_iter()
+            .find(|k| !self.procs[k.proc as usize].pt.get(k.idx).pinned());
+        let Some(vkey) = victim else {
+            panic!(
+                "cluster out of memory: {run} full and no demotable victim \
+                 (footprints must fit in peer + far RAM)"
+            );
+        };
+        self.do_demote_batch(&[(vkey.proc as usize, vkey.idx)], server);
+        let frame = self.kernel.pools[run.0 as usize]
+            .alloc_reserve()
+            .expect("promote_page: freed a frame but allocation failed");
+        self.kernel.pools[run.0 as usize].frame_mut(frame).copy_from_slice(&buf);
+        self.procs[cur].pt.promote(idx, run, frame);
+        if make_hot {
+            self.kernel.lru.push_hot(run, key);
+        } else {
+            self.kernel.lru.push_cold(run, key);
+        }
+        let vpn = self.procs[cur].pt.vpn(idx);
+        self.procs[cur].tlb.invalidate(vpn);
+    }
+
+    /// Demote up to `max_n` of the coldest unpinned, unreferenced pages
+    /// on `from` to the far tier as one `DemoteBatch` message. Unlike
+    /// the peer push path there is no second-chance rotation: demotion
+    /// skims the genuinely cold tail, and anything hot-ish falls
+    /// through to the peer push that follows it in reclaim. Returns the
+    /// number of pages demoted (0 = no far tier, far tier full, or no
+    /// cold victim — callers fall back to peer pushes).
+    pub(crate) fn demote_cold(&mut self, from: NodeId, max_n: u32) -> u32 {
+        let Some(server) = self.kernel.far_target() else {
+            return 0;
+        };
+        let room = self.kernel.pools[server.0 as usize].free_frames();
+        let cap = max_n.min(room).min(MAX_BATCH as u32);
+        if cap == 0 {
+            return 0;
+        }
+        let mut victims: Vec<(usize, PageIdx)> = Vec::new();
+        for key in self.kernel.lru.harvest_cold(from, 2 * cap) {
+            if victims.len() as u32 >= cap {
+                break;
+            }
+            let owner = key.proc as usize;
+            let pte = self.procs[owner].pt.get(key.idx);
+            if pte.pinned() || pte.referenced() {
+                continue;
+            }
+            victims.push((owner, key.idx));
+        }
+        if victims.is_empty() {
+            return 0;
+        }
+        self.do_demote_batch(&victims, server);
+        victims.len() as u32
+    }
+
+    /// Move + charge one batched demote: every victim lands on the
+    /// memory server, the batch pays one far-lane wire charge, and
+    /// message bytes are attributed per victim (remainder to the
+    /// first) — the demote mirror of [`Self::do_push_batch`].
+    pub(crate) fn do_demote_batch(&mut self, victims: &[(usize, PageIdx)], server: NodeId) {
+        debug_assert!(!victims.is_empty());
+        for &(owner, idx) in victims {
+            self.demote_page(owner, idx, server);
+        }
+        let n = victims.len() as u64;
+        let bytes = self.kernel.batch_data_bytes(n);
+        let per = bytes / n;
+        let rem = bytes % n;
+        for (i, &(owner, _)) in victims.iter().enumerate() {
+            let p = &mut self.procs[owner];
+            p.metrics.demotions += 1;
+            p.metrics.bytes_demote += per + if i == 0 { rem } else { 0 };
+        }
+        let batched_ns = self.kernel.costs.demote_batch_ns(n, bytes);
+        self.clock.advance(batched_ns);
+        let unbatched_ns = n * self.kernel.costs.demote_ns(self.kernel.batch_data_bytes(1));
+        self.kernel.batch_wire_saved_ns += unbatched_ns.saturating_sub(batched_ns);
+    }
+
+    /// Move one resident page of process `owner` to a frame on the far
+    /// `server`: copies bytes, flips the pte to the far state, removes
+    /// the page from the reclaim LRU (servers hold frozen copies, not
+    /// working sets), and invalidates the owner's TLB entry.
+    pub(crate) fn demote_page(&mut self, owner: usize, idx: PageIdx, server: NodeId) {
+        let pte = self.procs[owner].pt.get(idx);
+        debug_assert!(pte.is_resident());
+        debug_assert!(!pte.pinned(), "demoting a pinned page");
+        debug_assert!(
+            self.kernel.roles[server.0 as usize] == NodeRole::MemoryServer
+                && self.kernel.live[server.0 as usize],
+            "demote target must be a live memory server"
+        );
+        let from = pte.node();
+        let src_frame = pte.frame();
+        self.kernel.pools[from.0 as usize].dealloc(src_frame);
+        self.kernel.lru.remove(PageKey { proc: owner as u32, idx });
+        // Reserve allowed: servers run no kswapd, so their watermark
+        // reserve would only waste capacity.
+        let frame = self.kernel.pools[server.0 as usize]
+            .alloc_reserve()
+            .expect("demote_page: memory server has no frames");
+        {
+            let src_ptr = self.kernel.pools[from.0 as usize].frame_ptr(src_frame) as *const u8;
+            let dst_ptr = self.kernel.pools[server.0 as usize].frame_ptr(frame);
+            unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
+        }
+        self.procs[owner].pt.demote(idx, server, frame);
+        let vpn = self.procs[owner].pt.vpn(idx);
+        self.procs[owner].tlb.invalidate(vpn);
+    }
+
     // ----- stretch ---------------------------------------------------------
 
     /// Extend the current process to `target`: ship the stretch
@@ -1188,6 +1577,7 @@ impl Engine<'_> {
         let cur = self.cur;
         let t = target.0 as usize;
         debug_assert!(self.kernel.live[t], "stretch to departed {target}");
+        debug_assert_eq!(self.kernel.roles[t], NodeRole::Peer, "stretch to memory server {target}");
         if self.procs[cur].stretched[t] {
             return;
         }
@@ -1417,6 +1807,7 @@ impl Engine<'_> {
         self.kernel.pools.iter().enumerate().any(|(i, pool)| {
             i != from.0 as usize
                 && self.kernel.live[i]
+                && self.kernel.roles[i] == NodeRole::Peer
                 && pool.free_frames() > 0
                 && self.procs.iter().any(|p| p.stretched[i])
         })
@@ -1431,7 +1822,11 @@ impl Engine<'_> {
         let stretched = &self.procs[owner].stretched;
         let mut best: Option<(u32, NodeId)> = None;
         for (i, pool) in self.kernel.pools.iter().enumerate() {
-            if i == from.0 as usize || !stretched[i] || !self.kernel.live[i] {
+            if i == from.0 as usize
+                || !stretched[i]
+                || !self.kernel.live[i]
+                || self.kernel.roles[i] != NodeRole::Peer
+            {
                 continue;
             }
             let free = pool.free_frames();
@@ -1623,10 +2018,22 @@ impl Engine<'_> {
         }
         self.maybe_stretch();
         let batch = self.kernel.push_batch;
+        // Far tier first: skim the genuinely cold tail out to a memory
+        // server before disturbing any peer's frames (capacity borrowed
+        // from the far tier costs nobody else headroom). Stops on its
+        // own when there is no far tier, the tier is full, or the cold
+        // tail dries up — everything hotter falls through to peers.
+        while !self.kernel.pools[node.0 as usize].at_high() {
+            let pool = &self.kernel.pools[node.0 as usize];
+            let need = pool.watermarks.reclaim_need(pool.free_frames());
+            if self.demote_cold(node, batch.min(need).max(1)) == 0 {
+                break;
+            }
+        }
         while !self.kernel.pools[node.0 as usize].at_high() {
             if batch > 1 {
                 let pool = &self.kernel.pools[node.0 as usize];
-                let need = pool.watermarks.high.saturating_sub(pool.free_frames()).max(1);
+                let need = pool.watermarks.reclaim_need(pool.free_frames());
                 if self.push_many(node, batch.min(need), None) == 0 {
                     break;
                 }
@@ -1641,8 +2048,19 @@ impl Engine<'_> {
     /// when `--batch` is above 1).
     pub(crate) fn direct_reclaim(&mut self, node: NodeId) -> bool {
         self.maybe_stretch();
+        // Far tier first, same ordering as kswapd; message size stays
+        // bounded by the push batch.
+        let mut demoted = 0u32;
+        while demoted < self.kernel.reclaim_batch {
+            let cap = (self.kernel.reclaim_batch - demoted).min(self.kernel.push_batch.max(1));
+            let n = self.demote_cold(node, cap);
+            if n == 0 {
+                break;
+            }
+            demoted += n;
+        }
         if self.kernel.push_batch > 1 {
-            let mut freed = 0u32;
+            let mut freed = demoted;
             while freed < self.kernel.reclaim_batch {
                 let n = self.push_many(node, self.kernel.reclaim_batch - freed, None);
                 if n == 0 {
@@ -1652,8 +2070,8 @@ impl Engine<'_> {
             }
             return freed > 0;
         }
-        let mut freed = false;
-        for _ in 0..self.kernel.reclaim_batch {
+        let mut freed = demoted > 0;
+        for _ in demoted..self.kernel.reclaim_batch {
             if !self.push_one(node) {
                 break;
             }

@@ -53,6 +53,49 @@ use crate::os::policy::JumpPolicy;
 use crate::os::sched::ElasticCluster;
 use crate::os::system::Mode;
 
+/// What a cluster member contributes (announced at startup, §4).
+///
+/// The far-memory tier splits membership into two roles: ordinary
+/// peers run tenants and exchange pages through stretch/push/pull/jump,
+/// while memory servers contribute *frames only* — they hold demoted
+/// far pages, take no tenants, are never stretch, push, or jump
+/// targets, and never churn. Roles are fixed per node slot for the
+/// life of the cluster (servers occupy the trailing slots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRole {
+    /// Ordinary elastic peer: runs tenants, exchanges pages.
+    Peer,
+    /// Far-memory server: frames for demoted pages only.
+    MemoryServer,
+}
+
+impl NodeRole {
+    /// Wire form (the announce codec's role byte).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            NodeRole::Peer => 0,
+            NodeRole::MemoryServer => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<NodeRole> {
+        match v {
+            0 => Some(NodeRole::Peer),
+            1 => Some(NodeRole::MemoryServer),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for NodeRole {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NodeRole::Peer => write!(f, "peer"),
+            NodeRole::MemoryServer => write!(f, "memory-server"),
+        }
+    }
+}
+
 /// Errors from membership operations (spawn placement, join, leave).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MembershipError {
@@ -74,6 +117,9 @@ pub enum MembershipError {
     /// Join announced too few frames to be a useful member (a frame
     /// pool needs room for its watermark reserves).
     TooFewFrames { node: NodeId, frames: u32, min: u32 },
+    /// The named slot is a far-memory server: it takes no tenants and
+    /// never churns.
+    MemoryServerNode(NodeId),
 }
 
 impl std::fmt::Display for MembershipError {
@@ -96,6 +142,9 @@ impl std::fmt::Display for MembershipError {
             }
             MembershipError::TooFewFrames { node, frames, min } => {
                 write!(f, "join of {node} with {frames} frames refused (minimum is {min})")
+            }
+            MembershipError::MemoryServerNode(n) => {
+                write!(f, "{n} is a memory server (frames only: no tenants, no churn)")
             }
         }
     }
@@ -336,6 +385,10 @@ pub struct DrainReport {
     pub evacuated: u32,
     /// Pages declared lost (stashed; re-faulted on next touch).
     pub lost: u32,
+    /// Pages overflowed to the far tier because no peer survivor had
+    /// room — demotions instead of losses (re-faulted at promote cost
+    /// rather than the lost-page refault).
+    pub to_far: u32,
     /// Processes whose execution was forced off the departing node.
     pub forced_jumps: u32,
     /// Stretches the drain issued to widen an owner's survivor set.
@@ -374,6 +427,9 @@ impl Engine<'_> {
     ) -> Result<NodeId, MembershipError> {
         let slot = node.0 as usize;
         let n_slots = self.kernel.node_count();
+        if slot < n_slots && self.kernel.is_memory_server(node) {
+            return Err(MembershipError::MemoryServerNode(node));
+        }
         if slot < n_slots && self.kernel.is_live(node) {
             return Err(MembershipError::AlreadyLive(node));
         }
@@ -394,6 +450,7 @@ impl Engine<'_> {
             port: 7000 + node.0 as u16,
             total_frames: frames,
             free_frames: frames,
+            role: NodeRole::Peer,
         };
         // The join announce reaches every existing live member.
         let peers = (self.kernel.live_count() - 1) as u64;
@@ -414,10 +471,13 @@ impl Engine<'_> {
     /// membership book.
     pub(crate) fn retire_node(&mut self, node: NodeId) -> Result<DrainReport, MembershipError> {
         let slot = node.0 as usize;
+        if slot < self.kernel.node_count() && self.kernel.is_memory_server(node) {
+            return Err(MembershipError::MemoryServerNode(node));
+        }
         if slot >= self.kernel.node_count() || !self.kernel.is_live(node) {
             return Err(MembershipError::NodeDeparted(node));
         }
-        if self.kernel.live_count() <= 1 {
+        if self.kernel.live_peer_count() <= 1 {
             return Err(MembershipError::LastLiveNode(node));
         }
         let mut report = DrainReport::default();
@@ -437,7 +497,7 @@ impl Engine<'_> {
                 None => {
                     let t = self
                         .best_live_node(node)
-                        .expect("live_count >= 2 guarantees a refuge");
+                        .expect("live_peer_count >= 2 guarantees a refuge");
                     self.stretch_to(t);
                     report.forced_stretches += 1;
                     t
@@ -471,7 +531,11 @@ impl Engine<'_> {
                         self.procs[owner].metrics.pages_evacuated += 1;
                         report.evacuated += 1;
                     }
-                    None => self.drain_lose(key, node, &mut report),
+                    None => {
+                        if !self.drain_demote(key, &mut report) {
+                            self.drain_lose(key, node, &mut report);
+                        }
+                    }
                 }
                 self.drain_progress(node, &mut since_progress_msg);
             }
@@ -519,6 +583,27 @@ impl Engine<'_> {
                 None => None,
             },
         }
+    }
+
+    /// Far-tier overflow for a drain victim with no peer survivor:
+    /// demote it to a memory server instead of declaring it lost (the
+    /// next touch promotes it back instead of refaulting from ground
+    /// truth). Pinned pages travel with jump checkpoints, never to the
+    /// far tier. Returns false when there is no room (caller loses the
+    /// page as before).
+    fn drain_demote(
+        &mut self,
+        key: crate::mem::proc_lru::PageKey,
+        report: &mut DrainReport,
+    ) -> bool {
+        let Some(server) = self.kernel.far_target() else { return false };
+        let owner = key.proc as usize;
+        if self.procs[owner].pt.get(key.idx).pinned() {
+            return false;
+        }
+        self.do_demote_batch(&[(owner, key.idx)], server);
+        report.to_far += 1;
+        true
     }
 
     /// Declare one drain victim lost: stash its bytes against the
@@ -620,7 +705,11 @@ impl Engine<'_> {
                         }
                         run.push((owner, key.idx));
                     }
-                    None => self.drain_lose(key, node, report),
+                    None => {
+                        if !self.drain_demote(key, report) {
+                            self.drain_lose(key, node, report);
+                        }
+                    }
                 }
                 self.drain_progress(node, since_progress_msg);
             }
@@ -650,7 +739,11 @@ impl Engine<'_> {
     fn stretched_refuge(&self, slot: usize, avoid: NodeId) -> Option<NodeId> {
         let mut best: Option<(u32, NodeId)> = None;
         for (i, pool) in self.kernel.pools.iter().enumerate() {
-            if i == avoid.0 as usize || !self.kernel.live[i] || !self.procs[slot].stretched[i] {
+            if i == avoid.0 as usize
+                || !self.kernel.live[i]
+                || self.kernel.roles[i] != NodeRole::Peer
+                || !self.procs[slot].stretched[i]
+            {
                 continue;
             }
             let free = pool.free_frames();
@@ -666,7 +759,10 @@ impl Engine<'_> {
     fn best_live_node(&self, avoid: NodeId) -> Option<NodeId> {
         let mut best: Option<(u32, NodeId)> = None;
         for (i, pool) in self.kernel.pools.iter().enumerate() {
-            if i == avoid.0 as usize || !self.kernel.live[i] {
+            if i == avoid.0 as usize
+                || !self.kernel.live[i]
+                || self.kernel.roles[i] != NodeRole::Peer
+            {
                 continue;
             }
             let free = pool.free_frames();
@@ -682,7 +778,11 @@ impl Engine<'_> {
     fn widen_target(&self, owner: usize, avoid: NodeId) -> Option<NodeId> {
         let mut best: Option<(u32, NodeId)> = None;
         for (i, pool) in self.kernel.pools.iter().enumerate() {
-            if i == avoid.0 as usize || !self.kernel.live[i] || self.procs[owner].stretched[i] {
+            if i == avoid.0 as usize
+                || !self.kernel.live[i]
+                || self.kernel.roles[i] != NodeRole::Peer
+                || self.procs[owner].stretched[i]
+            {
                 continue;
             }
             let free = pool.free_frames();
@@ -753,7 +853,7 @@ impl ElasticCluster {
         let now = self.clock.now();
         self.kernel.refresh_registry(now);
         (0..self.kernel.node_count())
-            .filter(|&i| self.kernel.live[i])
+            .filter(|&i| self.kernel.live[i] && self.kernel.role(NodeId(i as u8)) == NodeRole::Peer)
             .map(|i| {
                 let id = NodeId(i as u8);
                 let member = self.kernel.registry.get(id);

@@ -61,12 +61,27 @@ pub struct Metrics {
     /// lived on the departing node), also counted in [`Self::jumps`].
     pub forced_jumps: u64,
 
+    // far-memory tier counters (`--far-nodes`)
+    /// Faults that found the page demoted to a memory server (the far
+    /// analogue of [`Self::remote_faults`]; disjoint from it).
+    pub far_faults: u64,
+    /// Pages demoted to the far tier by reclaim or drain overflow.
+    pub demotions: u64,
+    /// Pages promoted back from the far tier — the demand page per far
+    /// fault plus any speculative window pages (window pages are also
+    /// counted in [`Self::prefetch_pulled`]).
+    pub promotions: u64,
+
     // traffic, in bytes on the wire (message-encoded sizes)
     pub bytes_pull: u64,
     pub bytes_push: u64,
     pub bytes_jump: u64,
     pub bytes_stretch: u64,
     pub bytes_sync: u64,
+    /// DemoteBatch traffic to memory servers.
+    pub bytes_demote: u64,
+    /// PromoteReq + PromoteData traffic with memory servers.
+    pub bytes_promote: u64,
 
     pub jump_timeline: Vec<JumpRecord>,
 }
@@ -76,9 +91,16 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Total bytes moved over the fabric (Fig 9's metric).
+    /// Total bytes moved over the fabric (Fig 9's metric), including
+    /// far-tier demote/promote traffic.
     pub fn total_bytes(&self) -> u64 {
-        self.bytes_pull + self.bytes_push + self.bytes_jump + self.bytes_stretch + self.bytes_sync
+        self.bytes_pull
+            + self.bytes_push
+            + self.bytes_jump
+            + self.bytes_stretch
+            + self.bytes_sync
+            + self.bytes_demote
+            + self.bytes_promote
     }
 
     /// TLB hits for a run that performed `accesses` paged accesses
@@ -189,7 +211,7 @@ pub struct RunReport {
 
 impl RunReport {
     pub fn summary_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<14} {:<8} sim={:>10} jumps={:<6} pulls={:<8} pushes={:<8} net={:>10} digest={:#018x}",
             self.workload,
             self.mode,
@@ -199,7 +221,14 @@ impl RunReport {
             self.metrics.pushes,
             crate::util::stats::fmt_bytes(self.metrics.total_bytes() as f64),
             self.digest,
-        )
+        );
+        if self.metrics.demotions > 0 || self.metrics.far_faults > 0 {
+            line.push_str(&format!(
+                " far[faults={} demote={} promote={}]",
+                self.metrics.far_faults, self.metrics.demotions, self.metrics.promotions,
+            ));
+        }
+        line
     }
 }
 
@@ -259,6 +288,8 @@ mod tests {
         m.bytes_jump = 30;
         m.bytes_stretch = 40;
         m.bytes_sync = 5;
-        assert_eq!(m.total_bytes(), 105);
+        m.bytes_demote = 7;
+        m.bytes_promote = 3;
+        assert_eq!(m.total_bytes(), 115);
     }
 }

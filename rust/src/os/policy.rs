@@ -38,15 +38,26 @@ pub trait JumpPolicy: Send {
     /// while execution runs at `running`. `now_ns` is simulated time.
     fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision;
 
-    /// PolicyHook for batched faults: the remote fault just serviced at
-    /// `owner` pulled `prefetched` extra spatially-adjacent pages in
-    /// the same message (`--prefetch` > 0). Fired *before* the
-    /// [`Self::on_remote_fault`] decision for the same fault, so a
-    /// policy can weigh the batch as locality evidence the bare fault
-    /// counter cannot see. Default: ignore (counter policies keep the
-    /// paper's exact semantics).
-    fn on_batch_fault(&mut self, running: NodeId, owner: NodeId, prefetched: u32, now_ns: u64) {
-        let _ = (running, owner, prefetched, now_ns);
+    /// PolicyHook for batched faults: the fault being serviced at
+    /// `owner` is about to pull up to `planned` extra spatially-adjacent
+    /// pages in the same message (`--prefetch` > 0; also the far tier's
+    /// promotion window). Fired *before* the window is pulled and before
+    /// the [`Self::on_remote_fault`] decision for the same fault, so a
+    /// policy can both weigh the batch as locality evidence the bare
+    /// fault counter cannot see and *veto* it: returning `false` skips
+    /// the speculative window (the demand page still moves) — the right
+    /// call when the policy expects to jump shortly, because every page
+    /// pulled to a node about to be abandoned is a wasted pull.
+    /// Default: allow (counter policies keep the paper's semantics).
+    fn on_batch_fault(
+        &mut self,
+        running: NodeId,
+        owner: NodeId,
+        planned: u32,
+        now_ns: u64,
+    ) -> bool {
+        let _ = (running, owner, planned, now_ns);
+        true
     }
 
     /// Execution jumped (by our decision or not). Policies reset here.
@@ -110,6 +121,20 @@ impl ThresholdPolicy {
 }
 
 impl JumpPolicy for ThresholdPolicy {
+    /// Veto the speculative window when the *next* demand fault will
+    /// cross the threshold: the jump it triggers would strand every
+    /// just-pulled window page on the node being left. (Pure read —
+    /// the counter semantics the paper specifies are untouched.)
+    fn on_batch_fault(
+        &mut self,
+        _running: NodeId,
+        _owner: NodeId,
+        _planned: u32,
+        _now: u64,
+    ) -> bool {
+        self.counter + 1 < self.threshold
+    }
+
     fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, _now: u64) -> Decision {
         self.counter += 1;
         self.per_node[owner.0 as usize] += 1;
@@ -202,10 +227,18 @@ impl JumpPolicy for EwmaPolicy {
     /// Batched-fault signal: prefetched pages are proactive pulls, so
     /// they weigh less than demand faults — but a node that keeps
     /// supplying whole windows of spatially-local pages is exactly the
-    /// locality island EWMA exists to detect.
-    fn on_batch_fault(&mut self, _running: NodeId, owner: NodeId, prefetched: u32, now_ns: u64) {
+    /// locality island EWMA exists to detect. Always allows the window
+    /// (hysteresis + cooldown already damp ping-pong jumps).
+    fn on_batch_fault(
+        &mut self,
+        _running: NodeId,
+        owner: NodeId,
+        planned: u32,
+        now_ns: u64,
+    ) -> bool {
         self.decay_to(now_ns);
-        self.mass[owner.0 as usize] += prefetched as f64 * 0.25;
+        self.mass[owner.0 as usize] += planned as f64 * 0.25;
+        true
     }
 
     fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision {
@@ -458,14 +491,20 @@ mod tests {
 
     #[test]
     fn batch_fault_hook_defaults_to_noop_and_feeds_ewma() {
-        // Counter policies ignore the hook entirely: same decision
-        // sequence with or without batch signals.
+        // Counter policies read but never mutate state in the hook:
+        // same decision sequence with or without batch signals.
         let mut p = ThresholdPolicy::new(4);
-        p.on_batch_fault(n(0), n(1), 16, 0);
+        assert!(p.on_batch_fault(n(0), n(1), 16, 0), "fresh counter allows the window");
         for i in 1..4 {
             assert_eq!(p.on_remote_fault(n(0), n(1), i), Decision::Stay);
         }
+        // counter == 3: the next demand fault jumps, so the window
+        // about to be pulled would be stranded — vetoed.
+        assert!(!p.on_batch_fault(n(0), n(1), 16, 3), "imminent jump vetoes the window");
         assert_eq!(p.on_remote_fault(n(0), n(1), 4), Decision::JumpTo(n(1)));
+        // after the jump resets the counter, windows flow again
+        p.on_jump(n(1), 5);
+        assert!(p.on_batch_fault(n(1), n(0), 16, 6));
 
         // EWMA accrues (discounted) mass from prefetched pages, so a
         // batched window reaches the jump threshold in fewer demand

@@ -199,6 +199,9 @@ impl ElasticCluster {
         if !self.kernel.is_live(home) {
             return Err(MembershipError::NodeDeparted(home));
         }
+        if self.kernel.is_memory_server(home) {
+            return Err(MembershipError::MemoryServerNode(home));
+        }
         let slot = self.procs.len();
         self.procs.push(ProcessCtx::new(
             slot,
@@ -520,16 +523,18 @@ pub struct ShardedCluster {
 impl ShardedCluster {
     /// Partition `cfg`'s nodes into `shards` shards driven by
     /// `threads` worker threads. Every shard must own at least one
-    /// node, so `shards` may not exceed the node count.
+    /// *peer* node, so `shards` may not exceed the peer count; memory
+    /// servers (trailing slots) partition by the same `n % S` rule, so
+    /// each shard's tenants demote to the far capacity it owns.
     pub fn new(cfg: ClusterConfig, shards: usize, threads: usize) -> ShardedCluster {
         assert!(shards >= 1, "need at least one shard");
         assert!(
             shards <= cfg.node_frames.len(),
-            "cannot cut {} nodes into {} shards (every shard needs a live node)",
+            "cannot cut {} peer nodes into {} shards (every shard needs a live peer)",
             cfg.node_frames.len(),
             shards
         );
-        let nodes = cfg.node_frames.len();
+        let nodes = cfg.node_frames.len() + cfg.far_frames.len();
         let shard_vec = (0..shards)
             .map(|s| {
                 let owned: Vec<bool> = (0..nodes).map(|n| n % shards == s).collect();

@@ -54,6 +54,10 @@ impl Mode {
 pub struct SystemConfig {
     /// Frames contributed by each participating node.
     pub node_frames: Vec<u32>,
+    /// Frames contributed by far-memory servers (one entry per server;
+    /// empty = no far tier). Servers occupy the trailing node slots
+    /// after the peers and never run tenants.
+    pub far_frames: Vec<u32>,
     pub mode: Mode,
     pub costs: CostModel,
     /// Bulk-balance pages to the new node right after a stretch
@@ -80,6 +84,7 @@ impl Default for SystemConfig {
     fn default() -> Self {
         SystemConfig {
             node_frames: vec![8192, 8192], // 32 MiB + 32 MiB
+            far_frames: vec![],
             mode: Mode::Elastic,
             costs: CostModel::default(),
             balance_on_stretch: false,
@@ -98,6 +103,7 @@ impl SystemConfig {
     pub fn cluster_config(&self) -> ClusterConfig {
         ClusterConfig {
             node_frames: self.node_frames.clone(),
+            far_frames: self.far_frames.clone(),
             costs: self.costs.clone(),
             balance_on_stretch: self.balance_on_stretch,
             pin_stack: self.pin_stack,
@@ -141,7 +147,11 @@ impl std::ops::DerefMut for ElasticSystem {
 impl ElasticSystem {
     /// Build a system with an explicit jumping policy.
     pub fn with_policy(cfg: SystemConfig, policy: Box<dyn JumpPolicy>) -> Self {
-        assert!(!cfg.node_frames.is_empty() && cfg.node_frames.len() <= MAX_NODES);
+        assert!(
+            !cfg.node_frames.is_empty()
+                && cfg.node_frames.len() + cfg.far_frames.len() <= MAX_NODES
+        );
+        // home must be a peer: memory servers hold frames, not tenants
         assert!((cfg.home.0 as usize) < cfg.node_frames.len());
         let kernel = NodeKernel::new(cfg.cluster_config());
         let clock = SimClock::new(cfg.costs.local_access_num, cfg.costs.local_access_den);

@@ -47,6 +47,13 @@ pub struct CostModel {
     /// PJRT policy-model invocation cost charged to the sim clock when
     /// the model-driven policy is enabled (measured; see benches).
     pub policy_eval_ns: u64,
+    /// One-way small-message latency to a far-memory server. The far
+    /// tier sits behind more switch hops (or a slower fabric) than the
+    /// peer group, so this is higher than `wire_latency_ns` — the
+    /// model's `local < peer < far` ordering.
+    pub far_latency_ns: u64,
+    /// Link bandwidth to the far tier in bits per second.
+    pub far_bandwidth_bps: u64,
 }
 
 impl Default for CostModel {
@@ -66,6 +73,12 @@ impl Default for CostModel {
             jump_cpu_ns: 12_000,
             stretch_cpu_ns: 2_100_000,
             policy_eval_ns: 4_000,
+            // FluidMem-flavored far tier: 3x the peer RTT, same GbE
+            // serialization rate. A 4 KiB promote lands around 40 µs —
+            // dearer than a 34 µs peer pull, far cheaper than a disk
+            // swap.
+            far_latency_ns: 6_000,
+            far_bandwidth_bps: 1_000_000_000,
         }
     }
 }
@@ -143,6 +156,61 @@ impl CostModel {
         self.stretch_cpu_ns + self.wire_ns(bytes)
     }
 
+    /// Wire time for `bytes` on the far-tier fabric, plus far latency.
+    #[inline]
+    pub fn far_wire_ns(&self, bytes: u64) -> u64 {
+        self.far_latency_ns + bytes * 8 * 1_000_000_000 / self.far_bandwidth_bps
+    }
+
+    /// Far-tier analogue of [`Self::wire_batch_ns`]: one message, one
+    /// far latency, aggregate serialization. `far_wire_batch_ns(1, b)
+    /// == far_wire_ns(b)`.
+    #[inline]
+    pub fn far_wire_batch_ns(&self, n_pages: u64, bytes: u64) -> u64 {
+        debug_assert!(n_pages >= 1, "a batch ships at least one page");
+        self.far_wire_ns(bytes)
+    }
+
+    /// Foreground cost of demoting `bytes` to a memory server. Like
+    /// peer pushes, demotions are issued by the background reclaimer
+    /// and overlap execution, so the same `push_overlap` discount
+    /// applies (validated at decode; see [`Self::push_ns`]).
+    #[inline]
+    pub fn demote_ns(&self, bytes: u64) -> u64 {
+        debug_assert!(
+            self.push_overlap.is_finite() && (0.0..=1.0).contains(&self.push_overlap),
+            "push_overlap out of range: {}",
+            self.push_overlap
+        );
+        (self.far_wire_ns(bytes) as f64 * self.push_overlap) as u64
+    }
+
+    /// Batched demotion (one message, same overlap discount).
+    /// `demote_batch_ns(1, b) == demote_ns(b)`.
+    #[inline]
+    pub fn demote_batch_ns(&self, n_pages: u64, bytes: u64) -> u64 {
+        debug_assert!(
+            self.push_overlap.is_finite() && (0.0..=1.0).contains(&self.push_overlap),
+            "push_overlap out of range: {}",
+            self.push_overlap
+        );
+        (self.far_wire_batch_ns(n_pages, bytes) as f64 * self.push_overlap) as u64
+    }
+
+    /// Foreground cost of promoting `bytes` back from a memory server
+    /// (synchronous: the faulting process waits, like a pull).
+    #[inline]
+    pub fn promote_ns(&self, bytes: u64) -> u64 {
+        self.remote_fault_cpu_ns + self.far_wire_ns(bytes)
+    }
+
+    /// Batched promotion: one far fault, one request, one multi-page
+    /// reply. `promote_batch_ns(1, b) == promote_ns(b)`.
+    #[inline]
+    pub fn promote_batch_ns(&self, n_pages: u64, bytes: u64) -> u64 {
+        self.remote_fault_cpu_ns + self.far_wire_batch_ns(n_pages, bytes)
+    }
+
     /// Encode (for shipping the model to TCP workers so both sides
     /// account identically).
     pub fn encode(&self, e: &mut Enc) {
@@ -156,6 +224,8 @@ impl CostModel {
         e.u64(self.jump_cpu_ns);
         e.u64(self.stretch_cpu_ns);
         e.u64(self.policy_eval_ns);
+        e.u64(self.far_latency_ns);
+        e.u64(self.far_bandwidth_bps);
     }
 
     pub fn decode(d: &mut Dec) -> Result<Self, DecodeError> {
@@ -171,6 +241,16 @@ impl CostModel {
         if !push_overlap.is_finite() || !(0.0..=1.0).contains(&push_overlap) {
             return Err(DecodeError::BadValue { what: "CostModel.push_overlap" });
         }
+        let jump_cpu_ns = d.u64()?;
+        let stretch_cpu_ns = d.u64()?;
+        let policy_eval_ns = d.u64()?;
+        let far_latency_ns = d.u64()?;
+        let far_bandwidth_bps = d.u64()?;
+        // A zero far bandwidth would divide-by-zero every far wire-time
+        // computation; reject it like a bad overlap.
+        if far_bandwidth_bps == 0 {
+            return Err(DecodeError::BadValue { what: "CostModel.far_bandwidth_bps" });
+        }
         Ok(CostModel {
             local_access_num,
             local_access_den,
@@ -179,9 +259,11 @@ impl CostModel {
             bandwidth_bps,
             remote_fault_cpu_ns,
             push_overlap,
-            jump_cpu_ns: d.u64()?,
-            stretch_cpu_ns: d.u64()?,
-            policy_eval_ns: d.u64()?,
+            jump_cpu_ns,
+            stretch_cpu_ns,
+            policy_eval_ns,
+            far_latency_ns,
+            far_bandwidth_bps,
         })
     }
 }
@@ -247,7 +329,36 @@ mod tests {
             assert_eq!(c.wire_batch_ns(1, bytes), c.wire_ns(bytes));
             assert_eq!(c.pull_batch_ns(1, bytes), c.pull_ns(bytes));
             assert_eq!(c.push_batch_ns(1, bytes), c.push_ns(bytes));
+            assert_eq!(c.far_wire_batch_ns(1, bytes), c.far_wire_ns(bytes));
+            assert_eq!(c.demote_batch_ns(1, bytes), c.demote_ns(bytes));
+            assert_eq!(c.promote_batch_ns(1, bytes), c.promote_ns(bytes));
         }
+    }
+
+    #[test]
+    fn far_lane_ordering_local_peer_far() {
+        // The tier ordering the far lane exists for: touching local RAM
+        // < pulling from a peer < promoting from a memory server.
+        let c = CostModel::default();
+        let page = PAGE_SIZE as u64;
+        let local = c.local_access_num / c.local_access_den;
+        assert!(local < c.pull_ns(page));
+        assert!(
+            c.pull_ns(page) < c.promote_ns(page),
+            "far promote must cost more than a peer pull"
+        );
+        assert!(c.push_ns(page) < c.demote_ns(page), "far demote must cost more than a peer push");
+        // and a promote stays well under a jump (else the tier is useless)
+        assert!(c.promote_ns(page) < c.jump_ns(9 * 1024));
+    }
+
+    #[test]
+    fn far_batching_saves_exactly_the_extra_latency_charges() {
+        let c = CostModel::default();
+        let page = PAGE_SIZE as u64;
+        let unbatched = 8 * c.far_wire_ns(page);
+        let batched = c.far_wire_batch_ns(8, 8 * page);
+        assert_eq!(unbatched - batched, 7 * c.far_latency_ns);
     }
 
     #[test]
@@ -288,5 +399,20 @@ mod tests {
             let mut d = Dec::new(&v);
             assert!(CostModel::decode(&mut d).is_ok(), "overlap {ok} must decode");
         }
+    }
+
+    #[test]
+    fn decode_rejects_zero_far_bandwidth() {
+        use crate::util::DecodeError;
+        let mut c = CostModel::default();
+        c.far_bandwidth_bps = 0;
+        let mut e = Enc::new();
+        c.encode(&mut e);
+        let v = e.into_vec();
+        let mut d = Dec::new(&v);
+        assert_eq!(
+            CostModel::decode(&mut d),
+            Err(DecodeError::BadValue { what: "CostModel.far_bandwidth_bps" })
+        );
     }
 }

@@ -1,0 +1,269 @@
+//! ISSUE 7 acceptance: the far-memory tier — memory-server nodes as a
+//! third page home (demote / promote / overflow).
+//!
+//! * With the tier OFF (`far_frames` empty) every run is bit-identical
+//!   to the default configuration — digests, Metrics, and simulated
+//!   time — for all seven workloads in both modes, and no far counter
+//!   ever moves.
+//! * With a server attached, footprints larger than the *sum* of all
+//!   peer frames still complete, digest-exact against DirectMem.
+//! * The drain protocol overflows to the far tier instead of declaring
+//!   pages lost when no peer survivor has room.
+//! * Memory servers take no tenants and never churn.
+//! * The jump-veto hook drops wasted speculative pulls when execution
+//!   ping-pongs between peers.
+
+use elastic_os::mem::NodeId;
+use elastic_os::os::kernel::ClusterConfig;
+use elastic_os::os::membership::{ChurnEvent, ChurnOp, ChurnSchedule, MembershipError};
+use elastic_os::os::policy::{Decision, JumpPolicy, ThresholdPolicy};
+use elastic_os::os::sched::{direct_ground_truth, ElasticCluster};
+use elastic_os::os::system::{ElasticSystem, Mode, SystemConfig};
+use elastic_os::os::RunReport;
+use elastic_os::workloads::{by_name, Scale, Workload, ALL_EXT};
+
+// 1.3x the 96-frame home node: every run stretches, reclaims, and
+// remote-faults, so the far tier (when present) sees demotions.
+const SCALE_BYTES: u64 = (96 * 4096 * 13) / 10;
+
+fn run_with_far(wl: &str, mode: Mode, far_frames: Vec<u32>) -> RunReport {
+    let cfg = SystemConfig {
+        node_frames: vec![96, 96],
+        mode,
+        far_frames,
+        ..SystemConfig::default()
+    };
+    let mut sys = ElasticSystem::new(cfg, 64);
+    let mut w = by_name(wl, Scale::Bytes(SCALE_BYTES)).unwrap();
+    let report = sys.run_workload(w.as_mut());
+    sys.verify().expect("cluster invariants");
+    report
+}
+
+fn run_default(wl: &str, mode: Mode) -> RunReport {
+    let cfg = SystemConfig { node_frames: vec![96, 96], mode, ..SystemConfig::default() };
+    let mut sys = ElasticSystem::new(cfg, 64);
+    let mut w = by_name(wl, Scale::Bytes(SCALE_BYTES)).unwrap();
+    let report = sys.run_workload(w.as_mut());
+    sys.verify().expect("cluster invariants");
+    report
+}
+
+#[test]
+fn far_off_is_bit_identical_to_defaults_for_all_workloads() {
+    // An empty far tier must take the legacy code paths exactly: same
+    // digest, same simulated time, same access count, the whole
+    // Metrics counter set equal — and every far counter at zero — for
+    // every workload, both modes.
+    for wl in ALL_EXT {
+        for mode in [Mode::Elastic, Mode::Nswap] {
+            let explicit = run_with_far(wl, mode, vec![]);
+            let default = run_default(wl, mode);
+            assert_eq!(explicit.digest, default.digest, "{wl}/{mode:?}: digest");
+            assert_eq!(explicit.sim_ns, default.sim_ns, "{wl}/{mode:?}: sim time");
+            assert_eq!(explicit.accesses, default.accesses, "{wl}/{mode:?}: accesses");
+            assert_eq!(explicit.metrics, default.metrics, "{wl}/{mode:?}: metrics");
+            assert_eq!(explicit.metrics.far_faults, 0, "{wl}/{mode:?}: far faults without a tier");
+            assert_eq!(explicit.metrics.demotions, 0, "{wl}/{mode:?}: demotions without a tier");
+            assert_eq!(explicit.metrics.promotions, 0, "{wl}/{mode:?}: promotions without a tier");
+            assert_eq!(explicit.metrics.bytes_demote + explicit.metrics.bytes_promote, 0);
+        }
+    }
+}
+
+#[test]
+fn footprints_beyond_total_peer_ram_complete_via_the_far_tier() {
+    // 1.5x the *sum* of both peers' frames: without a third page home
+    // the cluster has nowhere to evict, with one the run completes and
+    // the answer is exact.
+    let peer_frames: u64 = 2 * 96;
+    let fp = peer_frames * 4096 * 3 / 2;
+    assert!(fp / 4096 > peer_frames, "the sweep must exceed total peer frames");
+    for wl in ["linear", "count_sort"] {
+        let truth = direct_ground_truth(by_name(wl, Scale::Bytes(fp)).unwrap().as_mut());
+        let cfg = SystemConfig {
+            node_frames: vec![96, 96],
+            far_frames: vec![6 * 96],
+            mode: Mode::Elastic,
+            ..SystemConfig::default()
+        };
+        let mut sys = ElasticSystem::new(cfg, 512);
+        let mut w = by_name(wl, Scale::Bytes(fp)).unwrap();
+        let r = sys.run_workload(w.as_mut());
+        sys.verify().expect("cluster invariants with a memory server");
+        assert_eq!(r.digest, truth, "{wl}: digest diverged beyond peer capacity");
+        assert!(r.metrics.demotions > 0, "{wl}: reclaim must demote to the far tier");
+        assert!(r.metrics.far_faults > 0, "{wl}: demoted pages must fault back in");
+        assert!(
+            r.metrics.promotions >= r.metrics.far_faults,
+            "{wl}: every far fault promotes at least its demand page"
+        );
+        assert!(
+            r.metrics.bytes_demote > 0 && r.metrics.bytes_promote > 0,
+            "{wl}: far traffic must be charged on the wire"
+        );
+    }
+}
+
+#[test]
+fn drain_overflows_to_the_far_tier_and_stays_digest_exact() {
+    // All seven workloads overcommit two peers 1.3x; node 1 leaves
+    // mid-run while the lone survivor is already full, so the drain's
+    // only alternatives are the far tier or declared losses. With a
+    // server attached it must be the former, and every digest must
+    // survive the overflow.
+    let frames = 96u32;
+    let per_fp = (2 * frames as u64 * 4096 * 13) / 10 / ALL_EXT.len() as u64;
+    let truths: Vec<u64> = ALL_EXT
+        .iter()
+        .map(|wl| direct_ground_truth(by_name(wl, Scale::Bytes(per_fp)).unwrap().as_mut()))
+        .collect();
+
+    let run = |schedule: Option<ChurnSchedule>| {
+        let cfg = ClusterConfig {
+            node_frames: vec![frames; 2],
+            far_frames: vec![6 * frames],
+            prefetch: 4,
+            ..ClusterConfig::default()
+        };
+        let mut cluster = ElasticCluster::new(cfg);
+        if let Some(s) = schedule {
+            cluster.set_churn(s);
+        }
+        let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+        for wl in ALL_EXT {
+            let slot = cluster
+                .spawn_placed(Mode::Elastic, wl, 512)
+                .expect("live cluster placement");
+            jobs.push((slot, by_name(wl, Scale::Bytes(per_fp)).unwrap()));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().expect("cluster invariants across a far-overflow drain");
+        (cluster, reports)
+    };
+
+    // Calibrate the leave off an undisturbed run so it lands mid-run.
+    let (cal, _) = run(None);
+    let makespan = cal.clock.now().max(1);
+    let schedule = ChurnSchedule::new(vec![ChurnEvent {
+        at_ns: makespan * 30 / 100,
+        op: ChurnOp::Leave { node: 1 },
+    }]);
+    let (cluster, reports) = run(Some(schedule));
+
+    for ((r, truth), wl) in reports.iter().zip(&truths).zip(ALL_EXT.iter()) {
+        assert_eq!(r.digest, *truth, "{wl}: digest diverged across a far-overflow drain");
+    }
+    let drains: Vec<_> = cluster.churn_log.iter().filter_map(|a| a.drain).collect();
+    assert!(!drains.is_empty(), "the leave must produce a drain report");
+    let to_far: u32 = drains.iter().map(|d| d.to_far).sum();
+    let lost: u32 = drains.iter().map(|d| d.lost).sum();
+    assert!(to_far > 0, "a full survivor must overflow the drain to the far tier");
+    assert_eq!(lost, 0, "the far tier must absorb what survivors cannot ({to_far} overflowed)");
+}
+
+#[test]
+fn memory_servers_take_no_tenants_and_never_churn() {
+    // Slot 2 is the server in both engines: spawning on it, re-joining
+    // it, and retiring it must all be refused with the role error.
+    let cfg = ClusterConfig {
+        node_frames: vec![96, 96],
+        far_frames: vec![96],
+        ..ClusterConfig::default()
+    };
+    let mut cluster = ElasticCluster::new(cfg);
+    assert_eq!(
+        cluster.spawn(Mode::Elastic, NodeId(2), "linear", 64),
+        Err(MembershipError::MemoryServerNode(NodeId(2))),
+        "spawn on a memory server must be refused"
+    );
+
+    let scfg = SystemConfig {
+        node_frames: vec![96, 96],
+        far_frames: vec![96],
+        ..SystemConfig::default()
+    };
+    let mut sys = ElasticSystem::new(scfg, 64);
+    assert_eq!(
+        sys.admit_node(NodeId(2), 96),
+        Err(MembershipError::MemoryServerNode(NodeId(2))),
+        "a server slot can never re-join as a peer"
+    );
+    assert_eq!(
+        sys.retire_node(NodeId(2)),
+        Err(MembershipError::MemoryServerNode(NodeId(2))),
+        "a server never churns out through the drain protocol"
+    );
+}
+
+/// The same counter policy with the window veto disabled: every
+/// speculative window is allowed, exactly the pre-veto behavior.
+struct NoVeto(ThresholdPolicy);
+
+impl JumpPolicy for NoVeto {
+    fn on_remote_fault(&mut self, running: NodeId, owner: NodeId, now_ns: u64) -> Decision {
+        self.0.on_remote_fault(running, owner, now_ns)
+    }
+
+    fn on_batch_fault(
+        &mut self,
+        _running: NodeId,
+        _owner: NodeId,
+        _planned: u32,
+        _now: u64,
+    ) -> bool {
+        true
+    }
+
+    fn on_jump(&mut self, to: NodeId, now_ns: u64) {
+        self.0.on_jump(to, now_ns)
+    }
+
+    fn describe(&self) -> String {
+        format!("{} (no veto)", self.0.describe())
+    }
+}
+
+#[test]
+fn veto_cuts_wasted_prefetch_on_ping_pong() {
+    // Threshold 4 on a sequential sweep ping-pongs execution between
+    // the peers; without the veto, the window pulled by each cycle's
+    // final fault is stranded on the node the jump abandons. The veto
+    // skips exactly those windows: fewer speculative pulls, fewer of
+    // them wasted (pulled but never locally touched), same answer.
+    let run = |policy: Box<dyn JumpPolicy>| -> RunReport {
+        let cfg = SystemConfig {
+            node_frames: vec![96, 96],
+            mode: Mode::Elastic,
+            prefetch: 8,
+            ..SystemConfig::default()
+        };
+        let mut sys = ElasticSystem::with_policy(cfg, policy);
+        let mut w = by_name("linear", Scale::Bytes(SCALE_BYTES)).unwrap();
+        let r = sys.run_workload(w.as_mut());
+        sys.verify().expect("cluster invariants");
+        r
+    };
+    let vetoed = run(Box::new(ThresholdPolicy::new(4)));
+    let open = run(Box::new(NoVeto(ThresholdPolicy::new(4))));
+    assert_eq!(vetoed.digest, open.digest, "the veto changed the answer");
+    assert!(
+        vetoed.metrics.jumps > 0 && open.metrics.jumps > 0,
+        "threshold 4 must ping-pong ({} vs {} jumps)",
+        vetoed.metrics.jumps,
+        open.metrics.jumps
+    );
+    assert!(
+        vetoed.metrics.prefetch_pulled < open.metrics.prefetch_pulled,
+        "the veto must skip doomed windows ({} vs {} pulled)",
+        vetoed.metrics.prefetch_pulled,
+        open.metrics.prefetch_pulled
+    );
+    let wasted = |r: &RunReport| r.metrics.prefetch_pulled - r.metrics.prefetch_hits;
+    assert!(
+        wasted(&vetoed) < wasted(&open),
+        "wasted pulls must drop under the veto ({} vs {})",
+        wasted(&vetoed),
+        wasted(&open)
+    );
+}

@@ -196,6 +196,47 @@ fn digests_are_invariant_across_partitions() {
     }
 }
 
+/// Far-memory servers ride the same time-window barrier: with four
+/// servers on the trailing slots 8-11 (one lands in each shard's
+/// partition, so every shard's reclaim can demote), results stay
+/// bit-identical across worker-thread counts and every digest still
+/// matches its DirectMem ground truth.
+#[test]
+fn far_servers_preserve_sharded_determinism() {
+    let truths = truths();
+    let run = |threads: usize| -> RunOutcome {
+        let cfg = ClusterConfig {
+            node_frames: vec![FRAMES; NODES],
+            far_frames: vec![FRAMES; 4],
+            ..ClusterConfig::default()
+        };
+        let mut cluster = ShardedCluster::new(cfg, 4, threads);
+        cluster.set_quantum(100_000);
+        cluster.set_window(400_000);
+        let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+        for (i, wl) in ALL_EXT.iter().enumerate() {
+            let gid = cluster.spawn(Mode::Elastic, NodeId((i % 4) as u8), wl, 512).unwrap();
+            jobs.push((gid, make(i)));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().expect("cluster invariants with far servers");
+        RunOutcome { reports, sim_ns: cluster.sim_now(), churn_log: String::new() }
+    };
+    let base = run(1);
+    for (i, r) in base.reports.iter().enumerate() {
+        assert_eq!(r.digest, truths[i], "{}: digest != ground truth with far tier", ALL_EXT[i]);
+    }
+    assert!(
+        base.reports.iter().map(|r| r.metrics.demotions).sum::<u64>() > 0,
+        "overcommitted homes must demote to the far tier"
+    );
+    for threads in [2usize, 4] {
+        let r = run(threads);
+        assert_reports_identical(&base.reports, &r.reports, &format!("far threads={threads}"));
+        assert_eq!(base.sim_ns, r.sim_ns, "far threads={threads}: final simulated time");
+    }
+}
+
 /// The mailbox layer itself: envelopes drain in canonical
 /// `(sender, seq)` order regardless of arrival order, and the driver
 /// (sender `usize::MAX`) sorts after every real shard.
