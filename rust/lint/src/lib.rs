@@ -1,0 +1,1370 @@
+//! elastic-lint: static checks for the contracts the simulation's
+//! correctness rests on.
+//!
+//! The sharded engine promises bit-identical results at any thread
+//! count, every wire message must have a matching `CostModel` lane and
+//! codec round-trip test, the `Pte` state machine has a small set of
+//! legal transitions scattered across `os/`, and every `Metrics`
+//! counter must actually reach a report. All of that is enforced here
+//! by tooling instead of review:
+//!
+//! * `determinism` (R1) — no `HashMap`/`HashSet`, no
+//!   `Instant`/`SystemTime`/`thread_rng`, and no float accumulation in
+//!   the simulation-path modules (`os/`, `mem/`, `sim/`).
+//! * `unsafe-safety` (R1) — every `unsafe` block in the tree carries a
+//!   `// SAFETY:` comment.
+//! * `protocol` (R2) — every `Msg` variant has a contiguous tag, a
+//!   decode arm, a declared `CostModel` pricing method that exists in
+//!   `sim/costs.rs`, and a codec test referencing it.
+//! * `pte-transition` (R3) — every PTE state write site in `os/` sits
+//!   inside the function the declared transition table allows.
+//! * `metrics` (R4) — every `Metrics` counter is updated somewhere,
+//!   surfaced in a summary/bench writer, and never mutated from two
+//!   unrelated files without being declared shared.
+//!
+//! Escape hatch: a `// lint: allow(<rule>) reason=<why>` comment on the
+//! flagged line (or in the comment block directly above it) suppresses
+//! a finding; suppressed findings are counted and reported, and an
+//! allow without a reason is itself a finding (`allow-syntax`).
+//!
+//! Implementation note: the offline build environment has no `syn` (or
+//! any crates.io access), so this is a deliberately self-contained
+//! line/token-level scanner: comments and string literals are stripped
+//! before matching, and a brace-tracking pass recovers the enclosing
+//! `fn` name for every line (all R3 needs). That is cruder than a real
+//! AST, but the tree is rustfmt-formatted, which keeps the token
+//! stream line-oriented enough for these rules to be exact in
+//! practice — and the fixture tests below pin the behavior.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Declared rule tables
+// ---------------------------------------------------------------------------
+
+/// R2: `Msg` variant -> `CostModel` method that prices it. A variant
+/// missing here fails the lint until its lane is declared — exactly
+/// the "new tag, forgotten lane" mistake this rule exists to catch.
+/// Control traffic (announces, membership, completion) rides the plain
+/// `wire_ns` lane; checkpoints and page movement have dedicated lanes.
+const MSG_LANES: &[(&str, &str)] = &[
+    ("Hello", "wire_ns"),
+    ("Stretch", "stretch_ns"),
+    ("StretchAck", "stretch_ns"),
+    ("Push", "push_ns"),
+    ("PullReq", "pull_ns"),
+    ("PullData", "pull_ns"),
+    ("Jump", "jump_ns"),
+    ("Sync", "wire_ns"),
+    ("Done", "wire_ns"),
+    ("Bye", "wire_ns"),
+    ("Join", "wire_ns"),
+    ("Leave", "wire_ns"),
+    ("Drain", "wire_ns"),
+    ("PushBatch", "push_batch_ns"),
+    ("PullBatchReq", "pull_batch_ns"),
+    ("PullBatchData", "pull_batch_ns"),
+    ("DemoteBatch", "demote_batch_ns"),
+    ("PromoteReq", "promote_batch_ns"),
+    ("PromoteData", "promote_batch_ns"),
+];
+
+/// R3: PTE state-write pattern -> functions allowed to perform it.
+/// Everything else touching these transitions is a finding: the state
+/// machine (unmapped -> resident -> far, plus the prefetched/pinned
+/// bits) must stay confined to its named paths.
+const PTE_TRANSITIONS: &[(&str, &[&str], &str)] = &[
+    (".pt.map(", &["minor_fault"], "unmapped->resident only on first touch"),
+    (".pt.relocate(", &["move_page", "pull_page"], "resident pages move only via the page movers"),
+    (".pt.demote(", &["demote_page"], "resident->far only via demote_page"),
+    (".pt.promote(", &["promote_page"], "far->resident only via promote_page"),
+    (".pt.unmap(", &["drain_lose"], "live pages are unmapped only on drain loss"),
+    (
+        ".set_prefetched(true)",
+        &["prefetch_adjacent", "promote_adjacent"],
+        "the prefetched bit is set only on speculative cold installs",
+    ),
+    (
+        ".set_prefetched(false)",
+        &["resolve_slow"],
+        "the prefetched bit is consumed only by the first-touch slow path",
+    ),
+    (".set_pinned(true)", &["minor_fault"], "pages pin only when a stack page is first mapped"),
+    (".set_pinned(false)", &[], "nothing unpins pages today; extend the table when that changes"),
+];
+
+/// R4: `Metrics` fields that may legitimately be mutated from more
+/// than one file. Currently none — churn counters live in
+/// `os/membership.rs`, everything else in `os/kernel.rs` or the
+/// metrics module itself.
+const METRICS_SHARED_OK: &[&str] = &[];
+
+/// R4: files that count as surfacing a counter (summaries and bench
+/// JSON writers). `os/metrics.rs` itself also counts, but only below
+/// the struct declaration (i.e. in `total_bytes`/`summary_line`).
+const METRICS_SURFACE_FILES: &[&str] = &["main.rs", "eval/experiments.rs", "eval/report.rs"];
+
+/// R1 scope: module prefixes (relative to `rust/src/`) whose code
+/// feeds simulated state and therefore must be deterministic.
+const SIM_SCOPES: &[&str] = &["os/", "mem/", "sim/"];
+
+// ---------------------------------------------------------------------------
+// Data model
+// ---------------------------------------------------------------------------
+
+/// One source file, path relative to `rust/src/` (forward slashes).
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub snippet: String,
+    pub msg: String,
+}
+
+/// A finding suppressed by a `// lint: allow(...)` comment.
+#[derive(Debug, Clone)]
+pub struct AllowedFinding {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+/// Full result of a lint run.
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub allowed: Vec<AllowedFinding>,
+}
+
+#[derive(Debug, Clone)]
+struct AllowSite {
+    line: usize,
+    rule: String,
+    reason: String,
+    reason_ok: bool,
+}
+
+/// Preprocessed file: raw lines, comment/string-stripped lines, the
+/// enclosing fn name per line, and parsed allow comments.
+struct Prepared {
+    path: String,
+    raw: Vec<String>,
+    stripped: Vec<String>,
+    fn_at: Vec<String>,
+    allows: Vec<AllowSite>,
+}
+
+// ---------------------------------------------------------------------------
+// Loading
+// ---------------------------------------------------------------------------
+
+/// Load every `.rs` file under `<repo_root>/rust/src`, sorted by path.
+pub fn load_tree(repo_root: &Path) -> io::Result<Vec<SourceFile>> {
+    let src = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &src, &mut files)?;
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(files)
+}
+
+fn collect_rs(base: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(base, &p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel = match p.strip_prefix(base) {
+                Ok(r) => r.to_string_lossy().replace('\\', "/"),
+                Err(_) => p.to_string_lossy().replace('\\', "/"),
+            };
+            out.push(SourceFile { path: rel, text: fs::read_to_string(&p)? });
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Preprocessing
+// ---------------------------------------------------------------------------
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Strip comments and the contents of string/char literals, keeping
+/// the line structure intact so line numbers still correspond.
+fn strip_source(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_block = 0usize;
+    for line in text.lines() {
+        let b: Vec<char> = line.chars().collect();
+        let mut s = String::with_capacity(b.len());
+        let mut i = 0;
+        while i < b.len() {
+            if in_block > 0 {
+                if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                    in_block -= 1;
+                    i += 2;
+                } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                    in_block += 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            let c = b[i];
+            if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+                break; // line comment: drop the rest
+            }
+            if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                in_block += 1;
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                s.push('"');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == '\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '"' {
+                        s.push('"');
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            if c == '\'' {
+                // Char literal vs lifetime: a literal closes within two
+                // chars or starts with an escape.
+                if i + 1 < b.len() && b[i + 1] == '\\' {
+                    s.push('\'');
+                    i += 2;
+                    while i < b.len() && b[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else if i + 2 < b.len() && b[i + 2] == '\'' {
+                    s.push('\'');
+                    i += 3;
+                } else {
+                    s.push('\'');
+                    i += 1; // lifetime marker
+                }
+                continue;
+            }
+            s.push(c);
+            i += 1;
+        }
+        out.push(s);
+    }
+    out
+}
+
+/// Extract the function name declared on this (stripped) line, if any.
+fn find_fn_name(line: &str) -> Option<String> {
+    let b: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    while i + 2 < b.len() {
+        if b[i] == 'f'
+            && b[i + 1] == 'n'
+            && (i == 0 || !is_ident_char(b[i - 1]))
+            && b[i + 2] == ' '
+        {
+            let mut j = i + 3;
+            while j < b.len() && b[j] == ' ' {
+                j += 1;
+            }
+            let start = j;
+            while j < b.len() && is_ident_char(b[j]) {
+                j += 1;
+            }
+            if j > start {
+                return Some(b[start..j].iter().collect());
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// For each line, the name of the innermost enclosing `fn` ("" when
+/// outside any function), recovered by brace tracking.
+fn fn_names(stripped: &[String]) -> Vec<String> {
+    let mut out = Vec::with_capacity(stripped.len());
+    let mut stack: Vec<(String, i32)> = Vec::new();
+    let mut depth: i32 = 0;
+    let mut pending: Option<String> = None;
+    for line in stripped {
+        if let Some(name) = find_fn_name(line) {
+            pending = Some(name);
+        }
+        let here = match &pending {
+            Some(n) => n.clone(),
+            None => stack.last().map(|(n, _)| n.clone()).unwrap_or_default(),
+        };
+        for ch in line.chars() {
+            if ch == '{' {
+                depth += 1;
+                if let Some(n) = pending.take() {
+                    stack.push((n, depth));
+                }
+            } else if ch == '}' {
+                if stack.last().map(|&(_, d)| d) == Some(depth) {
+                    stack.pop();
+                }
+                depth -= 1;
+            }
+        }
+        out.push(here);
+    }
+    out
+}
+
+/// Parse `// lint: allow(<rule>) reason=<why>` comments (raw lines).
+fn parse_allows(raw: &[String]) -> Vec<AllowSite> {
+    let mut out = Vec::new();
+    for (i, line) in raw.iter().enumerate() {
+        let Some(pos) = line.find("lint: allow(") else { continue };
+        let rest = &line[pos + "lint: allow(".len()..];
+        let Some(end) = rest.find(')') else { continue };
+        let rule = rest[..end].trim().to_string();
+        let after = &rest[end + 1..];
+        let (reason, reason_ok) = match after.find("reason=") {
+            Some(rp) => {
+                let r = after[rp + "reason=".len()..].trim().to_string();
+                let ok = r.len() >= 3;
+                (r, ok)
+            }
+            None => (String::new(), false),
+        };
+        out.push(AllowSite { line: i + 1, rule, reason, reason_ok });
+    }
+    out
+}
+
+fn prepare(f: &SourceFile) -> Prepared {
+    let raw: Vec<String> = f.text.lines().map(|l| l.to_string()).collect();
+    let stripped = strip_source(&f.text);
+    let fn_at = fn_names(&stripped);
+    let allows = parse_allows(&raw);
+    Prepared { path: f.path.clone(), raw, stripped, fn_at, allows }
+}
+
+/// Find an allow for `rule` covering 1-based `line`: on the line
+/// itself, or in the contiguous comment/attribute block above it.
+fn find_allow<'a>(prep: &'a Prepared, rule: &str, line: usize) -> Option<&'a AllowSite> {
+    let hit = |l: usize| prep.allows.iter().find(|a| a.line == l && a.rule == rule);
+    if let Some(a) = hit(line) {
+        return Some(a);
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let t = prep.raw[l - 1].trim();
+        if t.is_empty() || t.starts_with("//") || t.starts_with("#[") {
+            if let Some(a) = hit(l) {
+                return Some(a);
+            }
+        } else {
+            break;
+        }
+    }
+    None
+}
+
+/// Whether the `unsafe` at 1-based `line` is covered by a `// SAFETY:`
+/// comment: on the line itself, or above it within the same statement
+/// (the walk stops at the previous statement or block boundary).
+fn has_safety_comment(prep: &Prepared, line: usize) -> bool {
+    let mut l = line;
+    loop {
+        if prep.raw[l - 1].contains("SAFETY:") {
+            return true;
+        }
+        if l != line {
+            let t = prep.raw[l - 1].trim();
+            let code = &prep.stripped[l - 1];
+            let commentish = t.is_empty() || t.starts_with("//") || t.starts_with("#[");
+            if !commentish && (code.contains(';') || code.contains('{') || code.contains('}')) {
+                return false;
+            }
+        }
+        if l == 1 {
+            return false;
+        }
+        l -= 1;
+    }
+}
+
+/// Substring match with identifier boundaries on both sides.
+fn has_word(line: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(p) = line[start..].find(word) {
+        let at = start + p;
+        let before_ok = at == 0 || !is_ident_char(line[..at].chars().next_back().unwrap());
+        let after = at + word.len();
+        let after_ok = after >= line.len() || !is_ident_char(line[after..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+fn snippet(prep: &Prepared, line: usize) -> String {
+    let s = prep.raw.get(line - 1).map(|l| l.trim().to_string()).unwrap_or_default();
+    if s.len() > 120 {
+        let mut cut = 120;
+        while cut > 0 && !s.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        format!("{}...", &s[..cut])
+    } else {
+        s
+    }
+}
+
+fn finding(rule: &'static str, prep: &Prepared, line: usize, msg: String) -> Finding {
+    Finding { rule, file: prep.path.clone(), line, snippet: snippet(prep, line), msg }
+}
+
+// ---------------------------------------------------------------------------
+// R1: determinism + unsafe-safety
+// ---------------------------------------------------------------------------
+
+fn in_sim_scope(path: &str) -> bool {
+    SIM_SCOPES.iter().any(|s| path.starts_with(s))
+}
+
+fn check_determinism(preps: &[Prepared]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for p in preps.iter().filter(|p| in_sim_scope(&p.path)) {
+        for (i, line) in p.stripped.iter().enumerate() {
+            let ln = i + 1;
+            if has_word(line, "HashMap") || has_word(line, "HashSet") {
+                out.push(finding(
+                    "determinism",
+                    p,
+                    ln,
+                    "hash collection in a simulation path: iteration order is \
+                     nondeterministic; use BTreeMap/BTreeSet or sorted iteration"
+                        .to_string(),
+                ));
+            }
+            if has_word(line, "Instant")
+                || has_word(line, "SystemTime")
+                || has_word(line, "thread_rng")
+            {
+                out.push(finding(
+                    "determinism",
+                    p,
+                    ln,
+                    "wall clock / ambient randomness in a simulation path: results \
+                     must be a function of the seed and the cost model alone"
+                        .to_string(),
+                ));
+            }
+            let accum = line.contains("+=") || line.contains(".sum()") || line.contains(".fold(");
+            if accum && (has_word(line, "f64") || has_word(line, "f32")) {
+                out.push(finding(
+                    "determinism",
+                    p,
+                    ln,
+                    "float accumulation in a simulation path: rounding depends on \
+                     evaluation order; use integer arithmetic or add an allow"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn check_unsafe(preps: &[Prepared]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for p in preps {
+        for (i, line) in p.stripped.iter().enumerate() {
+            let ln = i + 1;
+            if has_word(line, "unsafe") && !has_safety_comment(p, ln) {
+                out.push(finding(
+                    "unsafe-safety",
+                    p,
+                    ln,
+                    "unsafe without a `// SAFETY:` comment explaining why the \
+                     invariants hold"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R2: protocol completeness
+// ---------------------------------------------------------------------------
+
+/// Variants of `pub enum Msg` with their 1-based declaration lines.
+fn enum_variants(prep: &Prepared) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    let n = prep.stripped.len();
+    while i < n && !prep.stripped[i].contains("pub enum Msg") {
+        i += 1;
+    }
+    if i == n {
+        return out;
+    }
+    let mut depth = 0i32;
+    let mut started = false;
+    while i < n {
+        let line = &prep.stripped[i];
+        let depth_at_start = depth;
+        for ch in line.chars() {
+            if ch == '{' {
+                depth += 1;
+                started = true;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+        }
+        if started && depth_at_start == 1 {
+            let t = line.trim();
+            if t.chars().next().map(|c| c.is_ascii_uppercase()).unwrap_or(false) {
+                let name: String = t.chars().take_while(|c| is_ident_char(*c)).collect();
+                out.push((name, i + 1));
+            }
+        }
+        if started && depth == 0 {
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `Msg::Name { .. } => N` arms inside the given function.
+fn msg_match_arms(prep: &Prepared, func: &str) -> Vec<(String, u32, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in prep.stripped.iter().enumerate() {
+        if prep.fn_at[i] != func {
+            continue;
+        }
+        let Some(p) = line.find("Msg::") else { continue };
+        let name: String = line[p + 5..].chars().take_while(|c| is_ident_char(*c)).collect();
+        let Some(ap) = line.find("=>") else { continue };
+        if name.is_empty() {
+            continue;
+        }
+        let digits: String = if ap > p {
+            // `Msg::Name ... => N` (the tag() shape)
+            line[ap + 2..].chars().filter(|c| c.is_ascii_digit()).collect()
+        } else {
+            // `N => Msg::Name ...` (the decode() shape)
+            line[..ap].chars().filter(|c| c.is_ascii_digit()).collect()
+        };
+        if let Ok(v) = digits.parse::<u32>() {
+            out.push((name, v, i + 1));
+        }
+    }
+    out
+}
+
+/// First line index (0-based) of the `#[cfg(test)]` region, if any.
+fn test_region_start(prep: &Prepared) -> Option<usize> {
+    prep.raw.iter().position(|l| l.contains("#[cfg(test)]"))
+}
+
+fn check_protocol(preps: &[Prepared]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(proto) = preps.iter().find(|p| p.path == "net/proto.rs") else {
+        return vec![Finding {
+            rule: "protocol",
+            file: "net/proto.rs".to_string(),
+            line: 1,
+            snippet: String::new(),
+            msg: "net/proto.rs not found: cannot check protocol completeness".to_string(),
+        }];
+    };
+    let variants = enum_variants(proto);
+    if variants.is_empty() {
+        out.push(finding("protocol", proto, 1, "no `pub enum Msg` variants parsed".to_string()));
+        return out;
+    }
+    let tags = msg_match_arms(proto, "tag");
+    let decodes = msg_match_arms(proto, "decode");
+    let costs = preps.iter().find(|p| p.path == "sim/costs.rs");
+    let tests_at = test_region_start(proto);
+
+    let tag_of: BTreeMap<&str, u32> = tags.iter().map(|(n, v, _)| (n.as_str(), *v)).collect();
+    let decoded: BTreeSet<u32> = decodes.iter().map(|(_, v, _)| *v).collect();
+
+    // Tags must be unique and contiguous from 0.
+    let mut seen_tags: BTreeSet<u32> = BTreeSet::new();
+    for (name, v, line) in &tags {
+        if !seen_tags.insert(*v) {
+            out.push(finding(
+                "protocol",
+                proto,
+                *line,
+                format!("duplicate wire tag {v} (variant {name})"),
+            ));
+        }
+    }
+    for (i, v) in seen_tags.iter().enumerate() {
+        if *v != i as u32 {
+            out.push(finding(
+                "protocol",
+                proto,
+                1,
+                format!("wire tags are not contiguous: expected {i}, found {v}"),
+            ));
+            break;
+        }
+    }
+
+    for (name, line) in &variants {
+        let Some(tag) = tag_of.get(name.as_str()) else {
+            out.push(finding("protocol", proto, *line, format!("variant {name} has no wire tag")));
+            continue;
+        };
+        if !decoded.contains(tag) {
+            out.push(finding(
+                "protocol",
+                proto,
+                *line,
+                format!("variant {name} (tag {tag}) has no decode arm"),
+            ));
+        }
+        // Priced: a declared lane whose method exists in sim/costs.rs.
+        match MSG_LANES.iter().find(|(n, _)| n == name) {
+            None => out.push(finding(
+                "protocol",
+                proto,
+                *line,
+                format!(
+                    "unpriced variant {name}: declare its CostModel lane in \
+                     elastic-lint's MSG_LANES table"
+                ),
+            )),
+            Some((_, method)) => {
+                let needle = format!("fn {method}(");
+                let exists =
+                    costs.map(|c| c.stripped.iter().any(|l| l.contains(&needle))).unwrap_or(false);
+                if !exists {
+                    out.push(finding(
+                        "protocol",
+                        proto,
+                        *line,
+                        format!(
+                            "variant {name} is priced by CostModel::{method}, which \
+                             does not exist in sim/costs.rs"
+                        ),
+                    ));
+                }
+            }
+        }
+        // Tested: referenced in the codec test module. `has_word` gives
+        // the name an identifier boundary, so `Msg::PushBatch` in a test
+        // does not count as coverage for `Push`.
+        let needle = format!("Msg::{name}");
+        let covered = |l: &String| l.contains(&needle) && has_word(l, name);
+        let tested = match tests_at {
+            Some(start) => proto.stripped.iter().skip(start).any(covered),
+            None => false,
+        };
+        if !tested {
+            out.push(finding(
+                "protocol",
+                proto,
+                *line,
+                format!("variant {name} never appears in net/proto.rs codec tests"),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R3: PTE transition table
+// ---------------------------------------------------------------------------
+
+fn check_pte(preps: &[Prepared]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for p in preps.iter().filter(|p| p.path.starts_with("os/")) {
+        for (i, line) in p.stripped.iter().enumerate() {
+            for (pat, allowed_fns, why) in PTE_TRANSITIONS {
+                if !line.contains(pat) {
+                    continue;
+                }
+                let here = p.fn_at[i].as_str();
+                if !allowed_fns.contains(&here) {
+                    out.push(finding(
+                        "pte-transition",
+                        p,
+                        i + 1,
+                        format!(
+                            "PTE transition `{pat}` in fn `{here}` is outside the \
+                             declared table ({why}); allowed: {allowed_fns:?}"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R4: metrics accounting
+// ---------------------------------------------------------------------------
+
+/// `pub <name>: u64` fields of `pub struct Metrics`, plus the 1-based
+/// line where the struct's declaration block ends.
+fn metrics_fields(prep: &Prepared) -> (Vec<(String, usize)>, usize) {
+    let mut out = Vec::new();
+    let mut i = 0;
+    let n = prep.stripped.len();
+    while i < n && !prep.stripped[i].contains("pub struct Metrics") {
+        i += 1;
+    }
+    if i == n {
+        return (out, 0);
+    }
+    let mut depth = 0i32;
+    let mut started = false;
+    while i < n {
+        let line = &prep.stripped[i];
+        let depth_at_start = depth;
+        for ch in line.chars() {
+            if ch == '{' {
+                depth += 1;
+                started = true;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+        }
+        if started && depth_at_start == 1 {
+            let t = line.trim();
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if rest.contains(": u64") {
+                    let name: String = rest.chars().take_while(|c| is_ident_char(*c)).collect();
+                    if !name.is_empty() {
+                        out.push((name, i + 1));
+                    }
+                }
+            }
+        }
+        if started && depth == 0 {
+            return (out, i + 1);
+        }
+        i += 1;
+    }
+    (out, n)
+}
+
+/// Files whose code mutates `.field` via `+=` or `=` (not `==`).
+/// Mutations inside a `#[cfg(test)]` region do not count — tests are
+/// not a subsystem, and counters they poke still need a real owner.
+fn mutation_files(preps: &[Prepared], field: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let dotted = format!(".{field}");
+    for p in preps {
+        let tests_at = test_region_start(p).unwrap_or(usize::MAX);
+        for (i, line) in p.stripped.iter().enumerate() {
+            if i >= tests_at {
+                break;
+            }
+            let mut start = 0;
+            let mut hit = false;
+            while let Some(pos) = line[start..].find(&dotted) {
+                let at = start + pos;
+                let after = at + dotted.len();
+                start = after;
+                if after < line.len() && is_ident_char(line[after..].chars().next().unwrap()) {
+                    continue; // longer identifier, e.g. .jumps_total
+                }
+                let rest = line[after..].trim_start();
+                if rest.starts_with("+=") || (rest.starts_with('=') && !rest.starts_with("==")) {
+                    hit = true;
+                }
+            }
+            if hit {
+                out.push((p.path.clone(), i + 1));
+            }
+        }
+    }
+    out
+}
+
+fn check_metrics(preps: &[Prepared]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(m) = preps.iter().find(|p| p.path == "os/metrics.rs") else {
+        return vec![Finding {
+            rule: "metrics",
+            file: "os/metrics.rs".to_string(),
+            line: 1,
+            snippet: String::new(),
+            msg: "os/metrics.rs not found: cannot check metrics accounting".to_string(),
+        }];
+    };
+    let (fields, struct_end) = metrics_fields(m);
+    if fields.is_empty() {
+        out.push(finding("metrics", m, 1, "no `pub struct Metrics` u64 fields parsed".into()));
+        return out;
+    }
+    for (field, line) in &fields {
+        let sites = mutation_files(preps, field);
+        if sites.is_empty() {
+            out.push(finding(
+                "metrics",
+                m,
+                *line,
+                format!("Metrics::{field} is never updated anywhere in the tree"),
+            ));
+        }
+        let files: BTreeSet<&str> = sites.iter().map(|(f, _)| f.as_str()).collect();
+        if files.len() > 1 && !METRICS_SHARED_OK.contains(&field.as_str()) {
+            out.push(finding(
+                "metrics",
+                m,
+                *line,
+                format!(
+                    "Metrics::{field} is mutated from {} files ({:?}); one subsystem \
+                     should own each counter — declare it in METRICS_SHARED_OK if \
+                     the split is intentional",
+                    files.len(),
+                    files
+                ),
+            ));
+        }
+        let in_surface = preps.iter().any(|p| {
+            METRICS_SURFACE_FILES.contains(&p.path.as_str())
+                && p.stripped.iter().any(|l| has_word(l, field))
+        });
+        let in_metrics_impl =
+            m.stripped.iter().enumerate().any(|(i, l)| i + 1 > struct_end && has_word(l, field));
+        if !in_surface && !in_metrics_impl {
+            out.push(finding(
+                "metrics",
+                m,
+                *line,
+                format!(
+                    "Metrics::{field} is counted but never surfaced in a summary or \
+                     bench-JSON writer ({METRICS_SURFACE_FILES:?} or the Metrics impl)"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Allow hygiene
+// ---------------------------------------------------------------------------
+
+fn check_allow_syntax(preps: &[Prepared]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let known: BTreeSet<&str> =
+        ["determinism", "unsafe-safety", "protocol", "pte-transition", "metrics"]
+            .into_iter()
+            .collect();
+    for p in preps {
+        for a in &p.allows {
+            if !a.reason_ok {
+                out.push(finding(
+                    "allow-syntax",
+                    p,
+                    a.line,
+                    "lint allow without a reason: write \
+                     `// lint: allow(<rule>) reason=<why>`"
+                        .to_string(),
+                ));
+            }
+            if !known.contains(a.rule.as_str()) {
+                out.push(finding(
+                    "allow-syntax",
+                    p,
+                    a.line,
+                    format!("lint allow names unknown rule `{}`", a.rule),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Driver + rendering
+// ---------------------------------------------------------------------------
+
+/// Run every rule over the file set and apply the allow escape hatch.
+pub fn check(files: &[SourceFile]) -> Report {
+    let preps: Vec<Prepared> = files.iter().map(prepare).collect();
+    let mut raw: Vec<Finding> = Vec::new();
+    raw.extend(check_determinism(&preps));
+    raw.extend(check_unsafe(&preps));
+    raw.extend(check_protocol(&preps));
+    raw.extend(check_pte(&preps));
+    raw.extend(check_metrics(&preps));
+    raw.extend(check_allow_syntax(&preps));
+    raw.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule)));
+
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    for f in raw {
+        let covered = preps
+            .iter()
+            .find(|p| p.path == f.file)
+            .and_then(|p| find_allow(p, f.rule, f.line))
+            .filter(|a| a.reason_ok)
+            .map(|a| a.reason.clone());
+        match covered {
+            Some(reason) => allowed.push(AllowedFinding { finding: f, reason }),
+            None => findings.push(f),
+        }
+    }
+    Report { files_scanned: preps.len(), findings, allowed }
+}
+
+fn rule_counts<'a, I: Iterator<Item = &'a Finding>>(it: I) -> BTreeMap<&'static str, usize> {
+    let mut m = BTreeMap::new();
+    for f in it {
+        *m.entry(f.rule).or_insert(0) += 1;
+    }
+    m
+}
+
+/// Human-readable report.
+pub fn render_text(report: &Report) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "elastic-lint: {} files scanned, {} finding(s), {} allowed\n",
+        report.files_scanned,
+        report.findings.len(),
+        report.allowed.len()
+    ));
+    if !report.findings.is_empty() {
+        let counts = rule_counts(report.findings.iter());
+        let per: Vec<String> = counts.iter().map(|(r, n)| format!("{r}={n}")).collect();
+        s.push_str(&format!("findings by rule: {}\n\n", per.join(" ")));
+        for f in &report.findings {
+            s.push_str(&format!("[{}] {}:{}: {}\n", f.rule, f.file, f.line, f.msg));
+            if !f.snippet.is_empty() {
+                s.push_str(&format!("    {}\n", f.snippet));
+            }
+        }
+    }
+    if !report.allowed.is_empty() {
+        let counts = rule_counts(report.allowed.iter().map(|a| &a.finding));
+        let per: Vec<String> = counts.iter().map(|(r, n)| format!("{r}={n}")).collect();
+        s.push_str(&format!("\nallowed ({}): {}\n", report.allowed.len(), per.join(" ")));
+        for a in &report.allowed {
+            s.push_str(&format!(
+                "[{}] {}:{}: allowed, reason={}\n",
+                a.finding.rule, a.finding.file, a.finding.line, a.reason
+            ));
+        }
+    }
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 8);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn finding_json(f: &Finding) -> String {
+    format!(
+        "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"msg\":\"{}\",\"snippet\":\"{}\"}}",
+        f.rule,
+        json_escape(&f.file),
+        f.line,
+        json_escape(&f.msg),
+        json_escape(&f.snippet)
+    )
+}
+
+/// Machine-readable report (the CI artifact). Hand-rolled like every
+/// other JSON writer in this tree — serde is not available offline.
+pub fn render_json(report: &Report) -> String {
+    let findings: Vec<String> = report.findings.iter().map(finding_json).collect();
+    let allowed: Vec<String> = report
+        .allowed
+        .iter()
+        .map(|a| {
+            let f = finding_json(&a.finding);
+            // splice the reason into the object
+            format!("{},\"reason\":\"{}\"}}", &f[..f.len() - 1], json_escape(&a.reason))
+        })
+        .collect();
+    format!(
+        "{{\n  \"files_scanned\": {},\n  \"findings\": [{}],\n  \"allowed\": [{}],\n  \
+         \"counts\": {{\"findings\": {}, \"allowed\": {}}}\n}}\n",
+        report.files_scanned,
+        findings.join(","),
+        allowed.join(","),
+        report.findings.len(),
+        report.allowed.len()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Fixture tests: each rule must catch a seeded violation.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), text: text.to_string() }
+    }
+
+    fn of<'a>(report: &'a Report, rule: &str) -> Vec<&'a Finding> {
+        report.findings.iter().filter(|f| f.rule == rule).collect()
+    }
+
+    #[test]
+    fn determinism_catches_hash_collections_in_sim_paths() {
+        let files = vec![src(
+            "os/bad.rs",
+            r#"
+use std::collections::HashMap;
+fn walk(m: &HashMap<u32, u32>) -> u32 {
+    m.values().sum()
+}
+"#,
+        )];
+        let r = check(&files);
+        assert_eq!(of(&r, "determinism").len(), 2, "{}", render_text(&r));
+    }
+
+    #[test]
+    fn determinism_ignores_out_of_scope_and_comments_and_strings() {
+        let files = vec![
+            src("net/ok.rs", "use std::collections::HashMap;\n"),
+            src(
+                "os/ok.rs",
+                "// a HashMap would be wrong here\nfn f() -> &'static str {\n    \
+                 \"Instant HashMap\"\n}\n",
+            ),
+        ];
+        let r = check(&files);
+        assert!(of(&r, "determinism").is_empty(), "{}", render_text(&r));
+    }
+
+    #[test]
+    fn determinism_catches_wall_clock_and_float_accumulation() {
+        let files = vec![src(
+            "sim/bad.rs",
+            r#"
+fn f(xs: &[f64]) -> f64 {
+    let t = std::time::Instant::now();
+    let mut acc = 0.0f64;
+    acc += xs[0] as f64;
+    let _ = t;
+    acc
+}
+"#,
+        )];
+        let r = check(&files);
+        assert_eq!(of(&r, "determinism").len(), 2, "{}", render_text(&r));
+    }
+
+    #[test]
+    fn allow_suppresses_and_counts_with_reason() {
+        let files = vec![src(
+            "os/allowed.rs",
+            "// lint: allow(determinism) reason=point lookups only, never iterated\n\
+             use std::collections::HashMap;\n",
+        )];
+        let r = check(&files);
+        assert!(of(&r, "determinism").is_empty(), "{}", render_text(&r));
+        assert_eq!(r.allowed.len(), 1);
+        assert!(r.allowed[0].reason.contains("point lookups"));
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding_and_does_not_suppress() {
+        let files = vec![src(
+            "os/noreason.rs",
+            "// lint: allow(determinism)\nuse std::collections::HashSet;\n",
+        )];
+        let r = check(&files);
+        assert_eq!(of(&r, "determinism").len(), 1, "{}", render_text(&r));
+        assert_eq!(of(&r, "allow-syntax").len(), 1, "{}", render_text(&r));
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = src(
+            "mem/bad.rs",
+            "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+        );
+        let good = src(
+            "mem/good.rs",
+            "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller passes a valid pointer.\n    \
+             unsafe { *p }\n}\n",
+        );
+        let r = check(&[bad, good]);
+        let u = of(&r, "unsafe-safety");
+        assert_eq!(u.len(), 1, "{}", render_text(&r));
+        assert_eq!(u[0].file, "mem/bad.rs");
+    }
+
+    const PROTO_FIXTURE: &str = r#"
+pub enum Msg {
+    Hello { node: u8 },
+    Zorp,
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 0,
+            Msg::Zorp => 1,
+        }
+    }
+    pub fn decode(tag: u8) -> Option<Msg> {
+        let m = match tag {
+            0 => Msg::Hello { node: 0 },
+            1 => Msg::Zorp,
+            _ => return None,
+        };
+        Some(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn round_trips() {
+        let _ = super::Msg::Hello { node: 1 };
+        let _ = super::Msg::Zorp;
+    }
+}
+"#;
+
+    const COSTS_FIXTURE: &str = "impl CostModel {\n    pub fn wire_ns(&self, b: u64) -> u64 {\n        \
+                                 b\n    }\n}\n";
+
+    #[test]
+    fn protocol_catches_unpriced_variant() {
+        // `Zorp` is not in MSG_LANES: declaring the lane is exactly the
+        // step this rule forces on whoever adds a message.
+        let r = check(&[src("net/proto.rs", PROTO_FIXTURE), src("sim/costs.rs", COSTS_FIXTURE)]);
+        let p = of(&r, "protocol");
+        assert_eq!(p.len(), 1, "{}", render_text(&r));
+        assert!(p[0].msg.contains("unpriced variant Zorp"), "{}", p[0].msg);
+    }
+
+    #[test]
+    fn protocol_catches_missing_lane_method() {
+        // Hello's lane (wire_ns) is missing from this costs.rs.
+        let costs = src("sim/costs.rs", "impl CostModel {\n    pub fn other(&self) {}\n}\n");
+        let r = check(&[src("net/proto.rs", PROTO_FIXTURE), costs]);
+        assert!(
+            of(&r, "protocol").iter().any(|f| f.msg.contains("wire_ns")),
+            "{}",
+            render_text(&r)
+        );
+    }
+
+    #[test]
+    fn protocol_catches_untested_and_undecoded_variants() {
+        let proto = r#"
+pub enum Msg {
+    Hello { node: u8 },
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 0,
+        }
+    }
+    pub fn decode(tag: u8) -> Option<Msg> {
+        let _ = tag;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {}
+"#;
+        let r = check(&[src("net/proto.rs", proto), src("sim/costs.rs", COSTS_FIXTURE)]);
+        let msgs: Vec<&str> = of(&r, "protocol").iter().map(|f| f.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("no decode arm")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("never appears")), "{msgs:?}");
+    }
+
+    #[test]
+    fn protocol_catches_tag_gaps() {
+        let proto = r#"
+pub enum Msg {
+    Hello { node: u8 },
+    Bye,
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 0,
+            Msg::Bye => 2,
+        }
+    }
+    pub fn decode(tag: u8) -> Option<Msg> {
+        let m = match tag {
+            0 => Msg::Hello { node: 0 },
+            2 => Msg::Bye,
+            _ => return None,
+        };
+        Some(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = (super::Msg::Hello { node: 0 }, super::Msg::Bye);
+    }
+}
+"#;
+        let r = check(&[src("net/proto.rs", proto), src("sim/costs.rs", COSTS_FIXTURE)]);
+        assert!(
+            of(&r, "protocol").iter().any(|f| f.msg.contains("not contiguous")),
+            "{}",
+            render_text(&r)
+        );
+    }
+
+    #[test]
+    fn pte_transition_outside_declared_path_is_caught() {
+        let bad = src(
+            "os/rogue.rs",
+            "impl K {\n    fn steal_page(&mut self) {\n        self.procs[0].pt.map(1, n, f);\n    \
+             }\n}\n",
+        );
+        let good = src(
+            "os/fault.rs",
+            "impl K {\n    fn minor_fault(&mut self) {\n        self.procs[0].pt.map(1, n, f);\n    \
+             }\n}\n",
+        );
+        let r = check(&[bad, good]);
+        let p = of(&r, "pte-transition");
+        assert_eq!(p.len(), 1, "{}", render_text(&r));
+        assert_eq!(p[0].file, "os/rogue.rs");
+        assert!(p[0].msg.contains("steal_page"));
+    }
+
+    #[test]
+    fn pte_prefetched_bit_only_on_cold_install() {
+        let bad = src(
+            "os/rogue.rs",
+            "impl K {\n    fn kswapd(&mut self) {\n        \
+             self.procs[0].pt.get_mut(1).set_prefetched(true);\n    }\n}\n",
+        );
+        let r = check(&[bad]);
+        assert_eq!(of(&r, "pte-transition").len(), 1, "{}", render_text(&r));
+    }
+
+    const METRICS_FIXTURE: &str = r#"
+pub struct Metrics {
+    pub used: u64,
+    pub orphan: u64,
+    pub hidden: u64,
+}
+
+impl Metrics {
+    pub fn summary(&self) -> u64 {
+        self.used
+    }
+}
+"#;
+
+    #[test]
+    fn metrics_rule_catches_orphan_hidden_and_shared_counters() {
+        let files = vec![
+            src("os/metrics.rs", METRICS_FIXTURE),
+            // `used` mutated from two unrelated files; `hidden` is
+            // counted but surfaced nowhere; `orphan` never mutated.
+            src("os/a.rs", "fn a(m: &mut Metrics) {\n    m.used += 1;\n    m.hidden += 1;\n}\n"),
+            src("os/b.rs", "fn b(m: &mut Metrics) {\n    m.used += 1;\n}\n"),
+        ];
+        let r = check(&files);
+        let msgs: Vec<&str> = of(&r, "metrics").iter().map(|f| f.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("orphan is never updated")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("hidden is counted but never")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("used is mutated from 2 files")), "{msgs:?}");
+    }
+
+    #[test]
+    fn metrics_assignment_counts_as_update_but_comparison_does_not() {
+        let files = vec![
+            src(
+                "os/metrics.rs",
+                "pub struct Metrics {\n    pub set_once: u64,\n}\n\nimpl Metrics {\n    \
+                 pub fn summary(&self) -> u64 {\n        self.set_once\n    }\n}\n",
+            ),
+            src(
+                "os/k.rs",
+                "fn k(m: &mut Metrics) {\n    m.set_once = 7;\n    if m.set_once == 7 {}\n}\n",
+            ),
+        ];
+        let r = check(&files);
+        assert!(of(&r, "metrics").is_empty(), "{}", render_text(&r));
+    }
+
+    #[test]
+    fn fn_tracking_handles_nested_braces() {
+        let stripped = strip_source(
+            "fn outer(x: u32) -> u32 {\n    if x > 0 {\n        inner()\n    } else {\n        \
+             0\n    }\n}\nfn later() {}\n",
+        );
+        let names = fn_names(&stripped);
+        assert_eq!(names[2], "outer");
+        assert_eq!(names[4], "outer");
+        assert_eq!(names[7], "later");
+    }
+
+    #[test]
+    fn json_report_is_escaped_and_counts_match() {
+        let files = vec![src("os/bad.rs", "fn f() {\n    let m: HashMap<u8, \"x\\\"y\"> = 0;\n}\n")];
+        let r = check(&files);
+        let js = render_json(&r);
+        assert!(js.contains("\"findings\""));
+        assert!(js.contains("determinism"));
+        assert!(js.contains(&format!("\"findings\": {}", r.findings.len())));
+    }
+}

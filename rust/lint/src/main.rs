@@ -1,0 +1,56 @@
+//! CLI driver: `cargo run -p elastic-lint -- check [--root DIR] [--json FILE]`.
+//!
+//! Prints the text report, writes the JSON artifact, and exits nonzero
+//! when any unallowed finding remains — CI fails on exactly that.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: elastic-lint check [--root DIR] [--json FILE]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("check") {
+        return usage();
+    }
+    // Default root: the repository containing this crate (rust/lint/../..).
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let mut json_path = PathBuf::from("elastic-lint.json");
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" if i + 1 < args.len() => {
+                root = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "--json" if i + 1 < args.len() => {
+                json_path = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            _ => return usage(),
+        }
+    }
+
+    let files = match elastic_lint::load_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("elastic-lint: cannot read {}/rust/src: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let report = elastic_lint::check(&files);
+    print!("{}", elastic_lint::render_text(&report));
+    if let Err(e) = std::fs::write(&json_path, elastic_lint::render_json(&report)) {
+        eprintln!("elastic-lint: cannot write {}: {e}", json_path.display());
+        return ExitCode::from(2);
+    }
+    println!("wrote {}", json_path.display());
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -184,12 +184,13 @@ fn cmd_run(args: &Args) -> i32 {
     let report = sys.run_workload(w.as_mut());
     println!("{}", report.summary_line());
     println!(
-        "  minor={} stretches={} syncs={} tlb_hits={} tlb_misses={} wall={}",
+        "  minor={} stretches={} syncs={} tlb_hits={} tlb_misses={} policy_evals={} wall={}",
         report.metrics.minor_faults,
         report.metrics.stretches,
         report.metrics.sync_events,
         report.metrics.tlb_hits(report.accesses),
         report.metrics.tlb_misses,
+        report.metrics.policy_evals,
         elastic_os::util::stats::fmt_ns(report.wall_ns as f64),
     );
     if push_batch > 1 || prefetch > 0 {

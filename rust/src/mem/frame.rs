@@ -158,6 +158,9 @@ impl FramePool {
     #[inline]
     pub fn frame_ptr(&mut self, f: FrameId) -> *mut u8 {
         let off = f.0 as usize * PAGE_SIZE;
+        debug_assert!(off + PAGE_SIZE <= self.data.len());
+        // SAFETY: `off + PAGE_SIZE <= data.len()` (asserted above), so
+        // the offset stays inside the pool's one allocation.
         unsafe { self.data.as_mut_ptr().add(off) }
     }
 }

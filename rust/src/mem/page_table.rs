@@ -319,7 +319,7 @@ impl ElasticPageTable {
     pub fn verify(&self) -> Result<(), String> {
         let mut counts = [0u32; MAX_NODES];
         let mut far_counts = [0u32; MAX_NODES];
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for (i, p) in self.ptes.iter().enumerate() {
             if p.is_resident() || p.is_far() {
                 if p.is_resident() {

@@ -16,6 +16,7 @@
 
 use super::addr::{NodeId, MAX_NODES};
 use super::page_table::PageIdx;
+// lint: allow(determinism) reason=point lookups only; iteration always walks the intrusive list
 use std::collections::HashMap;
 
 const NIL: u32 = u32::MAX;
@@ -44,6 +45,7 @@ struct Link {
 pub struct ClusterLru {
     links: Vec<Link>,
     free: Vec<u32>,
+    // lint: allow(determinism) reason=point lookups only; iteration walks the list
     slot_of: HashMap<PageKey, u32>,
     head: [u32; MAX_NODES],
     tail: [u32; MAX_NODES],
@@ -55,6 +57,7 @@ impl ClusterLru {
         ClusterLru {
             links: Vec::new(),
             free: Vec::new(),
+            // lint: allow(determinism) reason=point lookups only; never iterated
             slot_of: HashMap::new(),
             head: [NIL; MAX_NODES],
             tail: [NIL; MAX_NODES],

@@ -286,6 +286,84 @@ mod tests {
         round_trip(Msg::Drain { node: NodeId(2), remaining: 4096 });
     }
 
+    /// One representative of every `Msg` variant, in tag order. The
+    /// match below has no wildcard arm, so adding a variant without
+    /// extending this sample list is a compile error — the same
+    /// completeness property elastic-lint's protocol rule checks from
+    /// the outside.
+    fn sample_every_variant() -> Vec<Msg> {
+        let samples = vec![
+            Msg::Hello { node: NodeId(3), ram_frames: 8192 },
+            Msg::Stretch { ckpt: vec![1, 2, 3] },
+            Msg::StretchAck,
+            Msg::Push { idx: 42, data: vec![7; 4096] },
+            Msg::PullReq { idx: 9 },
+            Msg::PullData { idx: 9, data: vec![1; 4096] },
+            Msg::Jump { ckpt: vec![5; 9216] },
+            Msg::Sync { event: vec![2; 64] },
+            Msg::Done { digest: 0xDEAD_BEEF, stats: vec![] },
+            Msg::Bye,
+            Msg::Join { announce: vec![9; 32] },
+            Msg::Leave { node: NodeId(7) },
+            Msg::Drain { node: NodeId(2), remaining: 4096 },
+            Msg::PushBatch { pages: vec![(3, vec![0x11; 4096])] },
+            Msg::PullBatchReq { idxs: vec![1, 2, 3] },
+            Msg::PullBatchData { pages: vec![(4, vec![0x22; 4096])] },
+            Msg::DemoteBatch { pages: vec![(5, vec![0x33; 4096])] },
+            Msg::PromoteReq { idxs: vec![6, 7] },
+            Msg::PromoteData { pages: vec![(8, vec![0x44; 4096])] },
+        ];
+        for m in &samples {
+            match m {
+                Msg::Hello { .. }
+                | Msg::Stretch { .. }
+                | Msg::StretchAck
+                | Msg::Push { .. }
+                | Msg::PullReq { .. }
+                | Msg::PullData { .. }
+                | Msg::Jump { .. }
+                | Msg::Sync { .. }
+                | Msg::Done { .. }
+                | Msg::Bye
+                | Msg::Join { .. }
+                | Msg::Leave { .. }
+                | Msg::Drain { .. }
+                | Msg::PushBatch { .. }
+                | Msg::PullBatchReq { .. }
+                | Msg::PullBatchData { .. }
+                | Msg::DemoteBatch { .. }
+                | Msg::PromoteReq { .. }
+                | Msg::PromoteData { .. } => {}
+            }
+        }
+        samples
+    }
+
+    /// Exhaustive codec sweep: every variant's tag is its position in
+    /// the sample list (contiguous from 0), every sample round-trips
+    /// bit-exactly, every strict prefix of every encoding errors
+    /// instead of panicking, and the first unassigned tag is rejected.
+    #[test]
+    fn every_tag_round_trips_and_every_truncation_errors() {
+        let samples = sample_every_variant();
+        for (tag, m) in samples.iter().enumerate() {
+            let enc = m.encode();
+            assert_eq!(enc[0] as usize, tag, "tags must be contiguous in sample order");
+            assert_eq!(&Msg::decode(&enc).unwrap(), m, "tag {tag} round-trip");
+            for cut in 0..enc.len() {
+                assert!(
+                    Msg::decode(&enc[..cut]).is_err(),
+                    "tag {tag}: truncation at {cut} bytes must error"
+                );
+            }
+        }
+        let next = samples.len() as u8;
+        assert!(
+            matches!(Msg::decode(&[next]), Err(DecodeError::BadTag { tag, .. }) if tag == next),
+            "tag {next} is unassigned and must be rejected"
+        );
+    }
+
     #[test]
     fn join_carries_a_decodable_announce() {
         // The Join payload is the same codec as the startup announce,

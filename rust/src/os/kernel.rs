@@ -537,9 +537,9 @@ pub struct ProcessCtx {
     /// Pages declared lost when a node retired with no survivor that
     /// had room: contents stashed against the owner's ground truth
     /// (paper §4: the origin node can always re-derive its process's
-    /// state), re-faulted in on next touch. Point lookups only, so
-    /// iteration order never influences the simulation.
-    pub(crate) lost_pages: std::collections::HashMap<PageIdx, Vec<u8>>,
+    /// state), re-faulted in on next touch. BTreeMap so any future
+    /// iteration is ordered (the determinism lint bans HashMap here).
+    pub(crate) lost_pages: std::collections::BTreeMap<PageIdx, Vec<u8>>,
 }
 
 impl ProcessCtx {
@@ -565,7 +565,7 @@ impl ProcessCtx {
             meta: ProcessMeta::minimal(1000 + slot as u32, &spec.comm),
             regs: RegisterFile::default(),
             cpu_ns: 0,
-            lost_pages: std::collections::HashMap::new(),
+            lost_pages: std::collections::BTreeMap::new(),
             asp,
         }
     }
@@ -621,7 +621,7 @@ impl std::fmt::Debug for ProcessCtx {
 /// and departed nodes hold nothing — no pages, no LRU entries, no
 /// stretch-set membership, no executing process.
 pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Result<(), String> {
-    let mut seen = std::collections::HashSet::new();
+    let mut seen = std::collections::BTreeSet::new();
     for (slot, p) in procs.iter().enumerate() {
         p.pt.verify().map_err(|e| format!("pid{}: {e}", p.pid))?;
         if !kernel.live[p.running.0 as usize] {
@@ -753,6 +753,9 @@ impl Engine<'_> {
             Some(p) => p,
             None => self.resolve_slow(addr, false),
         };
+        // SAFETY: `ptr` is the base of a live PAGE_SIZE frame (TLB
+        // entries and resolve_slow both return pool frame bases) and
+        // the masked offset stays within the page.
         unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) }
     }
 
@@ -765,6 +768,10 @@ impl Engine<'_> {
             None => self.resolve_slow(addr, false),
         };
         debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
+        // SAFETY: base of a live PAGE_SIZE frame plus an in-page
+        // offset; the page-aligned frame plus the 4-byte-aligned
+        // offset (asserted above) keeps the read aligned and in
+        // bounds.
         unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u32).read() }
     }
 
@@ -777,6 +784,10 @@ impl Engine<'_> {
             None => self.resolve_slow(addr, false),
         };
         debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
+        // SAFETY: base of a live PAGE_SIZE frame plus an in-page
+        // offset; the page-aligned frame plus the 8-byte-aligned
+        // offset (asserted above) keeps the read aligned and in
+        // bounds.
         unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *const u64).read() }
     }
 
@@ -788,6 +799,8 @@ impl Engine<'_> {
             Some(p) => p,
             None => self.resolve_slow(addr, true),
         };
+        // SAFETY: `ptr` is the base of a live PAGE_SIZE frame resolved
+        // for writing and the masked offset stays within the page.
         unsafe { *ptr.add((addr as usize) & (PAGE_SIZE - 1)) = v }
     }
 
@@ -800,6 +813,9 @@ impl Engine<'_> {
             None => self.resolve_slow(addr, true),
         };
         debug_assert!(addr & 3 == 0, "unaligned u32 at {addr:#x}");
+        // SAFETY: base of a live PAGE_SIZE frame resolved for writing;
+        // the page-aligned frame plus the 4-byte-aligned offset
+        // (asserted above) keeps the write aligned and in bounds.
         unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u32).write(v) }
     }
 
@@ -812,6 +828,9 @@ impl Engine<'_> {
             None => self.resolve_slow(addr, true),
         };
         debug_assert!(addr & 7 == 0, "unaligned u64 at {addr:#x}");
+        // SAFETY: base of a live PAGE_SIZE frame resolved for writing;
+        // the page-aligned frame plus the 8-byte-aligned offset
+        // (asserted above) keeps the write aligned and in bounds.
         unsafe { (ptr.add((addr as usize) & (PAGE_SIZE - 1)) as *mut u64).write(v) }
     }
 
@@ -845,6 +864,12 @@ impl Engine<'_> {
             match self.procs[self.cur].tlb.lookup(vpn, false) {
                 Some(p) => {
                     self.clock.tick_accesses((chunk / E) as u64);
+                    debug_assert!(pgoff + chunk <= PAGE_SIZE);
+                    // SAFETY: `p` is the base of a live PAGE_SIZE
+                    // frame, `pgoff + chunk <= PAGE_SIZE` by the chunk
+                    // computation (asserted above), `dst[off..]` holds
+                    // at least `chunk` bytes by the loop bound, and a
+                    // pool frame never aliases a caller buffer.
                     unsafe {
                         std::ptr::copy_nonoverlapping(p.add(pgoff), dst[off..].as_mut_ptr(), chunk)
                     };
@@ -854,6 +879,11 @@ impl Engine<'_> {
                     // fault it in.
                     self.clock.tick_accesses(1);
                     let p = self.resolve_slow(a, false);
+                    debug_assert!(pgoff + E <= PAGE_SIZE);
+                    // SAFETY: `p` is the base of the just-resolved
+                    // frame; the E-byte element fits the page (bulk
+                    // addresses are E-aligned, asserted above) and the
+                    // destination chunk holds at least E bytes.
                     unsafe {
                         std::ptr::copy_nonoverlapping(p.add(pgoff), dst[off..].as_mut_ptr(), E)
                     };
@@ -876,6 +906,11 @@ impl Engine<'_> {
             // The resolve installed a local translation, so every
             // remaining scalar iteration would hit it.
             self.clock.tick_accesses(n as u64 - 1);
+            debug_assert!(pgoff + n * E <= PAGE_SIZE);
+            // SAFETY: the caller's chunk never crosses a page, so
+            // `pgoff + n * E <= PAGE_SIZE` (asserted above); `dst`
+            // holds exactly `n * E` bytes, and a pool frame never
+            // aliases a caller buffer.
             unsafe {
                 std::ptr::copy_nonoverlapping(p.add(pgoff + E), dst[E..].as_mut_ptr(), (n - 1) * E)
             };
@@ -905,6 +940,13 @@ impl Engine<'_> {
             match self.procs[self.cur].tlb.lookup(vpn, true) {
                 Some(p) => {
                     self.clock.tick_accesses((chunk / E) as u64);
+                    debug_assert!(pgoff + chunk <= PAGE_SIZE);
+                    // SAFETY: `p` is the base of a live PAGE_SIZE
+                    // frame writable by this process, `pgoff + chunk
+                    // <= PAGE_SIZE` by the chunk computation (asserted
+                    // above), `src[off..]` holds at least `chunk`
+                    // bytes, and a pool frame never aliases a caller
+                    // buffer.
                     unsafe {
                         std::ptr::copy_nonoverlapping(src[off..].as_ptr(), p.add(pgoff), chunk)
                     };
@@ -912,6 +954,11 @@ impl Engine<'_> {
                 None => {
                     self.clock.tick_accesses(1);
                     let p = self.resolve_slow(a, true);
+                    debug_assert!(pgoff + E <= PAGE_SIZE);
+                    // SAFETY: `p` is the base of the just-resolved
+                    // writable frame; the E-byte element fits the page
+                    // (bulk addresses are E-aligned, asserted above)
+                    // and the source chunk holds at least E bytes.
                     unsafe {
                         std::ptr::copy_nonoverlapping(src[off..].as_ptr(), p.add(pgoff), E)
                     };
@@ -932,6 +979,11 @@ impl Engine<'_> {
         let pgoff = a as usize & (PAGE_SIZE - 1);
         if let Some(p) = self.procs[self.cur].tlb.lookup(a >> 12, true) {
             self.clock.tick_accesses(n as u64 - 1);
+            debug_assert!(pgoff + n * E <= PAGE_SIZE);
+            // SAFETY: the caller's chunk never crosses a page, so
+            // `pgoff + n * E <= PAGE_SIZE` (asserted above); `src`
+            // holds exactly `n * E` bytes, and a pool frame never
+            // aliases a caller buffer.
             unsafe {
                 std::ptr::copy_nonoverlapping(src[E..].as_ptr(), p.add(pgoff + E), (n - 1) * E)
             };
@@ -1009,12 +1061,20 @@ impl Engine<'_> {
             Some(p) => p,
             None => self.resolve_slow(s, false),
         };
+        debug_assert!(spgoff + E <= PAGE_SIZE);
+        // SAFETY: `p` is the base of a live PAGE_SIZE frame, the
+        // E-byte element fits the page (asserted above, E <= 8), and
+        // `tmp` holds 8 bytes.
         unsafe { std::ptr::copy_nonoverlapping(p.add(spgoff), tmp.as_mut_ptr(), E) };
         self.clock.tick_accesses(1);
         let p = match self.procs[self.cur].tlb.lookup(d >> 12, true) {
             Some(p) => p,
             None => self.resolve_slow(d, true),
         };
+        debug_assert!(dpgoff + E <= PAGE_SIZE);
+        // SAFETY: `p` is the base of a live writable PAGE_SIZE frame,
+        // the E-byte element fits the page (asserted above), and `tmp`
+        // holds 8 bytes.
         unsafe { std::ptr::copy_nonoverlapping(tmp.as_ptr(), p.add(dpgoff), E) };
         if n <= 1 {
             return;
@@ -1026,6 +1086,11 @@ impl Engine<'_> {
         let dp = self.procs[self.cur].tlb.lookup(d >> 12, true);
         if let (Some(sp), Some(dp)) = (sp, dp) {
             self.clock.tick_accesses(2 * (n as u64 - 1));
+            debug_assert!(spgoff + n * E <= PAGE_SIZE && dpgoff + n * E <= PAGE_SIZE);
+            // SAFETY: `chunk` is bounded by both pages' remainders, so
+            // both `pgoff + n * E` stay within PAGE_SIZE (asserted
+            // above); copy_bulk rejects overlapping ranges, so the two
+            // frames are distinct.
             unsafe {
                 std::ptr::copy_nonoverlapping(sp.add(spgoff + E), dp.add(dpgoff + E), (n - 1) * E)
             };
@@ -1054,23 +1119,33 @@ impl Engine<'_> {
     // engine (`EngineMem` below and the `ElasticSystem` pager).
 
     pub(crate) fn read_u32s(&mut self, addr: u64, dst: &mut [u32]) {
+        // SAFETY: a `[u32]` allocation is exactly `4 * len` bytes and
+        // `u8` has no alignment requirement; the borrow of `dst` is
+        // held for the whole call.
         let bytes =
             unsafe { std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut u8, dst.len() * 4) };
         self.read_bulk::<4>(addr, bytes)
     }
 
     pub(crate) fn write_u32s(&mut self, addr: u64, src: &[u32]) {
+        // SAFETY: a `[u32]` allocation is exactly `4 * len` bytes and
+        // `u8` has no alignment requirement.
         let bytes = unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * 4) };
         self.write_bulk::<4>(addr, bytes)
     }
 
     pub(crate) fn read_u64s(&mut self, addr: u64, dst: &mut [u64]) {
+        // SAFETY: a `[u64]` allocation is exactly `8 * len` bytes and
+        // `u8` has no alignment requirement; the borrow of `dst` is
+        // held for the whole call.
         let bytes =
             unsafe { std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut u8, dst.len() * 8) };
         self.read_bulk::<8>(addr, bytes)
     }
 
     pub(crate) fn write_u64s(&mut self, addr: u64, src: &[u64]) {
+        // SAFETY: a `[u64]` allocation is exactly `8 * len` bytes and
+        // `u8` has no alignment requirement.
         let bytes = unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * 8) };
         self.write_bulk::<8>(addr, bytes)
     }
@@ -1432,6 +1507,10 @@ impl Engine<'_> {
                 let src_ptr =
                     self.kernel.pools[server.0 as usize].frame_ptr(src_frame) as *const u8;
                 let dst_ptr = self.kernel.pools[run.0 as usize].frame_ptr(frame);
+                // SAFETY: both pointers address full PAGE_SIZE frames;
+                // `server` is a memory server and `run` a compute
+                // node, so the pools — and hence the frames — are
+                // distinct and the copy cannot overlap.
                 unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
             }
             self.kernel.pools[server.0 as usize].dealloc(src_frame);
@@ -1561,6 +1640,10 @@ impl Engine<'_> {
         {
             let src_ptr = self.kernel.pools[from.0 as usize].frame_ptr(src_frame) as *const u8;
             let dst_ptr = self.kernel.pools[server.0 as usize].frame_ptr(frame);
+            // SAFETY: both pointers address full PAGE_SIZE frames;
+            // `from` is a compute node and `server` a memory server,
+            // so the pools — and hence the frames — are distinct and
+            // the copy cannot overlap.
             unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
         }
         self.procs[owner].pt.demote(idx, server, frame);
@@ -1951,6 +2034,9 @@ impl Engine<'_> {
         {
             let src_ptr = self.kernel.pools[from.0 as usize].frame_ptr(src_frame) as *const u8;
             let dst_ptr = self.kernel.pools[target.0 as usize].frame_ptr(frame);
+            // SAFETY: both pointers address full PAGE_SIZE frames in
+            // the two distinct pools checked above (`from != target`),
+            // so the copy cannot overlap.
             unsafe { std::ptr::copy_nonoverlapping(src_ptr, dst_ptr, PAGE_SIZE) };
         }
         self.procs[owner].pt.relocate(idx, target, frame);

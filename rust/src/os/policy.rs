@@ -237,6 +237,7 @@ impl JumpPolicy for EwmaPolicy {
         now_ns: u64,
     ) -> bool {
         self.decay_to(now_ns);
+        // lint: allow(determinism) reason=single-threaded EWMA, fixed evaluation order
         self.mass[owner.0 as usize] += planned as f64 * 0.25;
         true
     }
@@ -247,6 +248,7 @@ impl JumpPolicy for EwmaPolicy {
         if now_ns.saturating_sub(self.last_jump_ns) < self.cooldown_ns && self.last_jump_ns > 0 {
             return Decision::Stay; // refractory
         }
+        // lint: allow(determinism) reason=single-threaded EWMA, fixed evaluation order
         let total: f64 = self.mass.iter().sum();
         if total < self.min_mass {
             return Decision::Stay;

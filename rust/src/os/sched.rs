@@ -457,6 +457,7 @@ impl Shard {
         if !self.has_unfinished() {
             return;
         }
+        // lint: allow(determinism) reason=wall-clock ShardStats only; never feeds the sim clock
         let t0 = std::time::Instant::now();
         while self.cluster.clock.now() < window_end {
             if !self.cluster.round(&mut self.jobs, Some(window_end)) {
@@ -786,6 +787,7 @@ impl ShardedCluster {
 
             let active: Vec<bool> = self.shards.iter().map(|s| s.has_unfinished()).collect();
             let busy0: Vec<u64> = self.shards.iter().map(|s| s.stats.busy_ns).collect();
+            // lint: allow(determinism) reason=barrier-wait wall measurement; never feeds sim state
             let t0 = std::time::Instant::now();
             self.for_each_shard(threads, |shard| shard.run_window(window_end));
             let wall = t0.elapsed().as_nanos() as u64;

@@ -267,6 +267,7 @@ impl ElasticSystem {
 
     /// Run a workload to completion and report.
     pub fn run_workload(&mut self, w: &mut dyn Workload) -> RunReport {
+        // lint: allow(determinism) reason=wall_ns perf accounting only; never feeds sim state
         let wall_start = std::time::Instant::now();
         w.setup(self);
         let digest = w.run(self);

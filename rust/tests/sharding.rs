@@ -138,6 +138,15 @@ fn churn_is_deterministic_across_threads() {
     for (i, r) in base.reports.iter().enumerate() {
         assert_eq!(r.digest, truths[i], "{}: digest != ground truth under churn", ALL_EXT[i]);
     }
+    // The drain path (evacuation, lost-page stash, refault) now runs on
+    // ordered collections — make sure this schedule actually exercises
+    // it, so the bit-identical checks below cover those counters too.
+    let drained: u64 =
+        base.reports.iter().map(|r| r.metrics.pages_evacuated + r.metrics.pages_lost).sum();
+    assert!(drained > 0, "the departing spare should have held pages");
+    let lost: u64 = base.reports.iter().map(|r| r.metrics.pages_lost).sum();
+    let refaults: u64 = base.reports.iter().map(|r| r.metrics.refaults).sum();
+    assert!(refaults <= lost, "refaults only ever re-install lost pages");
     for threads in [2usize, 4] {
         let run = run_sharded(4, threads, Some(churn_schedule()));
         assert_reports_identical(
