@@ -70,6 +70,8 @@ const MSG_LANES: &[(&str, &str)] = &[
     ("DemoteBatch", "demote_batch_ns"),
     ("PromoteReq", "promote_batch_ns"),
     ("PromoteData", "promote_batch_ns"),
+    ("DemoteRepl", "demote_batch_ns"),
+    ("Crash", "wire_ns"),
 ];
 
 /// R3: PTE state-write pattern -> functions allowed to perform it.
@@ -81,7 +83,16 @@ const PTE_TRANSITIONS: &[(&str, &[&str], &str)] = &[
     (".pt.relocate(", &["move_page", "pull_page"], "resident pages move only via the page movers"),
     (".pt.demote(", &["demote_page"], "resident->far only via demote_page"),
     (".pt.promote(", &["promote_page"], "far->resident only via promote_page"),
-    (".pt.unmap(", &["drain_lose"], "live pages are unmapped only on drain loss"),
+    (
+        ".pt.unmap(",
+        &["drain_lose", "crash_lose"],
+        "live pages are unmapped only when a drain or a crash loses them",
+    ),
+    (
+        ".pt.rehome_far(",
+        &["crash_memory_server"],
+        "far pages re-home only on replica fail-over after a server crash",
+    ),
     (
         ".set_prefetched(true)",
         &["prefetch_adjacent", "promote_adjacent"],

@@ -848,6 +848,200 @@ pub fn far_memory(cfg: &EvalConfig) -> Table {
     t
 }
 
+/// `eval failure`: crash-stop fault injection. Three live tenants on
+/// three peer nodes plus two memory servers; a calibrated kill
+/// schedule crashes peer node1 at ~30% of the fault-free makespan and
+/// memory server node3 at ~60% — no drain, no warning. The dead
+/// peer's resident pages are lost and refault from the owners'
+/// ground-truth stashes; execution homed there restarts from its last
+/// jump checkpoint on a survivor. The identical schedule runs at
+/// `--far-replicas 1` (the server crash loses its far pages) and `2`
+/// (every demoted page has a live replica, so the server crash is a
+/// zero-loss re-home — asserted). Every digest is asserted against
+/// DirectMem ground truth. Writes BENCH_failure.json.
+pub fn failure(cfg: &EvalConfig) -> Table {
+    use crate::os::kernel::ClusterConfig;
+    use crate::os::membership::{ChurnEvent, ChurnOp, ChurnSchedule, CrashReport};
+    use crate::os::sched::{direct_ground_truth, ElasticCluster, ProcRunReport};
+    use crate::workloads::Workload;
+
+    const PEERS: usize = 3;
+    const SERVERS: usize = 2;
+    let wls = ["linear", "count_sort", "table_scan"];
+    let frames = cfg.node_frames;
+    // Every tenant overcommits its home node (1.3x), so reclaim runs
+    // and cold pages demote to the far tier — the server crash then
+    // has real state to lose (or re-home).
+    let per_fp = frames as u64 * 4096 * 13 / 10;
+    let make = |i: usize| -> Box<dyn Workload> {
+        let seed = crate::workloads::tenant_seed(cfg.seed, i);
+        by_name_seeded(wls[i], Scale::Bytes(per_fp), seed).unwrap()
+    };
+    let truths: Vec<u64> =
+        (0..wls.len()).map(|i| direct_ground_truth(make(i).as_mut())).collect();
+
+    let run = |far_replicas: u32,
+               schedule: Option<ChurnSchedule>|
+     -> (ElasticCluster, Vec<ProcRunReport>) {
+        let ccfg = ClusterConfig {
+            node_frames: vec![frames; PEERS],
+            // Roomy servers: replication multiplies far-frame demand,
+            // and the zero-loss claim needs every replica rank placed.
+            far_frames: vec![frames * 2; SERVERS],
+            push_batch: cfg.push_batch,
+            prefetch: cfg.prefetch,
+            far_replicas,
+            ..ClusterConfig::default()
+        };
+        let mut cluster = ElasticCluster::new(ccfg);
+        if let Some(s) = schedule {
+            cluster.set_churn(s);
+        }
+        let mut jobs = Vec::new();
+        for (i, wl) in wls.iter().enumerate() {
+            let slot =
+                cluster.spawn_placed(Mode::Elastic, wl, 512).expect("live cluster placement");
+            jobs.push((slot, make(i)));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().expect("cluster invariants after a crash run");
+        (cluster, reports)
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "Failure: 3 live procs on {PEERS}x{frames}-frame peers + {SERVERS} memory \
+             servers; kill schedule !node1@30%, !node{PEERS}@60% of the calibrated \
+             fault-free makespan (peer crash, then memory-server crash)"
+        ),
+        &[
+            "replicas",
+            "proc",
+            "workload",
+            "fault-free",
+            "faulted",
+            "slowdown",
+            "crash refaults",
+            "digest",
+        ],
+    );
+
+    let mut bench: Vec<String> = Vec::new();
+    for far_replicas in [1u32, 2] {
+        // Calibrate per replica factor: replication charges DemoteRepl
+        // time, so the fault-free makespans differ. Up to the first
+        // kill the faulted run replays the calibration bit-for-bit,
+        // so both kills land mid-run by construction.
+        let (cal, base) = run(far_replicas, None);
+        let makespan = cal.clock.now().max(1);
+        let schedule = ChurnSchedule::new(vec![
+            ChurnEvent { at_ns: makespan * 30 / 100, op: ChurnOp::Crash { node: 1 } },
+            ChurnEvent { at_ns: makespan * 60 / 100, op: ChurnOp::Crash { node: PEERS as u8 } },
+        ]);
+        let (cluster, reports) = run(far_replicas, Some(schedule));
+
+        let crashes: Vec<(u64, u8, CrashReport)> = cluster
+            .churn_log
+            .iter()
+            .filter_map(|a| match (a.op, a.crash) {
+                (ChurnOp::Crash { node }, Some(c)) => Some((a.at_ns, node, c)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            crashes.len(),
+            2,
+            "both seeded kills must land mid-run (far_replicas={far_replicas})"
+        );
+        let demotions: u64 = reports.iter().map(|r| r.metrics.demotions).sum();
+        assert!(demotions > 0, "far tier never exercised: the server crash is vacuous");
+        let (_, server_node, server_crash) = crashes[1];
+        assert_eq!(server_node, PEERS as u8, "second kill must be the memory server");
+        if far_replicas >= 2 {
+            assert_eq!(
+                server_crash.far_lost,
+                0,
+                "--far-replicas {far_replicas}: a single server crash must lose zero pages"
+            );
+        }
+
+        for (i, wl) in wls.iter().enumerate() {
+            assert_eq!(
+                reports[i].digest,
+                truths[i],
+                "{wl}: digest != DirectMem ground truth across the kill schedule \
+                 (far_replicas={far_replicas})"
+            );
+            t.row(vec![
+                far_replicas.to_string(),
+                format!("pid{}", reports[i].pid),
+                wl.to_string(),
+                fmt_ns(base[i].cpu_ns as f64),
+                fmt_ns(reports[i].cpu_ns as f64),
+                fmt_x(reports[i].cpu_ns as f64 / base[i].cpu_ns.max(1) as f64),
+                reports[i].metrics.crash_refaults.to_string(),
+                "ok".into(),
+            ]);
+        }
+        let crash_notes: Vec<String> = crashes
+            .iter()
+            .map(|&(at, node, c)| {
+                format!(
+                    "!node{node}@{}: lost={} far_lost={} rehomed={} restarts={} \
+                     forced_stretches={} recovery={}",
+                    fmt_ns(at as f64),
+                    c.pages_lost,
+                    c.far_lost,
+                    c.replica_promotes,
+                    c.restarts,
+                    c.forced_stretches,
+                    fmt_ns(c.recovery_ns as f64),
+                )
+            })
+            .collect();
+        t.note(format!(
+            "far_replicas={far_replicas}: fault-free makespan {}, faulted {}; {}",
+            fmt_ns(makespan as f64),
+            fmt_ns(cluster.clock.now() as f64),
+            crash_notes.join("; "),
+        ));
+
+        let crash_json: Vec<String> = crashes
+            .iter()
+            .map(|&(at, node, c)| {
+                format!(
+                    "{{\"node\":{node},\"at_ns\":{at},\"pages_lost\":{},\"far_lost\":{},\
+                     \"replica_promotes\":{},\"restarts\":{},\"forced_stretches\":{},\
+                     \"recovery_ns\":{}}}",
+                    c.pages_lost,
+                    c.far_lost,
+                    c.replica_promotes,
+                    c.restarts,
+                    c.forced_stretches,
+                    c.recovery_ns,
+                )
+            })
+            .collect();
+        let crash_refaults: u64 = reports.iter().map(|r| r.metrics.crash_refaults).sum();
+        bench.push(format!(
+            "{{\"far_replicas\":{far_replicas},\"faultfree_ns\":{makespan},\
+             \"faulted_ns\":{},\"demotions\":{demotions},\"crash_refaults\":{crash_refaults},\
+             \"digest_ok\":true,\"crashes\":[{}]}}",
+            cluster.clock.now(),
+            crash_json.join(","),
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"peers\": {PEERS},\n  \"servers\": {SERVERS},\n  \
+         \"node_frames\": {frames},\n  \"scenarios\": [\n    {}\n  ]\n}}\n",
+        bench.join(",\n    "),
+    );
+    std::fs::write("BENCH_failure.json", &json).expect("write BENCH_failure.json");
+    println!("wrote BENCH_failure.json");
+    t
+}
+
 /// `eval bench-json`: write BENCH_migration.json — a machine-readable
 /// perf snapshot of the migration paths (sequential-scan sim time and
 /// fault counts with prefetch off/on, drain time batched/unbatched,
@@ -1154,6 +1348,7 @@ pub fn run_all(cfg: &EvalConfig) {
     churn(cfg).emit("churn.txt");
     prefetch_sweep(cfg).emit("prefetch.txt");
     far_memory(cfg).emit("far_memory.txt");
+    failure(cfg).emit("failure.txt");
 }
 
 /// Dispatch by experiment name (CLI).
@@ -1176,6 +1371,7 @@ pub fn run_named(cfg: &EvalConfig, name: &str) -> bool {
         "prefetch" => prefetch_sweep(cfg).emit("prefetch.txt"),
         "scale" => scale(cfg).emit("scale.txt"),
         "far-memory" | "far_memory" => far_memory(cfg).emit("far_memory.txt"),
+        "failure" => failure(cfg).emit("failure.txt"),
         "bench-json" | "bench_json" => bench_json(cfg),
         "all" => run_all(cfg),
         _ => return false,

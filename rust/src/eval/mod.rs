@@ -47,6 +47,9 @@ pub struct EvalConfig {
     pub far_nodes: usize,
     /// Frames per far-memory server (0 = same as `node_frames`).
     pub far_frames: u32,
+    /// Replication factor for demoted pages across memory servers
+    /// (CLI `--far-replicas`; 1 = no replication).
+    pub far_replicas: u32,
 }
 
 impl Default for EvalConfig {
@@ -65,6 +68,7 @@ impl Default for EvalConfig {
             shards: 0,
             far_nodes: 0,
             far_frames: 0,
+            far_replicas: 1,
         }
     }
 }
@@ -102,7 +106,21 @@ impl EvalConfig {
             mode,
             push_batch: self.push_batch,
             prefetch: self.prefetch,
+            far_replicas: self.far_replicas,
             ..SystemConfig::default()
+        }
+    }
+
+    /// The cluster-config form used by the sharded-scheduler
+    /// experiments (multi-tenant, churn, failure).
+    pub fn cluster_config(&self) -> crate::os::kernel::ClusterConfig {
+        crate::os::kernel::ClusterConfig {
+            node_frames: vec![self.node_frames; self.nodes],
+            far_frames: self.far_frame_vec(),
+            push_batch: self.push_batch,
+            prefetch: self.prefetch,
+            far_replicas: self.far_replicas,
+            ..crate::os::kernel::ClusterConfig::default()
         }
     }
 }

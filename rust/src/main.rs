@@ -14,7 +14,7 @@ mod cli;
 use cli::Args;
 use elastic_os::eval::{experiments, EvalConfig};
 use elastic_os::mem::NodeId;
-use elastic_os::os::membership::{ChurnSchedule, Pinned, RoundRobin};
+use elastic_os::os::membership::{ChurnOp, ChurnSchedule, Pinned, RoundRobin};
 use elastic_os::os::system::{ElasticSystem, Mode};
 use elastic_os::os::EwmaPolicy;
 use elastic_os::workloads::{by_name_seeded, Scale};
@@ -62,7 +62,19 @@ USAGE:
                                                   \"+2@5ms,-1@20ms\": node 2 joins
                                                   at 5 ms sim time, node 1 leaves
                                                   at 20 ms; \"+3:1024@1s\" joins
-                                                  node 3 with 1024 frames)
+                                                  node 3 with 1024 frames;
+                                                  \"!1@8ms\" CRASHES node 1 — no
+                                                  drain, unreplicated pages are
+                                                  lost and refault from the
+                                                  owner's stash)
+                [--faults SPEC]                  (crash-only schedule merged into
+                                                  --churn, e.g. \"!1@8ms,!4@20ms\";
+                                                  rejects join/leave events)
+                [--far-replicas R]               (replication factor for demoted
+                                                  pages across memory servers;
+                                                  default 1 = no replication,
+                                                  R=2 survives one server crash
+                                                  with zero page loss)
                 [--far-nodes N[:F]]              (far-memory tier: N memory-server
                                                   nodes of F frames each — frames
                                                   only, no tenants, no execution;
@@ -86,10 +98,14 @@ USAGE:
                  --footprint is then the TOTAL across processes)
   elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
                   ablation-policy|ablation-balance|multinode|multi-tenant|churn|
-                  prefetch|bench-json|scale|far-memory|all>
+                  prefetch|bench-json|scale|far-memory|failure|all>
                  [--fast] [--seed N] [--batch N] [--prefetch N] [--threads N] [--shards S]
-                 [--far-nodes N[:F]]
+                 [--far-nodes N[:F]] [--far-replicas R]
   elasticos cluster [--pages N] [--threshold N] [--prefetch N] [--far-nodes 0|1]
+                    [--restart]                  (kill-and-restart demo: the worker
+                                                  dies mid-handshake and comes back;
+                                                  the leader survives via bounded
+                                                  reconnect retry/backoff)
   elasticos info
 
 Workloads: dfs linear dijkstra block_sort heap_sort count_sort table_scan";
@@ -126,7 +142,7 @@ fn cmd_run(args: &Args) -> i32 {
     // scheduler; refuse rather than silently ignore them (a single
     // process is always driven live through the facade, so --live
     // would be a silent no-op here).
-    for flag in ["churn", "spread", "home", "live", "threads", "shards"] {
+    for flag in ["churn", "faults", "far-replicas", "spread", "home", "live", "threads", "shards"] {
         if args.has(flag) {
             eprintln!("--{flag} requires --procs > 1 (the cluster scheduler)");
             return 2;
@@ -307,11 +323,26 @@ fn cmd_run_multi(
     }
     let record_wall_ns = record_t0.elapsed().as_nanos() as u64;
 
+    let far_replicas: u32 = args.flag_parse("far-replicas").unwrap_or(1);
+    if far_replicas == 0 {
+        eprintln!("--far-replicas must be >= 1 (1 = no replication)");
+        return 2;
+    }
+    if far_replicas > 1 && far_frames.len() < far_replicas as usize {
+        eprintln!(
+            "--far-replicas {far_replicas} needs at least {far_replicas} memory servers \
+             (--far-nodes), got {}",
+            far_frames.len()
+        );
+        return 2;
+    }
+
     let cfg = ClusterConfig {
         node_frames: vec![frames; nodes],
         far_frames: far_frames.clone(),
         push_batch,
         prefetch,
+        far_replicas,
         ..ClusterConfig::default()
     };
     // shards=1 routes to the unchanged legacy engine inside the
@@ -327,15 +358,55 @@ fn cmd_run_multi(
         cluster.set_placement(Box::new(Pinned(NodeId(home))));
     }
 
-    // Membership churn schedule (joins default to --frames frames).
+    // Membership churn schedule (joins default to --frames frames),
+    // with an optional crash-only --faults schedule merged in. The
+    // union is validated against the concrete node layout up front so
+    // a typo'd node id fails the run instead of becoming a skipped
+    // mid-run warning.
+    let mut schedule: Option<ChurnSchedule> = None;
     if let Some(spec) = args.flag("churn") {
         match ChurnSchedule::parse(&spec, frames) {
-            Ok(s) => cluster.set_churn(s),
+            Ok(s) => schedule = Some(s),
             Err(e) => {
                 eprintln!("bad --churn spec: {e}");
                 return 2;
             }
         }
+    }
+    if let Some(spec) = args.flag("faults") {
+        let faults = match ChurnSchedule::parse(&spec, frames) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bad --faults spec: {e}");
+                return 2;
+            }
+        };
+        if let Some(ev) = faults
+            .events()
+            .iter()
+            .find(|e| !matches!(e.op, ChurnOp::Crash { .. }))
+        {
+            eprintln!(
+                "bad --faults spec: {:?} is not a crash — joins/leaves belong in --churn",
+                ev.op
+            );
+            return 2;
+        }
+        let merged = match schedule.take().unwrap_or_default().merge(faults) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bad --faults spec: {e}");
+                return 2;
+            }
+        };
+        schedule = Some(merged);
+    }
+    if let Some(s) = schedule {
+        if let Err(e) = s.validate_nodes(nodes, far_frames.len()) {
+            eprintln!("bad churn/fault schedule: {e}");
+            return 2;
+        }
+        cluster.set_churn(s);
     }
 
     let mut jobs: Vec<(usize, TenantJob)> = Vec::new();
@@ -379,19 +450,30 @@ fn cmd_run_multi(
         );
     }
     for applied in &cluster.churn_log {
-        match applied.drain {
-            None => println!(
-                "churn: {:?} applied at {}",
-                applied.op,
-                elastic_os::util::stats::fmt_ns(applied.at_ns as f64)
-            ),
-            Some(d) => println!(
+        match (applied.drain, applied.crash) {
+            (Some(d), _) => println!(
                 "churn: {:?} applied at {} (evacuated={} lost={} forced_jumps={})",
                 applied.op,
                 elastic_os::util::stats::fmt_ns(applied.at_ns as f64),
                 d.evacuated,
                 d.lost,
                 d.forced_jumps
+            ),
+            (_, Some(c)) => println!(
+                "churn: {:?} applied at {} (lost={} far_lost={} rehomed={} restarts={} \
+                 recovery={})",
+                applied.op,
+                elastic_os::util::stats::fmt_ns(applied.at_ns as f64),
+                c.pages_lost,
+                c.far_lost,
+                c.replica_promotes,
+                c.restarts,
+                elastic_os::util::stats::fmt_ns(c.recovery_ns as f64)
+            ),
+            (None, None) => println!(
+                "churn: {:?} applied at {}",
+                applied.op,
+                elastic_os::util::stats::fmt_ns(applied.at_ns as f64)
             ),
         }
     }
@@ -514,6 +596,13 @@ fn cmd_eval(args: &Args) -> i32 {
             return 2;
         }
     }
+    if let Some(r) = args.flag_parse::<u32>("far-replicas") {
+        if r == 0 {
+            eprintln!("--far-replicas must be >= 1 (1 = no replication)");
+            return 2;
+        }
+        cfg.far_replicas = r;
+    }
     cfg.seed = args.flag_parse::<u64>("seed");
     if experiments::run_named(&cfg, &name) {
         0
@@ -537,6 +626,13 @@ fn cmd_cluster(args: &Args) -> i32 {
     if far_nodes > 1 {
         eprintln!("the TCP demo supports at most one memory server (--far-nodes 0|1)");
         return 2;
+    }
+    if args.has("restart") {
+        if far_nodes > 0 {
+            eprintln!("--restart runs the two-peer demo (drop --far-nodes)");
+            return 2;
+        }
+        return cmd_cluster_restart(pages, threshold);
     }
     if far_nodes == 1 {
         return cmd_cluster_far(pages, threshold, prefetch);
@@ -571,6 +667,37 @@ fn cmd_cluster(args: &Args) -> i32 {
                 0
             } else {
                 eprintln!("DIGEST MISMATCH: expected {expect:#x}");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("cluster failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// `cluster --restart`: the two-peer demo where the worker's first
+/// incarnation is killed mid-handshake and a restarted one takes over
+/// the same listener — the leader survives via bounded reconnect
+/// retry/backoff and the session still produces the exact digest.
+fn cmd_cluster_restart(pages: u32, threshold: u32) -> i32 {
+    match elastic_os::net::peer::run_local_restart(pages, threshold) {
+        Ok((leader, worker, reconnects)) => {
+            let expect = elastic_os::net::peer::expected_digest(pages);
+            println!(
+                "leader: node={} digest={:#x} reconnects={}",
+                leader.node, leader.digest, reconnects
+            );
+            println!(
+                "worker: node={} digest={:#x} (restarted incarnation)",
+                worker.node, worker.digest
+            );
+            if leader.digest == expect && worker.digest == expect && reconnects == 1 {
+                println!("digest OK ({expect:#x}) across a killed-and-restarted worker");
+                0
+            } else {
+                eprintln!("DIGEST MISMATCH or unexpected reconnect count: expected {expect:#x}");
                 1
             }
         }

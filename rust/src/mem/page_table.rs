@@ -249,6 +249,21 @@ impl ElasticPageTable {
         self.far_per_node[node.0 as usize] += 1;
     }
 
+    /// Re-home a far page to a different memory server's (node, frame)
+    /// without promoting it — the crash fail-over transition: the
+    /// primary replica's server died and a surviving replica takes
+    /// over as the page's far home. Flags behave like `demote`.
+    pub fn rehome_far(&mut self, idx: PageIdx, node: NodeId, frame: FrameId) {
+        let pte = &mut self.ptes[idx as usize];
+        debug_assert!(pte.is_far(), "re-homing a page {idx} that is not far-resident");
+        let old_node = pte.node();
+        let mut new = Pte::far(node, frame);
+        new.set_dirty(pte.dirty());
+        *pte = new;
+        self.far_per_node[old_node.0 as usize] -= 1;
+        self.far_per_node[node.0 as usize] += 1;
+    }
+
     /// Promote a far page back to a peer's (node, frame) — the inverse
     /// of `demote`. Flags behave like `relocate`.
     pub fn promote(&mut self, idx: PageIdx, node: NodeId, frame: FrameId) {
@@ -469,6 +484,23 @@ mod tests {
         assert!(p.dirty());
         assert_eq!(t.far_at(n(2)), 0);
         assert_eq!(t.resident_at(n(1)), 1);
+        t.verify().unwrap();
+    }
+
+    #[test]
+    fn rehome_far_moves_between_servers_and_keeps_dirty() {
+        let mut t = ElasticPageTable::new(0, 16);
+        t.map(7, n(0), FrameId(2));
+        t.get_mut(7).set_dirty(true);
+        t.demote(7, n(2), FrameId(4));
+        t.rehome_far(7, n(3), FrameId(9));
+        let p = t.get(7);
+        assert!(p.is_far() && !p.is_resident());
+        assert_eq!(p.node(), n(3));
+        assert_eq!(p.frame(), FrameId(9));
+        assert!(p.dirty(), "dirty must survive a far re-home");
+        assert_eq!(t.far_at(n(2)), 0);
+        assert_eq!(t.far_at(n(3)), 1);
         t.verify().unwrap();
     }
 

@@ -136,11 +136,94 @@ pub struct Peer {
     far_pages: std::collections::HashSet<u32>,
 }
 
+/// Bounded reconnect policy for [`Peer::connect_retry`] and
+/// [`Peer::reconnect`]: a worker process that was killed and is being
+/// restarted (redeployed, rescheduled) needs its peers to keep dialing
+/// for a bounded window instead of failing on the first refused
+/// connection — and to give up with an error rather than spin forever.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Maximum connect attempts (>= 1; 1 = the plain single try).
+    pub attempts: u32,
+    /// Sleep before the second attempt; doubles each retry.
+    pub initial_backoff: std::time::Duration,
+    /// Backoff ceiling for the exponential doubling.
+    pub max_backoff: std::time::Duration,
+    /// Per-attempt TCP connect timeout.
+    pub connect_timeout: std::time::Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 20,
+            initial_backoff: std::time::Duration::from_millis(10),
+            max_backoff: std::time::Duration::from_millis(500),
+            connect_timeout: std::time::Duration::from_secs(2),
+        }
+    }
+}
+
+/// Dial `addr` under `policy`: per-attempt connect timeout, capped
+/// exponential backoff between attempts, hard attempt bound.
+fn retry_connect(addr: &str, policy: &RetryPolicy) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let mut backoff = policy.initial_backoff;
+    let attempts = policy.attempts.max(1);
+    let mut last_err: Option<anyhow::Error> = None;
+    for attempt in 1..=attempts {
+        let addrs = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .collect::<Vec<_>>();
+        for sa in &addrs {
+            match TcpStream::connect_timeout(sa, policy.connect_timeout) {
+                Ok(stream) => {
+                    if attempt > 1 {
+                        log::info!("connected to {addr} on attempt {attempt}/{attempts}");
+                    }
+                    return Ok(stream);
+                }
+                Err(e) => last_err = Some(e.into()),
+            }
+        }
+        if attempt < attempts {
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(policy.max_backoff);
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow::anyhow!("{addr} resolved to no addresses"))
+        .context(format!("connecting to {addr}: {attempts} attempt(s) exhausted")))
+}
+
 impl Peer {
     /// Leader side: connect to the worker's listener.
     pub fn connect(node: NodeId, addr: &str, threshold: u32) -> Result<Peer> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
         Ok(Peer::new(node, stream, threshold))
+    }
+
+    /// [`Peer::connect`] with a bounded retry/backoff window — the dial
+    /// path for a peer that may still be starting (or restarting).
+    pub fn connect_retry(
+        node: NodeId,
+        addr: &str,
+        threshold: u32,
+        policy: &RetryPolicy,
+    ) -> Result<Peer> {
+        let stream = retry_connect(addr, policy)?;
+        Ok(Peer::new(node, stream, threshold))
+    }
+
+    /// Re-dial `addr` after the remote end died mid-session, replacing
+    /// this peer's connection. Page store, stats, and far-tier state
+    /// survive; the protocol restarts from the handshake (the caller
+    /// re-runs [`Peer::leader_handshake`]).
+    pub fn reconnect(&mut self, addr: &str, policy: &RetryPolicy) -> Result<()> {
+        let stream = retry_connect(addr, policy)?;
+        self.conn = Conn::new(stream)?;
+        Ok(())
     }
 
     /// Worker side: accept one connection.
@@ -590,6 +673,48 @@ pub fn run_local_far(
     Ok((leader_report, worker_report, server_report))
 }
 
+/// Kill-and-restart demo over localhost: the worker's first
+/// incarnation accepts the leader's connection and dies on the spot
+/// (crash-stop mid-handshake, socket dropped with no goodbye); a
+/// restarted incarnation then accepts again and serves a full session.
+/// The leader survives by detecting the dead connection, re-dialing
+/// under the bounded [`RetryPolicy`], and re-running the handshake.
+/// Returns (leader, worker, reconnects).
+pub fn run_local_restart(n_pages: u32, threshold: u32) -> Result<(PeerReport, PeerReport, u32)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let split = n_pages / 2;
+
+    let worker = std::thread::spawn(move || -> Result<PeerReport> {
+        // First incarnation: killed before answering the handshake.
+        let (dead, _) = listener.accept().context("accept (first incarnation)")?;
+        drop(dead);
+        // Restarted incarnation: same listener, fresh session state.
+        let mut peer = Peer::accept(NodeId(1), &listener, threshold)?;
+        peer.seed_pages(split, n_pages);
+        peer.worker_handshake()?;
+        let digest = peer.run_passive()?;
+        Ok(PeerReport { node: NodeId(1), digest, stats: peer.stats().clone() })
+    });
+
+    let mut leader = Peer::connect(NodeId(0), &addr.to_string(), threshold)?;
+    leader.seed_pages(0, split);
+    let meta = ProcessMeta::minimal(42, "scan");
+    let mut reconnects = 0u32;
+    if let Err(e) = leader.leader_handshake(&meta) {
+        log::info!("worker died mid-handshake ({e:#}); reconnecting");
+        leader.reconnect(&addr.to_string(), &RetryPolicy::default())?;
+        reconnects += 1;
+        leader.leader_handshake(&meta).context("handshake after reconnect")?;
+    }
+    let task = ScanTask { n_pages, pos: 0, acc: 0 };
+    let digest = leader.run_active(task)?;
+    let leader_report = PeerReport { node: NodeId(0), digest, stats: leader.stats().clone() };
+
+    let worker_report = worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    Ok((leader_report, worker_report, reconnects))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -603,5 +728,37 @@ mod tests {
     #[test]
     fn expected_digest_is_stable() {
         assert_eq!(expected_digest(4), (0..4).map(page_digest).sum::<u64>());
+    }
+
+    #[test]
+    fn connect_retry_gives_up_after_bounded_attempts() {
+        // Bind-then-drop yields a port with (almost certainly) no
+        // listener, so every dial is refused quickly.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let policy = RetryPolicy {
+            attempts: 3,
+            initial_backoff: std::time::Duration::from_millis(1),
+            max_backoff: std::time::Duration::from_millis(4),
+            connect_timeout: std::time::Duration::from_millis(250),
+        };
+        let t0 = std::time::Instant::now();
+        let r = Peer::connect_retry(NodeId(0), &addr.to_string(), 8, &policy);
+        assert!(r.is_err(), "no listener: the bounded dial must fail");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "3 bounded attempts must not spin for seconds"
+        );
+    }
+
+    #[test]
+    fn leader_survives_killed_and_restarted_worker() {
+        let (leader, worker, reconnects) = run_local_restart(64, 8).unwrap();
+        assert_eq!(reconnects, 1, "the first incarnation's death must force one reconnect");
+        let expect = expected_digest(64);
+        assert_eq!(leader.digest, expect, "leader digest after reconnect");
+        assert_eq!(worker.digest, expect, "restarted worker digest");
     }
 }

@@ -94,6 +94,17 @@ pub enum Msg {
     /// Far tier: promotion reply from the memory server (layout of
     /// [`Msg::PullBatchData`]).
     PromoteData { pages: Vec<(PageIdx, Vec<u8>)> },
+    /// Far tier: replica copy of a [`Msg::DemoteBatch`], fanned out to
+    /// one additional memory server per extra replica
+    /// (`--far-replicas` ≥ 2). Same wire layout and bounds as the
+    /// primary demote; a server that loses the primary re-homes the
+    /// page to a surviving replica instead of losing data.
+    DemoteRepl { pages: Vec<(PageIdx, Vec<u8>)> },
+    /// Failure: crash-stop death announce. Unlike [`Msg::Leave`] there
+    /// is no drain — the node's frames are already gone; survivors
+    /// learn of the death and start recovery (checkpoint restarts,
+    /// replica fail-over, ground-truth refaults).
+    Crash { node: NodeId },
 }
 
 /// Decode the shared (count, then idx + page per entry) layout of
@@ -148,6 +159,8 @@ impl Msg {
             Msg::DemoteBatch { .. } => 16,
             Msg::PromoteReq { .. } => 17,
             Msg::PromoteData { .. } => 18,
+            Msg::DemoteRepl { .. } => 19,
+            Msg::Crash { .. } => 20,
         }
     }
 
@@ -183,10 +196,12 @@ impl Msg {
                 e.u8(node.0);
                 e.u32(*remaining);
             }
+            Msg::Crash { node } => e.u8(node.0),
             Msg::PushBatch { pages }
             | Msg::PullBatchData { pages }
             | Msg::DemoteBatch { pages }
-            | Msg::PromoteData { pages } => {
+            | Msg::PromoteData { pages }
+            | Msg::DemoteRepl { pages } => {
                 e.u32(pages.len() as u32);
                 for (idx, data) in pages {
                     e.u32(*idx);
@@ -227,6 +242,8 @@ impl Msg {
             16 => Msg::DemoteBatch { pages: decode_page_batch(&mut d)? },
             17 => Msg::PromoteReq { idxs: decode_idx_batch(&mut d)? },
             18 => Msg::PromoteData { pages: decode_page_batch(&mut d)? },
+            19 => Msg::DemoteRepl { pages: decode_page_batch(&mut d)? },
+            20 => Msg::Crash { node: NodeId(d.u8()?) },
             tag => return Err(DecodeError::BadTag { tag, what: "Msg" }),
         };
         Ok(msg)
@@ -312,6 +329,8 @@ mod tests {
             Msg::DemoteBatch { pages: vec![(5, vec![0x33; 4096])] },
             Msg::PromoteReq { idxs: vec![6, 7] },
             Msg::PromoteData { pages: vec![(8, vec![0x44; 4096])] },
+            Msg::DemoteRepl { pages: vec![(9, vec![0x55; 4096])] },
+            Msg::Crash { node: NodeId(4) },
         ];
         for m in &samples {
             match m {
@@ -333,7 +352,9 @@ mod tests {
                 | Msg::PullBatchData { .. }
                 | Msg::DemoteBatch { .. }
                 | Msg::PromoteReq { .. }
-                | Msg::PromoteData { .. } => {}
+                | Msg::PromoteData { .. }
+                | Msg::DemoteRepl { .. }
+                | Msg::Crash { .. } => {}
             }
         }
         samples
@@ -392,6 +413,13 @@ mod tests {
         // below a page push — churn signalling must stay cheap.
         assert!(Msg::Leave { node: NodeId(1) }.wire_size() < 16);
         assert!(Msg::Drain { node: NodeId(1), remaining: u32::MAX }.wire_size() < 16);
+        // the crash announce is the same class of datagram: failure
+        // detection must not cost page-transfer bytes
+        assert!(Msg::Crash { node: NodeId(1) }.wire_size() < 16);
+        assert_eq!(
+            Msg::Crash { node: NodeId(1) }.wire_size(),
+            Msg::Leave { node: NodeId(1) }.wire_size(),
+        );
     }
 
     #[test]
@@ -452,7 +480,7 @@ mod tests {
 
     #[test]
     fn oversized_batch_count_rejected_not_allocated() {
-        for tag in [13u8, 14, 15, 16, 17, 18] {
+        for tag in [13u8, 14, 15, 16, 17, 18, 19] {
             let mut e = Enc::new();
             e.u8(tag);
             e.u32(MAX_BATCH as u32 + 1);
@@ -473,6 +501,9 @@ mod tests {
         round_trip(Msg::DemoteBatch { pages: vec![] });
         round_trip(Msg::PromoteReq { idxs: vec![] });
         round_trip(Msg::PromoteData { pages: vec![] });
+        round_trip(Msg::DemoteRepl { pages: vec![(1, vec![9; 4096])] });
+        round_trip(Msg::DemoteRepl { pages: vec![] });
+        round_trip(Msg::Crash { node: NodeId(63) });
     }
 
     #[test]
@@ -486,6 +517,11 @@ mod tests {
                 Msg::DemoteBatch { pages: pages.clone() }.wire_size(),
                 Msg::PushBatch { pages: pages.clone() }.wire_size(),
                 "n={n}"
+            );
+            assert_eq!(
+                Msg::DemoteRepl { pages: pages.clone() }.wire_size(),
+                Msg::DemoteBatch { pages: pages.clone() }.wire_size(),
+                "n={n}: a replica copy costs exactly what the primary demote costs"
             );
             assert_eq!(
                 Msg::PromoteData { pages: pages.clone() }.wire_size(),

@@ -27,7 +27,7 @@
 //! or execution lands remotely), so eviction under contention picks
 //! push targets per victim, from the *victim's* stretch set.
 
-use crate::mem::addr::{AddressSpace, AreaKind, NodeId, Vpn, MAX_NODES, PAGE_SIZE};
+use crate::mem::addr::{AddressSpace, AreaKind, FrameId, NodeId, Vpn, MAX_NODES, PAGE_SIZE};
 use crate::mem::frame::FramePool;
 use crate::mem::page_table::{ElasticPageTable, PageIdx};
 use crate::mem::proc_lru::{ClusterLru, PageKey};
@@ -78,6 +78,13 @@ pub struct ClusterConfig {
     /// demote/promote lane of the [`CostModel`]. Empty = no far tier
     /// (bit-identical to the peer-only engine).
     pub far_frames: Vec<u32>,
+    /// Far-tier replication factor (`--far-replicas`): every demoted
+    /// page is copied to this many distinct memory servers (primary +
+    /// R-1 replicas), so a single server crash re-homes pages to a
+    /// surviving replica instead of losing them. Replica copies ship as
+    /// [`Msg::DemoteRepl`] messages priced on the far lane. 1 = no
+    /// replication (bit-identical to the unreplicated engine).
+    pub far_replicas: u32,
 }
 
 impl Default for ClusterConfig {
@@ -92,6 +99,7 @@ impl Default for ClusterConfig {
             push_batch: 1,
             prefetch: 0,
             far_frames: vec![],
+            far_replicas: 1,
         }
     }
 }
@@ -135,6 +143,16 @@ pub struct NodeKernel {
     pub(crate) push_batch: u32,
     /// Remote-fault pull prefetch window (0 = off).
     pub(crate) prefetch: u32,
+    /// Far-tier replication factor (1 = no replication).
+    pub(crate) far_replicas: u32,
+    /// Replica homes of demoted pages, keyed like [`PageKey`]:
+    /// `(process slot, page) -> [(server, frame); R-1]`, kept sorted by
+    /// server id so fail-over picks the lowest-id survivor
+    /// deterministically. Entries exist only while the page is far;
+    /// promotion frees every replica frame and drops the entry. BTreeMap
+    /// so iteration (verify, server-crash sweeps) is ordered — the
+    /// determinism lint bans HashMap here.
+    pub(crate) replicas: std::collections::BTreeMap<(u32, PageIdx), Vec<(NodeId, FrameId)>>,
     /// Precomputed wire sizes (constant per message shape).
     pub(crate) pull_req_bytes: u64,
     pub(crate) page_msg_bytes: u64,
@@ -206,6 +224,8 @@ impl NodeKernel {
             reclaim_batch: cfg.reclaim_batch,
             push_batch: cfg.push_batch.clamp(1, MAX_BATCH as u32),
             prefetch: cfg.prefetch.min(MAX_BATCH as u32 - 1),
+            far_replicas: cfg.far_replicas.max(1),
+            replicas: std::collections::BTreeMap::new(),
             pull_req_bytes: Msg::PullReq { idx: 0 }.wire_size(),
             page_msg_bytes: Msg::Push { idx: 0, data: vec![0; PAGE_SIZE] }.wire_size(),
             batch_data_base: 2 * d1 - d2,
@@ -454,6 +474,9 @@ pub enum ShardMsg {
     Join { node: u8, frames: u32 },
     /// Retire node `node` (receiver owns it): drain + leave.
     Leave { node: u8 },
+    /// Crash-stop node `node` (receiver owns it): frames vanish with no
+    /// drain; the receiver runs the recovery protocol.
+    Crash { node: u8 },
 }
 
 /// A [`ShardMsg`] stamped with its canonical delivery key.
@@ -540,6 +563,15 @@ pub struct ProcessCtx {
     /// state), re-faulted in on next touch. BTreeMap so any future
     /// iteration is ordered (the determinism lint bans HashMap here).
     pub(crate) lost_pages: std::collections::BTreeMap<PageIdx, Vec<u8>>,
+    /// Subset of [`Self::lost_pages`] destroyed by a node *crash*
+    /// rather than an out-of-room drain — their refaults count as
+    /// [`Metrics::crash_refaults`] so the failure evaluation can
+    /// separate crash recovery traffic from drain overflow.
+    pub(crate) crash_lost: std::collections::BTreeSet<PageIdx>,
+    /// Wire size of this process's last shipped [`JumpCheckpoint`]: the
+    /// bytes a crash restart replays when the executing node dies (the
+    /// survivor restores from the last checkpoint it saw).
+    pub(crate) last_ckpt_bytes: u64,
 }
 
 impl ProcessCtx {
@@ -566,6 +598,8 @@ impl ProcessCtx {
             regs: RegisterFile::default(),
             cpu_ns: 0,
             lost_pages: std::collections::BTreeMap::new(),
+            crash_lost: std::collections::BTreeSet::new(),
+            last_ckpt_bytes: 0,
             asp,
         }
     }
@@ -697,6 +731,41 @@ pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Resul
             }
         }
     }
+    // Replica copies of demoted pages: each replica frame lives on a
+    // live memory server distinct from the page's primary home, shares
+    // the frame-aliasing namespace, and only exists while its page is
+    // far. Servers account replica frames in their pool usage.
+    let mut replicas_hosted = vec![0u32; kernel.pools.len()];
+    for (&(slot, idx), homes) in kernel.replicas.iter() {
+        let p = procs
+            .get(slot as usize)
+            .ok_or_else(|| format!("replica entry for unknown process slot {slot}"))?;
+        let pte = p.pt.get(idx);
+        if !pte.is_far() {
+            return Err(format!("pid{} page {idx} has replicas but is not far", p.pid));
+        }
+        if homes.is_empty() {
+            return Err(format!("pid{} page {idx} has an empty replica entry", p.pid));
+        }
+        let mut prev: Option<NodeId> = None;
+        for &(rn, rf) in homes {
+            let n = rn.0 as usize;
+            if rn == pte.node() {
+                return Err(format!("pid{} page {idx} replica aliases its primary {rn}", p.pid));
+            }
+            if kernel.roles[n] != NodeRole::MemoryServer || !kernel.live[n] {
+                return Err(format!("pid{} page {idx} replica on non-server/dead {rn}", p.pid));
+            }
+            if prev.map(|pn| pn >= rn).unwrap_or(false) {
+                return Err(format!("pid{} page {idx} replica homes not sorted", p.pid));
+            }
+            prev = Some(rn);
+            if !seen.insert((rn.0, rf.0)) {
+                return Err(format!("pid{} page {idx} replica aliases frame {rf:?} on {rn}", p.pid));
+            }
+            replicas_hosted[n] += 1;
+        }
+    }
     for i in 0..kernel.pools.len() {
         let node = NodeId(i as u8);
         kernel.lru.verify(node)?;
@@ -708,6 +777,9 @@ pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Resul
             NodeRole::Peer => {
                 if far != 0 {
                     return Err(format!("{node}: peer holds {far} far pages"));
+                }
+                if replicas_hosted[i] != 0 {
+                    return Err(format!("{node}: peer hosts {} replica frames", replicas_hosted[i]));
                 }
                 if on_lru != resident {
                     return Err(format!("{node}: lru={on_lru} resident={resident}"));
@@ -723,8 +795,11 @@ pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Resul
                 if on_lru != 0 {
                     return Err(format!("{node}: server has {on_lru} LRU entries"));
                 }
-                if used != far {
-                    return Err(format!("{node}: used_frames={used} far={far}"));
+                if used != far + replicas_hosted[i] {
+                    return Err(format!(
+                        "{node}: used_frames={used} far={far} replicas={}",
+                        replicas_hosted[i]
+                    ));
                 }
             }
         }
@@ -1257,6 +1332,9 @@ impl Engine<'_> {
             self.kernel.pools[node.0 as usize].frame_mut(frame).copy_from_slice(&data);
             let (pull_req, page_msg) = (self.kernel.pull_req_bytes, self.kernel.page_msg_bytes);
             self.procs[cur].metrics.refaults += 1;
+            if self.procs[cur].crash_lost.remove(&idx) {
+                self.procs[cur].metrics.crash_refaults += 1;
+            }
             self.procs[cur].metrics.bytes_pull += pull_req + page_msg;
             self.clock.advance(self.kernel.costs.pull_ns(page_msg));
         }
@@ -1502,6 +1580,14 @@ impl Engine<'_> {
         let server = pte.node();
         let src_frame = pte.frame();
         let key = PageKey { proc: cur as u32, idx };
+        // A promoted page leaves the far tier entirely: free every
+        // replica copy along with the primary (no wire charge — the
+        // frees are server-local frame releases).
+        if let Some(homes) = self.kernel.replicas.remove(&(cur as u32, idx)) {
+            for (rn, rf) in homes {
+                self.kernel.pools[rn.0 as usize].dealloc(rf);
+            }
+        }
         if let Some(frame) = self.kernel.pools[run.0 as usize].alloc_reserve() {
             {
                 let src_ptr =
@@ -1613,6 +1699,64 @@ impl Engine<'_> {
         self.clock.advance(batched_ns);
         let unbatched_ns = n * self.kernel.costs.demote_ns(self.kernel.batch_data_bytes(1));
         self.kernel.batch_wire_saved_ns += unbatched_ns.saturating_sub(batched_ns);
+        if self.kernel.far_replicas > 1 {
+            self.replicate_demoted(victims);
+        }
+    }
+
+    /// Replica fan-out for a just-demoted batch (`--far-replicas` R >
+    /// 1): copy each page to up to R-1 additional memory servers, one
+    /// [`Msg::DemoteRepl`] message per replica rank, priced on the same
+    /// far lane as the primary batch. Placement is deterministic — the
+    /// lowest-id live server with room that holds no copy of the page —
+    /// and degrades silently: when the tier is out of room a page
+    /// simply carries fewer replicas.
+    fn replicate_demoted(&mut self, victims: &[(usize, PageIdx)]) {
+        for _rank in 1..self.kernel.far_replicas {
+            let mut placed: Vec<(usize, PageIdx)> = Vec::new();
+            for &(owner, idx) in victims {
+                let pte = self.procs[owner].pt.get(idx);
+                debug_assert!(pte.is_far());
+                let primary = pte.node();
+                let key = (owner as u32, idx);
+                let target = (0..self.kernel.pools.len()).find(|&i| {
+                    self.kernel.roles[i] == NodeRole::MemoryServer
+                        && self.kernel.live[i]
+                        && NodeId(i as u8) != primary
+                        && self
+                            .kernel
+                            .replicas
+                            .get(&key)
+                            .map(|homes| homes.iter().all(|&(rn, _)| rn.0 as usize != i))
+                            .unwrap_or(true)
+                        && self.kernel.pools[i].free_frames() > 0
+                });
+                let Some(t) = target else { continue };
+                let data = self.kernel.pools[primary.0 as usize].frame(pte.frame()).to_vec();
+                let frame = self.kernel.pools[t]
+                    .alloc_reserve()
+                    .expect("replicate_demoted: server advertised a free frame");
+                self.kernel.pools[t].frame_mut(frame).copy_from_slice(&data);
+                let homes = self.kernel.replicas.entry(key).or_default();
+                let pos = homes.partition_point(|&(rn, _)| (rn.0 as usize) < t);
+                homes.insert(pos, (NodeId(t as u8), frame));
+                placed.push((owner, idx));
+            }
+            // Nothing placed at this rank means the tier is out of
+            // distinct homes; higher ranks face a strictly tighter
+            // constraint, so stop.
+            if placed.is_empty() {
+                break;
+            }
+            let k = placed.len() as u64;
+            let bytes = self.kernel.batch_data_bytes(k);
+            let per = bytes / k;
+            let rem = bytes % k;
+            for (i, &(owner, _)) in placed.iter().enumerate() {
+                self.procs[owner].metrics.bytes_demote += per + if i == 0 { rem } else { 0 };
+            }
+            self.clock.advance(self.kernel.costs.demote_batch_ns(k, bytes));
+        }
     }
 
     /// Move one resident page of process `owner` to a frame on the far
@@ -2222,6 +2366,9 @@ impl Engine<'_> {
         let now = self.clock.now();
         let p = &mut self.procs[cur];
         p.metrics.record_jump(now, from, target, bytes);
+        // Crash recovery restarts from the last checkpoint the cluster
+        // saw; remember its wire size so the restart charge is exact.
+        p.last_ckpt_bytes = bytes;
 
         // 4. Flip execution; all cached translations are stale.
         p.running = target;

@@ -46,12 +46,15 @@
 //! id shifts and a rejoin can re-arm the same slot.
 
 use crate::mem::addr::{NodeId, MAX_NODES};
+use crate::mem::page_table::PageIdx;
+use crate::mem::proc_lru::PageKey;
 use crate::net::cluster::Announce;
 use crate::net::proto::Msg;
 use crate::os::kernel::Engine;
 use crate::os::policy::JumpPolicy;
 use crate::os::sched::ElasticCluster;
 use crate::os::system::Mode;
+use crate::proc::checkpoint::JumpCheckpoint;
 
 /// What a cluster member contributes (announced at startup, §4).
 ///
@@ -249,6 +252,18 @@ pub enum ChurnOp {
     Join { node: u8, frames: u32 },
     /// Node `node` leaves (drain protocol).
     Leave { node: u8 },
+    /// Node `node` crash-stops: frames vanish with no drain; survivors
+    /// run the recovery protocol ([`Engine::crash_node`]).
+    Crash { node: u8 },
+}
+
+impl ChurnOp {
+    /// The node the event names.
+    pub fn node(&self) -> u8 {
+        match *self {
+            ChurnOp::Join { node, .. } | ChurnOp::Leave { node } | ChurnOp::Crash { node } => node,
+        }
+    }
 }
 
 /// A scripted membership change at a simulated instant.
@@ -258,19 +273,28 @@ pub struct ChurnEvent {
     pub op: ChurnOp,
 }
 
-/// A deterministic join/leave script over simulated time, applied by
-/// the scheduler between time slices. Spec grammar (CLI `--churn`):
+/// A deterministic join/leave/crash script over simulated time, applied
+/// by the scheduler between time slices. Spec grammar (CLI `--churn` /
+/// `--faults`):
 ///
 /// ```text
 /// spec   := event ("," event)*
 /// event  := "+" node [":" frames] "@" time     a join
-///         | "-" node "@" time                  a leave
+///         | "-" node "@" time                  a leave (graceful drain)
+///         | "!" node "@" time                  a crash (no drain)
 /// time   := integer-or-decimal ["ns"|"us"|"ms"|"s"]   (bare = ns)
 /// ```
 ///
-/// Example: `+2@5ms,-1:@20ms` is written `+2@5ms,-1@20ms` — node 2
-/// joins (with the default frame count) at 5 ms, node 1 leaves at
-/// 20 ms. `+3:1024@1s` joins node 3 with 1024 frames at 1 s.
+/// Example: `+2@5ms,-1@20ms` — node 2 joins (with the default frame
+/// count) at 5 ms, node 1 leaves at 20 ms. `+3:1024@1s` joins node 3
+/// with 1024 frames at 1 s. `!1@20ms` crash-stops node 1 at 20 ms.
+///
+/// [`Self::parse`] rejects malformed events, events authored out of
+/// time order, and two events naming the same node at the same instant
+/// (ambiguous application order) — a bad script fails at the CLI, never
+/// mid-run. Node-existence checks against a concrete cluster layout
+/// live in [`Self::validate_nodes`] (parse has no cluster to check
+/// against).
 #[derive(Debug, Clone, Default)]
 pub struct ChurnSchedule {
     events: Vec<ChurnEvent>,
@@ -287,12 +311,14 @@ impl ChurnSchedule {
     /// Parse a `--churn` spec; `default_frames` is used for joins that
     /// omit an explicit `:frames`.
     pub fn parse(spec: &str, default_frames: u32) -> Result<ChurnSchedule, String> {
-        let mut events = Vec::new();
+        let mut events: Vec<ChurnEvent> = Vec::new();
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let join = part.starts_with('+');
-            if !join && !part.starts_with('-') {
+            let crash = part.starts_with('!');
+            if !join && !crash && !part.starts_with('-') {
                 return Err(format!(
-                    "churn event '{part}': must start with '+' (join) or '-' (leave)"
+                    "churn event '{part}': must start with '+' (join), '-' (leave), \
+                     or '!' (crash)"
                 ));
             }
             let rest = &part[1..];
@@ -317,11 +343,120 @@ impl ChurnSchedule {
                 let node = who
                     .parse::<u8>()
                     .map_err(|_| format!("churn event '{part}': bad node id '{who}'"))?;
-                ChurnOp::Leave { node }
+                if crash {
+                    ChurnOp::Crash { node }
+                } else {
+                    ChurnOp::Leave { node }
+                }
             };
+            // Authored order IS application order for same-instant
+            // events, so a spec that runs backwards in time is almost
+            // certainly a typo — fail loudly instead of silently
+            // re-sorting it.
+            if let Some(prev) = events.last() {
+                if at_ns < prev.at_ns {
+                    return Err(format!(
+                        "churn event '{part}': out of order (at {at_ns}ns, after an event \
+                         at {}ns) — write events in nondecreasing time order",
+                        prev.at_ns
+                    ));
+                }
+            }
+            // Two events naming one node at one instant have no
+            // well-defined outcome (which applies first?).
+            if events.iter().any(|e| e.at_ns == at_ns && e.op.node() == op.node()) {
+                return Err(format!(
+                    "churn event '{part}': duplicate — node{} already has an event at {at_ns}ns",
+                    op.node()
+                ));
+            }
             events.push(ChurnEvent { at_ns, op });
         }
         Ok(ChurnSchedule::new(events))
+    }
+
+    /// The (sorted) event list.
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// Merge another schedule into this one (e.g. a `--faults` kill
+    /// schedule layered on top of `--churn`). The union is re-sorted
+    /// stably; cross-schedule duplicates (same node at the same
+    /// instant) are rejected exactly like within one spec.
+    pub fn merge(self, other: ChurnSchedule) -> Result<ChurnSchedule, String> {
+        let mut events = self.events;
+        for ev in other.events {
+            if events.iter().any(|e| e.at_ns == ev.at_ns && e.op.node() == ev.op.node()) {
+                return Err(format!(
+                    "duplicate churn event — node{} already has an event at {}ns",
+                    ev.op.node(),
+                    ev.at_ns
+                ));
+            }
+            events.push(ev);
+        }
+        Ok(ChurnSchedule::new(events))
+    }
+
+    /// Static node-existence check against a concrete cluster layout:
+    /// `peers` compute slots `[0, peers)` and `far_nodes` memory
+    /// servers at `[peers, peers + far_nodes)`. Walks the (sorted)
+    /// schedule tracking how wide joins grow the cluster, and rejects
+    /// events naming nodes that can never exist at their instant —
+    /// before the run starts, instead of a skipped-event warning (or a
+    /// panic) mid-run. Memory servers never join or leave, but *may*
+    /// crash (`!`): killing a server is exactly the failure the far
+    /// tier's replication exists for.
+    pub fn validate_nodes(&self, peers: usize, far_nodes: usize) -> Result<(), String> {
+        let server_lo = peers;
+        let server_hi = peers + far_nodes;
+        let mut known = server_hi;
+        for ev in &self.events {
+            let n = ev.op.node() as usize;
+            let in_server_range = n >= server_lo && n < server_hi;
+            match ev.op {
+                ChurnOp::Join { .. } => {
+                    if in_server_range {
+                        return Err(format!(
+                            "churn join of node{n}: slot is a memory server and never churns"
+                        ));
+                    }
+                    if n > known {
+                        return Err(format!(
+                            "churn join of node{n}: unknown node (would leave an id hole; \
+                             next fresh slot is {known})"
+                        ));
+                    }
+                    if n == known {
+                        known += 1;
+                    }
+                }
+                ChurnOp::Leave { .. } => {
+                    if in_server_range {
+                        return Err(format!(
+                            "churn leave of node{n}: memory servers never leave \
+                             (use '!{n}@t' to crash one)"
+                        ));
+                    }
+                    if n >= known {
+                        return Err(format!(
+                            "churn leave of node{n}: unknown node (cluster has {known} slots \
+                             at that point in the schedule)"
+                        ));
+                    }
+                }
+                ChurnOp::Crash { .. } => {
+                    if n >= known {
+                        return Err(format!(
+                            "churn crash of node{n}: unknown node (cluster has {known} slots \
+                             at that point in the schedule)"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// The next event due at or before `now_ns`, if any (consumed).
@@ -400,14 +535,41 @@ pub struct DrainReport {
     pub wire_ns_saved: u64,
 }
 
+/// What crash-stopping one node did (the crash analogue of
+/// [`DrainReport`]: nothing is evacuated — these count destruction and
+/// recovery instead).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CrashReport {
+    /// Resident pages destroyed with the node (stashed against their
+    /// owners' ground truth; re-faulted on next touch).
+    pub pages_lost: u32,
+    /// Far pages whose primary copy died with a memory server and were
+    /// re-homed to a surviving replica (`--far-replicas` ≥ 2) — zero
+    /// data loss for these.
+    pub replica_promotes: u32,
+    /// Far pages lost with a memory server because no replica survived.
+    pub far_lost: u32,
+    /// Processes whose execution restarted from their last checkpoint
+    /// on a survivor.
+    pub restarts: u32,
+    /// Stretches recovery issued to give a restarting process a
+    /// survivor foothold.
+    pub forced_stretches: u32,
+    /// Total simulated time the crash handling took (death announce +
+    /// restarts) — the experiment's time-to-recover.
+    pub recovery_ns: u64,
+}
+
 /// A churn event the scheduler actually applied (with its outcome).
 #[derive(Debug, Clone, Copy)]
 pub struct AppliedChurn {
     /// Simulated instant of application (>= the scripted `at_ns`).
     pub at_ns: u64,
     pub op: ChurnOp,
-    /// Drain outcome for leaves; `None` for joins.
+    /// Drain outcome for leaves; `None` otherwise.
     pub drain: Option<DrainReport>,
+    /// Recovery outcome for crashes; `None` otherwise.
+    pub crash: Option<CrashReport>,
 }
 
 // ----- engine-level membership operations ---------------------------------
@@ -795,6 +957,234 @@ impl Engine<'_> {
         }
         best.map(|(_, n)| n)
     }
+
+    // ----- crash-stop failure + recovery ------------------------------------
+
+    /// Crash-stop `node`: its frames vanish with *no* drain. Unlike
+    /// [`Self::retire_node`] nothing is evacuated — recovery runs on
+    /// the survivors:
+    ///
+    /// * Execution homed on a dead peer restarts from the last shipped
+    ///   [`JumpCheckpoint`] on a policy-chosen survivor (stretching
+    ///   first if the dead node was its only foothold). Registers are
+    ///   not rolled back: the synchronous state-sync flushes before
+    ///   every checkpoint ship mean the survivor's shell already holds
+    ///   consistent execution state — the restart charge models the
+    ///   checkpoint restore, digest-exactness is preserved.
+    /// * Resident pages of every tenant on the dead node become
+    ///   crash-lost refaults from their owners' ground-truth stash
+    ///   (the PR 2 lost-page path, tagged so the refault counts as
+    ///   crash recovery).
+    /// * A dead *memory server* re-homes each far page whose primary it
+    ///   held to the lowest-id surviving replica (`--far-replicas` ≥ 2;
+    ///   a table flip — the replica already holds the bytes), and
+    ///   crash-loses far pages with no surviving copy.
+    ///
+    /// Memory servers may crash (that is what replication is for); the
+    /// last live peer may not — someone must survive to recover.
+    pub(crate) fn crash_node(&mut self, node: NodeId) -> Result<CrashReport, MembershipError> {
+        let slot = node.0 as usize;
+        if slot >= self.kernel.node_count() || !self.kernel.is_live(node) {
+            return Err(MembershipError::NodeDeparted(node));
+        }
+        let is_server = self.kernel.is_memory_server(node);
+        if !is_server && self.kernel.live_peer_count() <= 1 {
+            return Err(MembershipError::LastLiveNode(node));
+        }
+        let t0 = self.clock.now();
+        let mut report = CrashReport::default();
+        let mut touched = vec![false; self.procs.len()];
+
+        // Death announce: survivors detect the silence and multicast
+        // the crash — one control message per surviving member.
+        let peers = (self.kernel.live_count() - 1) as u64;
+        let bytes = Msg::Crash { node }.wire_size() * peers;
+        self.clock.advance(self.kernel.costs.wire_ns(bytes.max(1)));
+
+        if is_server {
+            self.crash_memory_server(node, &mut report, &mut touched);
+        } else {
+            self.crash_peer(node, &mut report, &mut touched);
+        }
+
+        // Membership teardown: no process keeps a foothold on the dead
+        // slot (same rule as retirement; servers have no footholds).
+        for p in self.procs.iter_mut() {
+            p.stretched[slot] = false;
+        }
+        self.kernel.remove_node_pool(node);
+        report.recovery_ns = self.clock.now() - t0;
+        for (i, &t) in touched.iter().enumerate() {
+            if t {
+                self.procs[i].metrics.crashes += 1;
+            }
+        }
+        log::info!(
+            "{node} crashed at {}: {} pages lost, {} re-homed, {} restarts, recovery {}",
+            crate::util::stats::fmt_ns(self.clock.now() as f64),
+            report.pages_lost + report.far_lost,
+            report.replica_promotes,
+            report.restarts,
+            crate::util::stats::fmt_ns(report.recovery_ns as f64),
+        );
+        Ok(report)
+    }
+
+    /// Peer-crash recovery: restart execution off the dead node, then
+    /// crash-lose every page that was resident on it.
+    fn crash_peer(&mut self, node: NodeId, report: &mut CrashReport, touched: &mut [bool]) {
+        for slot_i in 0..self.procs.len() {
+            if self.procs[slot_i].running != node {
+                continue;
+            }
+            let t0 = self.clock.now();
+            self.cur = slot_i;
+            let refuge = match self.stretched_refuge(slot_i, node) {
+                Some(t) => t,
+                None => {
+                    let t = self
+                        .best_live_node(node)
+                        .expect("live_peer_count >= 2 guarantees a refuge");
+                    // Suppress post-stretch balancing: it would bulk-move
+                    // pages off `node`, and a crashed machine's memory
+                    // cannot be read. Those pages are lost below instead.
+                    let balance = self.kernel.balance_on_stretch;
+                    self.kernel.balance_on_stretch = false;
+                    self.stretch_to(t);
+                    self.kernel.balance_on_stretch = balance;
+                    report.forced_stretches += 1;
+                    t
+                }
+            };
+            // Restart from the last checkpoint the survivor holds; the
+            // dead node cannot ship a fresh one (contrast jump_to,
+            // which builds and ships a new checkpoint — impossible
+            // here).
+            let bytes = self.restart_ckpt_bytes(slot_i);
+            self.clock.advance(self.kernel.costs.jump_ns(bytes));
+            let now = self.clock.now();
+            let p = &mut self.procs[slot_i];
+            p.metrics.record_jump(now, node, refuge, bytes);
+            p.metrics.forced_jumps += 1;
+            p.metrics.recovery_ns += now - t0;
+            p.running = refuge;
+            p.tlb.flush();
+            p.policy.on_jump(refuge, now);
+            report.restarts += 1;
+            touched[slot_i] = true;
+        }
+        while let Some(key) = self.kernel.lru.coldest(node) {
+            self.crash_lose(key.proc as usize, key.idx, node, report);
+            touched[key.proc as usize] = true;
+        }
+    }
+
+    /// Memory-server-crash recovery: scrub replica copies the dead
+    /// server hosted, then re-home (or crash-lose) every far page whose
+    /// primary copy it held.
+    fn crash_memory_server(
+        &mut self,
+        node: NodeId,
+        report: &mut CrashReport,
+        touched: &mut [bool],
+    ) {
+        // 1. Replica copies hosted on the dead server are gone; their
+        // primaries (on other servers) are untouched.
+        let mut freed = Vec::new();
+        for homes in self.kernel.replicas.values_mut() {
+            homes.retain(|&(rn, rf)| {
+                if rn == node {
+                    freed.push(rf);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        self.kernel.replicas.retain(|_, homes| !homes.is_empty());
+        for f in freed {
+            self.kernel.pools[node.0 as usize].dealloc(f);
+        }
+        // 2. Far pages whose *primary* died: fail over to the lowest-id
+        // surviving replica (a page-table flip — the replica already
+        // holds the bytes, so no wire charge), else crash-lose.
+        for owner in 0..self.procs.len() {
+            let dead_pages: Vec<PageIdx> = self.procs[owner]
+                .pt
+                .iter_far()
+                .filter(|(_, pte)| pte.node() == node)
+                .map(|(idx, _)| idx)
+                .collect();
+            for idx in dead_pages {
+                let key = (owner as u32, idx);
+                match self.kernel.replicas.remove(&key) {
+                    Some(mut homes) => {
+                        // Step 1 scrubbed dead-server entries, so every
+                        // remaining home is a live server; the vec is
+                        // sorted, so [0] is the lowest id.
+                        let (rn, rf) = homes.remove(0);
+                        let pte = self.procs[owner].pt.get(idx);
+                        self.kernel.pools[node.0 as usize].dealloc(pte.frame());
+                        self.procs[owner].pt.rehome_far(idx, rn, rf);
+                        if !homes.is_empty() {
+                            self.kernel.replicas.insert(key, homes);
+                        }
+                        self.procs[owner].metrics.replica_promotes += 1;
+                        report.replica_promotes += 1;
+                        touched[owner] = true;
+                    }
+                    None => {
+                        self.crash_lose(owner, idx, node, report);
+                        touched[owner] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Destroy one page that died with `node` (resident on a crashed
+    /// peer, or far on a crashed server with no surviving replica):
+    /// stash its bytes against the owner's ground truth (paper §4 —
+    /// the origin node can always re-derive its process's state), unmap
+    /// it, and tag it crash-lost so the eventual refault counts as
+    /// crash recovery. No wire or clock charge: nothing crosses the
+    /// fabric — the dead node's contents are simply gone, and the cost
+    /// is paid lazily at refault time.
+    fn crash_lose(&mut self, owner: usize, idx: PageIdx, node: NodeId, report: &mut CrashReport) {
+        let slot = node.0 as usize;
+        let pte = self.procs[owner].pt.get(idx);
+        let was_far = pte.is_far();
+        let data = self.kernel.pools[slot].frame(pte.frame()).to_vec();
+        self.kernel.pools[slot].dealloc(pte.frame());
+        if !was_far {
+            self.kernel.lru.remove(PageKey { proc: owner as u32, idx });
+        }
+        self.procs[owner].pt.unmap(idx);
+        let vpn = self.procs[owner].pt.vpn(idx);
+        self.procs[owner].tlb.invalidate(vpn);
+        self.procs[owner].lost_pages.insert(idx, data);
+        self.procs[owner].crash_lost.insert(idx);
+        self.procs[owner].metrics.pages_lost_crash += 1;
+        if was_far {
+            report.far_lost += 1;
+        } else {
+            report.pages_lost += 1;
+        }
+    }
+
+    /// Wire size of the checkpoint a crash restart replays: the last
+    /// shipped jump checkpoint, or — for a process that never jumped —
+    /// a minimal checkpoint of its registers (what the stretch shell's
+    /// synchronized state materializes on the survivor).
+    fn restart_ckpt_bytes(&self, slot: usize) -> u64 {
+        let p = &self.procs[slot];
+        if p.last_ckpt_bytes > 0 {
+            p.last_ckpt_bytes
+        } else {
+            Msg::Jump { ckpt: Vec::new() }.wire_size()
+                + JumpCheckpoint::new(p.regs.clone()).encoded_size()
+        }
+    }
 }
 
 // ----- cluster-level membership API ---------------------------------------
@@ -923,6 +1313,24 @@ impl ElasticCluster {
         Ok(report)
     }
 
+    /// Crash-stop a node mid-run (no drain; survivors recover). All
+    /// recovery time — the death announce and checkpoint restarts — is
+    /// charged to [`Self::churn_ns`]: it is control-plane work, not any
+    /// single process's execution (lost-page refault costs land on
+    /// their owners later, at touch time).
+    pub fn crash_node(&mut self, node: NodeId) -> Result<CrashReport, MembershipError> {
+        let t0 = self.clock.now();
+        let report = Engine {
+            kernel: &mut self.kernel,
+            clock: &mut self.clock,
+            procs: &mut self.procs,
+            cur: 0,
+        }
+        .crash_node(node)?;
+        self.churn_ns += self.clock.now() - t0;
+        Ok(report)
+    }
+
     /// Apply every scripted churn event due at the current simulated
     /// time; post-join monitoring passes cover only the `monitor`
     /// slots (the scheduler's still-live processes). Invalid events
@@ -939,7 +1347,12 @@ impl ElasticCluster {
                     monitor,
                 ) {
                     Ok(_) => {
-                        self.churn_log.push(AppliedChurn { at_ns: now, op: ev.op, drain: None });
+                        self.churn_log.push(AppliedChurn {
+                            at_ns: now,
+                            op: ev.op,
+                            drain: None,
+                            crash: None,
+                        });
                     }
                     Err(e) => log::warn!("churn join of node{node} skipped: {e}"),
                 },
@@ -949,9 +1362,21 @@ impl ElasticCluster {
                             at_ns: now,
                             op: ev.op,
                             drain: Some(drain),
+                            crash: None,
                         });
                     }
                     Err(e) => log::warn!("churn leave of node{node} skipped: {e}"),
+                },
+                ChurnOp::Crash { node } => match self.crash_node(NodeId(node)) {
+                    Ok(crash) => {
+                        self.churn_log.push(AppliedChurn {
+                            at_ns: now,
+                            op: ev.op,
+                            drain: None,
+                            crash: Some(crash),
+                        });
+                    }
+                    Err(e) => log::warn!("churn crash of node{node} skipped: {e}"),
                 },
             }
         }
@@ -1033,21 +1458,89 @@ mod tests {
     }
 
     #[test]
-    fn churn_spec_sorts_and_accepts_time_units() {
-        let s = ChurnSchedule::parse("-1@2s,+2@500, +3@2.5us", 64).unwrap();
-        let mut s = s;
-        // sorted by time: 500ns, 2500ns, 2s
+    fn churn_spec_accepts_time_units() {
+        let mut s = ChurnSchedule::parse("+2@500, +3@2.5us, -1@2s", 64).unwrap();
         assert_eq!(s.pop_due(u64::MAX).unwrap().at_ns, 500);
         assert_eq!(s.pop_due(u64::MAX).unwrap().at_ns, 2_500);
         assert_eq!(s.pop_due(u64::MAX).unwrap().at_ns, 2_000_000_000);
     }
 
     #[test]
+    fn churn_spec_parses_crash_events() {
+        let mut s = ChurnSchedule::parse("!1@5ms, !4@20ms", 64).unwrap();
+        assert_eq!(
+            s.pop_due(u64::MAX),
+            Some(ChurnEvent { at_ns: 5_000_000, op: ChurnOp::Crash { node: 1 } })
+        );
+        assert_eq!(s.pop_due(u64::MAX).unwrap().op, ChurnOp::Crash { node: 4 });
+        assert_eq!(ChurnOp::Crash { node: 4 }.node(), 4);
+    }
+
+    #[test]
     fn churn_spec_rejects_malformed_events() {
-        for bad in ["2@5ms", "+2", "+x@5ms", "-1@", "+1:abc@5ms", "+1@5parsecs"] {
+        for bad in ["2@5ms", "+2", "+x@5ms", "-1@", "+1:abc@5ms", "+1@5parsecs", "!x@5ms", "!1"] {
             assert!(ChurnSchedule::parse(bad, 64).is_err(), "'{bad}' must be rejected");
         }
         assert!(ChurnSchedule::parse("", 64).unwrap().is_empty(), "empty spec = no churn");
+    }
+
+    #[test]
+    fn churn_spec_rejects_out_of_order_events() {
+        let err = ChurnSchedule::parse("-1@2s,+2@500", 64).unwrap_err();
+        assert!(err.contains("out of order"), "got: {err}");
+        // equal timestamps on different nodes are fine (authoring order
+        // is application order)
+        assert!(ChurnSchedule::parse("+2@5ms,-1@5ms", 64).is_ok());
+    }
+
+    #[test]
+    fn churn_spec_rejects_duplicate_events() {
+        for dup in ["+2@5ms,-2@5ms", "!1@5ms,!1@5ms", "-1@1ms,+1@1ms"] {
+            let err = ChurnSchedule::parse(dup, 64).unwrap_err();
+            assert!(err.contains("duplicate"), "'{dup}' got: {err}");
+        }
+        // the same node at *different* instants is an ordinary script
+        assert!(ChurnSchedule::parse("-1@5ms,+1@9ms", 64).is_ok());
+    }
+
+    #[test]
+    fn churn_validate_nodes_rejects_unknown_and_server_churn() {
+        // Cluster layout: peers 0..3, servers 3..5.
+        let ok = ChurnSchedule::parse("-1@1ms,+1@2ms,+5@3ms,-5@4ms,!5@9ms", 64).unwrap();
+        assert!(ok.validate_nodes(3, 2).is_ok(), "rejoin + fresh join + its churn are legal");
+
+        // Leave of a node that never exists.
+        let s = ChurnSchedule::parse("-7@1ms", 64).unwrap();
+        assert!(s.validate_nodes(3, 2).unwrap_err().contains("unknown node"));
+        // Crash of a node that never exists.
+        let s = ChurnSchedule::parse("!9@1ms", 64).unwrap();
+        assert!(s.validate_nodes(3, 2).unwrap_err().contains("unknown node"));
+        // Join that would leave an id hole (slot 5 exists, 7 skips 6).
+        let s = ChurnSchedule::parse("+7@1ms", 64).unwrap();
+        assert!(s.validate_nodes(3, 2).unwrap_err().contains("id hole"));
+        // Memory servers never join or leave...
+        let s = ChurnSchedule::parse("+4@1ms", 64).unwrap();
+        assert!(s.validate_nodes(3, 2).unwrap_err().contains("memory server"));
+        let s = ChurnSchedule::parse("-4@1ms", 64).unwrap();
+        assert!(s.validate_nodes(3, 2).unwrap_err().contains("never leave"));
+        // ...but crashing one is exactly what replication is for.
+        let s = ChurnSchedule::parse("!4@1ms", 64).unwrap();
+        assert!(s.validate_nodes(3, 2).is_ok());
+    }
+
+    #[test]
+    fn churn_merge_interleaves_and_rejects_cross_schedule_duplicates() {
+        let churn = ChurnSchedule::parse("+2@5ms,-1@20ms", 64).unwrap();
+        let faults = ChurnSchedule::parse("!0@8ms", 64).unwrap();
+        let mut merged = churn.clone().merge(faults).unwrap();
+        assert_eq!(merged.pop_due(u64::MAX).unwrap().op, ChurnOp::Join { node: 2, frames: 64 });
+        assert_eq!(merged.pop_due(u64::MAX).unwrap().op, ChurnOp::Crash { node: 0 });
+        assert_eq!(merged.pop_due(u64::MAX).unwrap().op, ChurnOp::Leave { node: 1 });
+
+        // The same node at the same instant across the two specs is as
+        // ambiguous as within one spec.
+        let clash = ChurnSchedule::parse("!1@20ms", 64).unwrap();
+        assert!(churn.merge(clash).unwrap_err().contains("duplicate"));
     }
 
     #[test]

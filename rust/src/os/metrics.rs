@@ -61,6 +61,24 @@ pub struct Metrics {
     /// lived on the departing node), also counted in [`Self::jumps`].
     pub forced_jumps: u64,
 
+    // crash-stop failure counters (`--churn "!n@t"` / `--faults`)
+    /// Crash events that touched this process: its execution was
+    /// restarted, pages were destroyed, or far pages were re-homed.
+    pub crashes: u64,
+    /// Pages of this process destroyed by a node crash — no drain, no
+    /// evacuation; recovered lazily via [`Self::crash_refaults`].
+    pub pages_lost_crash: u64,
+    /// Crash-destroyed pages re-faulted back in from the owner's
+    /// ground-truth stash (a subset of [`Self::refaults`]).
+    pub crash_refaults: u64,
+    /// Far pages whose primary copy died with a memory server and were
+    /// re-homed to a surviving replica instead of being lost
+    /// (`--far-replicas` ≥ 2).
+    pub replica_promotes: u64,
+    /// Simulated time spent restarting this process's execution after a
+    /// crash (checkpoint restore on the survivor).
+    pub recovery_ns: u64,
+
     // far-memory tier counters (`--far-nodes`)
     /// Faults that found the page demoted to a memory server (the far
     /// analogue of [`Self::remote_faults`]; disjoint from it).
@@ -226,6 +244,16 @@ impl RunReport {
             line.push_str(&format!(
                 " far[faults={} demote={} promote={}]",
                 self.metrics.far_faults, self.metrics.demotions, self.metrics.promotions,
+            ));
+        }
+        if self.metrics.crashes > 0 {
+            line.push_str(&format!(
+                " crash[n={} lost={} refaults={} rehomed={} recovery={}]",
+                self.metrics.crashes,
+                self.metrics.pages_lost_crash,
+                self.metrics.crash_refaults,
+                self.metrics.replica_promotes,
+                crate::util::stats::fmt_ns(self.metrics.recovery_ns as f64),
             ));
         }
         line

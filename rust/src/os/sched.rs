@@ -884,6 +884,15 @@ impl ShardedCluster {
                     let owner = slot % self.shards.len();
                     self.ctl_send(owner, ev.at_ns, ShardMsg::Leave { node });
                 }
+                ChurnOp::Crash { node } => {
+                    let slot = node as usize;
+                    if slot >= self.global_nodes {
+                        log::warn!("churn crash of node{node} skipped: no such node");
+                        continue;
+                    }
+                    let owner = slot % self.shards.len();
+                    self.ctl_send(owner, ev.at_ns, ShardMsg::Crash { node });
+                }
             }
         }
     }
@@ -927,6 +936,7 @@ impl ShardedCluster {
                         at_ns: now,
                         op: ChurnOp::Join { node, frames },
                         drain: None,
+                        crash: None,
                     }),
                     Err(e) => log::warn!("churn join of node{node} skipped: {e}"),
                 }
@@ -936,8 +946,18 @@ impl ShardedCluster {
                     at_ns: now,
                     op: ChurnOp::Leave { node },
                     drain: Some(drain),
+                    crash: None,
                 }),
                 Err(e) => log::warn!("churn leave of node{node} skipped: {e}"),
+            },
+            ShardMsg::Crash { node } => match shard.cluster.crash_node(NodeId(node)) {
+                Ok(crash) => self.churn_log.push(AppliedChurn {
+                    at_ns: now,
+                    op: ChurnOp::Crash { node },
+                    drain: None,
+                    crash: Some(crash),
+                }),
+                Err(e) => log::warn!("churn crash of node{node} skipped: {e}"),
             },
         }
     }

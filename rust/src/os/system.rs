@@ -76,6 +76,9 @@ pub struct SystemConfig {
     pub push_batch: u32,
     /// Remote-fault pull prefetch window (`--prefetch`; 0 = off).
     pub prefetch: u32,
+    /// Replication factor for demoted pages across memory servers
+    /// (`--far-replicas`; 1 = no replication).
+    pub far_replicas: u32,
     /// Node the process starts on.
     pub home: NodeId,
 }
@@ -93,6 +96,7 @@ impl Default for SystemConfig {
             reclaim_batch: 32,
             push_batch: 1,
             prefetch: 0,
+            far_replicas: 1,
             home: NodeId(0),
         }
     }
@@ -111,6 +115,7 @@ impl SystemConfig {
             reclaim_batch: self.reclaim_batch,
             push_batch: self.push_batch,
             prefetch: self.prefetch,
+            far_replicas: self.far_replicas,
         }
     }
 }

@@ -162,6 +162,67 @@ fn churn_is_deterministic_across_threads() {
     }
 }
 
+/// Crash-stop failures ride the same barrier mail: a peer crash
+/// (node 5, a populated spare) and a memory-server crash (node 9)
+/// mid-run stay bit-identical — digests, Metrics, sim time, and the
+/// applied-churn log — across worker-thread counts, and every digest
+/// still matches its DirectMem ground truth. Eight servers put two in
+/// each shard's partition, so `far_replicas: 2` places a full replica
+/// rank and the server crash is a fail-over instead of data loss.
+#[test]
+fn crashes_are_deterministic_across_threads() {
+    let truths = truths();
+    let crash_schedule = || {
+        ChurnSchedule::new(vec![
+            ChurnEvent { at_ns: 600_000, op: ChurnOp::Crash { node: 5 } },
+            ChurnEvent { at_ns: 1_000_000, op: ChurnOp::Crash { node: 9 } },
+        ])
+    };
+    let run = |threads: usize| -> RunOutcome {
+        let cfg = ClusterConfig {
+            node_frames: vec![FRAMES; NODES],
+            far_frames: vec![FRAMES; 8],
+            far_replicas: 2,
+            ..ClusterConfig::default()
+        };
+        let mut cluster = ShardedCluster::new(cfg, 4, threads);
+        cluster.set_quantum(100_000);
+        cluster.set_window(400_000);
+        cluster.set_churn(crash_schedule());
+        let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+        for (i, wl) in ALL_EXT.iter().enumerate() {
+            let gid = cluster.spawn(Mode::Elastic, NodeId((i % 4) as u8), wl, 512).unwrap();
+            jobs.push((gid, make(i)));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().expect("cluster invariants after crash-stop failures");
+        RunOutcome {
+            reports,
+            sim_ns: cluster.sim_now(),
+            churn_log: format!("{:?}", cluster.churn_log),
+        }
+    };
+    let base = run(1);
+    assert!(
+        base.churn_log.matches("Crash").count() >= 2,
+        "both seeded kills must land mid-run: {}",
+        base.churn_log
+    );
+    for (i, r) in base.reports.iter().enumerate() {
+        assert_eq!(r.digest, truths[i], "{}: digest != ground truth across crashes", ALL_EXT[i]);
+    }
+    for threads in [2usize, 4] {
+        let r = run(threads);
+        assert_reports_identical(&base.reports, &r.reports, &format!("crash threads={threads}"));
+        assert_eq!(base.sim_ns, r.sim_ns, "crash threads={threads}: final simulated time");
+        assert_eq!(
+            base.churn_log,
+            r.churn_log,
+            "crash threads={threads}: applied-churn logs diverge"
+        );
+    }
+}
+
 /// A single shard routes through the legacy sequential loop: the
 /// sharded engine at `--shards 1` is bit-identical to `ElasticCluster`
 /// itself, whatever the thread count.
