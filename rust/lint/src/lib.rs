@@ -72,6 +72,8 @@ const MSG_LANES: &[(&str, &str)] = &[
     ("PromoteData", "promote_batch_ns"),
     ("DemoteRepl", "demote_batch_ns"),
     ("Crash", "wire_ns"),
+    ("Suspect", "wire_ns"),
+    ("HealLink", "wire_ns"),
 ];
 
 /// R3: PTE state-write pattern -> functions allowed to perform it.
@@ -90,8 +92,9 @@ const PTE_TRANSITIONS: &[(&str, &[&str], &str)] = &[
     ),
     (
         ".pt.rehome_far(",
-        &["crash_memory_server"],
-        "far pages re-home only on replica fail-over after a server crash",
+        &["crash_memory_server", "prefer_reachable_replica"],
+        "far pages re-home only on replica fail-over (server crash) or when promotion \
+         prefers the replica behind the cheapest live link",
     ),
     (
         ".set_prefetched(true)",

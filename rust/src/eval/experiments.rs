@@ -1042,6 +1042,162 @@ pub fn failure(cfg: &EvalConfig) -> Table {
     t
 }
 
+/// `eval partition` — the partial-network fault benchmark: the same
+/// ≥3-workload live cluster as [`failure`], but the schedule cuts and
+/// degrades *links* instead of killing nodes. Node 1 is fully
+/// partitioned from its peers at 30% of the calibrated fault-free
+/// makespan (links 0–1 and 1–2 cut) and healed at 60%; the 0–2 link
+/// runs degraded 4x from 20% to 80%. Nothing dies, so nothing is
+/// lost: sends into a cut link stall through the retry policy, the
+/// failure detector marks the silent peer suspected, and migration
+/// relays around the dead edge at two-hop cost. Every digest is
+/// asserted against DirectMem ground truth — a partition costs time,
+/// never pages. Writes BENCH_partition.json (time-to-detect, retry
+/// counts, relay bytes, slowdown vs fault-free).
+pub fn partition(cfg: &EvalConfig) -> Table {
+    use crate::os::kernel::ClusterConfig;
+    use crate::os::sched::{direct_ground_truth, ElasticCluster, ProcRunReport};
+    use crate::sim::{LinkEvent, LinkOp, LinkSchedule};
+    use crate::workloads::Workload;
+
+    const PEERS: usize = 3;
+    const SERVERS: usize = 2;
+    let wls = ["linear", "count_sort", "table_scan"];
+    let frames = cfg.node_frames;
+    // Overcommit every home node so pages stretch across peers and
+    // demote to the far tier — the cut links then carry real pull,
+    // push, and demote traffic instead of being vacuously idle.
+    let per_fp = frames as u64 * 4096 * 13 / 10;
+    let make = |i: usize| -> Box<dyn Workload> {
+        let seed = crate::workloads::tenant_seed(cfg.seed, i);
+        by_name_seeded(wls[i], Scale::Bytes(per_fp), seed).unwrap()
+    };
+    let truths: Vec<u64> =
+        (0..wls.len()).map(|i| direct_ground_truth(make(i).as_mut())).collect();
+
+    let run = |links: Option<LinkSchedule>| -> (ElasticCluster, Vec<ProcRunReport>) {
+        let ccfg = ClusterConfig {
+            node_frames: vec![frames; PEERS],
+            far_frames: vec![frames * 2; SERVERS],
+            push_batch: cfg.push_batch,
+            prefetch: cfg.prefetch,
+            far_replicas: cfg.far_replicas.max(1),
+            ..ClusterConfig::default()
+        };
+        let mut cluster = ElasticCluster::new(ccfg);
+        if let Some(s) = links {
+            cluster.set_link_faults(s);
+        }
+        let mut jobs = Vec::new();
+        for (i, wl) in wls.iter().enumerate() {
+            let slot =
+                cluster.spawn_placed(Mode::Elastic, wl, 512).expect("live cluster placement");
+            jobs.push((slot, make(i)));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().expect("cluster invariants across a partition");
+        (cluster, reports)
+    };
+
+    // Calibrate: the fault-free makespan places the partition window
+    // mid-run by construction (the faulted run replays the calibration
+    // bit-for-bit up to the first link event).
+    let (cal, base) = run(None);
+    let makespan = cal.clock.now().max(1);
+    let cut_at = makespan * 30 / 100;
+    let schedule = LinkSchedule::new(vec![
+        LinkEvent { at_ns: makespan * 20 / 100, op: LinkOp::Slow { a: 0, b: 2, factor: 4 } },
+        LinkEvent { at_ns: cut_at, op: LinkOp::Cut { a: 0, b: 1 } },
+        LinkEvent { at_ns: cut_at, op: LinkOp::Cut { a: 1, b: 2 } },
+        LinkEvent { at_ns: makespan * 60 / 100, op: LinkOp::Heal { a: 0, b: 1 } },
+        LinkEvent { at_ns: makespan * 60 / 100, op: LinkOp::Heal { a: 1, b: 2 } },
+        LinkEvent { at_ns: makespan * 80 / 100, op: LinkOp::Heal { a: 0, b: 2 } },
+    ]);
+    let n_events = schedule.len();
+    let (cluster, reports) = run(Some(schedule));
+
+    assert_eq!(
+        cluster.link_log.len(),
+        n_events,
+        "every scheduled link transition must land mid-run"
+    );
+    assert_eq!(cluster.link_pending(), 0, "link schedule must fully apply");
+    // Nothing died: a partition may never lose or refault a page.
+    let crash_refaults: u64 = reports.iter().map(|r| r.metrics.crash_refaults).sum();
+    assert_eq!(crash_refaults, 0, "a link fault must never be treated as a crash");
+    assert!(cluster.churn_log.is_empty(), "no membership change may result from link faults");
+
+    let suspicions = cluster.suspicion_log().to_vec();
+    // Time-to-detect: first suspicion raised at/after the cut instant.
+    let time_to_detect_ns = suspicions
+        .iter()
+        .filter(|&&(_, at)| at >= cut_at)
+        .map(|&(_, at)| at - cut_at)
+        .min()
+        .unwrap_or(0);
+    let (retries, failed, relay) = reports.iter().fold((0u64, 0u64, 0u64), |(r, f, b), rep| {
+        (
+            r + rep.metrics.retries,
+            f + rep.metrics.link_sends_failed,
+            b + rep.metrics.relay_bytes,
+        )
+    });
+
+    let mut t = Table::new(
+        &format!(
+            "Partition: 3 live procs on {PEERS}x{frames}-frame peers + {SERVERS} memory \
+             servers; node 1 fully partitioned 30%-60% of the calibrated fault-free \
+             makespan, link 0-2 degraded 4x 20%-80% — no page is ever lost, the \
+             partition is paid for purely in time"
+        ),
+        &["proc", "workload", "fault-free", "partitioned", "slowdown", "digest"],
+    );
+    for (i, wl) in wls.iter().enumerate() {
+        assert_eq!(
+            reports[i].digest,
+            truths[i],
+            "{wl}: digest != DirectMem ground truth across the partition schedule"
+        );
+        t.row(vec![
+            format!("pid{}", reports[i].pid),
+            wl.to_string(),
+            fmt_ns(base[i].cpu_ns as f64),
+            fmt_ns(reports[i].cpu_ns as f64),
+            fmt_x(reports[i].cpu_ns as f64 / base[i].cpu_ns.max(1) as f64),
+            "ok".into(),
+        ]);
+    }
+    t.note(format!(
+        "fault-free makespan {}, partitioned {}; {} suspicion(s), time-to-detect {}, \
+         retries={retries} sends_failed={failed} relay={}",
+        fmt_ns(makespan as f64),
+        fmt_ns(cluster.clock.now() as f64),
+        suspicions.len(),
+        fmt_ns(time_to_detect_ns as f64),
+        fmt_bytes(relay as f64),
+    ));
+
+    let links_json: Vec<String> = cluster
+        .link_log
+        .iter()
+        .map(|(at, op)| format!("{{\"at_ns\":{at},\"op\":\"{op:?}\"}}"))
+        .collect();
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"peers\": {PEERS},\n  \"servers\": {SERVERS},\n  \
+         \"node_frames\": {frames},\n  \"faultfree_ns\": {makespan},\n  \
+         \"partitioned_ns\": {},\n  \"time_to_detect_ns\": {time_to_detect_ns},\n  \
+         \"suspicions\": {},\n  \"retries\": {retries},\n  \
+         \"link_sends_failed\": {failed},\n  \"relay_bytes\": {relay},\n  \
+         \"digest_ok\": true,\n  \"links\": [{}]\n}}\n",
+        cluster.clock.now(),
+        suspicions.len(),
+        links_json.join(","),
+    );
+    std::fs::write("BENCH_partition.json", &json).expect("write BENCH_partition.json");
+    println!("wrote BENCH_partition.json");
+    t
+}
+
 /// `eval bench-json`: write BENCH_migration.json — a machine-readable
 /// perf snapshot of the migration paths (sequential-scan sim time and
 /// fault counts with prefetch off/on, drain time batched/unbatched,
@@ -1349,6 +1505,7 @@ pub fn run_all(cfg: &EvalConfig) {
     prefetch_sweep(cfg).emit("prefetch.txt");
     far_memory(cfg).emit("far_memory.txt");
     failure(cfg).emit("failure.txt");
+    partition(cfg).emit("partition.txt");
 }
 
 /// Dispatch by experiment name (CLI).
@@ -1372,6 +1529,7 @@ pub fn run_named(cfg: &EvalConfig, name: &str) -> bool {
         "scale" => scale(cfg).emit("scale.txt"),
         "far-memory" | "far_memory" => far_memory(cfg).emit("far_memory.txt"),
         "failure" => failure(cfg).emit("failure.txt"),
+        "partition" => partition(cfg).emit("partition.txt"),
         "bench-json" | "bench_json" => bench_json(cfg),
         "all" => run_all(cfg),
         _ => return false,

@@ -15,6 +15,7 @@ use cli::Args;
 use elastic_os::eval::{experiments, EvalConfig};
 use elastic_os::mem::NodeId;
 use elastic_os::os::membership::{ChurnOp, ChurnSchedule, Pinned, RoundRobin};
+use elastic_os::sim::LinkSchedule;
 use elastic_os::os::system::{ElasticSystem, Mode};
 use elastic_os::os::EwmaPolicy;
 use elastic_os::workloads::{by_name_seeded, Scale};
@@ -70,6 +71,16 @@ USAGE:
                 [--faults SPEC]                  (crash-only schedule merged into
                                                   --churn, e.g. \"!1@8ms,!4@20ms\";
                                                   rejects join/leave events)
+                [--link-faults SPEC]             (partial-network schedule over
+                                                  ordered node pairs:
+                                                  \"0~2@5ms\" cuts the 0<->2 link
+                                                  at 5 ms (sends fail, migration
+                                                  relays around it),
+                                                  \"0~2:slow4@5ms\" degrades it
+                                                  4x, \"0+2@20ms\" heals it and
+                                                  clears suspicion; a full
+                                                  partition costs time, never
+                                                  pages — digests stay exact)
                 [--far-replicas R]               (replication factor for demoted
                                                   pages across memory servers;
                                                   default 1 = no replication,
@@ -98,7 +109,7 @@ USAGE:
                  --footprint is then the TOTAL across processes)
   elasticos eval <table1|table2|table3|fig8|fig9|fig10|fig11|fig12|fig13|fig14|fig15|
                   ablation-policy|ablation-balance|multinode|multi-tenant|churn|
-                  prefetch|bench-json|scale|far-memory|failure|all>
+                  prefetch|bench-json|scale|far-memory|failure|partition|all>
                  [--fast] [--seed N] [--batch N] [--prefetch N] [--threads N] [--shards S]
                  [--far-nodes N[:F]] [--far-replicas R]
   elasticos cluster [--pages N] [--threshold N] [--prefetch N] [--far-nodes 0|1]
@@ -106,6 +117,10 @@ USAGE:
                                                   dies mid-handshake and comes back;
                                                   the leader survives via bounded
                                                   reconnect retry/backoff)
+                    [--leave]                    (mid-run leave demo: the worker
+                                                  announces Leave, drains its
+                                                  pages back over Drain batches,
+                                                  and departs cleanly)
   elasticos info
 
 Workloads: dfs linear dijkstra block_sort heap_sort count_sort table_scan";
@@ -142,7 +157,17 @@ fn cmd_run(args: &Args) -> i32 {
     // scheduler; refuse rather than silently ignore them (a single
     // process is always driven live through the facade, so --live
     // would be a silent no-op here).
-    for flag in ["churn", "faults", "far-replicas", "spread", "home", "live", "threads", "shards"] {
+    for flag in [
+        "churn",
+        "faults",
+        "link-faults",
+        "far-replicas",
+        "spread",
+        "home",
+        "live",
+        "threads",
+        "shards",
+    ] {
         if args.has(flag) {
             eprintln!("--{flag} requires --procs > 1 (the cluster scheduler)");
             return 2;
@@ -409,6 +434,23 @@ fn cmd_run_multi(
         cluster.set_churn(s);
     }
 
+    // Partial-network schedule: cut/degrade/heal individual links.
+    // Validated against the concrete node layout up front, like churn.
+    if let Some(spec) = args.flag("link-faults") {
+        let links = match LinkSchedule::parse(&spec) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bad --link-faults spec: {e}");
+                return 2;
+            }
+        };
+        if let Err(e) = links.validate_nodes(nodes, far_frames.len()) {
+            eprintln!("bad --link-faults spec: {e}");
+            return 2;
+        }
+        cluster.set_link_faults(links);
+    }
+
     let mut jobs: Vec<(usize, TenantJob)> = Vec::new();
     let mut live_iter = live_workloads.into_iter();
     let mut trace_iter = traces.into_iter();
@@ -475,6 +517,37 @@ fn cmd_run_multi(
                 applied.op,
                 elastic_os::util::stats::fmt_ns(applied.at_ns as f64)
             ),
+        }
+    }
+    if cluster.link_pending() > 0 {
+        eprintln!(
+            "warning: {} --link-faults event(s) never came due (scheduled past the {} makespan)",
+            cluster.link_pending(),
+            elastic_os::util::stats::fmt_ns(cluster.sim_now() as f64),
+        );
+    }
+    for (at_ns, op) in &cluster.link_log {
+        println!("link: {op:?} applied at {}", elastic_os::util::stats::fmt_ns(*at_ns as f64));
+    }
+    let suspicions = cluster.suspicion_log();
+    if !suspicions.is_empty() {
+        let (failed, retries, relay) = reports.iter().fold((0u64, 0u64, 0u64), |(f, r, b), rep| {
+            (
+                f + rep.metrics.link_sends_failed,
+                r + rep.metrics.retries,
+                b + rep.metrics.relay_bytes,
+            )
+        });
+        println!(
+            "links: {} suspicion(s), sends_failed={failed} retries={retries} relay={}",
+            suspicions.len(),
+            elastic_os::util::stats::fmt_bytes(relay as f64),
+        );
+        for (node, at_ns) in &suspicions {
+            println!(
+                "  suspect: node{node} at {}",
+                elastic_os::util::stats::fmt_ns(*at_ns as f64)
+            );
         }
     }
 
@@ -634,6 +707,13 @@ fn cmd_cluster(args: &Args) -> i32 {
         }
         return cmd_cluster_restart(pages, threshold);
     }
+    if args.has("leave") {
+        if far_nodes > 0 {
+            eprintln!("--leave runs the two-peer demo (drop --far-nodes)");
+            return 2;
+        }
+        return cmd_cluster_leave(pages);
+    }
     if far_nodes == 1 {
         return cmd_cluster_far(pages, threshold, prefetch);
     }
@@ -667,6 +747,38 @@ fn cmd_cluster(args: &Args) -> i32 {
                 0
             } else {
                 eprintln!("DIGEST MISMATCH: expected {expect:#x}");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("cluster failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// `cluster --leave`: the worker serves a few pulls, then retires
+/// mid-run via the Drain/Leave protocol; the leader absorbs the drain
+/// and finishes the scan solo.
+fn cmd_cluster_leave(pages: u32) -> i32 {
+    // Threshold = pages: the leader never jumps, so the scripted leave
+    // is the only membership event in the session.
+    match elastic_os::net::peer::run_local_leave(pages, pages, 4) {
+        Ok((leader, worker, drained)) => {
+            let expect = elastic_os::net::peer::expected_digest(pages);
+            println!(
+                "leader: node={} digest={:#x} drained_in={}",
+                leader.node, leader.digest, leader.stats.drained
+            );
+            println!(
+                "worker: node={} served={} drained_out={drained} (left mid-run)",
+                worker.node, worker.stats.pulls_served
+            );
+            if leader.digest == expect && drained > 0 {
+                println!("digest OK ({expect:#x}) across a mid-run worker leave");
+                0
+            } else {
+                eprintln!("DIGEST MISMATCH or empty drain: expected {expect:#x}");
                 1
             }
         }

@@ -82,6 +82,9 @@ pub struct PeerStats {
     /// Far tier: pages brought back via `PromoteReq`/`PromoteData`
     /// (on the server report: pages it served back).
     pub promoted: u64,
+    /// Membership: pages moved by the drain protocol (sent on the
+    /// departing side, absorbed on the surviving side).
+    pub drained: u64,
 }
 
 /// Outcome of a peer session.
@@ -134,6 +137,9 @@ pub struct Peer {
     /// Pages this peer has demoted to the far server (the far half of
     /// its page table: a miss here is a far fault, not a peer pull).
     far_pages: std::collections::HashSet<u32>,
+    /// The other peer announced `Leave` and drained out: no more
+    /// requests may be sent to it, and no replies will come.
+    peer_departed: bool,
 }
 
 /// Bounded reconnect policy for [`Peer::connect_retry`] and
@@ -243,6 +249,7 @@ impl Peer {
             shell: None,
             far: None,
             far_pages: std::collections::HashSet::new(),
+            peer_departed: false,
         }
     }
 
@@ -373,6 +380,10 @@ impl Peer {
     pub fn run_active(&mut self, task: ScanTask) -> Result<u64> {
         match self.execute(task)? {
             Some(digest) => {
+                if self.peer_departed {
+                    // Nobody left to notify: the peer drained and Left.
+                    return Ok(digest);
+                }
                 // we finished: tell the peer and wind down
                 self.conn.send(&Msg::Done { digest, stats: vec![] }, &mut self.stats)?;
                 match self.conn.recv()? {
@@ -439,7 +450,118 @@ impl Peer {
                     self.conn.send(&Msg::Bye, &mut self.stats)?;
                     return Ok(digest);
                 }
+                Msg::Join { announce } => {
+                    // A late joiner introducing itself (paper §4: every
+                    // participant records the announce). The two-peer
+                    // demo has no third socket to adopt, so this is
+                    // bookkeeping only.
+                    log::info!("{}: recorded join announce ({} bytes)", self.node, announce.len());
+                }
+                Msg::Drain { node, remaining } => {
+                    // Drain header: the departing peer's pages follow as
+                    // ordinary PushBatches; `remaining` lets us log
+                    // progress without trusting message counts.
+                    log::info!("{}: drain from {node}, {remaining} page(s) to go", self.node);
+                }
+                Msg::Leave { node } => {
+                    // The *active* peer may not Leave while we hold no
+                    // execution context — it must Done or Jump first.
+                    bail!("{node} announced Leave while this peer was passive with no work");
+                }
                 m => bail!("unexpected message while passive: {m:?}"),
+            }
+        }
+    }
+
+    /// Serve like [`Self::run_passive`] for `serve_limit` messages,
+    /// then retire: announce `Drain`, push every resident page back in
+    /// `MAX_BATCH`-bounded batches, announce `Leave`, and depart. The
+    /// mid-run inverse of the join handshake — the paper's protocol
+    /// run backwards. Returns pages drained out.
+    pub fn run_passive_leave(&mut self, serve_limit: u32) -> Result<u32> {
+        for _ in 0..serve_limit {
+            match self.conn.recv()? {
+                Msg::PullReq { idx } => {
+                    let data = self
+                        .store
+                        .remove(&idx)
+                        .with_context(|| format!("pull of page {idx} we do not own"))?;
+                    self.stats.pulls_served += 1;
+                    self.conn.send(&Msg::PullData { idx, data }, &mut self.stats)?;
+                }
+                Msg::PullBatchReq { idxs } => {
+                    let mut pages = Vec::with_capacity(idxs.len());
+                    for idx in idxs {
+                        if let Some(data) = self.store.remove(&idx) {
+                            self.stats.pulls_served += 1;
+                            pages.push((idx, data));
+                        }
+                    }
+                    self.conn.send(&Msg::PullBatchData { pages }, &mut self.stats)?;
+                }
+                Msg::Push { idx, data } => {
+                    self.stats.pushes_received += 1;
+                    self.store.insert(idx, data);
+                }
+                Msg::PushBatch { pages } => {
+                    self.stats.pushes_received += pages.len() as u64;
+                    for (idx, data) in pages {
+                        self.store.insert(idx, data);
+                    }
+                }
+                Msg::Done { digest: _, .. } => {
+                    // The scan finished before our scripted departure:
+                    // nothing left to drain, just wind down normally.
+                    self.conn.send(&Msg::Bye, &mut self.stats)?;
+                    return Ok(0);
+                }
+                m => bail!("unexpected message while passive: {m:?}"),
+            }
+        }
+        // Retire: drain every resident page, then Leave. Sorted order
+        // keeps the wire trace reproducible run to run.
+        let mut idxs: Vec<u32> = self.store.keys().copied().collect();
+        idxs.sort_unstable();
+        let total = idxs.len() as u32;
+        let mut sent = 0u32;
+        for chunk in idxs.chunks(super::proto::MAX_BATCH) {
+            let pages: Vec<(u32, Vec<u8>)> = chunk
+                .iter()
+                .map(|p| (*p, self.store.remove(p).expect("key from this store")))
+                .collect();
+            sent += pages.len() as u32;
+            self.conn
+                .send(&Msg::Drain { node: self.node, remaining: total - sent }, &mut self.stats)?;
+            self.conn.send(&Msg::PushBatch { pages }, &mut self.stats)?;
+        }
+        self.stats.drained += sent as u64;
+        self.conn.send(&Msg::Leave { node: self.node }, &mut self.stats)?;
+        Ok(sent)
+    }
+
+    /// Receive while absorbing an in-flight departure: `Drain` headers
+    /// and drain `PushBatch`es are folded into the local store, and a
+    /// `Leave` marks the peer gone and returns `None` (the request we
+    /// were awaiting a reply to will never be answered — but the drain
+    /// that preceded the Leave delivered the pages it concerned).
+    fn recv_or_departure(&mut self) -> Result<Option<Msg>> {
+        loop {
+            match self.conn.recv()? {
+                Msg::Drain { node, remaining } => {
+                    log::info!("{}: drain from {node}, {remaining} page(s) to go", self.node);
+                }
+                Msg::PushBatch { pages } => {
+                    self.stats.drained += pages.len() as u64;
+                    for (idx, data) in pages {
+                        self.store.insert(idx, data);
+                    }
+                }
+                Msg::Leave { node } => {
+                    log::info!("{}: {node} departed mid-run; continuing solo", self.node);
+                    self.peer_departed = true;
+                    return Ok(None);
+                }
+                m => return Ok(Some(m)),
             }
         }
     }
@@ -465,6 +587,9 @@ impl Peer {
                 self.promote_window(p)?;
                 continue; // p is local now; the loop re-reads it
             }
+            if self.peer_departed {
+                bail!("page {p} unresident after the peer drained out and departed");
+            }
             // remote page: the paper's counter counts *pulls*, so a
             // page we just pulled must not reset the streak
             consecutive_remote += 1;
@@ -483,8 +608,8 @@ impl Peer {
                     .filter(|i| *i == p || !self.store.contains_key(i))
                     .collect();
                 self.conn.send(&Msg::PullBatchReq { idxs }, &mut self.stats)?;
-                match self.conn.recv()? {
-                    Msg::PullBatchData { pages } => {
+                match self.recv_or_departure()? {
+                    Some(Msg::PullBatchData { pages }) => {
                         anyhow::ensure!(
                             pages.first().map(|(i, _)| *i) == Some(p),
                             "batched pull reply missing the faulting page {p}"
@@ -497,13 +622,17 @@ impl Peer {
                         // p is local now; the loop re-reads it (and the
                         // window behind it) from the store
                     }
-                    m => bail!("expected PullBatchData, got {m:?}"),
+                    // Departed mid-request: the drain that preceded the
+                    // Leave delivered every page it still held — the
+                    // loop re-reads p from the local store.
+                    None => {}
+                    Some(m) => bail!("expected PullBatchData, got {m:?}"),
                 }
                 continue;
             }
             self.conn.send(&Msg::PullReq { idx: p }, &mut self.stats)?;
-            match self.conn.recv()? {
-                Msg::PullData { idx, data } => {
+            match self.recv_or_departure()? {
+                Some(Msg::PullData { idx, data }) => {
                     anyhow::ensure!(idx == p, "pull reply for wrong page");
                     self.stats.pulls += 1;
                     task.acc =
@@ -511,7 +640,8 @@ impl Peer {
                     task.pos += 1;
                     self.store.insert(p, data);
                 }
-                m => bail!("expected PullData, got {m:?}"),
+                None => {} // departed; p arrived in the drain — re-read it
+                Some(m) => bail!("expected PullData, got {m:?}"),
             }
         }
         Ok(Some(task.acc))
@@ -673,6 +803,44 @@ pub fn run_local_far(
     Ok((leader_report, worker_report, server_report))
 }
 
+/// Mid-run leave demo over localhost: the worker serves the leader's
+/// first `serve_limit` requests, then retires cleanly — `Drain`
+/// header, its whole residual page store in `PushBatch`es, `Leave` —
+/// and departs. The leader absorbs the drain (possibly while a pull
+/// of its own is in flight), marks the peer departed, and finishes the
+/// scan solo on the drained pages. The graceful inverse of
+/// [`run_local_restart`]'s crash-stop. Returns (leader report, worker
+/// report, pages drained).
+pub fn run_local_leave(
+    n_pages: u32,
+    threshold: u32,
+    serve_limit: u32,
+) -> Result<(PeerReport, PeerReport, u32)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let split = n_pages / 2;
+
+    let worker = std::thread::spawn(move || -> Result<(PeerReport, u32)> {
+        let mut peer = Peer::accept(NodeId(1), &listener, threshold)?;
+        peer.seed_pages(split, n_pages);
+        peer.worker_handshake()?;
+        let drained = peer.run_passive_leave(serve_limit)?;
+        Ok((PeerReport { node: NodeId(1), digest: 0, stats: peer.stats().clone() }, drained))
+    });
+
+    let mut leader = Peer::connect(NodeId(0), &addr.to_string(), threshold)?;
+    leader.seed_pages(0, split);
+    let meta = ProcessMeta::minimal(42, "scan");
+    leader.leader_handshake(&meta)?;
+    let task = ScanTask { n_pages, pos: 0, acc: 0 };
+    let digest = leader.run_active(task)?;
+    let leader_report = PeerReport { node: NodeId(0), digest, stats: leader.stats().clone() };
+
+    let (worker_report, drained) =
+        worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    Ok((leader_report, worker_report, drained))
+}
+
 /// Kill-and-restart demo over localhost: the worker's first
 /// incarnation accepts the leader's connection and dies on the spot
 /// (crash-stop mid-handshake, socket dropped with no goodbye); a
@@ -751,6 +919,20 @@ mod tests {
             t0.elapsed() < std::time::Duration::from_secs(5),
             "3 bounded attempts must not spin for seconds"
         );
+    }
+
+    #[test]
+    fn worker_leaves_mid_run_and_leader_finishes_solo() {
+        // Threshold = n_pages: the leader never jumps, so the worker's
+        // scripted departure is the only membership event. It serves 4
+        // pulls, then drains its remaining pages and Leaves; the leader
+        // finishes the scan on the drained pages with the exact digest.
+        let (leader, worker, drained) = run_local_leave(64, 64, 4).unwrap();
+        assert_eq!(leader.digest, expected_digest(64), "leader digest after solo finish");
+        assert!(drained > 0, "the worker must have pages left to drain");
+        assert_eq!(worker.stats.pulls_served, 4, "scripted serve window before the leave");
+        assert_eq!(worker.stats.drained as u32, drained, "drain accounting matches");
+        assert_eq!(leader.stats.drained as u32, drained, "every drained page was absorbed");
     }
 
     #[test]

@@ -105,6 +105,17 @@ pub enum Msg {
     /// learn of the death and start recovery (checkpoint restarts,
     /// replica fail-over, ground-truth refaults).
     Crash { node: NodeId },
+    /// Failure detection: the sender now *suspects* `node` after
+    /// [`SUSPECT_AFTER`](crate::os::kernel::SUSPECT_AFTER) consecutive
+    /// send timeouts. Weaker than [`Msg::Crash`]: no pages are lost
+    /// and the flag clears on the next successful exchange or a link
+    /// heal — recipients merely stop placing on, pushing to, or
+    /// jumping toward the suspect in the meantime.
+    Suspect { node: NodeId },
+    /// Link repair announce: the (unordered) link `a`~`b` carries
+    /// traffic again, so both endpoints shed any suspicion earned
+    /// while it was partitioned.
+    HealLink { a: NodeId, b: NodeId },
 }
 
 /// Decode the shared (count, then idx + page per entry) layout of
@@ -161,6 +172,8 @@ impl Msg {
             Msg::PromoteData { .. } => 18,
             Msg::DemoteRepl { .. } => 19,
             Msg::Crash { .. } => 20,
+            Msg::Suspect { .. } => 21,
+            Msg::HealLink { .. } => 22,
         }
     }
 
@@ -197,6 +210,11 @@ impl Msg {
                 e.u32(*remaining);
             }
             Msg::Crash { node } => e.u8(node.0),
+            Msg::Suspect { node } => e.u8(node.0),
+            Msg::HealLink { a, b } => {
+                e.u8(a.0);
+                e.u8(b.0);
+            }
             Msg::PushBatch { pages }
             | Msg::PullBatchData { pages }
             | Msg::DemoteBatch { pages }
@@ -244,6 +262,8 @@ impl Msg {
             18 => Msg::PromoteData { pages: decode_page_batch(&mut d)? },
             19 => Msg::DemoteRepl { pages: decode_page_batch(&mut d)? },
             20 => Msg::Crash { node: NodeId(d.u8()?) },
+            21 => Msg::Suspect { node: NodeId(d.u8()?) },
+            22 => Msg::HealLink { a: NodeId(d.u8()?), b: NodeId(d.u8()?) },
             tag => return Err(DecodeError::BadTag { tag, what: "Msg" }),
         };
         Ok(msg)
@@ -331,6 +351,8 @@ mod tests {
             Msg::PromoteData { pages: vec![(8, vec![0x44; 4096])] },
             Msg::DemoteRepl { pages: vec![(9, vec![0x55; 4096])] },
             Msg::Crash { node: NodeId(4) },
+            Msg::Suspect { node: NodeId(6) },
+            Msg::HealLink { a: NodeId(0), b: NodeId(2) },
         ];
         for m in &samples {
             match m {
@@ -354,7 +376,9 @@ mod tests {
                 | Msg::PromoteReq { .. }
                 | Msg::PromoteData { .. }
                 | Msg::DemoteRepl { .. }
-                | Msg::Crash { .. } => {}
+                | Msg::Crash { .. }
+                | Msg::Suspect { .. }
+                | Msg::HealLink { .. } => {}
             }
         }
         samples
@@ -419,6 +443,14 @@ mod tests {
         assert_eq!(
             Msg::Crash { node: NodeId(1) }.wire_size(),
             Msg::Leave { node: NodeId(1) }.wire_size(),
+        );
+        // suspicion and link-heal announces are the same class: the
+        // failure detector must never cost page-transfer bytes
+        assert!(Msg::Suspect { node: NodeId(1) }.wire_size() < 16);
+        assert!(Msg::HealLink { a: NodeId(0), b: NodeId(1) }.wire_size() < 16);
+        assert_eq!(
+            Msg::Suspect { node: NodeId(1) }.wire_size(),
+            Msg::Crash { node: NodeId(1) }.wire_size(),
         );
     }
 

@@ -35,14 +35,22 @@ use crate::mem::tlb::Tlb;
 use crate::net::cluster::{Announce, Registry};
 use crate::net::proto::{Msg, MAX_BATCH};
 use crate::os::manager::{EosManager, ManagerAction, NodeInfo, ProcCounters};
-use crate::os::membership::NodeRole;
+use crate::os::membership::{NodeCand, NodeRole, ReplicaPlacement, SpreadReplicas};
 use crate::os::metrics::Metrics;
 use crate::os::policy::{Decision, JumpPolicy, NeverJump};
 use crate::os::system::Mode;
 use crate::proc::checkpoint::{JumpCheckpoint, RegisterFile, StretchCheckpoint};
 use crate::proc::meta::ProcessMeta;
 use crate::proc::sync::{SyncEvent, SyncQueue};
+use crate::sim::link::{LinkState, LinkTable, RetryPolicy};
 use crate::sim::{CostModel, SimClock};
+
+/// Consecutive send timeouts to one peer before it is marked
+/// [`suspected`](NodeKernel::suspected) — the failure-detection
+/// threshold of the suspicion protocol (small enough that a partition
+/// is detected within a few faults; large enough that one slow
+/// exchange never condemns a healthy peer).
+pub const SUSPECT_AFTER: u32 = 3;
 
 /// Cluster-level construction parameters (the node-kernel half of the
 /// old `SystemConfig`; per-process knobs live in [`ProcSpec`]).
@@ -171,6 +179,30 @@ pub struct NodeKernel {
     /// that never happened) — the drain report and `eval` notes read
     /// this.
     pub(crate) batch_wire_saved_ns: u64,
+    /// Link-state table (`--link-faults`). Empty when no link is
+    /// currently faulted — the fast path every priced send checks
+    /// first, so a fault-free run does zero link work and stays
+    /// bit-identical to the pre-link engine.
+    pub(crate) links: LinkTable,
+    /// Retry discipline for sends over a down link (sim-side mirror of
+    /// the TCP reconnect policy in `net/peer.rs`).
+    pub(crate) retry: RetryPolicy,
+    /// Suspicion mask parallel to `pools`: nodes whose last
+    /// [`SUSPECT_AFTER`] priced sends all timed out. Distinct from
+    /// death — a suspected node keeps its pages and stays live;
+    /// execution, placement, and reclaim route around it until a
+    /// successful exchange or a partition heal clears the flag.
+    pub(crate) suspected: Vec<bool>,
+    /// Consecutive send-timeout streak per node slot (resets on any
+    /// successful exchange).
+    pub(crate) suspect_streak: Vec<u32>,
+    /// `(node, sim ns)` of every suspicion transition, in detection
+    /// order — the time-to-detect record the partition evaluation
+    /// reports.
+    pub(crate) suspicion_log: Vec<(u8, u64)>,
+    /// Replica placement policy consulted when `--far-replicas` ≥ 2
+    /// fans a demoted page out to extra memory servers.
+    pub(crate) replica_placement: Box<dyn ReplicaPlacement>,
 }
 
 impl NodeKernel {
@@ -211,6 +243,12 @@ impl NodeKernel {
         let r2 = Msg::PullBatchReq { idxs: vec![0, 1] }.wire_size();
         NodeKernel {
             live: vec![true; pools.len()],
+            suspected: vec![false; pools.len()],
+            suspect_streak: vec![0; pools.len()],
+            suspicion_log: Vec::new(),
+            links: LinkTable::default(),
+            retry: RetryPolicy::default(),
+            replica_placement: Box::new(SpreadReplicas::default()),
             roles,
             pools,
             lru: ClusterLru::new(),
@@ -284,6 +322,8 @@ impl NodeKernel {
         self.pools.push(FramePool::empty());
         self.node_frames.push(0);
         self.live.push(false);
+        self.suspected.push(false);
+        self.suspect_streak.push(0);
         // Mid-run joins are always peers; servers exist from construction.
         self.roles.push(NodeRole::Peer);
     }
@@ -359,6 +399,24 @@ impl NodeKernel {
             .map(|i| NodeId(i as u8))
     }
 
+    /// Demotion target as seen *from* `from` on the link-fault plane:
+    /// [`Self::far_target`] restricted to servers that are neither
+    /// suspected nor behind a dead link — reclaim routes around a
+    /// partition instead of stalling every demote on retries. `None`
+    /// = no reachable far tier; callers fall back to peer pushes
+    /// exactly as when the tier is full. Fault-free this is
+    /// `far_target` verbatim (the filter's fast path answers true).
+    pub(crate) fn far_target_from(&self, from: NodeId) -> Option<NodeId> {
+        (0..self.pools.len())
+            .find(|&i| {
+                self.roles[i] == NodeRole::MemoryServer
+                    && self.live[i]
+                    && self.pools[i].free_frames() > 0
+                    && self.link_ok(from, NodeId(i as u8))
+            })
+            .map(|i| NodeId(i as u8))
+    }
+
     /// Frame-pool half of a node admission (the membership plane in
     /// [`crate::os::membership`] drives this): bring a pool of `frames`
     /// online at `slot` — appending a new slot, or re-arming a departed
@@ -370,6 +428,8 @@ impl NodeKernel {
             self.pools.push(FramePool::new(frames));
             self.node_frames.push(frames);
             self.live.push(true);
+            self.suspected.push(false);
+            self.suspect_streak.push(0);
             self.roles.push(NodeRole::Peer);
         } else {
             debug_assert!(!self.live[slot], "admitting a node that is already live");
@@ -378,6 +438,9 @@ impl NodeKernel {
             self.pools[slot] = FramePool::new(frames);
             self.node_frames[slot] = frames;
             self.live[slot] = true;
+            // A fresh admission starts with a clean bill of health.
+            self.suspected[slot] = false;
+            self.suspect_streak[slot] = 0;
         }
     }
 
@@ -389,7 +452,42 @@ impl NodeKernel {
         debug_assert_eq!(self.pools[n].used_frames(), 0, "retiring an undrained node");
         debug_assert_eq!(self.lru.len(node), 0, "retiring a node with LRU entries");
         self.live[n] = false;
+        // Death supersedes suspicion: the slot leaves the routing plane
+        // entirely, so the weaker flag is cleared.
+        self.suspected[n] = false;
+        self.suspect_streak[n] = 0;
         self.registry.remove(node);
+    }
+
+    /// Is `to` a routable target for traffic originating at `from` on
+    /// the link-fault plane: not suspected, and the direct link is not
+    /// down. (Liveness/role are the caller's checks — this is the
+    /// fault-routing filter layered on top.) Fault-free fast path: an
+    /// empty link table with no suspicions answers `true` immediately.
+    #[inline]
+    pub(crate) fn link_ok(&self, from: NodeId, to: NodeId) -> bool {
+        !self.suspected[to.0 as usize]
+            && (self.links.is_empty() || self.links.usable(from.0, to.0))
+    }
+
+    /// Is this node currently suspected by the failure detector?
+    pub fn is_suspected(&self, node: NodeId) -> bool {
+        self.suspected.get(node.0 as usize).copied().unwrap_or(false)
+    }
+
+    /// Apply a link transition. A heal clears any suspicion of either
+    /// endpoint — the partition, not the peers, was at fault — so
+    /// placement, reclaim, and jumping resume using them immediately.
+    pub(crate) fn set_link(&mut self, a: u8, b: u8, state: LinkState) {
+        self.links.set(a, b, state);
+        if state == LinkState::Up {
+            for n in [a as usize, b as usize] {
+                if n < self.suspected.len() {
+                    self.suspected[n] = false;
+                    self.suspect_streak[n] = 0;
+                }
+            }
+        }
     }
 
     /// Refresh each live member's advertised free RAM (the periodic
@@ -418,7 +516,10 @@ impl NodeKernel {
     pub(crate) fn view_for(&self, stretched: &[bool; MAX_NODES]) -> Vec<NodeInfo> {
         (0..self.pools.len())
             .map(|i| {
-                if !self.live[i] || self.roles[i] == NodeRole::MemoryServer {
+                // Suspected members advertise zero capacity, exactly
+                // like departed slots: the manager never stretches
+                // toward a node the failure detector distrusts.
+                if !self.live[i] || self.suspected[i] || self.roles[i] == NodeRole::MemoryServer {
                     return NodeInfo {
                         id: NodeId(i as u8),
                         total_frames: 0,
@@ -477,6 +578,10 @@ pub enum ShardMsg {
     /// Crash-stop node `node` (receiver owns it): frames vanish with no
     /// drain; the receiver runs the recovery protocol.
     Crash { node: u8 },
+    /// Link `a`~`b` transitions to `state`. Link state is *global*
+    /// (every shard's cost model prices traffic over the same fabric),
+    /// so the driver broadcasts this to every shard.
+    Link { a: u8, b: u8, state: LinkState },
 }
 
 /// A [`ShardMsg`] stamped with its canonical delivery key.
@@ -810,6 +915,13 @@ pub(crate) fn verify_cluster(kernel: &NodeKernel, procs: &[ProcessCtx]) -> Resul
 /// The borrow bundle the elastic primitives are implemented against:
 /// the shared node kernel + clock, the whole process table, and the
 /// index of the currently-executing process.
+/// Error from [`Engine::link_send`]: the direct link stayed down
+/// through the full deterministic retry schedule. The caller reroutes
+/// (alternate target) or relays (two-hop detour) — the send itself
+/// never silently drops, so digests stay exact under any partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct LinkDown;
+
 pub(crate) struct Engine<'a> {
     pub kernel: &'a mut NodeKernel,
     pub clock: &'a mut SimClock,
@@ -1400,14 +1512,15 @@ impl Engine<'_> {
         self.procs[cur].metrics.remote_faults += 1;
         if prefetched == 0 {
             self.procs[cur].metrics.bytes_pull += pull_req + page_msg;
-            self.clock.advance(self.kernel.costs.pull_ns(page_msg));
+            let ns = self.kernel.costs.pull_ns(page_msg);
+            self.charge_linked(node, owner_node, ns, pull_req + page_msg);
         } else {
             let n = 1 + prefetched as u64;
             let bytes = self.kernel.batch_req_bytes(n) + self.kernel.batch_data_bytes(n);
             let batched_ns = self.kernel.costs.pull_batch_ns(n, self.kernel.batch_data_bytes(n));
             self.procs[cur].metrics.prefetch_pulled += prefetched as u64;
             self.procs[cur].metrics.bytes_pull += bytes;
-            self.clock.advance(batched_ns);
+            self.charge_linked(node, owner_node, batched_ns, bytes);
             // What n separate demand pulls would have cost in wire
             // latency — the batching win the evaluation reports.
             let unbatched_ns = n * self.kernel.costs.pull_ns(page_msg);
@@ -1429,7 +1542,13 @@ impl Engine<'_> {
         let decision = self.procs[cur].policy.on_remote_fault(running, owner_node, now);
         if self.procs[cur].mode == Mode::Elastic {
             if let Decision::JumpTo(target) = decision {
-                if target != running && self.procs[cur].stretched[target.0 as usize] {
+                if target != running
+                    && self.procs[cur].stretched[target.0 as usize]
+                    // Execution never jumps toward a suspected node or
+                    // across a dead link: the checkpoint would stall on
+                    // retries only to land somewhere unreachable.
+                    && self.kernel.link_ok(running, target)
+                {
                     self.jump_to(target);
                 }
             }
@@ -1478,6 +1597,150 @@ impl Engine<'_> {
         pulled
     }
 
+    // ----- link-fault plane -------------------------------------------------
+
+    /// Price one message between `from` and `to` on the link-fault
+    /// plane. `Up` (or an empty link table — the fault-free fast path,
+    /// which charges exactly what the pre-fault-engine code charged)
+    /// advances the clock by `base_ns`; `Degraded { factor }` advances
+    /// by `factor * base_ns`; `Down` charges the full deterministic
+    /// retry schedule ([`RetryPolicy::stall_ns`]: every attempt times
+    /// out, with capped exponential backoff between attempts), counts
+    /// the timeouts toward suspecting `to`, and returns
+    /// [`Err(LinkDown)`] for the caller to reroute or relay. A
+    /// successful exchange is the failure detector's "alive" evidence
+    /// and clears `to`'s timeout streak.
+    pub(crate) fn link_send(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        base_ns: u64,
+    ) -> Result<u64, LinkDown> {
+        if self.kernel.links.is_empty() {
+            self.clock.advance(base_ns);
+            return Ok(base_ns);
+        }
+        match self.kernel.links.state(from.0, to.0) {
+            LinkState::Up => {
+                self.clock.advance(base_ns);
+                self.note_link_ok(to);
+                Ok(base_ns)
+            }
+            LinkState::Degraded { factor } => {
+                let ns = self.kernel.costs.degraded_ns(base_ns, factor);
+                self.clock.advance(ns);
+                self.note_link_ok(to);
+                Ok(ns)
+            }
+            LinkState::Down => {
+                let attempts = self.kernel.retry.attempts;
+                let stall = self.kernel.costs.link_retry_ns(&self.kernel.retry);
+                self.clock.advance(stall);
+                let m = &mut self.procs[self.cur].metrics;
+                m.retries += attempts as u64;
+                m.link_sends_failed += 1;
+                self.note_link_timeouts(to, attempts);
+                Err(LinkDown)
+            }
+        }
+    }
+
+    /// Charge `base_ns` for a message between `from` and `to`, routing
+    /// around a dead direct link by relaying through an intermediary at
+    /// two hops ([`CostModel::relay_ns`]); `bytes` is the payload
+    /// counted as relay traffic when the detour is taken. The data
+    /// always arrives — a partition costs time (retry stall + doubled
+    /// latency), never pages, so digests stay exact.
+    pub(crate) fn charge_linked(&mut self, from: NodeId, to: NodeId, base_ns: u64, bytes: u64) {
+        if self.link_send(from, to, base_ns).is_err() {
+            self.clock.advance(self.kernel.costs.relay_ns(base_ns));
+            self.procs[self.cur].metrics.relay_bytes += bytes;
+        }
+    }
+
+    /// A successful exchange with `to`: reset its timeout streak and
+    /// drop any standing suspicion (the detector's recovery edge).
+    fn note_link_ok(&mut self, to: NodeId) {
+        let t = to.0 as usize;
+        self.kernel.suspect_streak[t] = 0;
+        self.kernel.suspected[t] = false;
+    }
+
+    /// Count `n` consecutive timeouts against `to`. Crossing
+    /// [`SUSPECT_AFTER`] marks the node suspected — placement skips
+    /// it, execution stops jumping there, reclaim stops pushing to it
+    /// — records the detection instant (the partition eval's
+    /// time-to-detect), and announces a [`Msg::Suspect`] to the
+    /// cluster, priced on the control lane. Suspicion is weaker than
+    /// crash: no pages are lost and the flag clears on the next
+    /// successful exchange or on a link heal.
+    fn note_link_timeouts(&mut self, to: NodeId, n: u32) {
+        let t = to.0 as usize;
+        if self.kernel.suspected[t] {
+            return;
+        }
+        self.kernel.suspect_streak[t] = self.kernel.suspect_streak[t].saturating_add(n);
+        if self.kernel.suspect_streak[t] >= SUSPECT_AFTER {
+            self.kernel.suspected[t] = true;
+            let now = self.clock.now();
+            self.kernel.suspicion_log.push((to.0, now));
+            self.procs[self.cur].metrics.suspicions += 1;
+            let bytes = Msg::Suspect { node: to }.wire_size();
+            self.clock.advance(self.kernel.costs.wire_ns(bytes));
+        }
+    }
+
+    /// Before paying a promote, flip the far page's primary to the
+    /// replica behind the cheapest live link from `node` (Up beats
+    /// Degraded beats Down) when the current primary's link is worse.
+    /// The flip is a pure table re-home — every replica already holds
+    /// identical bytes, so no wire charge — and the old primary frame
+    /// stays in the replica set, preserving the far-tier invariants.
+    fn prefer_reachable_replica(&mut self, idx: PageIdx, node: NodeId) {
+        if self.kernel.links.is_empty() {
+            return;
+        }
+        let cur = self.cur;
+        let rank = |links: &LinkTable, to: NodeId| -> u64 {
+            match links.state(node.0, to.0) {
+                LinkState::Up => 1,
+                LinkState::Degraded { factor } => factor as u64,
+                LinkState::Down => u64::MAX,
+            }
+        };
+        let server = self.procs[cur].pt.get(idx).node();
+        let primary_rank = rank(&self.kernel.links, server);
+        if primary_rank == 1 {
+            return;
+        }
+        let key = (cur as u32, idx);
+        let Some(homes) = self.kernel.replicas.get(&key) else {
+            return;
+        };
+        let mut best: Option<(u64, NodeId, FrameId)> = None;
+        for &(rn, rf) in homes {
+            if !self.kernel.live[rn.0 as usize] {
+                continue;
+            }
+            let r = rank(&self.kernel.links, rn);
+            if r < best.map(|(br, _, _)| br).unwrap_or(primary_rank) {
+                best = Some((r, rn, rf));
+            }
+        }
+        let Some((_, rn, rf)) = best else {
+            return;
+        };
+        // Swap primary and replica in place: the chosen replica becomes
+        // the primary, the old primary frame re-enters the (sorted)
+        // replica set.
+        let old_frame = self.procs[cur].pt.get(idx).frame();
+        let homes = self.kernel.replicas.get_mut(&key).expect("checked above");
+        homes.retain(|&(n2, _)| n2 != rn);
+        let pos = homes.partition_point(|&(n2, _)| n2 < server);
+        homes.insert(pos, (server, old_frame));
+        self.procs[cur].pt.rehome_far(idx, rn, rf);
+    }
+
     // ----- far tier (demote / promote) -------------------------------------
 
     /// Far fault: the page was demoted to a memory server; promote it
@@ -1488,8 +1751,13 @@ impl Engine<'_> {
     /// consulted for its batch veto, never for a jump decision.
     pub(crate) fn far_fault(&mut self, idx: PageIdx) {
         let cur = self.cur;
-        let server = self.procs[cur].pt.get(idx).node();
         let node = self.procs[cur].running;
+        // Promotion prefers the replica behind the cheapest live link:
+        // if the primary sits across a degraded or dead link and a
+        // better-connected replica exists, flip the primary first (a
+        // free table re-home) and promote from there.
+        self.prefer_reachable_replica(idx, node);
+        let server = self.procs[cur].pt.get(idx).node();
         debug_assert!(self.kernel.roles[server.0 as usize] == NodeRole::MemoryServer);
 
         // Keep a sliver of headroom so the incoming page always fits
@@ -1524,7 +1792,7 @@ impl Engine<'_> {
         m.promotions += n;
         m.prefetch_pulled += window as u64;
         m.bytes_promote += bytes;
-        self.clock.advance(batched_ns);
+        self.charge_linked(node, server, batched_ns, bytes);
         if window > 0 {
             let unbatched_ns =
                 n * self.kernel.costs.promote_ns(self.kernel.batch_data_bytes(1));
@@ -1650,7 +1918,7 @@ impl Engine<'_> {
     /// number of pages demoted (0 = no far tier, far tier full, or no
     /// cold victim — callers fall back to peer pushes).
     pub(crate) fn demote_cold(&mut self, from: NodeId, max_n: u32) -> u32 {
-        let Some(server) = self.kernel.far_target() else {
+        let Some(server) = self.kernel.far_target_from(from) else {
             return 0;
         };
         let room = self.kernel.pools[server.0 as usize].free_frames();
@@ -1683,6 +1951,7 @@ impl Engine<'_> {
     /// first) — the demote mirror of [`Self::do_push_batch`].
     pub(crate) fn do_demote_batch(&mut self, victims: &[(usize, PageIdx)], server: NodeId) {
         debug_assert!(!victims.is_empty());
+        let from = self.procs[victims[0].0].pt.get(victims[0].1).node();
         for &(owner, idx) in victims {
             self.demote_page(owner, idx, server);
         }
@@ -1696,42 +1965,65 @@ impl Engine<'_> {
             p.metrics.bytes_demote += per + if i == 0 { rem } else { 0 };
         }
         let batched_ns = self.kernel.costs.demote_batch_ns(n, bytes);
-        self.clock.advance(batched_ns);
+        self.charge_linked(from, server, batched_ns, bytes);
         let unbatched_ns = n * self.kernel.costs.demote_ns(self.kernel.batch_data_bytes(1));
         self.kernel.batch_wire_saved_ns += unbatched_ns.saturating_sub(batched_ns);
         if self.kernel.far_replicas > 1 {
-            self.replicate_demoted(victims);
+            self.replicate_demoted(victims, from);
         }
     }
 
     /// Replica fan-out for a just-demoted batch (`--far-replicas` R >
     /// 1): copy each page to up to R-1 additional memory servers, one
     /// [`Msg::DemoteRepl`] message per replica rank, priced on the same
-    /// far lane as the primary batch. Placement is deterministic — the
-    /// lowest-id live server with room that holds no copy of the page —
-    /// and degrades silently: when the tier is out of room a page
-    /// simply carries fewer replicas.
-    fn replicate_demoted(&mut self, victims: &[(usize, PageIdx)]) {
+    /// far lane as the primary batch. Placement is pluggable
+    /// ([`ReplicaPlacement`]; spread-across-servers by default) over
+    /// the eligible servers — live, holding no copy of the page, with
+    /// room, and reachable from the demoting node `from` on the
+    /// link-fault plane — and degrades silently: when no eligible
+    /// server remains a page simply carries fewer replicas.
+    fn replicate_demoted(&mut self, victims: &[(usize, PageIdx)], from: NodeId) {
+        // Replica copies hosted per server, the placement policies'
+        // spread signal; maintained incrementally as ranks place.
+        let mut hosted = vec![0u32; self.kernel.pools.len()];
+        for homes in self.kernel.replicas.values() {
+            for &(rn, _) in homes {
+                hosted[rn.0 as usize] += 1;
+            }
+        }
         for _rank in 1..self.kernel.far_replicas {
             let mut placed: Vec<(usize, PageIdx)> = Vec::new();
+            let mut rank_target: Option<NodeId> = None;
             for &(owner, idx) in victims {
                 let pte = self.procs[owner].pt.get(idx);
                 debug_assert!(pte.is_far());
                 let primary = pte.node();
                 let key = (owner as u32, idx);
-                let target = (0..self.kernel.pools.len()).find(|&i| {
-                    self.kernel.roles[i] == NodeRole::MemoryServer
-                        && self.kernel.live[i]
-                        && NodeId(i as u8) != primary
-                        && self
-                            .kernel
-                            .replicas
-                            .get(&key)
-                            .map(|homes| homes.iter().all(|&(rn, _)| rn.0 as usize != i))
-                            .unwrap_or(true)
-                        && self.kernel.pools[i].free_frames() > 0
-                });
-                let Some(t) = target else { continue };
+                let cands: Vec<NodeCand> = (0..self.kernel.pools.len())
+                    .filter(|&i| {
+                        self.kernel.roles[i] == NodeRole::MemoryServer
+                            && self.kernel.live[i]
+                            && NodeId(i as u8) != primary
+                            && self
+                                .kernel
+                                .replicas
+                                .get(&key)
+                                .map(|homes| homes.iter().all(|&(rn, _)| rn.0 as usize != i))
+                                .unwrap_or(true)
+                            && self.kernel.pools[i].free_frames() > 0
+                            && self.kernel.link_ok(from, NodeId(i as u8))
+                    })
+                    .map(|i| NodeCand {
+                        id: NodeId(i as u8),
+                        total_frames: self.kernel.pools[i].capacity(),
+                        free_frames: self.kernel.pools[i].free_frames(),
+                        homed: hosted[i],
+                    })
+                    .collect();
+                let Some(target) = self.kernel.replica_placement.pick(&cands) else {
+                    continue;
+                };
+                let t = target.0 as usize;
                 let data = self.kernel.pools[primary.0 as usize].frame(pte.frame()).to_vec();
                 let frame = self.kernel.pools[t]
                     .alloc_reserve()
@@ -1739,7 +2031,9 @@ impl Engine<'_> {
                 self.kernel.pools[t].frame_mut(frame).copy_from_slice(&data);
                 let homes = self.kernel.replicas.entry(key).or_default();
                 let pos = homes.partition_point(|&(rn, _)| (rn.0 as usize) < t);
-                homes.insert(pos, (NodeId(t as u8), frame));
+                homes.insert(pos, (target, frame));
+                hosted[t] += 1;
+                rank_target.get_or_insert(target);
                 placed.push((owner, idx));
             }
             // Nothing placed at this rank means the tier is out of
@@ -1755,7 +2049,12 @@ impl Engine<'_> {
             for (i, &(owner, _)) in placed.iter().enumerate() {
                 self.procs[owner].metrics.bytes_demote += per + if i == 0 { rem } else { 0 };
             }
-            self.clock.advance(self.kernel.costs.demote_batch_ns(k, bytes));
+            let batched_ns = self.kernel.costs.demote_batch_ns(k, bytes);
+            // The rank's eligibility filter already routed around dead
+            // links, so this prices Up/Degraded lanes (the relay branch
+            // is unreachable by construction).
+            let to = rank_target.expect("placed is non-empty");
+            self.charge_linked(from, to, batched_ns, bytes);
         }
     }
 
@@ -1813,7 +2112,9 @@ impl Engine<'_> {
             data_segment: vec![0; self.kernel.stretch_data_segment],
         };
         let bytes = Msg::Stretch { ckpt: ckpt.encode() }.wire_size() + Msg::StretchAck.wire_size();
-        self.clock.advance(self.kernel.costs.stretch_ns(bytes));
+        let from = self.procs[cur].running;
+        let stretch_ns = self.kernel.costs.stretch_ns(bytes);
+        self.charge_linked(from, target, stretch_ns, bytes);
         let now = self.clock.now();
         let p = &mut self.procs[cur];
         p.metrics.stretches += 1;
@@ -1946,12 +2247,14 @@ impl Engine<'_> {
     /// drain protocol in `os::membership`, so push cost accounting has
     /// exactly one definition).
     pub(crate) fn do_push(&mut self, owner: usize, idx: PageIdx, target: NodeId) {
+        let from = self.procs[owner].pt.get(idx).node();
         self.move_page(owner, idx, target, true);
         let bytes = self.kernel.page_msg_bytes;
         let p = &mut self.procs[owner];
         p.metrics.pushes += 1;
         p.metrics.bytes_push += bytes;
-        self.clock.advance(self.kernel.costs.push_ns(bytes));
+        let ns = self.kernel.costs.push_ns(bytes);
+        self.charge_linked(from, target, ns, bytes);
     }
 
     /// Evict up to `max_n` pages from `from` as ONE `PushBatch`
@@ -2009,6 +2312,7 @@ impl Engine<'_> {
     /// first), so per-process traffic still sums to the wire total.
     pub(crate) fn do_push_batch(&mut self, victims: &[(usize, PageIdx)], target: NodeId) {
         debug_assert!(!victims.is_empty());
+        let from = self.procs[victims[0].0].pt.get(victims[0].1).node();
         for &(owner, idx) in victims {
             self.move_page(owner, idx, target, true);
         }
@@ -2022,7 +2326,7 @@ impl Engine<'_> {
             p.metrics.bytes_push += per + if i == 0 { rem } else { 0 };
         }
         let batched_ns = self.kernel.costs.push_batch_ns(n, bytes);
-        self.clock.advance(batched_ns);
+        self.charge_linked(from, target, batched_ns, bytes);
         let unbatched_ns = n * self.kernel.costs.push_ns(self.kernel.page_msg_bytes);
         self.kernel.batch_wire_saved_ns += unbatched_ns.saturating_sub(batched_ns);
     }
@@ -2035,6 +2339,7 @@ impl Engine<'_> {
             i != from.0 as usize
                 && self.kernel.live[i]
                 && self.kernel.roles[i] == NodeRole::Peer
+                && self.kernel.link_ok(from, NodeId(i as u8))
                 && pool.free_frames() > 0
                 && self.procs.iter().any(|p| p.stretched[i])
         })
@@ -2053,6 +2358,9 @@ impl Engine<'_> {
                 || !stretched[i]
                 || !self.kernel.live[i]
                 || self.kernel.roles[i] != NodeRole::Peer
+                // Route around the partition: a suspected peer or one
+                // behind a dead link is never the best push target.
+                || !self.kernel.link_ok(from, NodeId(i as u8))
             {
                 continue;
             }
@@ -2362,7 +2670,8 @@ impl Engine<'_> {
         // probe contributes the message's tag/length framing).
         let bytes = Msg::Jump { ckpt: Vec::new() }.wire_size() + ckpt.encoded_size();
         debug_assert_eq!(bytes, Msg::Jump { ckpt: ckpt.encode() }.wire_size());
-        self.clock.advance(self.kernel.costs.jump_ns(bytes));
+        let jump_ns = self.kernel.costs.jump_ns(bytes);
+        self.charge_linked(from, target, jump_ns, bytes);
         let now = self.clock.now();
         let p = &mut self.procs[cur];
         p.metrics.record_jump(now, from, target, bytes);

@@ -55,6 +55,7 @@ use crate::os::policy::JumpPolicy;
 use crate::os::sched::ElasticCluster;
 use crate::os::system::Mode;
 use crate::proc::checkpoint::JumpCheckpoint;
+use crate::sim::link::{LinkSchedule, LinkState};
 
 /// What a cluster member contributes (announced at startup, §4).
 ///
@@ -236,6 +237,78 @@ impl PlacementPolicy for RoundRobin {
 pub struct Pinned(pub NodeId);
 
 impl PlacementPolicy for Pinned {
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId> {
+        cands.iter().find(|c| c.id == self.0).map(|c| c.id)
+    }
+
+    fn describe(&self) -> String {
+        format!("pinned({})", self.0)
+    }
+}
+
+/// Where does the next replica copy of a just-demoted far page go?
+/// The replica-rank analogue of [`PlacementPolicy`]: implementations
+/// see only *eligible* servers — live memory servers with a free
+/// frame, not the page's primary, holding no copy already, and
+/// reachable from the demoting node over the link-fault plane —
+/// ordered by node id, with [`NodeCand::homed`] carrying the number
+/// of replica copies each server already hosts. Replaces the old
+/// fixed lowest-id rule; `Send` for the same shard-movement reason as
+/// [`PlacementPolicy`].
+pub trait ReplicaPlacement: Send {
+    /// Pick the server for the next copy. `None` means no eligible
+    /// server remains and the page simply carries fewer replicas.
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId>;
+
+    /// Human-readable name for reports.
+    fn describe(&self) -> String;
+}
+
+/// The default: spread copies across the tier — fewest replica copies
+/// hosted first, ties to most free frames, then lowest id — so one
+/// server crash (or one partitioned link) strands as few
+/// single-replica pages as possible.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SpreadReplicas;
+
+impl ReplicaPlacement for SpreadReplicas {
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId> {
+        cands
+            .iter()
+            .min_by_key(|c| (c.homed, std::cmp::Reverse(c.free_frames), c.id.0))
+            .map(|c| c.id)
+    }
+
+    fn describe(&self) -> String {
+        "spread".into()
+    }
+}
+
+/// Fill-balance: the server with the most free frames takes the next
+/// copy, ties to lowest id — keeps per-server occupancy level when
+/// servers contribute unequal frame counts.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FillBalance;
+
+impl ReplicaPlacement for FillBalance {
+    fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId> {
+        cands
+            .iter()
+            .max_by_key(|c| (c.free_frames, std::cmp::Reverse(c.id.0)))
+            .map(|c| c.id)
+    }
+
+    fn describe(&self) -> String {
+        "fill-balance".into()
+    }
+}
+
+/// Every copy on the given server (tests and explicitly tiered
+/// setups); pages carry fewer replicas whenever it is ineligible.
+#[derive(Debug, Clone, Copy)]
+pub struct PinnedReplicas(pub NodeId);
+
+impl ReplicaPlacement for PinnedReplicas {
     fn pick(&mut self, cands: &[NodeCand]) -> Option<NodeId> {
         cands.iter().find(|c| c.id == self.0).map(|c| c.id)
     }
@@ -484,8 +557,9 @@ impl ChurnSchedule {
     }
 }
 
-/// Parse a simulated-time literal: `250`, `250ns`, `3us`, `2.5ms`, `1s`.
-fn parse_time_ns(s: &str) -> Result<u64, String> {
+/// Parse a simulated-time literal: `250`, `250ns`, `3us`, `2.5ms`, `1s`
+/// (shared with the link-fault grammar in [`crate::sim::link`]).
+pub(crate) fn parse_time_ns(s: &str) -> Result<u64, String> {
     let s = s.trim();
     let (num, mult) = if let Some(n) = s.strip_suffix("ns") {
         (n, 1u64)
@@ -758,8 +832,9 @@ impl Engine<'_> {
         key: crate::mem::proc_lru::PageKey,
         report: &mut DrainReport,
     ) -> bool {
-        let Some(server) = self.kernel.far_target() else { return false };
         let owner = key.proc as usize;
+        let from = self.procs[owner].pt.get(key.idx).node();
+        let Some(server) = self.kernel.far_target_from(from) else { return false };
         if self.procs[owner].pt.get(key.idx).pinned() {
             return false;
         }
@@ -903,6 +978,7 @@ impl Engine<'_> {
         for (i, pool) in self.kernel.pools.iter().enumerate() {
             if i == avoid.0 as usize
                 || !self.kernel.live[i]
+                || self.kernel.is_suspected(NodeId(i as u8))
                 || self.kernel.roles[i] != NodeRole::Peer
                 || !self.procs[slot].stretched[i]
             {
@@ -923,6 +999,7 @@ impl Engine<'_> {
         for (i, pool) in self.kernel.pools.iter().enumerate() {
             if i == avoid.0 as usize
                 || !self.kernel.live[i]
+                || self.kernel.is_suspected(NodeId(i as u8))
                 || self.kernel.roles[i] != NodeRole::Peer
             {
                 continue;
@@ -942,6 +1019,7 @@ impl Engine<'_> {
         for (i, pool) in self.kernel.pools.iter().enumerate() {
             if i == avoid.0 as usize
                 || !self.kernel.live[i]
+                || self.kernel.is_suspected(NodeId(i as u8))
                 || self.kernel.roles[i] != NodeRole::Peer
                 || self.procs[owner].stretched[i]
             {
@@ -1208,6 +1286,67 @@ impl ElasticCluster {
         self.churn.pending()
     }
 
+    /// Swap the replica fan-out policy consulted when demoted far
+    /// pages are replicated across memory servers.
+    pub fn set_replica_placement(&mut self, policy: Box<dyn ReplicaPlacement>) {
+        self.kernel.replica_placement = policy;
+    }
+
+    /// Install a link-fault schedule; the scheduler applies due
+    /// transitions between time slices, alongside churn.
+    pub fn set_link_faults(&mut self, schedule: LinkSchedule) {
+        self.link_faults = schedule;
+    }
+
+    /// Scripted link transitions that have not (yet) applied.
+    pub fn link_pending(&self) -> usize {
+        self.link_faults.pending()
+    }
+
+    /// Is `node` currently suspected by the timeout failure detector?
+    pub fn is_suspected(&self, node: NodeId) -> bool {
+        self.kernel.is_suspected(node)
+    }
+
+    /// Every suspicion raised this run as `(node, sim-ns)` pairs in
+    /// detection order — the partition eval's time-to-detect source.
+    pub fn suspicion_log(&self) -> &[(u8, u64)] {
+        &self.kernel.suspicion_log
+    }
+
+    /// Apply every scripted link transition due at the current
+    /// simulated time. Cuts and degradations are environmental: the
+    /// fabric changed and nobody is told — the timeout failure
+    /// detector finds out the expensive way. A heal additionally runs
+    /// through [`Self::apply_link`]'s announce so suspicion earned
+    /// during the partition clears immediately.
+    pub(crate) fn apply_due_link_events(&mut self) {
+        loop {
+            let now = self.clock.now();
+            let Some(ev) = self.link_faults.pop_due(now) else { break };
+            let (a, b) = ev.op.pair();
+            self.apply_link(a, b, ev.op.state());
+            self.link_log.push((now, ev.op));
+        }
+    }
+
+    /// Apply one link transition to the kernel's fabric view. On a
+    /// heal, multicast [`Msg::HealLink`] so every member sheds the
+    /// suspicion earned while the pair was partitioned; the announce
+    /// is control-plane time, charged to [`Self::churn_ns`] like every
+    /// other membership broadcast. The sharded engine calls this
+    /// directly from barrier mail; the single-threaded scheduler goes
+    /// through [`Self::apply_due_link_events`].
+    pub(crate) fn apply_link(&mut self, a: u8, b: u8, state: LinkState) {
+        self.kernel.set_link(a, b, state);
+        if state == LinkState::Up {
+            let bytes = Msg::HealLink { a: NodeId(a), b: NodeId(b) }.wire_size();
+            let t0 = self.clock.now();
+            self.clock.advance(self.kernel.costs.wire_ns(bytes));
+            self.churn_ns += self.clock.now() - t0;
+        }
+    }
+
     /// Spawn with the cluster's placement policy choosing the home node
     /// from live members (paper §4: announce so others can pick).
     pub fn spawn_placed(
@@ -1243,7 +1382,11 @@ impl ElasticCluster {
         let now = self.clock.now();
         self.kernel.refresh_registry(now);
         (0..self.kernel.node_count())
-            .filter(|&i| self.kernel.live[i] && self.kernel.role(NodeId(i as u8)) == NodeRole::Peer)
+            .filter(|&i| {
+                self.kernel.live[i]
+                    && !self.kernel.is_suspected(NodeId(i as u8))
+                    && self.kernel.role(NodeId(i as u8)) == NodeRole::Peer
+            })
             .map(|i| {
                 let id = NodeId(i as u8);
                 let member = self.kernel.registry.get(id);
@@ -1433,6 +1576,35 @@ mod tests {
         let mut p = Pinned(NodeId(1));
         assert_eq!(p.pick(&[cand(0, 1, 0), cand(1, 1, 0)]), Some(NodeId(1)));
         assert_eq!(p.pick(&[cand(0, 1, 0)]), None, "pinned node not live");
+    }
+
+    #[test]
+    fn spread_replicas_balances_hosted_counts_then_free_frames() {
+        let mut p = SpreadReplicas::default();
+        // Fewest hosted replica copies wins outright...
+        assert_eq!(p.pick(&[cand(3, 900, 5), cand(4, 100, 0)]), Some(NodeId(4)));
+        // ...then most free frames...
+        assert_eq!(p.pick(&[cand(3, 100, 2), cand(4, 900, 2)]), Some(NodeId(4)));
+        // ...then lowest id (the pre-trait tie-break, so far_replicas=1
+        // layouts are unchanged).
+        assert_eq!(p.pick(&[cand(4, 500, 1), cand(3, 500, 1)]), Some(NodeId(3)));
+        assert_eq!(p.pick(&[]), None);
+    }
+
+    #[test]
+    fn fill_balance_prefers_most_free_frames() {
+        let mut p = FillBalance;
+        assert_eq!(p.pick(&[cand(3, 10, 0), cand(4, 700, 9)]), Some(NodeId(4)));
+        assert_eq!(p.pick(&[cand(4, 500, 0), cand(3, 500, 3)]), Some(NodeId(3)), "tie: lowest id");
+        assert_eq!(p.pick(&[]), None);
+    }
+
+    #[test]
+    fn pinned_replicas_requires_the_pinned_server() {
+        let mut p = PinnedReplicas(NodeId(4));
+        assert_eq!(p.pick(&[cand(3, 1, 0), cand(4, 1, 0)]), Some(NodeId(4)));
+        assert_eq!(p.pick(&[cand(3, 1, 0)]), None, "pinned server not a candidate");
+        assert!(p.describe().contains('4'));
     }
 
     #[test]

@@ -79,6 +79,22 @@ pub struct Metrics {
     /// crash (checkpoint restore on the survivor).
     pub recovery_ns: u64,
 
+    // link-fault counters (`--link-faults`)
+    /// Peers this process's sends marked suspected: N consecutive
+    /// send timeouts to one peer crossed the suspicion threshold
+    /// (cleared by a later successful exchange or a partition heal).
+    pub suspicions: u64,
+    /// Individual send attempts burned retrying over down links (every
+    /// failed send costs the full retry budget before failing over).
+    pub retries: u64,
+    /// Priced sends that exhausted their retries against a down link
+    /// and failed over to relay routing.
+    pub link_sends_failed: u64,
+    /// Bytes that crossed the fabric twice because a dead direct link
+    /// forced a two-hop relay (also counted once in their own lane's
+    /// byte counter).
+    pub relay_bytes: u64,
+
     // far-memory tier counters (`--far-nodes`)
     /// Faults that found the page demoted to a memory server (the far
     /// analogue of [`Self::remote_faults`]; disjoint from it).
@@ -254,6 +270,15 @@ impl RunReport {
                 self.metrics.crash_refaults,
                 self.metrics.replica_promotes,
                 crate::util::stats::fmt_ns(self.metrics.recovery_ns as f64),
+            ));
+        }
+        if self.metrics.link_sends_failed > 0 || self.metrics.suspicions > 0 {
+            line.push_str(&format!(
+                " links[failed={} retries={} suspicions={} relay={}]",
+                self.metrics.link_sends_failed,
+                self.metrics.retries,
+                self.metrics.suspicions,
+                crate::util::stats::fmt_bytes(self.metrics.relay_bytes as f64),
             ));
         }
         line

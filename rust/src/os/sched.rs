@@ -60,7 +60,7 @@ use crate::os::membership::{
 use crate::os::metrics::{Metrics, ShardStats};
 use crate::os::policy::{JumpPolicy, ThresholdPolicy};
 use crate::os::system::Mode;
-use crate::sim::{SimClock, WindowClock};
+use crate::sim::{LinkOp, LinkSchedule, SimClock, WindowClock};
 use crate::workloads::trace::{Trace, TraceReplay};
 use crate::workloads::{DirectMem, Fuel, StepOutcome, Workload, WorkloadExec};
 
@@ -145,6 +145,12 @@ pub struct ElasticCluster {
     /// Membership changes actually applied this run (with drain
     /// outcomes), in application order.
     pub churn_log: Vec<AppliedChurn>,
+    /// Scripted link faults (cut / degrade / heal), applied between
+    /// time slices alongside churn.
+    pub(crate) link_faults: LinkSchedule,
+    /// Link transitions actually applied this run, in application
+    /// order, stamped with the sim time they took effect.
+    pub link_log: Vec<(u64, LinkOp)>,
     /// Simulated time spent by the membership control plane (join
     /// announces, drain pushes, forced jumps) — cluster work no single
     /// process is charged for. With churn,
@@ -163,6 +169,8 @@ impl ElasticCluster {
             placement: Box::new(LeastLoaded),
             churn: ChurnSchedule::default(),
             churn_log: Vec::new(),
+            link_faults: LinkSchedule::default(),
+            link_log: Vec::new(),
             churn_ns: 0,
         }
     }
@@ -347,6 +355,9 @@ impl ElasticCluster {
         // safely across drains and forced jumps.
         let live: Vec<usize> = jobs.iter().filter(|j| j.digest.is_none()).map(|j| j.slot).collect();
         self.apply_due_churn(&live);
+        // Link faults apply on the same boundary: the fabric changes
+        // between slices, never mid-access.
+        self.apply_due_link_events();
         let quantum = self.quantum_ns.max(1);
         let mut ran_any = false;
         for job in jobs.iter_mut() {
@@ -513,6 +524,13 @@ pub struct ShardedCluster {
     churn: ChurnSchedule,
     /// Membership changes actually applied, in application order.
     pub churn_log: Vec<AppliedChurn>,
+    /// Global scripted link faults. Unlike churn there is no owning
+    /// shard: link state is fabric-global (every shard's cost model
+    /// prices the same links), so each due event is broadcast to all
+    /// shards as barrier mail.
+    link_faults: LinkSchedule,
+    /// Link transitions actually applied, in application order.
+    pub link_log: Vec<(u64, LinkOp)>,
     /// Global node-slot count (grows when churn appends a fresh slot).
     global_nodes: usize,
     /// Global process id -> (shard, local process-table slot).
@@ -556,6 +574,8 @@ impl ShardedCluster {
             placement: Box::new(LeastLoaded),
             churn: ChurnSchedule::default(),
             churn_log: Vec::new(),
+            link_faults: LinkSchedule::default(),
+            link_log: Vec::new(),
             global_nodes: nodes,
             proc_map: Vec::new(),
             ctl_seq: 0,
@@ -623,6 +643,30 @@ impl ShardedCluster {
     /// Scripted churn events that never came due.
     pub fn churn_pending(&self) -> usize {
         self.churn.pending()
+    }
+
+    /// Install a link-fault schedule (driver-owned; shards receive due
+    /// transitions as broadcast barrier mail).
+    pub fn set_link_faults(&mut self, schedule: LinkSchedule) {
+        self.link_faults = schedule;
+    }
+
+    /// Scripted link transitions that never came due.
+    pub fn link_pending(&self) -> usize {
+        self.link_faults.pending()
+    }
+
+    /// Suspicions raised across all shards: `(node, sim-ns)` pairs
+    /// sorted by detection time — the partition eval's time-to-detect
+    /// source.
+    pub fn suspicion_log(&self) -> Vec<(u8, u64)> {
+        let mut all: Vec<(u8, u64)> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.cluster.kernel.suspicion_log.iter().copied())
+            .collect();
+        all.sort_by_key(|&(n, t)| (t, n));
+        all
     }
 
     /// The simulation's makespan so far: the furthest shard clock
@@ -740,14 +784,18 @@ impl ShardedCluster {
             // to the inner cluster and run the unchanged legacy loop.
             let shard = &mut self.shards[0];
             shard.cluster.set_churn(std::mem::take(&mut self.churn));
+            shard.cluster.set_link_faults(std::mem::take(&mut self.link_faults));
             let proc_map = &self.proc_map;
             let local: Vec<(usize, TenantJob)> =
                 tenants.into_iter().map(|(gid, job)| (proc_map[gid].1, job)).collect();
             let reports = shard.cluster.run_jobs(local);
-            // Reclaim the schedule (with its cursor) so churn_pending
-            // keeps reporting events that never came due.
+            // Reclaim the schedules (with their cursors) so
+            // churn_pending/link_pending keep reporting events that
+            // never came due.
             self.churn = std::mem::take(&mut shard.cluster.churn);
             self.churn_log.clone_from(&shard.cluster.churn_log);
+            self.link_faults = std::mem::take(&mut shard.cluster.link_faults);
+            self.link_log.clone_from(&shard.cluster.link_log);
             return reports;
         }
 
@@ -783,6 +831,7 @@ impl ShardedCluster {
             // shard observes a membership change at the same boundary
             // regardless of the thread schedule.
             self.route_due_churn();
+            self.route_due_links();
             self.apply_barrier_messages();
 
             let active: Vec<bool> = self.shards.iter().map(|s| s.has_unfinished()).collect();
@@ -897,6 +946,28 @@ impl ShardedCluster {
         }
     }
 
+    /// Convert link transitions due at the committed floor into
+    /// barrier mail. Unlike churn there is no owning shard: link state
+    /// is fabric-global (each shard's cost model prices the same
+    /// ordered pairs), so every due event broadcasts to all shards.
+    /// The driver's log is authoritative — shards applying barrier
+    /// mail do not log, so `link_log` holds each transition once.
+    fn route_due_links(&mut self) {
+        let floor = self.window.floor();
+        while let Some(ev) = self.link_faults.pop_due(floor) {
+            let (a, b) = ev.op.pair();
+            if a as usize >= self.global_nodes || b as usize >= self.global_nodes {
+                log::warn!("link event node{a}~node{b} skipped: no such node");
+                continue;
+            }
+            let state = ev.op.state();
+            for to in 0..self.shards.len() {
+                self.ctl_send(to, ev.at_ns, ShardMsg::Link { a, b, state });
+            }
+            self.link_log.push((ev.at_ns, ev.op));
+        }
+    }
+
     /// Deliver one control-plane message (the driver is sender
     /// `usize::MAX`, sequenced after every real shard).
     fn ctl_send(&mut self, to: usize, at_ns: u64, msg: ShardMsg) {
@@ -959,6 +1030,12 @@ impl ShardedCluster {
                 }),
                 Err(e) => log::warn!("churn crash of node{node} skipped: {e}"),
             },
+            ShardMsg::Link { a, b, state } => {
+                // Driver already logged the transition (route_due_links);
+                // the shard only updates its fabric view and, on a heal,
+                // charges the announce that clears suspicion.
+                shard.cluster.apply_link(a, b, state);
+            }
         }
     }
 }
@@ -987,6 +1064,8 @@ fn shard_cluster(cfg: &ClusterConfig, owned: &[bool]) -> ElasticCluster {
         placement: Box::new(LeastLoaded),
         churn: ChurnSchedule::default(),
         churn_log: Vec::new(),
+        link_faults: LinkSchedule::default(),
+        link_log: Vec::new(),
         churn_ns: 0,
     }
 }

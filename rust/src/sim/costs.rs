@@ -211,6 +211,30 @@ impl CostModel {
         self.remote_fault_cpu_ns + self.far_wire_batch_ns(n_pages, bytes)
     }
 
+    /// Lane cost over a [`Degraded`](crate::sim::link::LinkState)
+    /// link: the base charge times the integer slowdown factor (exact
+    /// arithmetic — no float accumulation on the sim path).
+    #[inline]
+    pub fn degraded_ns(&self, base_ns: u64, factor: u32) -> u64 {
+        base_ns.saturating_mul(factor as u64)
+    }
+
+    /// Lane cost of relaying a message around a dead link via an
+    /// intermediate hop (or the ground-truth store when the partition
+    /// is total): two traversals of the base lane.
+    #[inline]
+    pub fn relay_ns(&self, base_ns: u64) -> u64 {
+        base_ns.saturating_mul(2)
+    }
+
+    /// Simulated stall of one exhausted send-retry sequence over a
+    /// [`Down`](crate::sim::link::LinkState) link (see
+    /// [`RetryPolicy::stall_ns`](crate::sim::link::RetryPolicy)).
+    #[inline]
+    pub fn link_retry_ns(&self, policy: &crate::sim::link::RetryPolicy) -> u64 {
+        policy.stall_ns()
+    }
+
     /// Encode (for shipping the model to TCP workers so both sides
     /// account identically).
     pub fn encode(&self, e: &mut Enc) {
@@ -371,6 +395,23 @@ mod tests {
         let unbatched = 8 * c.wire_ns(page);
         let batched = c.wire_batch_ns(8, 8 * page);
         assert_eq!(unbatched - batched, 7 * c.wire_latency_ns);
+    }
+
+    #[test]
+    fn link_pricing_is_exact_integer_arithmetic() {
+        use crate::sim::link::RetryPolicy;
+        let c = CostModel::default();
+        let base = c.pull_ns(PAGE_SIZE as u64);
+        // a degraded link multiplies the lane, a relay is exactly two hops
+        assert_eq!(c.degraded_ns(base, 4), 4 * base);
+        assert_eq!(c.relay_ns(base), 2 * base);
+        assert_eq!(c.degraded_ns(base, 1), base);
+        // the retry stall is the policy's pure function of itself
+        let p = RetryPolicy::default();
+        assert_eq!(c.link_retry_ns(&p), p.stall_ns());
+        // ordering: degraded < dead-link retry-then-relay for the
+        // default calibration, so routing around beats waiting out
+        assert!(c.degraded_ns(base, 2) < c.link_retry_ns(&p) + c.relay_ns(base));
     }
 
     #[test]

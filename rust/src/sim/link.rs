@@ -1,0 +1,487 @@
+//! Link-level fault model: per-pair link state, a schedulable fault
+//! grammar, and the deterministic retry policy for failed sends.
+//!
+//! PR 9 made whole-node crash-stop survivable; this module models the
+//! more common datacenter pathology — the *fabric* degrading while both
+//! endpoints stay up ("Disaggregation and the Application": network
+//! pathologies dominate clean node loss). A [`LinkTable`] holds the
+//! state of every faulted ordered pair (`Up` is the implicit default,
+//! so the fault-free table is empty and costs nothing to consult), a
+//! [`LinkSchedule`] scripts cuts/degrades/heals on simulated time with
+//! the same parse/merge/validate discipline as
+//! [`ChurnSchedule`](crate::os::membership::ChurnSchedule), and a
+//! [`RetryPolicy`] prices the deterministic retry/timeout/backoff
+//! sequence a sender burns before declaring a link dead — the sim-side
+//! mirror of the TCP reconnect policy in `net/peer.rs`.
+//!
+//! Everything here is pure data + integer arithmetic: no host state,
+//! no floats, no randomness — link faults must not cost determinism.
+
+use std::collections::BTreeMap;
+
+use crate::os::membership::parse_time_ns;
+
+/// State of one directed link. `Up` is the implicit default for every
+/// pair absent from the table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkState {
+    /// Healthy: messages cost their base lane latency.
+    Up,
+    /// Partitioned: every send fails after the retry sequence; traffic
+    /// must relay around the link or fall back to ground truth.
+    Down,
+    /// Lossy/congested: messages go through at `factor` times the base
+    /// lane latency (integer multiplier — keeps charges exact).
+    Degraded { factor: u32 },
+}
+
+/// The cluster's link-state table: ordered `(from, to)` pairs mapped to
+/// their current [`LinkState`]. Fault and heal events write both
+/// directions, so the table stays symmetric; healed pairs are removed
+/// outright, which restores the empty-table fast path the fault-free
+/// cost accounting relies on (bit-identical runs when no link ever
+/// faulted).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LinkTable {
+    states: BTreeMap<(u8, u8), LinkState>,
+}
+
+impl LinkTable {
+    /// Set both directions of the `a`–`b` pair. `Up` removes the
+    /// entries (the default state is not stored).
+    pub fn set(&mut self, a: u8, b: u8, state: LinkState) {
+        if state == LinkState::Up {
+            self.states.remove(&(a, b));
+            self.states.remove(&(b, a));
+        } else {
+            self.states.insert((a, b), state);
+            self.states.insert((b, a), state);
+        }
+    }
+
+    /// State of the directed `from -> to` link (`Up` if never faulted).
+    #[inline]
+    pub fn state(&self, from: u8, to: u8) -> LinkState {
+        *self.states.get(&(from, to)).unwrap_or(&LinkState::Up)
+    }
+
+    /// Is the directed link usable (up or degraded, not down)?
+    #[inline]
+    pub fn usable(&self, from: u8, to: u8) -> bool {
+        self.state(from, to) != LinkState::Down
+    }
+
+    /// True when no link is currently faulted — the fault-free fast
+    /// path: callers skip link accounting entirely.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Number of faulted ordered pairs (2 per faulted link).
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+}
+
+/// One scripted link transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkOp {
+    /// Cut the link: both directions go [`LinkState::Down`].
+    Cut { a: u8, b: u8 },
+    /// Degrade the link: both directions go
+    /// [`LinkState::Degraded`]`{ factor }`.
+    Slow { a: u8, b: u8, factor: u32 },
+    /// Heal the link: both directions return to [`LinkState::Up`].
+    Heal { a: u8, b: u8 },
+}
+
+impl LinkOp {
+    /// The unordered endpoint pair, low id first (dedup key).
+    pub fn pair(&self) -> (u8, u8) {
+        let (a, b) = match *self {
+            LinkOp::Cut { a, b } | LinkOp::Slow { a, b, .. } | LinkOp::Heal { a, b } => (a, b),
+        };
+        (a.min(b), a.max(b))
+    }
+
+    /// The [`LinkState`] this op drives the pair to.
+    pub fn state(&self) -> LinkState {
+        match *self {
+            LinkOp::Cut { .. } => LinkState::Down,
+            LinkOp::Slow { factor, .. } => LinkState::Degraded { factor },
+            LinkOp::Heal { .. } => LinkState::Up,
+        }
+    }
+}
+
+/// A link transition scheduled at a simulated instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkEvent {
+    pub at_ns: u64,
+    pub op: LinkOp,
+}
+
+/// A scripted sequence of link faults, in simulated-time order, with a
+/// replay cursor — the link-level sibling of
+/// [`ChurnSchedule`](crate::os::membership::ChurnSchedule), and merged
+/// into the same between-slice event stream by the scheduler.
+///
+/// Grammar (comma-separated, times in the shared literal syntax
+/// `250ns`/`3us`/`2.5ms`/`1s`):
+///
+/// * `a~b@t` — cut the `a`–`b` link at `t`
+/// * `a~b:slowN@t` — degrade it to `N`× lane latency at `t` (`N ≥ 2`)
+/// * `a+b@t` — heal it at `t`
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LinkSchedule {
+    events: Vec<LinkEvent>,
+    /// Replay cursor: index of the next not-yet-applied event.
+    next: usize,
+}
+
+impl LinkSchedule {
+    /// Build from explicit events (the eval harness's programmatic
+    /// path). Events are sorted by time; the parse-time validity
+    /// checks are the caller's problem here.
+    pub fn new(mut events: Vec<LinkEvent>) -> LinkSchedule {
+        events.sort_by_key(|ev| ev.at_ns);
+        LinkSchedule { events, next: 0 }
+    }
+
+    /// Parse a `--link-faults` spec. Rejects malformed items, self
+    /// loops, out-of-order times, duplicate transitions of the same
+    /// pair at the same instant, and heals of a link that is not
+    /// faulted at that point in the schedule.
+    pub fn parse(spec: &str) -> Result<LinkSchedule, String> {
+        let mut events: Vec<LinkEvent> = Vec::new();
+        let mut last_t = 0u64;
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (pair_part, time_part) = item
+                .rsplit_once('@')
+                .ok_or_else(|| format!("link fault '{item}': missing '@time'"))?;
+            let at_ns = parse_time_ns(time_part)?;
+            let op = parse_link_op(pair_part.trim())
+                .map_err(|e| format!("link fault '{item}': {e}"))?;
+            if at_ns < last_t {
+                return Err(format!(
+                    "link fault '{item}': events must be in time order ({at_ns}ns after {last_t}ns)"
+                ));
+            }
+            last_t = at_ns;
+            if events.iter().any(|ev| ev.at_ns == at_ns && ev.op.pair() == op.pair()) {
+                let (a, b) = op.pair();
+                return Err(format!(
+                    "duplicate link fault: pair {a}~{b} transitions twice at {at_ns}ns"
+                ));
+            }
+            events.push(LinkEvent { at_ns, op });
+        }
+        validate_heal_order(&events)?;
+        Ok(LinkSchedule { events, next: 0 })
+    }
+
+    /// Merge another schedule into this one (stable by time; `self`
+    /// first on ties). Rejects cross-schedule duplicates and re-checks
+    /// the heal-after-fault ordering of the merged sequence.
+    pub fn merge(self, other: LinkSchedule) -> Result<LinkSchedule, String> {
+        for ev in &other.events {
+            if self.events.iter().any(|e| e.at_ns == ev.at_ns && e.op.pair() == ev.op.pair()) {
+                let (a, b) = ev.op.pair();
+                return Err(format!(
+                    "duplicate link fault: pair {a}~{b} transitions twice at {}ns",
+                    ev.at_ns
+                ));
+            }
+        }
+        let mut events = self.events;
+        events.extend(other.events);
+        events.sort_by_key(|ev| ev.at_ns);
+        validate_heal_order(&events)?;
+        Ok(LinkSchedule { events, next: 0 })
+    }
+
+    /// Check every endpoint against the boot-time membership: `peers`
+    /// peer slots then `far_nodes` memory-server slots. (Links to nodes
+    /// a churn schedule adds later are not supported — fault the link
+    /// after admitting the node in a follow-up schedule instead.)
+    pub fn validate_nodes(&self, peers: usize, far_nodes: usize) -> Result<(), String> {
+        let known = peers + far_nodes;
+        for ev in &self.events {
+            let (a, b) = ev.op.pair();
+            for n in [a, b] {
+                if (n as usize) >= known {
+                    return Err(format!(
+                        "link fault at {}ns names unknown node{n} (cluster has {known} nodes)",
+                        ev.at_ns
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pop the next event due at or before `now_ns`, advancing the
+    /// cursor.
+    pub fn pop_due(&mut self, now_ns: u64) -> Option<LinkEvent> {
+        let ev = self.events.get(self.next)?;
+        if ev.at_ns <= now_ns {
+            self.next += 1;
+            Some(*ev)
+        } else {
+            None
+        }
+    }
+
+    /// Events that have not yet come due.
+    pub fn pending(&self) -> usize {
+        self.events.len() - self.next
+    }
+
+    pub fn events(&self) -> &[LinkEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+/// Parse the pair half of one grammar item: `a~b`, `a~b:slowN`, `a+b`.
+fn parse_link_op(s: &str) -> Result<LinkOp, String> {
+    let (a, rest, heal) = if let Some((a, rest)) = s.split_once('~') {
+        (a, rest, false)
+    } else if let Some((a, rest)) = s.split_once('+') {
+        (a, rest, true)
+    } else {
+        return Err("expected 'a~b', 'a~b:slowN', or 'a+b'".into());
+    };
+    let a = parse_node(a)?;
+    if heal {
+        let b = parse_node(rest)?;
+        if a == b {
+            return Err(format!("node{a} cannot link to itself"));
+        }
+        return Ok(LinkOp::Heal { a, b });
+    }
+    let (b, factor) = match rest.split_once(':') {
+        None => (parse_node(rest)?, None),
+        Some((b, mode)) => {
+            let n = mode
+                .strip_prefix("slow")
+                .ok_or_else(|| format!("unknown link mode '{mode}' (expected 'slowN')"))?;
+            let factor: u32 =
+                n.parse().map_err(|_| format!("bad slowdown factor '{n}'"))?;
+            if factor < 2 {
+                return Err(format!("slowdown factor must be >= 2, got {factor}"));
+            }
+            (parse_node(b)?, Some(factor))
+        }
+    };
+    if a == b {
+        return Err(format!("node{a} cannot link to itself"));
+    }
+    Ok(match factor {
+        Some(factor) => LinkOp::Slow { a, b, factor },
+        None => LinkOp::Cut { a, b },
+    })
+}
+
+fn parse_node(s: &str) -> Result<u8, String> {
+    s.trim().parse::<u8>().map_err(|_| format!("bad node id '{}'", s.trim()))
+}
+
+/// Reject heals of links that are not faulted at that point in the
+/// schedule (catches reversed `a+b@t1,a~b@t2` typos before a run
+/// silently does nothing).
+fn validate_heal_order(events: &[LinkEvent]) -> Result<(), String> {
+    let mut faulted: BTreeMap<(u8, u8), bool> = BTreeMap::new();
+    for ev in events {
+        let pair = ev.op.pair();
+        match ev.op {
+            LinkOp::Cut { .. } | LinkOp::Slow { .. } => {
+                faulted.insert(pair, true);
+            }
+            LinkOp::Heal { a, b } => {
+                if !faulted.remove(&pair).unwrap_or(false) {
+                    return Err(format!(
+                        "heal of link {a}~{b} at {}ns before any fault on it",
+                        ev.at_ns
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deterministic sim-time retry discipline for sends over a down link —
+/// the simulated mirror of the TCP [`RetryPolicy`] in `net/peer.rs`:
+/// each attempt times out, then backs off with doubling capped at
+/// `backoff_max_ns`, until the attempt budget is spent and the send
+/// fails over to routing (relay / alternate target / ground truth).
+/// All integer arithmetic; the total stall is a pure function of the
+/// policy, so retries never cost determinism.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Send attempts before the link is declared dead for this message.
+    pub attempts: u32,
+    /// Per-attempt timeout in simulated ns.
+    pub timeout_ns: u64,
+    /// Backoff after the first failed attempt.
+    pub backoff_initial_ns: u64,
+    /// Backoff cap (doubling stops here).
+    pub backoff_max_ns: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        // Scaled to the simulated fabric (2 us wire latency): a 100 us
+        // timeout is ~50 round trips, three attempts bound detection
+        // latency to well under a scheduler quantum.
+        RetryPolicy { attempts: 3, timeout_ns: 100_000, backoff_initial_ns: 50_000, backoff_max_ns: 400_000 }
+    }
+}
+
+impl RetryPolicy {
+    /// Total simulated stall of one exhausted retry sequence: every
+    /// attempt times out, with backoff between attempts (none after
+    /// the last).
+    pub fn stall_ns(&self) -> u64 {
+        let mut total = 0u64;
+        let mut backoff = self.backoff_initial_ns;
+        for attempt in 0..self.attempts {
+            total = total.saturating_add(self.timeout_ns);
+            if attempt + 1 < self.attempts {
+                total = total.saturating_add(backoff);
+                backoff = backoff.saturating_mul(2).min(self.backoff_max_ns);
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_symmetric_and_defaults_up() {
+        let mut t = LinkTable::default();
+        assert!(t.is_empty());
+        assert_eq!(t.state(0, 1), LinkState::Up);
+        t.set(0, 1, LinkState::Down);
+        assert_eq!(t.state(0, 1), LinkState::Down);
+        assert_eq!(t.state(1, 0), LinkState::Down);
+        assert!(!t.usable(0, 1));
+        assert_eq!(t.state(0, 2), LinkState::Up);
+        t.set(1, 0, LinkState::Degraded { factor: 4 });
+        assert_eq!(t.state(0, 1), LinkState::Degraded { factor: 4 });
+        assert!(t.usable(0, 1));
+        // heal removes the entries, restoring the fast path
+        t.set(0, 1, LinkState::Up);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn schedule_parses_all_three_forms() {
+        let mut s = LinkSchedule::parse("0~1@1ms, 0~2:slow4@2ms, 0+1@3ms").unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(
+            s.events()[0],
+            LinkEvent { at_ns: 1_000_000, op: LinkOp::Cut { a: 0, b: 1 } }
+        );
+        assert_eq!(
+            s.events()[1],
+            LinkEvent { at_ns: 2_000_000, op: LinkOp::Slow { a: 0, b: 2, factor: 4 } }
+        );
+        assert_eq!(
+            s.events()[2],
+            LinkEvent { at_ns: 3_000_000, op: LinkOp::Heal { a: 0, b: 1 } }
+        );
+        assert_eq!(s.pop_due(500_000), None);
+        assert_eq!(s.pop_due(2_000_000).unwrap().op, LinkOp::Cut { a: 0, b: 1 });
+        assert_eq!(s.pop_due(2_000_000).unwrap().op, LinkOp::Slow { a: 0, b: 2, factor: 4 });
+        assert_eq!(s.pop_due(2_000_000), None);
+        assert_eq!(s.pending(), 1);
+    }
+
+    #[test]
+    fn schedule_rejects_self_loops() {
+        assert!(LinkSchedule::parse("1~1@1ms").unwrap_err().contains("itself"));
+        assert!(LinkSchedule::parse("2+2@1ms").unwrap_err().contains("itself"));
+    }
+
+    #[test]
+    fn schedule_rejects_duplicates_and_disorder() {
+        // same pair, same instant — whichever direction it is written
+        assert!(LinkSchedule::parse("0~1@1ms,1~0:slow2@1ms").unwrap_err().contains("duplicate"));
+        assert!(LinkSchedule::parse("0~1@2ms,0~2@1ms").unwrap_err().contains("time order"));
+    }
+
+    #[test]
+    fn schedule_rejects_heal_before_fault() {
+        assert!(LinkSchedule::parse("0+1@1ms").unwrap_err().contains("before any fault"));
+        // healing twice is a heal of an already-up link
+        assert!(LinkSchedule::parse("0~1@1ms,0+1@2ms,0+1@3ms")
+            .unwrap_err()
+            .contains("before any fault"));
+        // re-faulting after a heal is fine
+        assert!(LinkSchedule::parse("0~1@1ms,0+1@2ms,0~1@3ms,0+1@4ms").is_ok());
+    }
+
+    #[test]
+    fn schedule_rejects_malformed_items() {
+        assert!(LinkSchedule::parse("0~1").is_err()); // no time
+        assert!(LinkSchedule::parse("01@1ms").is_err()); // no separator
+        assert!(LinkSchedule::parse("0~x@1ms").is_err()); // bad node
+        assert!(LinkSchedule::parse("0~1:slow@1ms").is_err()); // no factor
+        assert!(LinkSchedule::parse("0~1:slow1@1ms").is_err()); // no-op factor
+        assert!(LinkSchedule::parse("0~1:fast2@1ms").is_err()); // unknown mode
+    }
+
+    #[test]
+    fn validate_nodes_rejects_unknown_endpoints() {
+        let s = LinkSchedule::parse("0~4@1ms").unwrap();
+        assert!(s.validate_nodes(3, 1).unwrap_err().contains("node4"));
+        assert!(s.validate_nodes(3, 2).is_ok()); // node4 is the 2nd far server
+    }
+
+    #[test]
+    fn merge_interleaves_and_rejects_duplicates() {
+        let a = LinkSchedule::parse("0~1@1ms,0+1@4ms").unwrap();
+        let b = LinkSchedule::parse("1~2:slow2@2ms").unwrap();
+        let merged = a.merge(b).unwrap();
+        let times: Vec<u64> = merged.events().iter().map(|e| e.at_ns).collect();
+        assert_eq!(times, vec![1_000_000, 2_000_000, 4_000_000]);
+        let a = LinkSchedule::parse("0~1@1ms").unwrap();
+        let b = LinkSchedule::parse("1~0@1ms").unwrap();
+        assert!(a.merge(b).unwrap_err().contains("duplicate"));
+        // a merge that breaks heal ordering is rejected too
+        let a = LinkSchedule::parse("0~1@5ms").unwrap();
+        let b = LinkSchedule::parse("0~1@1ms,0+1@2ms,0+1@3ms,0~1@4ms");
+        assert!(b.is_err()); // double heal caught at parse already
+        let c = LinkSchedule::parse("0+1@2ms");
+        assert!(c.is_err()); // bare heal caught at parse
+        drop(a);
+    }
+
+    #[test]
+    fn retry_stall_is_deterministic_and_bounded() {
+        let p = RetryPolicy::default();
+        // 3 timeouts + backoffs of 50us and 100us
+        assert_eq!(p.stall_ns(), 3 * 100_000 + 50_000 + 100_000);
+        assert_eq!(p.stall_ns(), p.stall_ns());
+        let capped = RetryPolicy { attempts: 6, backoff_max_ns: 60_000, ..p };
+        // backoff doubles once then pins at the cap
+        assert_eq!(capped.stall_ns(), 6 * 100_000 + 50_000 + 60_000 * 4);
+    }
+}

@@ -4,6 +4,8 @@
 
 pub mod clock;
 pub mod costs;
+pub mod link;
 
 pub use clock::{SimClock, WindowClock};
 pub use costs::CostModel;
+pub use link::{LinkEvent, LinkOp, LinkSchedule, LinkState, LinkTable, RetryPolicy};

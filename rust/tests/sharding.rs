@@ -223,6 +223,65 @@ fn crashes_are_deterministic_across_threads() {
     }
 }
 
+/// Partial-network faults ride the same barrier mail — broadcast to
+/// every shard, since link state is fabric-global. A mid-run cut of
+/// the 0-2 link (which crosses shard partitions), a 4x degradation of
+/// 1-3, and their heals stay bit-identical — digests, Metrics
+/// (including retry/suspicion/relay counters), sim time, and the
+/// applied-link log — across worker-thread counts, and every digest
+/// still matches its DirectMem ground truth.
+#[test]
+fn link_faults_are_deterministic_across_threads() {
+    use elastic_os::sim::{LinkEvent, LinkOp, LinkSchedule};
+    let truths = truths();
+    let link_schedule = || {
+        LinkSchedule::new(vec![
+            LinkEvent { at_ns: 400_000, op: LinkOp::Slow { a: 1, b: 3, factor: 4 } },
+            LinkEvent { at_ns: 600_000, op: LinkOp::Cut { a: 0, b: 2 } },
+            LinkEvent { at_ns: 1_400_000, op: LinkOp::Heal { a: 0, b: 2 } },
+            LinkEvent { at_ns: 1_800_000, op: LinkOp::Heal { a: 1, b: 3 } },
+        ])
+    };
+    let run = |threads: usize| -> (RunOutcome, String) {
+        let cfg = ClusterConfig { node_frames: vec![FRAMES; NODES], ..ClusterConfig::default() };
+        let mut cluster = ShardedCluster::new(cfg, 4, threads);
+        cluster.set_quantum(100_000);
+        cluster.set_window(400_000);
+        cluster.set_link_faults(link_schedule());
+        let mut jobs: Vec<(usize, Box<dyn Workload>)> = Vec::new();
+        for (i, wl) in ALL_EXT.iter().enumerate() {
+            let gid = cluster.spawn(Mode::Elastic, NodeId((i % 4) as u8), wl, 512).unwrap();
+            jobs.push((gid, make(i)));
+        }
+        let reports = cluster.run_live(jobs);
+        cluster.verify().expect("cluster invariants across link faults");
+        let links = format!("{:?} suspicions={:?}", cluster.link_log, cluster.suspicion_log());
+        (
+            RunOutcome {
+                reports,
+                sim_ns: cluster.sim_now(),
+                churn_log: format!("{:?}", cluster.churn_log),
+            },
+            links,
+        )
+    };
+    let (base, base_links) = run(1);
+    assert!(base_links.contains("Cut"), "the cut never applied: {base_links}");
+    assert!(base_links.contains("Heal"), "the heals never applied: {base_links}");
+    for (i, r) in base.reports.iter().enumerate() {
+        assert_eq!(r.digest, truths[i], "{}: digest != ground truth across link faults", ALL_EXT[i]);
+    }
+    // A partition costs time, never pages.
+    let lost: u64 = base.reports.iter().map(|r| r.metrics.pages_lost).sum();
+    assert_eq!(lost, 0, "link faults must never lose pages");
+    for threads in [2usize, 4] {
+        let (r, links) = run(threads);
+        assert_reports_identical(&base.reports, &r.reports, &format!("links threads={threads}"));
+        assert_eq!(base.sim_ns, r.sim_ns, "links threads={threads}: final simulated time");
+        assert_eq!(base_links, links, "links threads={threads}: applied-link logs diverge");
+    }
+}
+
 /// A single shard routes through the legacy sequential loop: the
 /// sharded engine at `--shards 1` is bit-identical to `ElasticCluster`
 /// itself, whatever the thread count.
